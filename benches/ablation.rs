@@ -1,0 +1,77 @@
+//! Ablation benches (paper Fig. 6 + design choices in DESIGN.md):
+//!   * n_add (adder-tree arity): latency cycles vs Fmax vs LUTs
+//!   * bitwidth: LUT growth (Fig. 6d, on fig6_bits_* checkpoints)
+//!   * edges vs resources (Fig. 6b, on fig6_prune_* checkpoints)
+//!   * hot-path micro: lut extraction + sim eval per layer
+//!
+//!     cargo bench --bench ablation
+
+mod common;
+
+use kanele::netlist::Netlist;
+use kanele::{lut, synth};
+
+fn main() {
+    println!("=== ablation bench ===");
+    let Some(ck) = common::try_checkpoint("jsc_openml").or_else(|| common::try_checkpoint("moons"))
+    else {
+        return;
+    };
+    let tables = lut::from_checkpoint(&ck);
+    let dev = synth::device_by_name("xcvu9p").unwrap();
+
+    println!("-- adder-tree arity (n_add) sweep on {} --", ck.name);
+    for n_add in [2usize, 3, 4, 6] {
+        let net = Netlist::build(&ck, &tables, n_add);
+        let r = synth::synthesize(&net, &dev);
+        println!(
+            "n_add {n_add}: {:>3} cycles | Fmax {:>5.0} MHz | {:>6.1} ns | {:>7} LUT | AxD {:>9.2e}",
+            r.latency_cycles, r.fmax_mhz, r.latency_ns, r.luts, r.area_delay
+        );
+    }
+
+    println!("-- Fig. 6d: bitwidth vs LUTs (fig6_bits_* checkpoints) --");
+    for b in [3, 4, 5, 6, 7, 8] {
+        if let Some(ckb) = common::try_checkpoint(&format!("fig6_bits_{b}")) {
+            let t = lut::from_checkpoint(&ckb);
+            let net = Netlist::build(&ckb, &t, 2);
+            let r = synth::synthesize(&net, &dev);
+            println!("bits {b}: LUT {:>7} FF {:>7}", r.luts, r.ffs);
+        }
+    }
+
+    println!("-- Fig. 6b: edges vs resources (fig6_prune_* checkpoints) --");
+    for t in ["0.0", "0.3", "0.6", "0.9", "1.4", "2.0"] {
+        if let Some(ckp) = common::try_checkpoint(&format!("fig6_prune_{t}")) {
+            let tb = lut::from_checkpoint(&ckp);
+            let net = Netlist::build(&ckp, &tb, 2);
+            let r = synth::synthesize(&net, &dev);
+            println!(
+                "T {t}: edges {:>4} -> LUT {:>7} FF {:>7}",
+                ckp.active_edges(),
+                r.luts,
+                r.ffs
+            );
+        }
+    }
+
+    println!("-- toolflow hot-path micro --");
+    common::bench("lut::extract_all", || {
+        std::hint::black_box(lut::extract_all(&ck));
+    });
+    let net = Netlist::build(&ck, &tables, 2);
+    let codes: Vec<u32> = vec![1; ck.dims[0]];
+    let rb = common::bench("sim::eval x10000 (alloc per call)", || {
+        for _ in 0..10_000 {
+            std::hint::black_box(kanele::sim::eval(&net, &codes));
+        }
+    });
+    common::report_throughput(&rb, 10_000);
+    let rb2 = common::bench("sim::Evaluator x10000 (reused scratch)", || {
+        let mut ev = kanele::sim::Evaluator::new(&net);
+        for _ in 0..10_000 {
+            std::hint::black_box(ev.eval(&codes));
+        }
+    });
+    common::report_throughput(&rb2, 10_000);
+}

@@ -1,0 +1,64 @@
+//! Minimal bench harness (criterion is unavailable offline): warmup +
+//! timed iterations, median / MAD / throughput reporting, environment knobs
+//! via KANELE_BENCH_{WARMUP,ITERS}.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub iters: usize,
+}
+
+/// Run `f` repeatedly; each call should perform one logical operation of
+/// the benchmark (batching inside `f` is the caller's business).
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    let warmup: usize = std::env::var("KANELE_BENCH_WARMUP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let iters: usize = std::env::var("KANELE_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(15);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    let r = BenchResult { name: name.to_string(), median_ns: median, mad_ns: mad, iters };
+    println!(
+        "bench {:<44} median {:>12.0} ns  (+- {:>10.0} ns MAD, {} iters)",
+        r.name, r.median_ns, r.mad_ns, r.iters
+    );
+    r
+}
+
+/// Report an ops/sec figure for a bench whose `f` performed `n_ops`.
+pub fn report_throughput(r: &BenchResult, n_ops: usize) {
+    println!(
+        "      {:<44} {:>14.0} ops/s",
+        format!("{} throughput", r.name),
+        n_ops as f64 / (r.median_ns / 1e9)
+    );
+}
+
+/// Load a checkpoint if its artifact exists, else None (benches skip).
+pub fn try_checkpoint(name: &str) -> Option<kanele::checkpoint::Checkpoint> {
+    let p = kanele::config::ckpt_path(name);
+    if !p.exists() {
+        println!("bench {name}: missing checkpoint {} (run make artifacts-all) — skipped", p.display());
+        return None;
+    }
+    kanele::checkpoint::Checkpoint::load(&p).ok()
+}

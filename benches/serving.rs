@@ -1,0 +1,70 @@
+//! Coordinator serving bench: throughput/latency across worker counts and
+//! batching policies (the L3 hot path + the batching-policy ablation that
+//! DESIGN.md calls out).
+//!
+//!     cargo bench --bench serving
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use kanele::coordinator::{Service, ServiceCfg};
+use kanele::netlist::Netlist;
+use kanele::{data, lut};
+
+fn main() {
+    println!("=== serving bench: coordinator throughput/latency ===");
+    let Some(ck) = common::try_checkpoint("jsc_openml")
+        .or_else(|| common::try_checkpoint("moons"))
+    else {
+        return;
+    };
+    let tables = lut::from_checkpoint(&ck);
+    let net = Arc::new(Netlist::build(&ck, &tables, 2));
+    let stream = data::random_code_stream(&ck, 20_000, 11);
+
+    for workers in [1usize, 2, 4] {
+        for (batch, wait_us) in [(1usize, 0u64), (16, 50), (64, 100), (256, 200)] {
+            let svc = Service::start(
+                Arc::clone(&net),
+                ServiceCfg {
+                    workers,
+                    max_batch: batch,
+                    max_wait: Duration::from_micros(wait_us),
+                    queue_depth: 1 << 14,
+                },
+            );
+            let t = std::time::Instant::now();
+            let mut pending = Vec::with_capacity(4096);
+            for codes in &stream {
+                loop {
+                    match svc.submit(codes.clone()) {
+                        Ok(rx) => {
+                            pending.push(rx);
+                            break;
+                        }
+                        Err(_) => {
+                            for rx in pending.drain(..) {
+                                let _ = rx.recv();
+                            }
+                        }
+                    }
+                }
+            }
+            for rx in pending.drain(..) {
+                let _ = rx.recv();
+            }
+            let wall = t.elapsed().as_secs_f64();
+            let st = svc.stats();
+            println!(
+                "workers {workers} batch {batch:>3} wait {wait_us:>3} us -> {:>9.0} req/s | p50 {:>7.1} us p99 {:>8.1} us | mean batch {:>6.1}",
+                20_000.0 / wall,
+                st.latency_p50_us,
+                st.latency_p99_us,
+                st.mean_batch
+            );
+            svc.shutdown();
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! Bench for paper Table 3 (JSC CERNBox / JSC OpenML / MNIST on xcvu9p):
+//! regenerates every KANELE row (LUT/FF/Fmax/latency/AreaxDelay) and times
+//! the toolflow stages (L-LUT extraction, netlist build, synthesis) plus
+//! the simulated-core inference throughput for each model.
+//!
+//!     cargo bench --bench table3
+
+mod common;
+
+use kanele::netlist::Netlist;
+use kanele::{data, lut, sim, synth};
+
+fn main() {
+    println!("=== Table 3 bench: LUT-NN comparison datasets ===");
+    for name in ["jsc_cernbox", "jsc_openml", "mnist"] {
+        let Some(ck) = common::try_checkpoint(name) else { continue };
+        // toolflow timing
+        let r_extract = common::bench(&format!("{name}: L-LUT extraction"), || {
+            std::hint::black_box(lut::extract_all(&ck));
+        });
+        let tables = lut::from_checkpoint(&ck);
+        common::bench(&format!("{name}: netlist build"), || {
+            std::hint::black_box(Netlist::build(&ck, &tables, 2));
+        });
+        let net = Netlist::build(&ck, &tables, 2);
+        let dev = synth::device_by_name("xcvu9p").unwrap();
+        common::bench(&format!("{name}: synthesis estimate"), || {
+            std::hint::black_box(synth::synthesize(&net, &dev));
+        });
+        // the row itself
+        let r = synth::synthesize(&net, &dev);
+        println!(
+            "row  {name:<14} LUT {:>7} FF {:>7} Fmax {:>5.0} MHz lat {:>6.1} ns AxD {:>9.2e}",
+            r.luts, r.ffs, r.fmax_mhz, r.latency_ns, r.area_delay
+        );
+        let _ = r_extract;
+        // simulated-core inference throughput (functional hot path)
+        let stream = data::random_code_stream(&ck, 1024, 5);
+        let rb = common::bench(&format!("{name}: sim eval x1024"), || {
+            for codes in &stream {
+                std::hint::black_box(sim::eval(&net, codes));
+            }
+        });
+        common::report_throughput(&rb, 1024);
+    }
+}

@@ -1,0 +1,47 @@
+//! Bench for paper Table 4 (Moons / Wine / Dry Bean on xczu7ev): KANELE
+//! rows vs our Tran-et-al direct-spline cost model, reproducing the §5.4
+//! headline ratios (~2700x latency, ~4000x LUTs on Dry Bean).
+//!
+//!     cargo bench --bench table4
+
+mod common;
+
+use kanele::baselines::tran::TranKanCfg;
+use kanele::netlist::Netlist;
+use kanele::{config, lut, sim, synth};
+
+fn main() {
+    println!("=== Table 4 bench: prior KAN-FPGA comparison ===");
+    for name in ["moons", "wine", "dry_bean"] {
+        let Some(ck) = common::try_checkpoint(name) else { continue };
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, 2);
+        let dev = synth::device_by_name("xczu7ev").unwrap();
+        let ours = synth::synthesize(&net, &dev);
+        // Tran et al. modelled on *their* (unpruned, wide) KAN for this task
+        let exp = config::experiment(name).unwrap();
+        let dims: Vec<usize> = exp.dims.iter().map(|&d| d.max(2) * 4).collect();
+        let tran = TranKanCfg::for_dims(name, &dims, 5, 3).estimate();
+        println!(
+            "row  {name:<10} ours: {:>6} LUT {:>5.1} ns | tran-model: {:>8} LUT {:>9.0} ns | speedup {:>6.0}x  lut-ratio {:>6.0}x",
+            ours.luts,
+            ours.latency_ns,
+            tran.luts,
+            tran.latency_ns,
+            tran.latency_ns / ours.latency_ns,
+            tran.luts as f64 / ours.luts as f64,
+        );
+        // single-sample latency through the cycle-accurate simulator
+        let codes: Vec<u32> = vec![0; ck.dims[0]];
+        let rb = common::bench(&format!("{name}: cycle-accurate single inference"), || {
+            let mut cs = sim::CycleSim::new(&net);
+            cs.step(Some((0, &codes)));
+            loop {
+                if cs.step(None).is_some() {
+                    break;
+                }
+            }
+        });
+        let _ = rb;
+    }
+}

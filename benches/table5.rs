@@ -1,0 +1,54 @@
+//! Bench for paper Table 5 (ToyADMOS on xc7a100t): KANELE AE row
+//! (throughput, latency, energy) vs the hls4ml MLPerf-Tiny baseline model,
+//! plus the AUC evaluation wall time over the exported test windows.
+//!
+//!     cargo bench --bench table5
+
+mod common;
+
+use kanele::baselines::hls4ml::Hls4mlCfg;
+use kanele::checkpoint::TestSet;
+use kanele::netlist::Netlist;
+use kanele::{config, lut, sim, synth};
+
+fn main() {
+    println!("=== Table 5 bench: MLPerf-Tiny ToyADMOS ===");
+    let Some(ck) = common::try_checkpoint("toyadmos") else { return };
+    let tables = lut::from_checkpoint(&ck);
+    let net = Netlist::build(&ck, &tables, 2);
+    let dev = synth::device_by_name("xc7a100t").unwrap();
+    let r = synth::synthesize(&net, &dev);
+    println!(
+        "row  KANELE   LUT {:>7} FF {:>7} | II=1 {:.2e} inf/s | {:.2} us | {:.3} uJ/inf",
+        r.luts,
+        r.ffs,
+        r.throughput_inf_s,
+        r.latency_ns / 1000.0,
+        r.energy_per_inf_uj
+    );
+    let ae = Hls4mlCfg {
+        name: "hls4ml AE".into(),
+        dims: vec![64, 128, 128, 128, 8, 128, 128, 128, 64],
+        bits: 16,
+        reuse: 16,
+        resource_strategy: true,
+    }
+    .estimate();
+    println!(
+        "row  hls4ml   LUT {:>7} FF {:>7} DSP {:>4} BRAM {:>4} | II=16 | {:.2} us",
+        ae.luts,
+        ae.ffs,
+        ae.dsps,
+        ae.brams,
+        ae.latency_ns / 1000.0
+    );
+
+    if let Ok(ts) = TestSet::load(&config::testset_path("toyadmos")) {
+        let rb = common::bench("toyadmos: full-testset reconstruction", || {
+            for codes in &ts.input_codes {
+                std::hint::black_box(sim::eval(&net, codes));
+            }
+        });
+        common::report_throughput(&rb, ts.input_codes.len());
+    }
+}

@@ -1,0 +1,74 @@
+//! Quickstart: the complete KANELE toolflow on the Moons benchmark.
+//!
+//! checkpoint -> L-LUT extraction -> netlist -> bit-exact verification ->
+//! synthesis estimate -> VHDL bundle, in one binary.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::{bail, Context, Result};
+use kanele::checkpoint::Checkpoint;
+use kanele::netlist::Netlist;
+use kanele::synth;
+use kanele::{config, lut, report, sim, vhdl};
+
+fn main() -> Result<()> {
+    let path = config::ckpt_path("moons");
+    let ck = Checkpoint::load(&path)
+        .with_context(|| format!("run `make artifacts` first ({})", path.display()))?;
+    println!("== KANELE quickstart: {} ==", ck.name);
+    println!("dims {:?}, bits {:?}, G={}, S={}", ck.dims, ck.bits, ck.grid_size, ck.order);
+
+    // 1. KAN -> Logical-LUTs (paper §4.1.2): regenerate from splines and
+    //    check against the Python-exported authoritative tables.
+    let (entries, mismatched, maxdiff) = lut::compare_with_exported(&ck);
+    println!("L-LUT regeneration: {entries} entries, {mismatched} off by <= {maxdiff} LSB");
+    if maxdiff > 1 {
+        bail!("table regeneration drifted");
+    }
+    let tables = lut::from_checkpoint(&ck);
+
+    // 2. Netlist (paper §4.2): balanced pipelined adder trees, n_add = 2.
+    let net = Netlist::build(&ck, &tables, 2);
+    println!(
+        "netlist: {} L-LUTs, {} adders, latency {} cycles",
+        net.n_luts(),
+        net.n_adders(),
+        net.latency_cycles()
+    );
+
+    // 3. Bit-exact check vs the Python integer oracle.
+    let tv = &ck.test_vectors;
+    let ok = tv
+        .input_codes
+        .iter()
+        .zip(&tv.output_sums)
+        .all(|(c, want)| &sim::eval(&net, c) == want);
+    println!("oracle equivalence: {} vectors -> {}", tv.input_codes.len(), if ok { "BIT-EXACT" } else { "MISMATCH" });
+    if !ok {
+        bail!("netlist does not match the training-side oracle");
+    }
+
+    // 4. Test-set accuracy of the hardware pipeline.
+    let tables_metric = report::eval_metric(&ck, &net)?;
+    println!("netlist accuracy: {tables_metric:.1}% (paper Table 4: 97%)");
+
+    // 5. Synthesis estimate on the paper's device for this benchmark.
+    let dev = synth::device_by_name("xczu7ev").unwrap();
+    let r = synth::synthesize(&net, &dev);
+    println!(
+        "synthesis ({}): {} LUT, {} FF, 0 BRAM, 0 DSP, Fmax {:.0} MHz, {:.1} ns, AxD {:.1e}",
+        r.device, r.luts, r.ffs, r.fmax_mhz, r.latency_ns, r.area_delay
+    );
+    println!("paper row:          67 LUT, 57 FF, 0 BRAM, 0 DSP, Fmax 1736 MHz, 2.9 ns, AxD 1.9e2");
+
+    // 6. Emit the RTL bundle.
+    let dir = config::artifacts_dir().join("vhdl_moons");
+    vhdl::write_bundle(
+        &net,
+        &dir,
+        Some((tv.input_codes.as_slice(), tv.output_sums.as_slice())),
+    )?;
+    println!("VHDL bundle written to {}", dir.display());
+    println!("quickstart OK");
+    Ok(())
+}

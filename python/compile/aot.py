@@ -1,0 +1,169 @@
+"""AOT lowering: JAX (L2, calling the L1 Pallas kernel) -> HLO text.
+
+HLO **text** is the interchange format (NOT ``.serialize()``): jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts produced here are loaded by ``rust/src/runtime`` via
+``PjRtClient::cpu() -> HloModuleProto::from_text_file -> compile -> execute``
+and serve as the float-reference path that the bit-exact netlist simulator
+is cross-checked against.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kan.layers import KanCfg, kan_forward
+from .kernels.kan_spline import kan_layer_pallas
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is essential: the default printer elides
+    dense constants as ``{...}``, which XLA 0.5.1's text parser silently
+    reads back as zeros (weights vanish, outputs go NaN).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def demo_fn(x, y):
+    """Tiny smoke computation for the runtime loader test (quickstart)."""
+    return (jnp.matmul(x, y) + 2.0,)
+
+
+def export_demo(out_path: str, use_pallas: bool = False) -> str:
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    if use_pallas:
+        from jax.experimental import pallas as pl
+
+        def fn(x, y):
+            def kernel(x_ref, y_ref, o_ref):
+                o_ref[...] = x_ref[...] @ y_ref[...] + 2.0
+
+            return (
+                pl.pallas_call(
+                    kernel,
+                    out_shape=jax.ShapeDtypeStruct((2, 2), jnp.float32),
+                    interpret=True,
+                )(x, y),
+            )
+
+        lowered = jax.jit(fn).lower(spec, spec)
+    else:
+        lowered = jax.jit(demo_fn).lower(spec, spec)
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return text
+
+
+def _kan_infer_fn(cfg: KanCfg, params, masks, preproc_shift, preproc_span, use_kernel: bool):
+    """Quantized inference closure: raw float input -> final-layer values.
+
+    Matches the integer pipeline semantics up to fake-quant rounding (the
+    Rust runtime cross-check asserts argmax/value agreement, not bit
+    equality — bits are the netlist simulator's job).
+    """
+    shift = jnp.asarray(preproc_shift, jnp.float32)
+    span = jnp.asarray(preproc_span, jnp.float32)
+
+    def kernel_adapter(layer_params, x, lcfg, mask):
+        ws = layer_params["w_spline"]
+        wb = layer_params["w_base"]
+        if mask is not None:
+            ws = ws * mask[..., None]
+            wb = wb * mask
+        return kan_layer_pallas(
+            x, ws, wb, lcfg.grid_size, lcfg.domain, lcfg.order,
+            block_b=min(128, max(8, x.shape[0])),
+        )
+
+    def fn(x):
+        h = (x - shift) / span
+        h = kan_forward(
+            params,
+            h,
+            cfg,
+            masks=masks,
+            quantized=True,
+            kernel=kernel_adapter if use_kernel else None,
+        )
+        return (h,)
+
+    return fn
+
+
+def load_ckpt_jax(ckpt_path: str):
+    """Checkpoint JSON -> (cfg, params, masks, preproc arrays)."""
+    with open(ckpt_path) as f:
+        doc = json.load(f)
+    cfg = KanCfg(
+        dims=tuple(doc["dims"]),
+        grid_size=doc["grid_size"],
+        order=doc["order"],
+        domain=tuple(doc["domain"]),
+        bits=tuple(doc["bits"]),
+        prune_threshold=doc.get("prune_threshold", 0.0),
+    )
+    params = [
+        {
+            "w_spline": jnp.asarray(l["w_spline"], jnp.float32),
+            "w_base": jnp.asarray(l["w_base"], jnp.float32),
+        }
+        for l in doc["layers"]
+    ]
+    masks = [jnp.asarray(l["mask"], jnp.float32) for l in doc["layers"]]
+    return cfg, params, masks, doc["preproc"]["shift"], doc["preproc"]["span"]
+
+
+def export_kan_inference(
+    ckpt_path: str, out_path: str, batch: int = 256, use_kernel: bool = True
+) -> str:
+    """Lower the quantized KAN inference function of a checkpoint to HLO text."""
+    cfg, params, masks, shift, span = load_ckpt_jax(ckpt_path)
+    fn = _kan_infer_fn(cfg, params, masks, shift, span, use_kernel)
+    spec = jax.ShapeDtypeStruct((batch, cfg.dims[0]), jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return text
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    ap.add_argument("--ckpt", default=None, help="checkpoint JSON to lower instead of the demo")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--pallas-demo", action="store_true")
+    ap.add_argument(
+        "--no-kernel", action="store_true",
+        help="lower with the jnp path instead of the Pallas kernel",
+    )
+    args = ap.parse_args()
+    if args.ckpt:
+        text = export_kan_inference(
+            args.ckpt, args.out, batch=args.batch, use_kernel=not args.no_kernel
+        )
+    else:
+        text = export_demo(args.out, use_pallas=args.pallas_demo)
+    print(f"wrote {len(text)} chars to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""Checkpoint export: trained KAN -> JSON consumed by the Rust toolflow.
+
+This file defines the *hardware contract* shared with ``rust/src/checkpoint``
+and ``rust/src/lut``:
+
+* Input codes: ``c0 = clamp(floor((clip((x - shift)/span, a, b) - a)/s_in + 0.5),
+  0, 2^n_in - 1)`` per feature.
+* Edge L-LUT: ``T[q][p][c] = round_half_away(phi_qp(a + c*s_in) * 2^F)`` as
+  i64, where ``phi_qp`` is Eq. 2 (base silu term + spline term, masked edges
+  omitted) and ``F = frac_bits``.
+* Node sum: exact i64 addition of active-edge table entries.
+* Inter-layer requantization: ``c = clamp(floor((clip(S/2^F, a, b) - a)/s + 0.5),
+  0, 2^n - 1)``.
+* Network output: final-layer i64 sums (value = S / 2^F).
+
+``quantized_int_forward`` is the bit-exact oracle; its outputs are exported
+as test vectors so the Rust netlist simulator can assert exact equality.
+The float tables themselves are also exported (`layers[l].table`) as the
+authoritative source: Rust *regenerates* them from the spline parameters as
+the paper's toolflow does, and the cross-language test tolerates <=1 LSB of
+libm exp() discrepancy on the silu term.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+import numpy as np
+
+from .kan.bspline import bspline_basis_np, silu_np
+from .kan.layers import KanCfg
+from .kan.quant import InputPreproc, QuantSpec, quantize_codes_np
+
+
+@dataclass
+class ExportedModel:
+    """In-memory form of the checkpoint, shared by oracle + writer."""
+
+    cfg: KanCfg
+    preproc: InputPreproc
+    frac_bits: int
+    # per layer: mask (d_out, d_in) uint8, tables list[d_out][d_in] -> i64[2^n_in] or None
+    masks: list
+    tables: list
+
+
+def edge_phi_np(
+    x: np.ndarray,
+    w_spline_qp: np.ndarray,
+    w_base_qp: float,
+    knots: np.ndarray,
+    order: int,
+) -> np.ndarray:
+    """Eq. 2 for one edge, f64, fixed op order (mirrored in rust/src/lut).
+
+    Spline contributions are accumulated in ascending k, then the base term
+    is added last.
+    """
+    basis = bspline_basis_np(x, knots, order)  # (n, nb)
+    acc = np.zeros(x.shape, dtype=np.float64)
+    for k in range(basis.shape[-1]):
+        acc = acc + float(w_spline_qp[k]) * basis[..., k]
+    return acc + float(w_base_qp) * silu_np(x)
+
+
+def round_half_away_np(v: np.ndarray) -> np.ndarray:
+    """round-half-away-from-zero (ties away from 0), matching Rust's f64::round."""
+    return np.sign(v) * np.floor(np.abs(v) + 0.5)
+
+
+def build_tables(params: list, masks: list, cfg: KanCfg, frac_bits: int) -> list:
+    """Enumerate every surviving edge's input-code space -> integer L-LUTs."""
+    tables = []
+    for l in range(cfg.n_layers):
+        lcfg = cfg.layer_cfg(l)
+        in_spec = QuantSpec(cfg.bits[l], cfg.domain[0], cfg.domain[1])
+        codes = np.arange(in_spec.levels, dtype=np.int64)
+        xs = in_spec.lo + codes.astype(np.float64) * in_spec.scale
+        w_spline = np.asarray(params[l]["w_spline"], dtype=np.float64)
+        w_base = np.asarray(params[l]["w_base"], dtype=np.float64)
+        m = np.asarray(masks[l])
+        layer_tables = []
+        for q in range(lcfg.d_out):
+            row = []
+            for p in range(lcfg.d_in):
+                if m[q, p] == 0:
+                    row.append(None)
+                else:
+                    phi = edge_phi_np(xs, w_spline[q, p], w_base[q, p], lcfg.knots, lcfg.order)
+                    row.append(round_half_away_np(phi * (1 << frac_bits)).astype(np.int64))
+            layer_tables.append(row)
+        tables.append(layer_tables)
+    return tables
+
+
+def quantized_int_forward(model: ExportedModel, input_codes: np.ndarray) -> np.ndarray:
+    """Bit-exact integer pipeline (the netlist's functional semantics).
+
+    input_codes: (B, d_0) int64 codes. Returns final-layer i64 sums
+    (B, d_L). All arithmetic is exact-integer once past table generation.
+    """
+    cfg = model.cfg
+    F = model.frac_bits
+    codes = np.asarray(input_codes, dtype=np.int64)
+    for l in range(cfg.n_layers):
+        lcfg = cfg.layer_cfg(l)
+        b = codes.shape[0]
+        sums = np.zeros((b, lcfg.d_out), dtype=np.int64)
+        for q in range(lcfg.d_out):
+            for p in range(lcfg.d_in):
+                t = model.tables[l][q][p]
+                if t is not None:
+                    sums[:, q] += t[codes[:, p]]
+        if l < cfg.n_layers - 1:
+            out_spec = QuantSpec(cfg.bits[l + 1], cfg.domain[0], cfg.domain[1])
+            v = sums.astype(np.float64) / (1 << F)
+            codes = quantize_codes_np(v, out_spec)
+        else:
+            return sums
+    return codes  # unreachable for n_layers >= 1
+
+
+def input_codes_from_raw(model: ExportedModel, x_raw: np.ndarray) -> np.ndarray:
+    """Raw features -> input codes (preproc affine + input quantizer)."""
+    spec = model.cfg.input_quant
+    xn = model.preproc.apply_np(x_raw)
+    return quantize_codes_np(xn, spec)
+
+
+def export_checkpoint(
+    path: str,
+    name: str,
+    task: str,
+    cfg: KanCfg,
+    params: list,
+    masks: list,
+    preproc: InputPreproc,
+    x_test_raw: np.ndarray,
+    y_test: np.ndarray,
+    metrics: dict,
+    frac_bits: int = 14,
+    n_test_vectors: int = 256,
+) -> ExportedModel:
+    """Write the full checkpoint JSON (DESIGN.md §4) and return the model."""
+    tables = build_tables(params, masks, cfg, frac_bits)
+    model = ExportedModel(cfg=cfg, preproc=preproc, frac_bits=frac_bits, masks=masks, tables=tables)
+
+    nv = min(n_test_vectors, x_test_raw.shape[0])
+    tv_codes = input_codes_from_raw(model, x_test_raw[:nv])
+    tv_out = quantized_int_forward(model, tv_codes)
+
+    layers_json = []
+    for l in range(cfg.n_layers):
+        lcfg = cfg.layer_cfg(l)
+        m = np.asarray(masks[l]).astype(int)
+        layers_json.append(
+            {
+                "d_in": lcfg.d_in,
+                "d_out": lcfg.d_out,
+                "in_bits": cfg.bits[l],
+                "out_bits": cfg.bits[l + 1],
+                "w_spline": np.asarray(params[l]["w_spline"], dtype=np.float64).tolist(),
+                "w_base": np.asarray(params[l]["w_base"], dtype=np.float64).tolist(),
+                "mask": m.tolist(),
+                "table": [
+                    [None if t is None else t.tolist() for t in row] for row in tables[l]
+                ],
+            }
+        )
+
+    doc = {
+        "format": "kanele-ckpt-v1",
+        "name": name,
+        "task": task,
+        "grid_size": cfg.grid_size,
+        "order": cfg.order,
+        "domain": [cfg.domain[0], cfg.domain[1]],
+        "dims": list(cfg.dims),
+        "bits": list(cfg.bits),
+        "frac_bits": frac_bits,
+        "prune_threshold": cfg.prune_threshold,
+        "preproc": {
+            "shift": np.asarray(preproc.shift, dtype=np.float64).tolist(),
+            "span": np.asarray(preproc.span, dtype=np.float64).tolist(),
+        },
+        "layers": layers_json,
+        "metrics": metrics,
+        "test_vectors": {
+            "input_codes": tv_codes.tolist(),
+            "output_sums": tv_out.tolist(),
+        },
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return model
+
+
+def export_testset(path: str, model: ExportedModel, x_test_raw: np.ndarray, y_test: np.ndarray, limit: int = 4096):
+    """Full evaluation set as input codes + labels for the Rust harness."""
+    n = min(limit, x_test_raw.shape[0])
+    codes = input_codes_from_raw(model, x_test_raw[:n])
+    doc = {
+        "format": "kanele-testset-v1",
+        "input_codes": codes.tolist(),
+        "labels": np.asarray(y_test[:n]).tolist(),
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f)

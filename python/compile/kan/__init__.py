@@ -1,0 +1,8 @@
+"""KANELE build-time KAN library (JAX).
+
+Everything here runs at *compile time* only: training, quantization-aware
+training, pruning, checkpoint export and AOT lowering. Nothing in this
+package is imported on the Rust request path.
+"""
+
+from . import bspline, layers, prune, quant, train  # noqa: F401

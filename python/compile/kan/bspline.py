@@ -1,0 +1,137 @@
+"""B-spline bases on a fixed uniform grid (paper Fig. 2, Eq. 2).
+
+A KAN edge activation is a linear combination of ``G + S`` B-spline basis
+functions of order (degree) ``S`` defined on a uniform grid of ``G``
+intervals over the fixed domain ``[a, b]``. The knot vector is extended by
+``S`` knots on each side so that the basis forms a partition of unity on
+``[a, b]``.
+
+The Cox-de Boor recursion here is written iteratively and with a *fixed
+operation order* so that the Rust L-LUT extractor (``rust/src/lut``) can
+mirror it bit-for-bit in f64 — the truth tables generated on either side of
+the language boundary must be identical.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_knots(grid_size: int, domain: tuple[float, float], order: int) -> np.ndarray:
+    """Uniform extended knot vector.
+
+    ``grid_size`` (G) intervals over ``domain = [a, b]``, extended by
+    ``order`` (S) knots on each side. Length is ``G + 2S + 1``.
+    """
+    a, b = float(domain[0]), float(domain[1])
+    if not b > a:
+        raise ValueError(f"domain must satisfy b > a, got [{a}, {b}]")
+    if grid_size < 1:
+        raise ValueError(f"grid_size must be >= 1, got {grid_size}")
+    if order < 0:
+        raise ValueError(f"order must be >= 0, got {order}")
+    h = (b - a) / grid_size
+    # knots[i] = a + (i - order) * h, i = 0 .. G + 2S
+    idx = np.arange(grid_size + 2 * order + 1, dtype=np.float64)
+    return a + (idx - order) * h
+
+
+def num_bases(grid_size: int, order: int) -> int:
+    """Number of B-spline basis functions: G + S."""
+    return grid_size + order
+
+
+def bspline_basis(x: jnp.ndarray, knots: np.ndarray, order: int) -> jnp.ndarray:
+    """Evaluate all ``G + S`` basis functions at ``x``.
+
+    Cox-de Boor, iterative in the order. ``x`` has any shape; the result has
+    shape ``x.shape + (G + S,)``. Values of ``x`` outside the domain are
+    clamped to the domain edge (matching the hardware clip before the LUT).
+    """
+    t = jnp.asarray(knots, dtype=x.dtype)
+    n_knots = t.shape[0]
+    a, b = t[order], t[n_knots - 1 - order]
+    x = jnp.clip(x, a, b)
+    xe = x[..., None]
+
+    # Degree 0: indicator of the half-open knot interval. The last interval
+    # of the *domain* is closed so that x == b is covered (standard fix).
+    left = t[:-1]
+    right = t[1:]
+    basis = jnp.where((xe >= left) & (xe < right), 1.0, 0.0)
+    # close the right end of the domain interval [t[-order-2], t[-order-1]]:
+    # x == b belongs to the last *domain* interval, not the extension
+    # interval [b, b + h) the half-open rule would pick.
+    domain_last = n_knots - 2 - order
+    at_end = xe[..., 0] >= b
+    basis = basis.at[..., domain_last].set(
+        jnp.where(at_end, 1.0, basis[..., domain_last])
+    )
+    if order > 0:  # extension interval [b, b+h) exists only for order >= 1
+        basis = basis.at[..., domain_last + 1].set(
+            jnp.where(at_end, 0.0, basis[..., domain_last + 1])
+        )
+
+    for k in range(1, order + 1):
+        # B_{i,k}(x) = (x - t_i)/(t_{i+k} - t_i) B_{i,k-1}
+        #           + (t_{i+k+1} - x)/(t_{i+k+1} - t_{i+1}) B_{i+1,k-1}
+        ti = t[: n_knots - k - 1]
+        tik = t[k : n_knots - 1]
+        ti1 = t[1 : n_knots - k]
+        tik1 = t[k + 1 : n_knots]
+        # uniform grid -> denominators are k*h > 0, no 0/0 guards needed,
+        # but keep them for robustness with degenerate grids.
+        d0 = jnp.where(tik - ti > 0, tik - ti, 1.0)
+        d1 = jnp.where(tik1 - ti1 > 0, tik1 - ti1, 1.0)
+        left_term = (xe - ti) / d0 * basis[..., : n_knots - k - 1]
+        right_term = (tik1 - xe) / d1 * basis[..., 1 : n_knots - k]
+        basis = left_term + right_term
+
+    return basis  # (..., G + S)
+
+
+def bspline_basis_np(x: np.ndarray, knots: np.ndarray, order: int) -> np.ndarray:
+    """f64 numpy twin of :func:`bspline_basis`.
+
+    Used by the export oracle: the Rust extractor replays exactly this
+    operation order in f64, so table generation agrees bit-for-bit.
+    """
+    t = np.asarray(knots, dtype=np.float64)
+    n_knots = t.shape[0]
+    a, b = t[order], t[n_knots - 1 - order]
+    x = np.clip(np.asarray(x, dtype=np.float64), a, b)
+    xe = x[..., None]
+
+    left = t[:-1]
+    right = t[1:]
+    basis = ((xe >= left) & (xe < right)).astype(np.float64)
+    domain_last = n_knots - 2 - order
+    at_end = xe[..., 0] >= b
+    basis[..., domain_last] = np.where(at_end, 1.0, basis[..., domain_last])
+    if order > 0:  # extension interval [b, b+h) exists only for order >= 1
+        basis[..., domain_last + 1] = np.where(at_end, 0.0, basis[..., domain_last + 1])
+
+    for k in range(1, order + 1):
+        ti = t[: n_knots - k - 1]
+        tik = t[k : n_knots - 1]
+        ti1 = t[1 : n_knots - k]
+        tik1 = t[k + 1 : n_knots]
+        d0 = np.where(tik - ti > 0, tik - ti, 1.0)
+        d1 = np.where(tik1 - ti1 > 0, tik1 - ti1, 1.0)
+        basis = (xe - ti) / d0 * basis[..., : n_knots - k - 1] + (
+            tik1 - xe
+        ) / d1 * basis[..., 1 : n_knots - k]
+
+    return basis
+
+
+def silu(x):
+    """Base activation phi(x) = x * sigmoid(x) (paper Eq. 2 default)."""
+    return x / (1.0 + jnp.exp(-x))
+
+
+def silu_np(x: np.ndarray) -> np.ndarray:
+    """f64 numpy twin of :func:`silu` for the export oracle."""
+    x = np.asarray(x, dtype=np.float64)
+    return x / (1.0 + np.exp(-x))

@@ -1,0 +1,128 @@
+"""Fourier-basis KAN edges (paper §6 future work: "alternative orthogonal
+bases ... Fourier, wavelet, or rational bases ... while remaining
+LUT-compatible").
+
+An edge activation becomes a truncated Fourier series on the fixed domain:
+
+    phi(x) = a_0 + sum_{k=1..H} [ a_k cos(k w x) + b_k sin(k w x) ],
+    w = 2 pi / (b - a)
+
+The LUT-compatibility claim is trivially true — the hardware conversion
+enumerates phi at the quantized input codes, so the downstream toolflow
+(tables -> netlist -> VHDL -> synthesis) is *identical*; only training-side
+basis evaluation changes. ``test_fourier.py`` demonstrates the full path:
+train on moons, tabulate, run the bit-exact integer pipeline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quant import QuantSpec, fake_quant
+
+
+def num_features(harmonics: int) -> int:
+    """1 (DC) + 2 per harmonic."""
+    return 1 + 2 * harmonics
+
+
+def fourier_basis(x: jnp.ndarray, harmonics: int, domain: tuple[float, float]) -> jnp.ndarray:
+    """All Fourier features at x; shape x.shape + (2H+1,)."""
+    a, b = domain
+    w = 2.0 * jnp.pi / (b - a)
+    x = jnp.clip(x, a, b)
+    ks = jnp.arange(1, harmonics + 1)
+    ang = x[..., None] * (ks * w)
+    return jnp.concatenate(
+        [jnp.ones_like(x)[..., None], jnp.cos(ang), jnp.sin(ang)], axis=-1
+    )
+
+
+def fourier_basis_np(x: np.ndarray, harmonics: int, domain: tuple[float, float]) -> np.ndarray:
+    """f64 numpy twin (table-generation oracle)."""
+    a, b = domain
+    w = 2.0 * np.pi / (b - a)
+    x = np.clip(np.asarray(x, np.float64), a, b)
+    ks = np.arange(1, harmonics + 1)
+    ang = x[..., None] * (ks * w)
+    return np.concatenate(
+        [np.ones_like(x)[..., None], np.cos(ang), np.sin(ang)], axis=-1
+    )
+
+
+def init_fourier_kan(key: jax.Array, dims: tuple[int, ...], harmonics: int) -> list[dict]:
+    """Coefficients decay with harmonic index (smooth init)."""
+    params = []
+    keys = jax.random.split(key, len(dims) - 1)
+    nf = num_features(harmonics)
+    decay = np.concatenate([[1.0], *([1.0 / k] * 2 for k in range(1, harmonics + 1))])
+    for l in range(len(dims) - 1):
+        w = (
+            jax.random.normal(keys[l], (dims[l + 1], dims[l], nf))
+            * 0.3
+            * jnp.asarray(decay)
+            / np.sqrt(dims[l])
+        )
+        params.append({"w": w})
+    return params
+
+
+def fourier_kan_forward(
+    params: list[dict],
+    x: jnp.ndarray,
+    dims: tuple[int, ...],
+    harmonics: int,
+    domain: tuple[float, float],
+    bits: tuple[int, ...] | None = None,
+) -> jnp.ndarray:
+    """Layer composition with optional inter-layer quantizers (QAT)."""
+    h = x
+    if bits is not None:
+        h = fake_quant(h, QuantSpec(bits[0], domain[0], domain[1]))
+    for l, p in enumerate(params):
+        basis = fourier_basis(h, harmonics, domain)
+        h = jnp.einsum("bpk,qpk->bq", basis, p["w"])
+        if bits is not None and l < len(params) - 1:
+            h = fake_quant(h, QuantSpec(bits[l + 1], domain[0], domain[1]))
+    return h
+
+
+def edge_phi_fourier_np(
+    x: np.ndarray, w_edge: np.ndarray, harmonics: int, domain: tuple[float, float]
+) -> np.ndarray:
+    """One edge's phi, f64, fixed op order (feature-ascending accumulation)."""
+    basis = fourier_basis_np(x, harmonics, domain)
+    acc = np.zeros(np.shape(x), np.float64)
+    for k in range(basis.shape[-1]):
+        acc = acc + float(w_edge[k]) * basis[..., k]
+    return acc
+
+
+def build_fourier_tables(
+    params: list[dict],
+    dims: tuple[int, ...],
+    harmonics: int,
+    domain: tuple[float, float],
+    bits: tuple[int, ...],
+    frac_bits: int,
+) -> list:
+    """Same L-LUT enumeration as export.build_tables, Fourier flavour."""
+    from ..export import round_half_away_np
+    from .quant import QuantSpec
+
+    tables = []
+    for l in range(len(dims) - 1):
+        spec = QuantSpec(bits[l], domain[0], domain[1])
+        xs = spec.lo + np.arange(spec.levels, dtype=np.float64) * spec.scale
+        w = np.asarray(params[l]["w"], np.float64)
+        layer = []
+        for q in range(dims[l + 1]):
+            row = []
+            for p in range(dims[l]):
+                phi = edge_phi_fourier_np(xs, w[q, p], harmonics, domain)
+                row.append(round_half_away_np(phi * (1 << frac_bits)).astype(np.int64))
+            layer.append(row)
+        tables.append(layer)
+    return tables

@@ -1,0 +1,205 @@
+"""KAN layers and models (paper Eq. 1-5), plus the MLP baseline.
+
+Parameters are plain pytrees (dicts of jnp arrays) so the hand-rolled AdamW
+in :mod:`compile.kan.train` can operate on them without a framework.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bspline
+from .quant import QuantSpec, fake_quant
+
+
+@dataclass(frozen=True)
+class KanLayerCfg:
+    """Static configuration of one KAN layer (Table 1 hyperparameters)."""
+
+    d_in: int
+    d_out: int
+    grid_size: int  # G
+    order: int  # S
+    domain: tuple[float, float]  # [a, b]
+    out_bits: int  # n_l for the post-layer quantizer
+
+    @property
+    def n_basis(self) -> int:
+        return bspline.num_bases(self.grid_size, self.order)
+
+    @property
+    def knots(self) -> np.ndarray:
+        return bspline.make_knots(self.grid_size, self.domain, self.order)
+
+    @property
+    def out_quant(self) -> QuantSpec:
+        return QuantSpec(self.out_bits, self.domain[0], self.domain[1])
+
+
+@dataclass(frozen=True)
+class KanCfg:
+    """Full model configuration = one Table 2 row."""
+
+    dims: tuple[int, ...]  # d_l, e.g. (16, 8, 5)
+    grid_size: int
+    order: int
+    domain: tuple[float, float]
+    bits: tuple[int, ...]  # (n_input, n_l1, ..., n_lL) length len(dims)
+    prune_threshold: float = 0.0  # T
+    warmup_start: int = 0  # t0
+    warmup_target: int = 1  # tf
+
+    def __post_init__(self):
+        if len(self.bits) != len(self.dims):
+            raise ValueError(
+                f"bits must have one entry per dims entry (input + each layer): "
+                f"{len(self.bits)} vs {len(self.dims)}"
+            )
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.dims) - 1
+
+    def layer_cfg(self, l: int) -> KanLayerCfg:
+        return KanLayerCfg(
+            d_in=self.dims[l],
+            d_out=self.dims[l + 1],
+            grid_size=self.grid_size,
+            order=self.order,
+            domain=self.domain,
+            out_bits=self.bits[l + 1],
+        )
+
+    @property
+    def input_quant(self) -> QuantSpec:
+        return QuantSpec(self.bits[0], self.domain[0], self.domain[1])
+
+
+def init_kan_layer(key: jax.Array, cfg: KanLayerCfg, noise_scale: float = 0.1) -> dict:
+    """Initialise one layer: small random spline coeffs, Kaiming-ish base weights."""
+    k1, k2 = jax.random.split(key)
+    nb = cfg.n_basis
+    w_spline = noise_scale * jax.random.normal(k1, (cfg.d_out, cfg.d_in, nb)) / np.sqrt(cfg.d_in)
+    w_base = jax.random.normal(k2, (cfg.d_out, cfg.d_in)) / np.sqrt(cfg.d_in)
+    return {"w_spline": w_spline, "w_base": w_base}
+
+
+def init_kan(key: jax.Array, cfg: KanCfg) -> list[dict]:
+    keys = jax.random.split(key, cfg.n_layers)
+    return [init_kan_layer(keys[l], cfg.layer_cfg(l)) for l in range(cfg.n_layers)]
+
+
+def edge_norms(params: dict, cfg: KanLayerCfg, n_grid_samples: int = 0) -> jnp.ndarray:
+    """Eq. 10-11: L2 norm of each edge's *spline component* over the input grid.
+
+    The grid X is sampled consistently with the layer's input quantization:
+    callers pass ``n_grid_samples = 2**n_in`` (all codes); 0 means a dense
+    default of 64 points.
+    """
+    n = n_grid_samples if n_grid_samples > 0 else 64
+    a, b = cfg.domain
+    xs = jnp.linspace(a, b, n)
+    basis = bspline.bspline_basis(xs, cfg.knots, cfg.order)  # (n, nb)
+    # f_{p->q}(x) over the grid: (d_out, d_in, n)
+    f = jnp.einsum("qpk,nk->qpn", params["w_spline"], basis)
+    return jnp.sqrt(jnp.sum(f * f, axis=-1))  # (d_out, d_in)
+
+
+def kan_layer_forward(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: KanLayerCfg,
+    mask: jnp.ndarray | None = None,
+    kernel: Any = None,
+) -> jnp.ndarray:
+    """Eq. 2-3: y[b, q] = sum_p mask[q,p] * phi_{q,p}(x[b, p]).
+
+    ``kernel`` optionally injects the Pallas implementation (L1); the default
+    is the reference jnp path. Both are verified equal in pytest.
+    """
+    if kernel is not None:
+        return kernel(params, x, cfg, mask)
+    basis = bspline.bspline_basis(x, cfg.knots, cfg.order)  # (B, d_in, nb)
+    base = bspline.silu(x)  # (B, d_in)
+    w_spline = params["w_spline"]
+    w_base = params["w_base"]
+    if mask is not None:
+        w_spline = w_spline * mask[..., None]
+        w_base = w_base * mask
+    spline_out = jnp.einsum("bpk,qpk->bq", basis, w_spline)
+    base_out = base @ w_base.T
+    return spline_out + base_out
+
+
+def kan_forward(
+    params: list[dict],
+    x: jnp.ndarray,
+    cfg: KanCfg,
+    masks: list[jnp.ndarray] | None = None,
+    quantized: bool = True,
+    kernel: Any = None,
+) -> jnp.ndarray:
+    """Eq. 5 composition with the Eq. 6/7 quantizers between layers.
+
+    When ``quantized`` is False this is the float KAN (the "KAN FP" column
+    of Table 2). The final layer output is *not* quantized (logits /
+    regression head read full accumulator precision, as in the RTL where the
+    last adder-tree sum is the output port).
+    """
+    h = x
+    if quantized:
+        h = fake_quant(h, cfg.input_quant)
+    for l in range(cfg.n_layers):
+        lcfg = cfg.layer_cfg(l)
+        m = masks[l] if masks is not None else None
+        h = kan_layer_forward(params[l], h, lcfg, mask=m, kernel=kernel)
+        if quantized and l < cfg.n_layers - 1:
+            h = fake_quant(h, lcfg.out_quant)
+    return h
+
+
+# ----------------------------------------------------------------------------
+# MLP baseline (Table 2 "MLP FP" column; §5.7 critic & actor baselines)
+# ----------------------------------------------------------------------------
+
+
+def init_mlp(key: jax.Array, dims: tuple[int, ...]) -> list[dict]:
+    """He-initialised ReLU MLP with the same layer dims as the KAN."""
+    params = []
+    keys = jax.random.split(key, len(dims) - 1)
+    for l in range(len(dims) - 1):
+        w = jax.random.normal(keys[l], (dims[l + 1], dims[l])) * np.sqrt(2.0 / dims[l])
+        b = jnp.zeros((dims[l + 1],))
+        params.append({"w": w, "b": b})
+    return params
+
+
+def mlp_forward(params: list[dict], x: jnp.ndarray, quant: QuantSpec | None = None) -> jnp.ndarray:
+    """ReLU MLP; optional fake-quant after every hidden activation (8-bit MLP of §5.7)."""
+    h = x
+    if quant is not None:
+        h = fake_quant(h, quant)
+    for l, p in enumerate(params):
+        h = h @ p["w"].T + p["b"]
+        if l < len(params) - 1:
+            h = jax.nn.relu(h)
+            if quant is not None:
+                h = fake_quant(h, quant)
+    return h
+
+
+def mlp_param_count(dims: tuple[int, ...]) -> int:
+    return sum(dims[l + 1] * dims[l] + dims[l + 1] for l in range(len(dims) - 1))
+
+
+def kan_param_count(cfg: KanCfg) -> int:
+    total = 0
+    for l in range(cfg.n_layers):
+        lc = cfg.layer_cfg(l)
+        total += lc.d_out * lc.d_in * (lc.n_basis + 1)  # spline coeffs + base weight
+    return total

@@ -1,0 +1,74 @@
+"""Structured edge pruning (paper §3.3, Eq. 10-12).
+
+Each edge's importance is the L2 norm of its spline component over an input
+grid consistent with the layer's quantization level. Edges below the warmup
+threshold tau(t) are masked; backward pruning then removes edges feeding
+output neurons that have no surviving fan-out in the next layer.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import KanCfg, edge_norms
+
+
+def tau(t: int, threshold: float, t0: int, tf: int) -> float:
+    """Exponential warmup: tau rises to ~95% of T at the target epoch tf.
+
+    tau(t) = T * exp(-ln 20 * (tf - max(t, t0)) / (tf - t0)), clamped so that
+    tau(t0) = T/20 and tau(>= tf) = T. (The paper's Eq. prints the decaying
+    form of the *gap*; operationally pruning starts gently at t0 and reaches
+    the full threshold at tf, which is what this implements.)
+    """
+    if threshold <= 0.0:
+        return 0.0
+    if tf <= t0:
+        return threshold
+    tt = min(max(t, t0), tf)
+    return threshold * math.exp(-math.log(20.0) * (tf - tt) / (tf - t0))
+
+
+def compute_masks(
+    params: list[dict],
+    cfg: KanCfg,
+    epoch: int,
+) -> list[jnp.ndarray]:
+    """Eq. 12 masks for every layer at the given epoch, with backward pruning."""
+    thr = tau(epoch, cfg.prune_threshold, cfg.warmup_start, cfg.warmup_target)
+    masks: list[np.ndarray] = []
+    for l in range(cfg.n_layers):
+        lcfg = cfg.layer_cfg(l)
+        n_in_bits = cfg.bits[l]
+        norms = np.asarray(edge_norms(params[l], lcfg, n_grid_samples=1 << min(n_in_bits, 8)))
+        masks.append((norms > thr).astype(np.float32))
+
+    # Backward pruning: if output neuron j of layer l has no active outgoing
+    # edge in layer l+1, every incoming edge (j, :) of layer l is dead too.
+    for l in range(cfg.n_layers - 2, -1, -1):
+        fanout_alive = masks[l + 1].sum(axis=0) > 0  # (d_{l+1},) indexed by input of l+1
+        masks[l] = masks[l] * fanout_alive[:, None].astype(np.float32)
+
+    # Never allow a layer to go fully dead (keeps training stable early on):
+    # if a mask is all-zero, keep its single strongest edge.
+    for l in range(cfg.n_layers):
+        if masks[l].sum() == 0:
+            lcfg = cfg.layer_cfg(l)
+            norms = np.asarray(edge_norms(params[l], lcfg))
+            q, p = np.unravel_index(np.argmax(norms), norms.shape)
+            masks[l][q, p] = 1.0
+
+    return [jnp.asarray(m) for m in masks]
+
+
+def active_edges(masks: list[jnp.ndarray]) -> int:
+    """Total surviving edges — proportional to LUT/FF cost (paper Fig. 6b)."""
+    return int(sum(int(m.sum()) for m in masks))
+
+
+def full_masks(cfg: KanCfg) -> list[jnp.ndarray]:
+    """All-ones masks (unpruned model)."""
+    return [jnp.ones((cfg.dims[l + 1], cfg.dims[l]), dtype=jnp.float32) for l in range(cfg.n_layers)]

@@ -1,0 +1,119 @@
+"""Quantizers (paper Eq. 6-9) with straight-through estimators.
+
+Two quantizer flavours, both uniform over the fixed spline domain [a, b]:
+
+* **Layer-output quantizer** (Eq. 7): learnable scale ``s_l`` (frozen at
+  export), clip to [a, b], round to the n_l-bit code grid.
+* **Input quantizer** (Eq. 8): scale + bias for asymmetric inputs. In the
+  toolflow this is realised as BN(zero-mean/unit-var) folded with a
+  ScalarBiasScale block into a single affine shift-scale + clip + quantize.
+
+Hardware contract (mirrored in ``rust/src/fixed``): an ``n``-bit quantizer
+over [a, b] with scale ``s`` exposes *codes* ``c in {0 .. 2^n - 1}`` with
+dequantized value ``a + c * s`` and ``s = (b - a) / (2^n - 1)`` at export
+time (training may learn s; export renormalizes to the code grid).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class QuantSpec(NamedTuple):
+    """Static description of one uniform quantizer."""
+
+    bits: int
+    lo: float
+    hi: float
+
+    @property
+    def levels(self) -> int:
+        return 1 << self.bits
+
+    @property
+    def scale(self) -> float:
+        return (self.hi - self.lo) / (self.levels - 1)
+
+
+def round_ste(x: jnp.ndarray) -> jnp.ndarray:
+    """Round with a straight-through gradient (paper Eq. 9)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def fake_quant(x: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
+    """Eq. 7 with the export-time (frozen) scale: clip -> scale -> round -> descale."""
+    s = spec.scale
+    xq = jnp.clip(x, spec.lo, spec.hi)
+    code = round_ste((xq - spec.lo) / s)
+    return spec.lo + code * s
+
+
+def fake_quant_learned(x: jnp.ndarray, spec: QuantSpec, log_s: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 7 with a learnable scale ``s_l = exp(log_s)`` (training only).
+
+    The clip domain stays the fixed [a, b]; the code grid is anchored at
+    ``lo`` so the zero-point is shared with the frozen form.
+    """
+    s = jnp.exp(log_s)
+    xq = jnp.clip(x, spec.lo, spec.hi)
+    code = round_ste((xq - spec.lo) / s)
+    # re-clip codes so a small learned s cannot escape the domain
+    code = jnp.clip(code, 0.0, float(spec.levels - 1) * spec.scale / jnp.maximum(s, 1e-8))
+    return spec.lo + code * s
+
+
+def quantize_codes_np(x: np.ndarray, spec: QuantSpec) -> np.ndarray:
+    """Integer codes for export / oracle vectors (numpy f64, banker-free).
+
+    Uses round-half-away-from-zero on the non-negative shifted value, which
+    equals ``floor(v + 0.5)`` — the same rule the Rust side implements —
+    rather than numpy's banker rounding.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    v = (np.clip(x, spec.lo, spec.hi) - spec.lo) / spec.scale
+    return np.clip(np.floor(v + 0.5), 0, spec.levels - 1).astype(np.int64)
+
+
+def dequantize_codes_np(codes: np.ndarray, spec: QuantSpec) -> np.ndarray:
+    """Dequantized f64 values for integer codes."""
+    return spec.lo + np.asarray(codes, dtype=np.float64) * spec.scale
+
+
+class InputPreproc(NamedTuple):
+    """Folded BN + ScalarBiasScale: y = (x - shift) / span (Eq. 8 affine).
+
+    ``shift``/``span`` are per-feature; at export they are frozen constants.
+    The quantizer that follows uses a shared [a, b] domain.
+    """
+
+    shift: np.ndarray  # (d_in,)
+    span: np.ndarray  # (d_in,)
+
+    def apply_np(self, x: np.ndarray) -> np.ndarray:
+        return (np.asarray(x, dtype=np.float64) - self.shift) / self.span
+
+    def apply_jnp(self, x: jnp.ndarray) -> jnp.ndarray:
+        return (x - jnp.asarray(self.shift, x.dtype)) / jnp.asarray(self.span, x.dtype)
+
+
+def fit_input_preproc(x_train: np.ndarray, spec: QuantSpec, coverage: float = 3.0) -> InputPreproc:
+    """Fit the folded affine so ``coverage`` std-devs map inside [a, b].
+
+    BN gives zero-mean/unit-variance; the ScalarBiasScale then stretches the
+    +-coverage sigma band onto the quantizer domain. Constant features get
+    span 1 to avoid division by zero.
+    """
+    x_train = np.asarray(x_train, dtype=np.float64)
+    mu = x_train.mean(axis=0)
+    sd = x_train.std(axis=0)
+    sd = np.where(sd < 1e-12, 1.0, sd)
+    half = (spec.hi - spec.lo) / 2.0
+    center = (spec.hi + spec.lo) / 2.0
+    # y = ((x - mu)/sd) * (half/coverage) + center  ==  (x - shift)/span
+    span = sd * coverage / half
+    shift = mu - center * span
+    return InputPreproc(shift=shift, span=span)

@@ -1,0 +1,251 @@
+"""Training loop: hand-rolled AdamW (optax is not installed) + QAT + pruning.
+
+The loop follows the paper's toolflow §4.1.1: choose hyperparameters
+(Table 1), train with the quantizers of §3.2 in the graph and the pruning
+schedule of §3.3 recomputed every epoch.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import prune as prune_mod
+from .layers import KanCfg, init_kan, kan_forward
+
+
+# ----------------------------------------------------------------------------
+# AdamW on pytrees
+# ----------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=1e-4):
+    """One decoupled-weight-decay Adam step (Loshchilov & Hutter)."""
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        step = lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return p - step - lr * weight_decay * p
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ----------------------------------------------------------------------------
+# Losses / metrics
+# ----------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - ll)
+
+
+def accuracy(logits: np.ndarray, labels: np.ndarray) -> float:
+    return float((np.argmax(logits, axis=-1) == labels).mean())
+
+
+def mse(pred: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((pred - target) ** 2)
+
+
+def bce_logits(logit: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Binary cross-entropy on a single-logit head (moons: dims [2,2,1])."""
+    z = logit[:, 0]
+    y = labels.astype(z.dtype)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+@dataclass
+class TrainResult:
+    params: list
+    masks: list
+    history: list  # per-epoch dicts
+    cfg: KanCfg
+    seconds: float
+
+
+def _batches(rng: np.random.Generator, n: int, batch_size: int):
+    idx = rng.permutation(n)
+    for i in range(0, n - batch_size + 1, batch_size):
+        yield idx[i : i + batch_size]
+
+
+def train_kan(
+    cfg: KanCfg,
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    x_val: np.ndarray,
+    y_val: np.ndarray,
+    *,
+    epochs: int = 30,
+    batch_size: int = 128,
+    lr: float = 3e-3,
+    weight_decay: float = 1e-4,
+    seed: int = 0,
+    quantized: bool = True,
+    task: str = "classify",  # or "regress" (autoencoder / policy heads)
+    log: Callable[[str], None] | None = None,
+) -> TrainResult:
+    """QAT + pruning training of a KAN on (x, y).
+
+    For ``task="classify"`` ``y`` is int labels and the loss is softmax
+    cross-entropy; for ``task="regress"`` ``y`` is float targets and the
+    loss is MSE. Masks are recomputed from the warmup schedule every epoch
+    and *applied inside the graph*, so gradients of pruned edges vanish and
+    surviving edges adapt (structured QAT-consistent pruning).
+    """
+    key = jax.random.PRNGKey(seed)
+    params = init_kan(key, cfg)
+    opt = adamw_init(params)
+    masks = prune_mod.full_masks(cfg)
+
+    if task == "classify":
+        loss_fn_core = lambda logits, y: softmax_xent(logits, y)
+        y_train = y_train.astype(np.int32)
+        y_val_np = y_val.astype(np.int32)
+    elif task == "binary":
+        loss_fn_core = lambda logit, y: bce_logits(logit, y)
+        y_train = y_train.astype(np.int32)
+        y_val_np = y_val.astype(np.int32)
+    else:
+        loss_fn_core = lambda pred, y: mse(pred, y)
+        y_val_np = y_val
+
+    @jax.jit
+    def step(params, opt, xb, yb, masks, lr_now):
+        def loss(p):
+            out = kan_forward(p, xb, cfg, masks=masks, quantized=quantized)
+            return loss_fn_core(out, yb)
+
+        l, g = jax.value_and_grad(loss)(params)
+        params, opt = adamw_update(params, g, opt, lr_now, weight_decay=weight_decay)
+        return params, opt, l
+
+    @jax.jit
+    def infer(params, xb, masks):
+        return kan_forward(params, xb, cfg, masks=masks, quantized=quantized)
+
+    rng = np.random.default_rng(seed)
+    history = []
+    t_start = time.time()
+    n = x_train.shape[0]
+    bs = min(batch_size, n)
+    for epoch in range(epochs):
+        masks = prune_mod.compute_masks(params, cfg, epoch)
+        lr_now = lr * 0.5 * (1 + np.cos(np.pi * epoch / max(epochs - 1, 1)))
+        losses = []
+        for bidx in _batches(rng, n, bs):
+            xb = jnp.asarray(x_train[bidx])
+            yb = jnp.asarray(y_train[bidx])
+            params, opt, l = step(params, opt, xb, yb, masks, lr_now)
+            losses.append(float(l))
+        val_out = np.asarray(infer(params, jnp.asarray(x_val), masks))
+        if task == "classify":
+            val_metric = accuracy(val_out, y_val_np)
+        elif task == "binary":
+            val_metric = float(((val_out[:, 0] > 0).astype(np.int32) == y_val_np).mean())
+        else:
+            val_metric = -float(np.mean((val_out - y_val_np) ** 2))
+        rec = {
+            "epoch": epoch,
+            "loss": float(np.mean(losses)) if losses else float("nan"),
+            "val": val_metric,
+            "edges": prune_mod.active_edges(masks),
+            "tau": prune_mod.tau(epoch, cfg.prune_threshold, cfg.warmup_start, cfg.warmup_target),
+        }
+        history.append(rec)
+        if log:
+            log(
+                f"epoch {epoch:3d} loss {rec['loss']:.4f} val {rec['val']:.4f} "
+                f"edges {rec['edges']} tau {rec['tau']:.3g}"
+            )
+
+    # final masks at the fully warmed-up threshold
+    masks = prune_mod.compute_masks(params, cfg, cfg.warmup_target)
+    return TrainResult(params=params, masks=masks, history=history, cfg=cfg, seconds=time.time() - t_start)
+
+
+def train_mlp(
+    dims: tuple[int, ...],
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    x_val: np.ndarray,
+    y_val: np.ndarray,
+    *,
+    epochs: int = 30,
+    batch_size: int = 128,
+    lr: float = 3e-3,
+    weight_decay: float = 1e-4,
+    seed: int = 0,
+    task: str = "classify",
+    quant=None,
+    log: Callable[[str], None] | None = None,
+):
+    """Baseline MLP trainer (Table 2 "MLP FP" column)."""
+    from .layers import init_mlp, mlp_forward
+
+    key = jax.random.PRNGKey(seed)
+    params = init_mlp(key, dims)
+    opt = adamw_init(params)
+    if task == "classify":
+        loss_fn_core = lambda logits, y: softmax_xent(logits, y)
+        y_train = y_train.astype(np.int32)
+        y_val_np = y_val.astype(np.int32)
+    elif task == "binary":
+        loss_fn_core = lambda logit, y: bce_logits(logit, y)
+        y_train = y_train.astype(np.int32)
+        y_val_np = y_val.astype(np.int32)
+    else:
+        loss_fn_core = lambda pred, y: mse(pred, y)
+        y_val_np = y_val
+
+    @jax.jit
+    def step(params, opt, xb, yb, lr_now):
+        def loss(p):
+            return loss_fn_core(mlp_forward(p, xb, quant=quant), yb)
+
+        l, g = jax.value_and_grad(loss)(params)
+        params, opt = adamw_update(params, g, opt, lr_now, weight_decay=weight_decay)
+        return params, opt, l
+
+    @jax.jit
+    def infer(params, xb):
+        return mlp_forward(params, xb, quant=quant)
+
+    rng = np.random.default_rng(seed)
+    history = []
+    n = x_train.shape[0]
+    bs = min(batch_size, n)
+    for epoch in range(epochs):
+        lr_now = lr * 0.5 * (1 + np.cos(np.pi * epoch / max(epochs - 1, 1)))
+        losses = []
+        for bidx in _batches(rng, n, bs):
+            params, opt, l = step(params, opt, jnp.asarray(x_train[bidx]), jnp.asarray(y_train[bidx]), lr_now)
+            losses.append(float(l))
+        val_out = np.asarray(infer(params, jnp.asarray(x_val)))
+        if task == "classify":
+            val_metric = accuracy(val_out, y_val_np)
+        elif task == "binary":
+            val_metric = float(((val_out[:, 0] > 0).astype(np.int32) == y_val_np).mean())
+        else:
+            val_metric = -float(np.mean((val_out - y_val_np) ** 2))
+        history.append({"epoch": epoch, "loss": float(np.mean(losses)), "val": val_metric})
+        if log:
+            log(f"mlp epoch {epoch:3d} loss {history[-1]['loss']:.4f} val {val_metric:.4f}")
+    return params, history

@@ -1,0 +1,2 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+from . import kan_spline, ref  # noqa: F401

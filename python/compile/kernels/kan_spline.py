@@ -1,0 +1,179 @@
+"""L1 Pallas kernel: fused KAN-layer forward (basis expansion + contraction).
+
+Hardware adaptation (DESIGN.md §3 / §8): the paper's hot-spot on FPGA is the
+LUT + adder-tree evaluation; on TPU-class hardware the same computation is a
+*feature expansion followed by a dense contraction*. The kernel therefore:
+
+* expands each input scalar into its ``nb = G + S`` B-spline basis values
+  **inside VMEM** (Cox-de Boor, unrolled over the order — pure VPU work),
+* appends the silu base-activation channel, and
+* performs ONE ``(Bblk, d_in*(nb+1)) @ (d_in*(nb+1), d_out)`` matmul so the
+  contraction lands on the MXU instead of ``nb+1`` skinny matmuls.
+
+The batch is tiled by ``block_b`` via ``BlockSpec``; the flattened weight
+matrix stays resident in VMEM across grid steps. ``interpret=True`` is
+mandatory on this CPU container (real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute); the same code lowers to
+Mosaic unchanged on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from compile.kan import bspline
+
+
+def _basis_in_kernel(x, t, n_knots: int, order: int, lo: float, hi: float):
+    """Cox-de Boor inside the kernel; identical op order to bspline.bspline_basis.
+
+    ``t`` is the knot vector read from a kernel input ref (Pallas forbids
+    captured array constants); ``lo``/``hi`` are the scalar domain bounds.
+    """
+    x = jnp.clip(x, lo, hi)
+    xe = x[..., None]
+
+    left = t[:-1]
+    right = t[1:]
+    basis = jnp.where((xe >= left) & (xe < right), 1.0, 0.0)
+    domain_last = n_knots - 2 - order
+    at_end = xe[..., 0] >= hi
+    # x == hi belongs to the closed last domain interval; zero the extension
+    # interval the half-open rule would pick. (jnp.where-based column
+    # updates keep the op graph branch-free.)
+    col = jnp.where(at_end, 1.0, basis[..., domain_last])
+    col_next = jnp.where(at_end, 0.0, basis[..., domain_last + 1])
+    basis = jnp.concatenate(
+        [basis[..., :domain_last], col[..., None], col_next[..., None], basis[..., domain_last + 2 :]],
+        axis=-1,
+    )
+
+    for k in range(1, order + 1):
+        ti = t[: n_knots - k - 1]
+        tik = t[k : n_knots - 1]
+        ti1 = t[1 : n_knots - k]
+        tik1 = t[k + 1 : n_knots]
+        d0 = jnp.where(tik - ti > 0, tik - ti, 1.0)
+        d1 = jnp.where(tik1 - ti1 > 0, tik1 - ti1, 1.0)
+        basis = (xe - ti) / d0 * basis[..., : n_knots - k - 1] + (tik1 - xe) / d1 * basis[
+            ..., 1 : n_knots - k
+        ]
+    return basis
+
+
+def _kan_layer_kernel(x_ref, w_ref, t_ref, o_ref, *, order: int, nb: int, lo: float, hi: float):
+    """One grid step: (block_b, d_in) inputs -> (block_b, d_out) outputs."""
+    x = x_ref[...]  # (Bblk, d_in)
+    t = t_ref[...]
+    basis = _basis_in_kernel(x, t, t.shape[0], order, lo, hi)  # (Bblk, d_in, nb)
+    base = x * jax.nn.sigmoid(x)  # silu, VPU
+    feats = jnp.concatenate([basis, base[..., None]], axis=-1)  # (Bblk, d_in, nb+1)
+    bblk, d_in = x.shape
+    flat = feats.reshape(bblk, d_in * (nb + 1))
+    # single MXU contraction; accumulate in f32
+    o_ref[...] = jax.lax.dot_general(
+        flat,
+        w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def pack_weights(w_spline: jnp.ndarray, w_base: jnp.ndarray) -> jnp.ndarray:
+    """Flatten (d_out, d_in, nb) + (d_out, d_in) -> (d_in*(nb+1), d_out).
+
+    Feature order must match the kernel's reshape: for each input p the nb
+    spline bases come first, then the base-activation channel.
+    """
+    d_out, d_in, nb = w_spline.shape
+    w = jnp.concatenate([w_spline, w_base[..., None]], axis=-1)  # (d_out, d_in, nb+1)
+    return w.transpose(1, 2, 0).reshape(d_in * (nb + 1), d_out)
+
+
+@functools.partial(jax.jit, static_argnames=("order", "block_b", "grid_size", "domain"))
+def _run(x, w_packed, *, order, grid_size, domain, block_b):
+    knots = bspline.make_knots(grid_size, domain, order)
+    nb = bspline.num_bases(grid_size, order)
+    b, d_in = x.shape
+    d_out = w_packed.shape[1]
+    # pad batch up to a block multiple
+    pad = (-b) % block_b
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, d_in), x.dtype)], axis=0)
+    bp = x.shape[0]
+    lo, hi = float(domain[0]), float(domain[1])
+    t = jnp.asarray(knots, jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_kan_layer_kernel, order=order, nb=nb, lo=lo, hi=hi),
+        out_shape=jax.ShapeDtypeStruct((bp, d_out), jnp.float32),
+        grid=(bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((d_in * (nb + 1), d_out), lambda i: (0, 0)),
+            pl.BlockSpec((t.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, d_out), lambda i: (i, 0)),
+        interpret=True,  # CPU container: Mosaic custom-calls are TPU-only
+    )(x, w_packed, t)
+    return out[:b]
+
+
+def kan_layer_pallas(
+    x: jnp.ndarray,
+    w_spline: jnp.ndarray,
+    w_base: jnp.ndarray,
+    grid_size: int,
+    domain: tuple[float, float],
+    order: int,
+    block_b: int = 128,
+) -> jnp.ndarray:
+    """Public kernel entry point; same contract as ``ref.kan_layer_ref``."""
+    if order < 1:
+        raise ValueError("kan_layer_pallas requires spline order >= 1")
+    w_packed = pack_weights(jnp.asarray(w_spline, jnp.float32), jnp.asarray(w_base, jnp.float32))
+    return _run(
+        jnp.asarray(x, jnp.float32),
+        w_packed,
+        order=order,
+        grid_size=grid_size,
+        domain=domain,
+        block_b=block_b,
+    )
+
+
+def vmem_footprint_bytes(
+    d_in: int, d_out: int, grid_size: int, order: int, block_b: int = 128
+) -> dict:
+    """Analytic VMEM/MXU model for DESIGN.md §8 (interpret-mode wallclock is
+    not a TPU proxy; structure is what we optimize).
+
+    Returns the per-grid-step VMEM residency and the MXU utilization bound
+    from the contraction shape.
+    """
+    nb = grid_size + order
+    f = nb + 1
+    bytes_x = block_b * d_in * 4
+    bytes_feats = block_b * d_in * f * 4
+    bytes_w = d_in * f * d_out * 4
+    bytes_out = block_b * d_out * 4
+    total = bytes_x + bytes_feats + bytes_w + bytes_out
+    # MXU 128x128: utilization bound = how well (block_b, d_in*f, d_out)
+    # fills the systolic array tiles.
+    def eff(n, t=128):
+        import math
+
+        return n / (math.ceil(n / t) * t)
+
+    mxu = eff(block_b) * eff(d_in * f) * eff(d_out)
+    return {
+        "vmem_bytes": total,
+        "vmem_mib": total / (1 << 20),
+        "fits_16mib_vmem": total < 16 * (1 << 20),
+        "mxu_tile_efficiency": mxu,
+        "flops_per_step": 2 * block_b * d_in * f * d_out,
+    }

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the L1 Pallas KAN-layer kernel.
+
+This is the CORE correctness reference: ``kan_spline.kan_layer_pallas`` must
+match this function to float tolerance for every shape/dtype hypothesis
+sweeps throw at it (``python/tests/test_kernel.py``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kan import bspline
+
+
+def kan_layer_ref(
+    x: jnp.ndarray,
+    w_spline: jnp.ndarray,
+    w_base: jnp.ndarray,
+    knots: np.ndarray,
+    order: int,
+) -> jnp.ndarray:
+    """Reference KAN layer forward.
+
+    x: (B, d_in); w_spline: (d_out, d_in, nb); w_base: (d_out, d_in).
+    Returns (B, d_out) with
+    y[b, q] = sum_p [ w_base[q,p] * silu(x[b,p])
+                      + sum_k w_spline[q,p,k] * B_k(x[b,p]) ].
+    """
+    basis = bspline.bspline_basis(x, knots, order)  # (B, d_in, nb)
+    spline_out = jnp.einsum("bpk,qpk->bq", basis, w_spline)
+    base_out = bspline.silu(x) @ w_base.T
+    return spline_out + base_out

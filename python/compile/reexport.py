@@ -1,0 +1,120 @@
+"""Re-export a checkpoint at a different accumulator precision (frac_bits).
+
+The fixed-point fraction width F is a pure *export/hardware* parameter:
+tables are round(phi * 2^F), so lowering F narrows every LUT output and
+adder in the netlist (LUT/FF/AxD down) at the cost of coarser pre-requant
+sums. This script rebuilds tables + oracle vectors at the requested F and
+reports the accuracy of the integer pipeline so the §Perf sweep can pick
+the knee.
+
+    python -m compile.reexport moons --frac-bits 10
+    python -m compile.reexport --all --frac-bits 10     # overwrite in place
+    python -m compile.reexport moons --sweep            # report-only sweep
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from .export import ExportedModel, build_tables, quantized_int_forward
+from .kan.layers import KanCfg
+from .kan.quant import InputPreproc
+from .trainer import ART
+
+
+def load_ckpt(path: str):
+    with open(path) as f:
+        doc = json.load(f)
+    cfg = KanCfg(
+        dims=tuple(doc["dims"]), grid_size=doc["grid_size"], order=doc["order"],
+        domain=tuple(doc["domain"]), bits=tuple(doc["bits"]),
+        prune_threshold=doc.get("prune_threshold", 0.0),
+    )
+    params = [
+        {"w_spline": np.asarray(l["w_spline"], np.float64),
+         "w_base": np.asarray(l["w_base"], np.float64)}
+        for l in doc["layers"]
+    ]
+    masks = [np.asarray(l["mask"], np.float32) for l in doc["layers"]]
+    pre = InputPreproc(
+        shift=np.asarray(doc["preproc"]["shift"], np.float64),
+        span=np.asarray(doc["preproc"]["span"], np.float64),
+    )
+    return doc, cfg, params, masks, pre
+
+
+def metric_at(doc, cfg, params, masks, pre, frac_bits: int, ts_path: str | None):
+    tables = build_tables(params, masks, cfg, frac_bits)
+    model = ExportedModel(cfg=cfg, preproc=pre, frac_bits=frac_bits, masks=masks, tables=tables)
+    if ts_path and os.path.exists(ts_path):
+        with open(ts_path) as f:
+            ts = json.load(f)
+        codes = np.asarray(ts["input_codes"], np.int64)
+        labels = np.asarray(ts["labels"], np.int64)
+        sums = quantized_int_forward(model, codes)
+        task = doc["task"]
+        if task == "classify":
+            m = float((np.argmax(sums, 1) == labels).mean())
+        elif task == "binary":
+            m = float(((sums[:, 0] > 0).astype(np.int64) == labels).mean())
+        else:
+            m = float("nan")  # regress handled by the rust AUC path
+        return model, m
+    return model, float("nan")
+
+
+def reexport(name: str, frac_bits: int, write: bool) -> dict:
+    path = os.path.join(ART, f"{name}.ckpt.json")
+    ts_path = os.path.join(ART, f"{name}.testset.json")
+    doc, cfg, params, masks, pre = load_ckpt(path)
+    old_f = doc["frac_bits"]
+    _, m_old = metric_at(doc, cfg, params, masks, pre, old_f, ts_path)
+    model, m_new = metric_at(doc, cfg, params, masks, pre, frac_bits, ts_path)
+    rec = {"name": name, "old_frac_bits": old_f, "new_frac_bits": frac_bits,
+           "metric_old": m_old, "metric_new": m_new}
+    if write:
+        nv = len(doc["test_vectors"]["input_codes"])
+        tv_codes = np.asarray(doc["test_vectors"]["input_codes"], np.int64)
+        doc["frac_bits"] = frac_bits
+        for l, layer in enumerate(doc["layers"]):
+            layer["table"] = [
+                [None if t is None else t.tolist() for t in model.tables[l][q]]
+                for q in range(layer["d_out"])
+            ]
+        doc["test_vectors"]["output_sums"] = quantized_int_forward(model, tv_codes).tolist()
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        rec["written"] = True
+        assert nv == len(doc["test_vectors"]["input_codes"])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("names", nargs="*")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--frac-bits", type=int, default=10)
+    ap.add_argument("--sweep", action="store_true", help="report-only sweep over F")
+    args = ap.parse_args()
+    names = args.names
+    if args.all:
+        names = [f[: -len(".ckpt.json")] for f in sorted(os.listdir(ART)) if f.endswith(".ckpt.json")]
+    for name in names:
+        if args.sweep:
+            path = os.path.join(ART, f"{name}.ckpt.json")
+            ts_path = os.path.join(ART, f"{name}.testset.json")
+            doc, cfg, params, masks, pre = load_ckpt(path)
+            for f_ in [8, 10, 12, 14, 16]:
+                _, m = metric_at(doc, cfg, params, masks, pre, f_, ts_path)
+                print(f"{name}: F={f_:2d} metric={m:.4f}")
+        else:
+            rec = reexport(name, args.frac_bits, write=True)
+            print(rec)
+
+
+if __name__ == "__main__":
+    main()

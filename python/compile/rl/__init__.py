@@ -1,0 +1,10 @@
+"""Continuous-control extension (paper §5.7).
+
+MuJoCo/Gym are unavailable offline; ``cheetah.py`` is a planar 6-joint
+cheetah-flavoured surrogate with HalfCheetah's exact observation/action
+dimensions (17/6) and reward structure (forward velocity - control cost).
+``ppo.py`` implements clipped PPO with GAE from scratch; ``actors.py``
+holds the four actor/critic configurations of Table 6.
+"""
+
+from . import actors, cheetah, ppo  # noqa: F401

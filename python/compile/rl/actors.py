@@ -1,0 +1,71 @@
+"""Actor/critic configurations of paper Table 6.
+
+* MLP actor  [17, 64, 64, 6]  (5,638 params with biases; paper prints 5,383)
+* MLP critic [17, 64, 64, 1]
+* KAN actor  [17, 6] single layer, G=6, S=3 -> 102 edges x 10 params = 1,020
+
+The actor head outputs pre-tanh means; a state-independent learnable
+log-std completes the Gaussian policy. Quantized variants fake-quant the
+actor activations at 8 bits (paper scenario 2 and 4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kan.layers import KanCfg, init_kan, init_mlp, kan_forward, kan_param_count, mlp_forward, mlp_param_count
+from ..kan.quant import QuantSpec
+
+OBS_DIM = 17
+ACT_DIM = 6
+
+MLP_ACTOR_DIMS = (OBS_DIM, 64, 64, ACT_DIM)
+MLP_CRITIC_DIMS = (OBS_DIM, 64, 64, 1)
+
+KAN_ACTOR_CFG = KanCfg(
+    dims=(OBS_DIM, ACT_DIM),
+    grid_size=6,
+    order=3,
+    domain=(-4.0, 4.0),
+    bits=(8, 8),
+    prune_threshold=0.0,
+)
+
+ACTOR_QUANT = QuantSpec(8, -4.0, 4.0)
+
+
+def param_counts() -> dict:
+    """Table 6 parameter counts."""
+    return {
+        "mlp_actor": mlp_param_count(MLP_ACTOR_DIMS),
+        "mlp_critic": mlp_param_count(MLP_CRITIC_DIMS),
+        "kan_actor": kan_param_count(KAN_ACTOR_CFG),
+    }
+
+
+def init_actor(kind: str, key: jax.Array) -> dict:
+    """kind in {mlp_fp, mlp_q8, kan_fp, kan_q8}."""
+    k1, k2 = jax.random.split(key)
+    if kind.startswith("mlp"):
+        body = init_mlp(k1, MLP_ACTOR_DIMS)
+    else:
+        body = init_kan(k1, KAN_ACTOR_CFG)
+    return {"body": body, "log_std": jnp.full((ACT_DIM,), -0.5)}
+
+
+def actor_mean(kind: str, params: dict, obs: jnp.ndarray) -> jnp.ndarray:
+    """Pre-tanh mean of the policy Gaussian."""
+    quant = kind.endswith("q8")
+    if kind.startswith("mlp"):
+        return mlp_forward(params["body"], obs, quant=ACTOR_QUANT if quant else None)
+    return kan_forward(params["body"], obs, KAN_ACTOR_CFG, quantized=quant)
+
+
+def init_critic(key: jax.Array) -> list[dict]:
+    return init_mlp(key, MLP_CRITIC_DIMS)
+
+
+def critic_value(params: list[dict], obs: jnp.ndarray) -> jnp.ndarray:
+    return mlp_forward(params, obs)[:, 0]

@@ -1,0 +1,187 @@
+"""Clipped PPO with GAE, from scratch (paper §5.7 / Fig. 7).
+
+Four scenarios (Table 6/7): MLP FP, MLP 8-bit, KAN FP, KAN 8-bit actors —
+the critic is always a float MLP. The update is jitted; environment
+stepping is numpy-vectorized.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kan.train import adamw_init, adamw_update
+from . import actors
+from .cheetah import CheetahLite
+
+SCENARIOS = ["mlp_fp", "mlp_q8", "kan_fp", "kan_q8"]
+
+
+@dataclass
+class PpoCfg:
+    n_envs: int = 16
+    rollout: int = 128
+    total_steps: int = 150_000
+    epochs: int = 4
+    minibatches: int = 4
+    gamma: float = 0.98
+    lam: float = 0.95
+    clip: float = 0.2
+    lr: float = 3e-4
+    vf_coef: float = 0.5
+    ent_coef: float = 1e-3
+    max_grad_norm: float = 0.5
+
+
+def _gaussian_logp(mean, log_std, act):
+    var = jnp.exp(2 * log_std)
+    return -0.5 * jnp.sum((act - mean) ** 2 / var + 2 * log_std + jnp.log(2 * np.pi), axis=-1)
+
+
+def _clip_grads(grads, max_norm):
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-8))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def train(kind: str, seed: int = 0, cfg: PpoCfg | None = None, log=None) -> dict:
+    """Train one scenario; returns {steps, returns} learning-curve arrays."""
+    cfg = cfg or PpoCfg()
+    key = jax.random.PRNGKey(seed)
+    k_actor, k_critic, key = jax.random.split(key, 3)
+    actor = actors.init_actor(kind, k_actor)
+    critic = actors.init_critic(k_critic)
+    opt_a = adamw_init(actor)
+    opt_c = adamw_init(critic)
+
+    env = CheetahLite(cfg.n_envs, seed=seed + 1000)
+    obs = env.reset()
+
+    @jax.jit
+    def policy_step(actor, obs, key):
+        mean = actors.actor_mean(kind, actor, obs)
+        std = jnp.exp(actor["log_std"])
+        eps = jax.random.normal(key, mean.shape)
+        act = mean + std * eps
+        logp = _gaussian_logp(mean, actor["log_std"], act)
+        return act, logp
+
+    @jax.jit
+    def values(critic, obs):
+        return actors.critic_value(critic, obs)
+
+    @jax.jit
+    def update(actor, critic, opt_a, opt_c, batch):
+        obs_b, act_b, logp_b, adv_b, ret_b = batch
+
+        def actor_loss(a):
+            mean = actors.actor_mean(kind, a, obs_b)
+            logp = _gaussian_logp(mean, a["log_std"], act_b)
+            ratio = jnp.exp(logp - logp_b)
+            unclipped = ratio * adv_b
+            clipped = jnp.clip(ratio, 1 - cfg.clip, 1 + cfg.clip) * adv_b
+            ent = jnp.sum(a["log_std"] + 0.5 * jnp.log(2 * np.pi * np.e))
+            return -jnp.mean(jnp.minimum(unclipped, clipped)) - cfg.ent_coef * ent
+
+        def critic_loss(c):
+            v = actors.critic_value(c, obs_b)
+            return cfg.vf_coef * jnp.mean((v - ret_b) ** 2)
+
+        la, ga = jax.value_and_grad(actor_loss)(actor)
+        lc, gc = jax.value_and_grad(critic_loss)(critic)
+        ga = _clip_grads(ga, cfg.max_grad_norm)
+        gc = _clip_grads(gc, cfg.max_grad_norm)
+        actor, opt_a = adamw_update(actor, ga, opt_a, cfg.lr, weight_decay=0.0)
+        critic, opt_c = adamw_update(critic, gc, opt_c, cfg.lr, weight_decay=0.0)
+        return actor, critic, opt_a, opt_c, la + lc
+
+    steps_done = 0
+    curve_steps, curve_returns = [], []
+    ep_return = np.zeros(cfg.n_envs)
+    finished_returns: list[float] = []
+    t0 = time.time()
+
+    while steps_done < cfg.total_steps:
+        # rollout
+        obs_buf = np.zeros((cfg.rollout, cfg.n_envs, actors.OBS_DIM), np.float32)
+        act_buf = np.zeros((cfg.rollout, cfg.n_envs, actors.ACT_DIM), np.float32)
+        logp_buf = np.zeros((cfg.rollout, cfg.n_envs), np.float32)
+        rew_buf = np.zeros((cfg.rollout, cfg.n_envs), np.float32)
+        done_buf = np.zeros((cfg.rollout, cfg.n_envs), np.float32)
+        val_buf = np.zeros((cfg.rollout + 1, cfg.n_envs), np.float32)
+
+        for t in range(cfg.rollout):
+            key, sk = jax.random.split(key)
+            act, logp = policy_step(actor, jnp.asarray(obs), sk)
+            act_np = np.asarray(act)
+            val_buf[t] = np.asarray(values(critic, jnp.asarray(obs)))
+            obs_buf[t] = obs
+            act_buf[t] = act_np
+            logp_buf[t] = np.asarray(logp)
+            obs, rew, done = env.step(np.tanh(act_np))
+            rew_buf[t] = rew
+            done_buf[t] = done
+            ep_return += rew
+            if done.any():
+                for i in np.where(done)[0]:
+                    finished_returns.append(float(ep_return[i]))
+                    ep_return[i] = 0.0
+        val_buf[cfg.rollout] = np.asarray(values(critic, jnp.asarray(obs)))
+        steps_done += cfg.rollout * cfg.n_envs
+
+        # GAE
+        adv = np.zeros_like(rew_buf)
+        last = np.zeros(cfg.n_envs, np.float32)
+        for t in reversed(range(cfg.rollout)):
+            nonterminal = 1.0 - done_buf[t]
+            delta = rew_buf[t] + cfg.gamma * val_buf[t + 1] * nonterminal - val_buf[t]
+            last = delta + cfg.gamma * cfg.lam * nonterminal * last
+            adv[t] = last
+        ret = adv + val_buf[: cfg.rollout]
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+
+        flat = lambda x: x.reshape(-1, *x.shape[2:])
+        data = (flat(obs_buf), flat(act_buf), flat(logp_buf), flat(adv), flat(ret))
+        n = data[0].shape[0]
+        rng = np.random.default_rng(steps_done)
+        for _ in range(cfg.epochs):
+            perm = rng.permutation(n)
+            for mb in np.array_split(perm, cfg.minibatches):
+                batch = tuple(jnp.asarray(d[mb]) for d in data)
+                actor, critic, opt_a, opt_c, _ = update(actor, critic, opt_a, opt_c, batch)
+
+        recent = float(np.mean(finished_returns[-10:])) if finished_returns else float(np.sum(rew_buf) / cfg.n_envs)
+        curve_steps.append(steps_done)
+        curve_returns.append(recent)
+        if log:
+            log(f"  [{kind} seed {seed}] steps {steps_done:7d} return {recent:9.1f}")
+
+    return {
+        "kind": kind,
+        "seed": seed,
+        "steps": curve_steps,
+        "returns": curve_returns,
+        "final_return": float(np.mean(curve_returns[-3:])),
+        "actor": actor,
+        "seconds": time.time() - t0,
+    }
+
+
+def evaluate(kind: str, actor: dict, n_episodes: int = 4, seed: int = 9999) -> float:
+    """Deterministic (mean-action) evaluation return."""
+    env = CheetahLite(n_episodes, seed=seed)
+    obs = env.reset()
+    total = np.zeros(n_episodes)
+    fn = jax.jit(lambda p, o: actors.actor_mean(kind, p, o))
+    from .cheetah import EPISODE_LEN
+
+    for _ in range(EPISODE_LEN):
+        act = np.tanh(np.asarray(fn(actor, jnp.asarray(obs))))
+        obs, rew, _ = env.step(act)
+        total += rew
+    return float(total.mean())

@@ -1,0 +1,146 @@
+"""Training driver: dataset -> QAT+pruned KAN -> checkpoint + testset + HLO.
+
+Usage (from ``python/``)::
+
+    python -m compile.trainer moons jsc_openml          # named datasets
+    python -m compile.trainer --all                     # every Table 2 row
+    python -m compile.trainer moons --with-mlp          # also MLP FP baseline
+
+Artifacts land in ``../artifacts/``:
+    <name>.ckpt.json      full checkpoint (params, masks, L-LUTs, oracle vecs)
+    <name>.testset.json   eval set as input codes + labels
+    <name>.hlo.txt        AOT-lowered quantized inference fn (PJRT runtime)
+    <name>.train.json     per-epoch history + float baselines (Table 2 row)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from . import datasets
+from .aot import export_kan_inference
+from .configs import TABLE2, ExperimentCfg
+from .export import export_checkpoint, export_testset, input_codes_from_raw, quantized_int_forward
+from .kan.quant import fit_input_preproc
+from .kan.train import train_kan, train_mlp
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _norm_inputs(cfg: ExperimentCfg, x_train, x_test):
+    """Fit the folded BN+ScalarBiasScale preproc on train, apply to both."""
+    preproc = fit_input_preproc(x_train, cfg.kan.input_quant, coverage=cfg.coverage)
+    return preproc, preproc.apply_np(x_train).astype(np.float32), preproc.apply_np(x_test).astype(np.float32)
+
+
+def run_experiment(name: str, with_mlp: bool = False, with_float_kan: bool = False, seed: int = 0,
+                   epochs: int | None = None, log=print) -> dict:
+    cfg = TABLE2[name]
+    x_tr, y_tr, x_te, y_te = datasets.load(name, **cfg.dataset_kwargs)
+    preproc, xn_tr, xn_te = _norm_inputs(cfg, x_tr, x_te)
+    task = cfg.task if cfg.task != "binary" else "binary"
+    train_task = {"classify": "classify", "binary": "binary", "regress": "regress"}[cfg.task]
+    # autoencoder targets are the *quantizer-domain-clipped* inputs: the
+    # hardware reconstruction can only be compared against decodable values
+    lo, hi = cfg.kan.domain
+    y_tr_t = np.clip(xn_tr, lo, hi) if cfg.task == "regress" else y_tr
+    y_te_t = np.clip(xn_te, lo, hi) if cfg.task == "regress" else y_te
+    ep = epochs if epochs is not None else cfg.epochs
+
+    log(f"[{name}] training KAN (quantized+pruned), dims={cfg.kan.dims} bits={cfg.kan.bits} T={cfg.kan.prune_threshold}")
+    res = train_kan(
+        cfg.kan, xn_tr, y_tr_t, xn_te, y_te_t,
+        epochs=ep, batch_size=cfg.batch_size, lr=cfg.lr, seed=seed,
+        quantized=True, task=train_task, log=lambda s: log(f"  {s}"),
+    )
+    metrics = {"kan_qp_val": res.history[-1]["val"], "edges": res.history[-1]["edges"],
+               "train_seconds": res.seconds}
+
+    extras = {}
+    if with_float_kan:
+        log(f"[{name}] training KAN (float)")
+        res_fp = train_kan(
+            cfg.kan, xn_tr, y_tr_t, xn_te, y_te_t,
+            epochs=ep, batch_size=cfg.batch_size, lr=cfg.lr, seed=seed,
+            quantized=False, task=train_task,
+        )
+        extras["kan_fp_val"] = res_fp.history[-1]["val"]
+    if with_mlp:
+        log(f"[{name}] training MLP FP baseline dims={cfg.mlp_dims}")
+        _, hist = train_mlp(
+            cfg.mlp_dims, xn_tr, y_tr_t, xn_te, y_te_t,
+            epochs=ep, batch_size=cfg.batch_size, lr=cfg.lr, seed=seed, task=train_task,
+        )
+        extras["mlp_fp_val"] = hist[-1]["val"]
+    metrics.update(extras)
+
+    # identity preproc for export: inputs were already normalised above, so
+    # the exported affine is the fitted one (raw -> normalised happens in rust)
+    os.makedirs(ART, exist_ok=True)
+    ckpt_path = os.path.join(ART, f"{name}.ckpt.json")
+    model = export_checkpoint(
+        ckpt_path, name, cfg.task, cfg.kan, res.params, res.masks, preproc,
+        x_te, y_te, metrics,
+    )
+    export_testset(os.path.join(ART, f"{name}.testset.json"), model, x_te, y_te)
+
+    # hardware-accuracy of the integer pipeline on the full (exported) set
+    codes = input_codes_from_raw(model, x_te[:4096])
+    sums = quantized_int_forward(model, codes)
+    if cfg.task == "classify":
+        hw_acc = float((np.argmax(sums, axis=1) == y_te[: sums.shape[0]]).mean())
+    elif cfg.task == "binary":
+        hw_acc = float(((sums[:, 0] > 0).astype(np.int64) == y_te[: sums.shape[0]]).mean())
+    else:
+        rec = sums.astype(np.float64) / (1 << model.frac_bits)
+        errs = np.mean((rec - y_te_t[: sums.shape[0]]) ** 2, axis=1)
+        # AUC of reconstruction error vs anomaly label
+        lab = y_te[: sums.shape[0]]
+        order = np.argsort(errs)
+        ranks = np.empty_like(order, dtype=np.float64)
+        ranks[order] = np.arange(errs.size)
+        pos, neg = ranks[lab == 1], ranks[lab == 0]
+        hw_acc = float((pos.mean() - neg.mean()) / errs.size + 0.5) if pos.size and neg.size else 0.0
+    metrics["hw_int_metric"] = hw_acc
+    log(f"[{name}] hardware integer-pipeline metric: {hw_acc:.4f}")
+
+    log(f"[{name}] lowering quantized inference to HLO (Pallas kernel path)")
+    t0 = time.time()
+    try:
+        export_kan_inference(ckpt_path, os.path.join(ART, f"{name}.hlo.txt"), batch=256)
+        metrics["hlo_seconds"] = time.time() - t0
+    except Exception as e:  # pragma: no cover - large models may exceed lowering budget
+        log(f"[{name}] HLO export failed ({e}); falling back to jnp path")
+        export_kan_inference(ckpt_path, os.path.join(ART, f"{name}.hlo.txt"), batch=256, use_kernel=False)
+
+    with open(os.path.join(ART, f"{name}.train.json"), "w") as f:
+        json.dump({"name": name, "metrics": metrics, "history": res.history}, f)
+    log(f"[{name}] done: {metrics}")
+    return metrics
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("names", nargs="*", help=f"datasets: {list(TABLE2)}")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--with-mlp", action="store_true")
+    ap.add_argument("--with-float-kan", action="store_true")
+    ap.add_argument("--epochs", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    names = list(TABLE2) if args.all else args.names
+    if not names:
+        ap.error("give dataset names or --all")
+    for n in names:
+        run_experiment(n, with_mlp=args.with_mlp, with_float_kan=args.with_float_kan,
+                       seed=args.seed, epochs=args.epochs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""B-spline basis properties: partition of unity, locality, numpy/jnp parity."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kan import bspline
+
+
+@pytest.mark.parametrize("grid,order", [(4, 2), (6, 3), (30, 10), (40, 10), (1, 0)])
+def test_partition_of_unity(grid, order):
+    knots = bspline.make_knots(grid, (-2.0, 2.0), order)
+    xs = np.linspace(-2, 2, 201)
+    b = bspline.bspline_basis_np(xs, knots, order)
+    assert b.shape == (201, grid + order)
+    np.testing.assert_allclose(b.sum(-1), 1.0, atol=1e-9)
+
+
+def test_knot_vector():
+    k = bspline.make_knots(6, (-8.0, 8.0), 3)
+    assert len(k) == 6 + 2 * 3 + 1
+    assert k[3] == -8.0 and k[-4] == 8.0
+    np.testing.assert_allclose(np.diff(k), np.diff(k)[0])
+
+
+def test_invalid_args():
+    with pytest.raises(ValueError):
+        bspline.make_knots(0, (-1, 1), 2)
+    with pytest.raises(ValueError):
+        bspline.make_knots(4, (1, -1), 2)
+    with pytest.raises(ValueError):
+        bspline.make_knots(4, (-1, 1), -1)
+
+
+def test_clamping_outside_domain():
+    knots = bspline.make_knots(6, (-8.0, 8.0), 3)
+    inside = bspline.bspline_basis_np(np.array([8.0]), knots, 3)
+    outside = bspline.bspline_basis_np(np.array([100.0]), knots, 3)
+    np.testing.assert_array_equal(inside, outside)
+
+
+def test_nonnegativity_and_locality():
+    knots = bspline.make_knots(8, (0.0, 8.0), 3)
+    b = bspline.bspline_basis_np(np.array([0.5]), knots, 3)[0]
+    assert (b >= -1e-12).all()
+    assert np.all(b[4:] == 0.0)  # support limited to order+1 intervals
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    grid=st.integers(1, 20),
+    order=st.integers(0, 6),
+    # f32-representable inputs: jax runs f32 here (x64 disabled), and a
+    # float64 denormal that rounds across a knot boundary when cast is a
+    # representation artifact, not an algorithm divergence
+    x=st.floats(-10, 10, allow_nan=False, allow_subnormal=False, width=32),
+)
+def test_jnp_matches_np(grid, order, x):
+    knots = bspline.make_knots(grid, (-3.0, 3.0), order)
+    b_np = bspline.bspline_basis_np(np.array([x]), knots, order)
+    b_j = np.asarray(bspline.bspline_basis(jnp.asarray([x], jnp.float32), knots, order))
+    np.testing.assert_allclose(b_np, b_j, atol=5e-6)
+
+
+def test_silu_twins():
+    xs = np.linspace(-20, 20, 101)
+    np.testing.assert_allclose(
+        bspline.silu_np(xs), np.asarray(bspline.silu(jnp.asarray(xs))), atol=5e-6
+    )

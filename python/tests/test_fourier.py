@@ -1,0 +1,98 @@
+"""Fourier-basis KAN (paper §6 extension): trains, tabulates, LUT-compatible."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import datasets
+from compile.kan.fourier import (
+    build_fourier_tables,
+    edge_phi_fourier_np,
+    fourier_basis,
+    fourier_basis_np,
+    fourier_kan_forward,
+    init_fourier_kan,
+    num_features,
+)
+from compile.kan.quant import QuantSpec, quantize_codes_np
+from compile.kan.train import adamw_init, adamw_update, bce_logits
+
+
+def test_basis_shapes_and_twins():
+    xs = np.linspace(-4, 4, 33)
+    H = 3
+    b_np = fourier_basis_np(xs, H, (-4.0, 4.0))
+    b_j = np.asarray(fourier_basis(jnp.asarray(xs, jnp.float32), H, (-4.0, 4.0)))
+    assert b_np.shape == (33, num_features(H))
+    np.testing.assert_allclose(b_np, b_j, atol=1e-5)
+    # DC feature is 1 everywhere
+    np.testing.assert_array_equal(b_np[:, 0], 1.0)
+
+
+def test_basis_periodic_on_domain():
+    H = 4
+    a, b = -2.0, 2.0
+    ba = fourier_basis_np(np.array([a]), H, (a, b))
+    bb = fourier_basis_np(np.array([b]), H, (a, b))
+    np.testing.assert_allclose(ba, bb, atol=1e-9)  # full period across domain
+
+
+def test_fourier_kan_trains_on_moons():
+    x_tr, y_tr, x_te, y_te = datasets.moons(n=1200, seed=2)
+    dims, H, dom, bits = (2, 4, 1), 4, (-4.0, 4.0), (6, 6, 8)
+    params = init_fourier_kan(jax.random.PRNGKey(0), dims, H)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, xb, yb):
+        def loss(p):
+            out = fourier_kan_forward(p, xb, dims, H, dom, bits=bits)
+            return bce_logits(out, yb)
+
+        l, g = jax.value_and_grad(loss)(params)
+        params, opt = adamw_update(params, g, opt, 1e-2, weight_decay=0.0)
+        return params, opt, l
+
+    xj = jnp.asarray(x_tr * 1.5)
+    yj = jnp.asarray(y_tr.astype(np.int32))
+    for _ in range(300):
+        params, opt, l = step(params, opt, xj, yj)
+    out = np.asarray(fourier_kan_forward(params, jnp.asarray(x_te * 1.5), dims, H, dom, bits=bits))
+    acc = (((out[:, 0] > 0).astype(np.int64)) == y_te).mean()
+    assert acc > 0.9, acc
+
+
+def test_fourier_tables_lut_compatible():
+    """The whole point of §6: a Fourier KAN tabulates exactly like B-splines,
+    so the integer pipeline (= the Rust netlist semantics) applies unchanged."""
+    dims, H, dom, bits, F = (3, 2), 2, (-2.0, 2.0), (4, 6), 12
+    params = init_fourier_kan(jax.random.PRNGKey(1), dims, H)
+    tables = build_fourier_tables(
+        [{"w": np.asarray(p["w"])} for p in params], dims, H, dom, bits, F
+    )
+    assert len(tables) == 1
+    assert len(tables[0]) == 2 and len(tables[0][0]) == 3
+    assert tables[0][0][0].shape == (16,)
+    # integer pipeline vs float forward at the quantized points
+    spec = QuantSpec(4, -2.0, 2.0)
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-2, 2, (32, 3))
+    codes = quantize_codes_np(x, spec)
+    ints = np.zeros((32, 2), np.int64)
+    for q in range(2):
+        for p in range(3):
+            ints[:, q] += tables[0][q][p][codes[:, p]]
+    got = ints.astype(np.float64) / (1 << F)
+    xq = spec.lo + codes * spec.scale
+    want = np.asarray(
+        fourier_kan_forward(params, jnp.asarray(xq, jnp.float32), dims, H, dom, bits=None)
+    )
+    np.testing.assert_allclose(got, want, atol=2e-3)
+
+
+def test_edge_phi_accumulation_order():
+    w = np.array([1.0, 0.5, -0.25, 0.125, 0.0625])
+    x = np.array([0.3, -1.1])
+    phi = edge_phi_fourier_np(x, w, 2, (-2.0, 2.0))
+    basis = fourier_basis_np(x, 2, (-2.0, 2.0))
+    np.testing.assert_allclose(phi, basis @ w, atol=1e-12)

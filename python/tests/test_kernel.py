@@ -1,0 +1,81 @@
+"""L1 Pallas kernel vs the pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes, grid sizes, orders, domains and value ranges;
+assert_allclose against ref.kan_layer_ref.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kan import bspline
+from compile.kernels.kan_spline import kan_layer_pallas, pack_weights, vmem_footprint_bytes
+from compile.kernels.ref import kan_layer_ref
+
+
+def _run_case(batch, d_in, d_out, grid, order, domain, scale, seed, block_b):
+    rng = np.random.default_rng(seed)
+    nb = bspline.num_bases(grid, order)
+    knots = bspline.make_knots(grid, domain, order)
+    x = (rng.normal(size=(batch, d_in)) * scale).astype(np.float32)
+    ws = rng.normal(size=(d_out, d_in, nb)).astype(np.float32)
+    wb = rng.normal(size=(d_out, d_in)).astype(np.float32)
+    ref = np.asarray(kan_layer_ref(jnp.asarray(x), jnp.asarray(ws), jnp.asarray(wb), knots, order))
+    pal = np.asarray(kan_layer_pallas(x, ws, wb, grid, domain, order, block_b=block_b))
+    np.testing.assert_allclose(ref, pal, atol=2e-4, rtol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 70),
+    d_in=st.integers(1, 9),
+    d_out=st.integers(1, 7),
+    grid=st.integers(2, 12),
+    order=st.integers(1, 4),
+    seed=st.integers(0, 2**31),
+)
+def test_kernel_matches_ref_sweep(batch, d_in, d_out, grid, order, seed):
+    _run_case(batch, d_in, d_out, grid, order, (-4.0, 4.0), 2.0, seed, block_b=16)
+
+
+@pytest.mark.parametrize("domain", [(-8.0, 8.0), (-2.0, 2.0), (0.0, 1.0)])
+def test_kernel_domains(domain):
+    _run_case(33, 4, 3, 6, 3, domain, (domain[1] - domain[0]) / 3, 7, block_b=8)
+
+
+def test_kernel_paper_configs():
+    # the actual Table 2 spline configs
+    _run_case(16, 16, 8, 40, 10, (-2.0, 2.0), 1.0, 1, block_b=16)
+    _run_case(16, 13, 4, 6, 3, (-8.0, 8.0), 3.0, 2, block_b=16)
+
+
+def test_kernel_edge_values():
+    # inputs exactly at and beyond the domain edges
+    rng = np.random.default_rng(3)
+    grid, order, domain = 6, 3, (-8.0, 8.0)
+    nb = bspline.num_bases(grid, order)
+    knots = bspline.make_knots(grid, domain, order)
+    x = np.array([[-8.0, 8.0], [100.0, -100.0], [0.0, 7.999]], np.float32)
+    ws = rng.normal(size=(2, 2, nb)).astype(np.float32)
+    wb = rng.normal(size=(2, 2)).astype(np.float32)
+    ref = np.asarray(kan_layer_ref(jnp.asarray(x), jnp.asarray(ws), jnp.asarray(wb), knots, order))
+    pal = np.asarray(kan_layer_pallas(x, ws, wb, grid, domain, order, block_b=8))
+    np.testing.assert_allclose(ref, pal, atol=2e-4)
+
+
+def test_pack_weights_layout():
+    ws = jnp.arange(2 * 3 * 4, dtype=jnp.float32).reshape(2, 3, 4)
+    wb = jnp.arange(2 * 3, dtype=jnp.float32).reshape(2, 3) * 100
+    w = np.asarray(pack_weights(ws, wb))
+    assert w.shape == (3 * 5, 2)
+    # input 0's features: 4 spline coeffs then base weight
+    np.testing.assert_array_equal(w[:5, 0], [0, 1, 2, 3, 0])
+    np.testing.assert_array_equal(w[:5, 1], [12, 13, 14, 15, 300])
+
+
+def test_vmem_model():
+    m = vmem_footprint_bytes(16, 8, 40, 10, block_b=128)
+    assert m["fits_16mib_vmem"]
+    assert 0 < m["mxu_tile_efficiency"] <= 1
+    assert m["flops_per_step"] > 0

@@ -1,0 +1,74 @@
+"""Pruning (Eq. 10-12): tau warmup, norm masking, backward propagation."""
+
+import jax
+import numpy as np
+import pytest
+
+from compile.kan.layers import KanCfg, init_kan
+from compile.kan.prune import active_edges, compute_masks, full_masks, tau
+
+
+def test_tau_warmup_shape():
+    T, t0, tf = 2.0, 5, 20
+    assert tau(0, T, t0, tf) == tau(5, T, t0, tf)  # flat before t0
+    assert tau(5, T, t0, tf) == pytest.approx(T / 20)  # starts at 5% of T
+    assert tau(tf, T, t0, tf) == pytest.approx(T)  # full at tf
+    assert tau(tf + 100, T, t0, tf) == pytest.approx(T)  # clamped after
+    # monotone nondecreasing
+    vals = [tau(t, T, t0, tf) for t in range(0, 30)]
+    assert all(b >= a for a, b in zip(vals, vals[1:]))
+
+
+def test_tau_zero_threshold():
+    assert tau(10, 0.0, 0, 5) == 0.0
+
+
+def _cfg(T=0.5):
+    return KanCfg(dims=(4, 3, 2), grid_size=4, order=2, domain=(-2.0, 2.0),
+                  bits=(4, 4, 6), prune_threshold=T, warmup_start=0, warmup_target=4)
+
+
+def test_full_masks_all_ones():
+    cfg = _cfg()
+    ms = full_masks(cfg)
+    assert [m.shape for m in ms] == [(3, 4), (2, 3)]
+    assert active_edges(ms) == 12 + 6
+
+
+def test_masks_prune_under_threshold():
+    cfg = _cfg(T=1e9)  # absurd threshold kills everything...
+    params = init_kan(jax.random.PRNGKey(0), cfg)
+    ms = compute_masks(params, cfg, epoch=100)
+    # ...except the keep-strongest-edge protection
+    assert all(np.asarray(m).sum() >= 1 for m in ms)
+    assert active_edges(ms) <= 4
+
+
+def test_no_pruning_when_threshold_zero():
+    cfg = _cfg(T=0.0)
+    params = init_kan(jax.random.PRNGKey(1), cfg)
+    ms = compute_masks(params, cfg, epoch=100)
+    assert active_edges(ms) == 18
+
+
+def test_backward_pruning_propagates():
+    cfg = _cfg(T=0.0)
+    params = init_kan(jax.random.PRNGKey(2), cfg)
+    # kill every layer-1 edge reading hidden neuron 0 by zeroing its weights;
+    # with a tiny threshold those edges prune, and backward pruning must then
+    # kill all of layer 0's edges INTO hidden neuron 0
+    cfg2 = _cfg(T=1e-6)
+    params[1]["w_spline"] = params[1]["w_spline"].at[:, 0, :].set(0.0)
+    ms = compute_masks(params, cfg2, epoch=100)
+    m1 = np.asarray(ms[1])
+    m0 = np.asarray(ms[0])
+    assert m1[:, 0].sum() == 0, "layer-1 edges from hidden 0 should be pruned"
+    assert m0[0, :].sum() == 0, "backward pruning should kill edges into hidden 0"
+
+
+def test_mask_shapes_match_layers():
+    cfg = _cfg(T=0.1)
+    params = init_kan(jax.random.PRNGKey(3), cfg)
+    ms = compute_masks(params, cfg, epoch=2)
+    assert ms[0].shape == (3, 4)
+    assert ms[1].shape == (2, 3)

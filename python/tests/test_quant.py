@@ -1,0 +1,99 @@
+"""Quantizer semantics (Eq. 7-9) and the hardware code contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kan.quant import (
+    InputPreproc,
+    QuantSpec,
+    dequantize_codes_np,
+    fake_quant,
+    fit_input_preproc,
+    quantize_codes_np,
+    round_ste,
+)
+
+
+def test_spec_scale():
+    s = QuantSpec(6, -8.0, 8.0)
+    assert s.levels == 64
+    np.testing.assert_allclose(s.scale, 16.0 / 63)
+
+
+def test_codes_roundtrip():
+    s = QuantSpec(5, -2.0, 2.0)
+    codes = np.arange(32)
+    vals = dequantize_codes_np(codes, s)
+    np.testing.assert_array_equal(quantize_codes_np(vals, s), codes)
+
+
+def test_clipping():
+    s = QuantSpec(4, -1.0, 1.0)
+    assert quantize_codes_np(np.array([-100.0]), s)[0] == 0
+    assert quantize_codes_np(np.array([100.0]), s)[0] == 15
+
+
+def test_rounding_rule_is_floor_half_up():
+    # exactly between codes 0 and 1 -> rounds up (floor(v + .5))
+    s = QuantSpec(2, 0.0, 3.0)  # scale = 1
+    assert quantize_codes_np(np.array([0.5]), s)[0] == 1
+    assert quantize_codes_np(np.array([0.49999]), s)[0] == 0
+    assert quantize_codes_np(np.array([1.5]), s)[0] == 2
+
+
+def test_fake_quant_fixed_points():
+    s = QuantSpec(3, -4.0, 4.0)
+    vals = dequantize_codes_np(np.arange(8), s)
+    out = np.asarray(fake_quant(jnp.asarray(vals), s))
+    np.testing.assert_allclose(out, vals, atol=1e-6)
+
+
+def test_ste_gradient_is_identity():
+    g = jax.grad(lambda x: round_ste(x * 3.7).sum())(jnp.asarray([0.3, -1.2]))
+    np.testing.assert_allclose(np.asarray(g), [3.7, 3.7], atol=1e-6)
+
+
+def test_fake_quant_gradient_flows():
+    s = QuantSpec(4, -2.0, 2.0)
+    g = jax.grad(lambda x: fake_quant(x, s).sum())(jnp.asarray([0.1, 1.0]))
+    np.testing.assert_allclose(np.asarray(g), [1.0, 1.0], atol=1e-6)
+    # clipped region: zero gradient
+    g2 = jax.grad(lambda x: fake_quant(x, s).sum())(jnp.asarray([5.0]))
+    np.testing.assert_allclose(np.asarray(g2), [0.0], atol=1e-6)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    bits=st.integers(1, 12),
+    x=st.floats(-50, 50, allow_nan=False),
+)
+def test_quantization_error_bound(bits, x):
+    s = QuantSpec(bits, -4.0, 4.0)
+    code = quantize_codes_np(np.array([x]), s)[0]
+    v = dequantize_codes_np(np.array([code]), s)[0]
+    clipped = np.clip(x, -4.0, 4.0)
+    assert abs(v - clipped) <= s.scale / 2 + 1e-12
+
+
+def test_preproc_fit_and_fold():
+    rng = np.random.default_rng(0)
+    x = rng.normal(3.0, 2.5, (1000, 4))
+    x[:, 2] = 7.0  # constant feature
+    s = QuantSpec(6, -8.0, 8.0)
+    pre = fit_input_preproc(x, s, coverage=3.0)
+    xn = pre.apply_np(x)
+    # ~99.7% of mass inside the domain
+    assert (np.abs(xn) <= 8.0).mean() > 0.99
+    np.testing.assert_allclose(xn.mean(0)[:2], 0.0, atol=0.3)
+    # numpy and jnp twins agree
+    np.testing.assert_allclose(
+        xn, np.asarray(pre.apply_jnp(jnp.asarray(x))), atol=1e-5
+    )
+
+
+def test_preproc_identity():
+    pre = InputPreproc(shift=np.zeros(3), span=np.ones(3))
+    x = np.array([[1.0, -2.0, 0.5]])
+    np.testing.assert_array_equal(pre.apply_np(x), x)

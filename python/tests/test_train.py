@@ -1,0 +1,120 @@
+"""Training loop smoke + AdamW + datasets + model layers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets
+from compile.kan.layers import (
+    KanCfg,
+    init_kan,
+    init_mlp,
+    kan_forward,
+    kan_param_count,
+    mlp_forward,
+    mlp_param_count,
+)
+from compile.kan.train import adamw_init, adamw_update, bce_logits, softmax_xent, train_kan
+
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, opt = adamw_update(params, g, opt, lr=0.1, weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_losses():
+    logits = jnp.asarray([[10.0, -10.0], [-10.0, 10.0]])
+    labels = jnp.asarray([0, 1])
+    assert float(softmax_xent(logits, labels)) < 1e-3
+    z = jnp.asarray([[10.0], [-10.0]])
+    y = jnp.asarray([1, 0])
+    assert float(bce_logits(z, y)) < 1e-3
+
+
+def test_param_counts_table6():
+    # paper Table 6: KAN actor [17, 6], G=6, S=3 -> 1020 params
+    cfg = KanCfg(dims=(17, 6), grid_size=6, order=3, domain=(-4.0, 4.0), bits=(8, 8))
+    assert kan_param_count(cfg) == 1020
+    assert mlp_param_count((17, 64, 64, 6)) == 17 * 64 + 64 + 64 * 64 + 64 + 64 * 6 + 6
+
+
+def test_kan_forward_shapes():
+    cfg = KanCfg(dims=(5, 4, 3), grid_size=4, order=2, domain=(-2.0, 2.0), bits=(4, 5, 6))
+    params = init_kan(jax.random.PRNGKey(0), cfg)
+    x = jnp.zeros((7, 5))
+    for quantized in (False, True):
+        out = kan_forward(params, x, cfg, quantized=quantized)
+        assert out.shape == (7, 3)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+def test_mlp_forward_shapes():
+    params = init_mlp(jax.random.PRNGKey(1), (5, 8, 2))
+    out = mlp_forward(params, jnp.zeros((3, 5)))
+    assert out.shape == (3, 2)
+
+
+def test_train_kan_learns_moons():
+    x_tr, y_tr, x_te, y_te = datasets.moons(n=1200, seed=5)
+    cfg = KanCfg(dims=(2, 2, 1), grid_size=6, order=3, domain=(-8.0, 8.0),
+                 bits=(6, 5, 8), prune_threshold=0.0)
+    res = train_kan(cfg, x_tr * 2, y_tr, x_te * 2, y_te, epochs=25,
+                    batch_size=64, lr=1e-2, task="binary")
+    assert res.history[-1]["val"] > 0.85, res.history[-1]
+
+
+def test_train_respects_masks_gradient():
+    """Pruned edges receive no gradient (masked inside the graph)."""
+    cfg = KanCfg(dims=(2, 2), grid_size=4, order=2, domain=(-2.0, 2.0), bits=(4, 6))
+    params = init_kan(jax.random.PRNGKey(2), cfg)
+    mask = jnp.asarray([[1.0, 0.0], [1.0, 1.0]])
+
+    def loss(p):
+        out = kan_forward(p, jnp.ones((4, 2)), cfg, masks=[mask], quantized=False)
+        return jnp.sum(out**2)
+
+    g = jax.grad(loss)(params)
+    dead = np.asarray(g[0]["w_spline"])[0, 1]
+    np.testing.assert_array_equal(dead, 0.0)
+    assert np.abs(np.asarray(g[0]["w_spline"])[0, 0]).sum() > 0
+
+
+@pytest.mark.parametrize("name,d,k", [
+    ("moons", 2, 2), ("wine", 13, 3), ("dry_bean", 16, 7),
+    ("jsc_openml", 16, 5), ("jsc_cernbox", 16, 5),
+])
+def test_dataset_shapes(name, d, k):
+    kw = {"n": 400} if name != "moons" else {"n": 400}
+    x_tr, y_tr, x_te, y_te = datasets.load(name, **kw, seed=1)
+    assert x_tr.shape[1] == d
+    assert set(np.unique(np.concatenate([y_tr, y_te]))) <= set(range(k))
+    assert x_tr.dtype == np.float32
+    assert len(x_te) > 0
+
+
+def test_dataset_determinism():
+    a = datasets.wine(n=100, seed=9)
+    b = datasets.wine(n=100, seed=9)
+    np.testing.assert_array_equal(a[0], b[0])
+    c = datasets.wine(n=100, seed=10)
+    assert not np.array_equal(a[0], c[0])
+
+
+def test_mnist_surrogate_renders():
+    x_tr, y_tr, x_te, y_te = datasets.mnist(n_train=40, n_test=10, seed=2)
+    assert x_tr.shape == (40, 784)
+    assert x_tr.max() <= 1.0 and x_tr.min() >= 0.0
+    # glyphs have ink
+    assert (x_tr.sum(1) > 5).all()
+
+
+def test_toyadmos_surrogate_structure():
+    x_tr, y_tr_dummy, x_te, y_te = datasets.toyadmos(n_machines=8, windows_per_machine=6, seed=3)
+    assert x_tr.shape[1] == 64
+    assert set(np.unique(y_te)) <= {0, 1}
+    assert (y_te == 1).any() and (y_te == 0).any()

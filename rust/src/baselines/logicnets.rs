@@ -1,0 +1,133 @@
+//! LogicNets-style baseline (Umuroglu et al. 2020).
+//!
+//! LogicNets trains a sparse MLP where every neuron has a bounded fan-in F
+//! of beta-bit activations; each neuron (dot-product + BN + quantized
+//! activation) is *collapsed into one logical LUT* with F*beta address bits
+//! and beta output bits. Because neurons chain LUT->LUT, the cost is
+//! exponential in F*beta — and pruning a LUT breaks the indexing of every
+//! downstream LUT, which is the contrast the paper draws with KANELE's
+//! additive independence (§3.3).
+
+use super::BaselineReport;
+
+use crate::synth::plut_cost;
+
+/// One LogicNets layer: d_out neurons, each reading `fanin` inputs of
+/// `bits_in` bits and emitting `bits_out` bits.
+#[derive(Clone, Copy, Debug)]
+pub struct LogicNetsLayer {
+    pub d_out: usize,
+    pub fanin: usize,
+    pub bits_in: u32,
+    pub bits_out: u32,
+}
+
+/// Whole-network config.
+#[derive(Clone, Debug)]
+pub struct LogicNetsCfg {
+    pub name: String,
+    pub layers: Vec<LogicNetsLayer>,
+}
+
+impl LogicNetsCfg {
+    /// The JSC-sized config from the LogicNets paper (JSC-M/L flavour).
+    pub fn jsc_l() -> Self {
+        LogicNetsCfg {
+            name: "LogicNets JSC-L".into(),
+            layers: vec![
+                LogicNetsLayer { d_out: 32, fanin: 4, bits_in: 3, bits_out: 3 },
+                LogicNetsLayer { d_out: 64, fanin: 4, bits_in: 3, bits_out: 3 },
+                LogicNetsLayer { d_out: 192, fanin: 4, bits_in: 3, bits_out: 3 },
+                LogicNetsLayer { d_out: 5, fanin: 4, bits_in: 3, bits_out: 7 },
+            ],
+        }
+    }
+
+    pub fn estimate(&self) -> BaselineReport {
+        let mut luts = 0u64;
+        let mut ffs = 0u64;
+        let mut worst_addr = 0u32;
+        for l in &self.layers {
+            let addr = l.fanin as u32 * l.bits_in;
+            worst_addr = worst_addr.max(addr);
+            // one logical LUT per neuron: addr -> bits_out
+            luts += l.d_out as u64 * plut_cost(addr, l.bits_out);
+            // pipeline register per neuron output
+            ffs += l.d_out as u64 * l.bits_out as u64;
+        }
+        // deep LUT cascades route badly; clock model: base + per-mux-level
+        let mux_levels = worst_addr.saturating_sub(6) as f64;
+        let period = 0.35 + 0.16 * mux_levels + 0.12;
+        let fmax_mhz = (1000.0 / period).min(900.0);
+        let cycles = self.layers.len() + 1;
+        BaselineReport {
+            name: self.name.clone(),
+            luts,
+            ffs,
+            dsps: 0,
+            brams: 0,
+            fmax_mhz,
+            latency_cycles: cycles,
+            latency_ns: 0.0,
+            area_delay: 0.0,
+        }
+        .finish()
+    }
+
+    /// Demonstration of the pruning-incompatibility argument (§3.3): the
+    /// cost of a LogicNets neuron is unchanged when an *input* of its LUT
+    /// becomes irrelevant, because the truth table's address space cannot
+    /// shrink without retraining every downstream LUT.
+    pub fn cost_after_input_pruning(&self, layer: usize) -> (u64, u64) {
+        let l = &self.layers[layer];
+        let full = plut_cost(l.fanin as u32 * l.bits_in, l.bits_out);
+        // pruning one input only helps if the table is re-synthesized with a
+        // smaller address space — which changes the network function:
+        let ideal = plut_cost((l.fanin as u32 - 1) * l.bits_in, l.bits_out);
+        (full, ideal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsc_l_shape() {
+        let r = LogicNetsCfg::jsc_l().estimate();
+        // order of magnitude of the published JSC LogicNets design (~3e4 LUTs)
+        assert!(r.luts > 100, "LUTs {}", r.luts);
+        assert!(r.dsps == 0 && r.brams == 0);
+        assert!(r.latency_cycles >= 4);
+        assert!(r.fmax_mhz > 200.0);
+    }
+
+    #[test]
+    fn exponential_in_fanin_bits() {
+        let small = LogicNetsCfg {
+            name: "s".into(),
+            layers: vec![LogicNetsLayer { d_out: 10, fanin: 2, bits_in: 2, bits_out: 2 }],
+        }
+        .estimate();
+        let big = LogicNetsCfg {
+            name: "b".into(),
+            layers: vec![LogicNetsLayer { d_out: 10, fanin: 4, bits_in: 3, bits_out: 2 }],
+        }
+        .estimate();
+        // 4 address bits -> 12 address bits: cost explodes
+        assert!(big.luts > small.luts * 16, "{} vs {}", big.luts, small.luts);
+    }
+
+    #[test]
+    fn pruning_cannot_shrink_tables() {
+        let cfg = LogicNetsCfg::jsc_l();
+        let (full, ideal) = cfg.cost_after_input_pruning(0);
+        assert!(full > ideal, "re-synthesized table would be smaller ({full} vs {ideal}) — but requires retraining");
+    }
+
+    #[test]
+    fn depth_helper_consistency() {
+        // adder_depth is reused by other baselines; sanity-check linkage
+        assert_eq!(crate::netlist::adder_depth(4, 2), 2);
+    }
+}

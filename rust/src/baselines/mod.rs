@@ -1,0 +1,44 @@
+//! Baseline architectures from the paper's evaluation (Tables 3-5, 7).
+//!
+//! Two kinds of baseline live here:
+//!
+//! * **Structural cost models** — generators that, given the baseline's own
+//!   architecture hyperparameters (topology, fan-in, bitwidths, polynomial
+//!   degree, reuse factor), price its FPGA realization with the same device
+//!   models [`crate::synth`] uses for KANELE. These reproduce *how each
+//!   architecture scales* (LogicNets/PolyLUT exponential in fan-in x bits,
+//!   hls4ml DSP-bound, Tran et al. BRAM/DSP-bound) — the property the
+//!   paper's comparisons rest on.
+//! * **Published rows** ([`published`]) — the exact numbers printed in the
+//!   paper for externally-trained systems, reported alongside our model
+//!   outputs so every table can show paper-vs-reproduction.
+
+pub mod hls4ml;
+pub mod logicnets;
+pub mod polylut;
+pub mod published;
+pub mod tran;
+
+/// Common resource/timing estimate shared by all baseline models.
+#[derive(Clone, Debug, Default)]
+pub struct BaselineReport {
+    pub name: String,
+    pub luts: u64,
+    pub ffs: u64,
+    pub dsps: u64,
+    pub brams: u64,
+    pub fmax_mhz: f64,
+    pub latency_cycles: usize,
+    pub latency_ns: f64,
+    pub area_delay: f64,
+}
+
+impl BaselineReport {
+    pub fn finish(mut self) -> Self {
+        if self.latency_ns == 0.0 && self.fmax_mhz > 0.0 {
+            self.latency_ns = self.latency_cycles as f64 / (self.fmax_mhz / 1000.0);
+        }
+        self.area_delay = self.luts as f64 * self.latency_ns;
+        self
+    }
+}

@@ -1,0 +1,155 @@
+//! PolyLUT-style baseline (Andronic & Constantinides 2023) and the
+//! PolyLUT-Add variant (Lou et al. 2024).
+//!
+//! PolyLUT tabulates degree-D multivariate polynomials of F inputs per
+//! neuron in a single logical LUT (F*beta address bits). It represents
+//! products natively — at the price of the same exponential address-space
+//! growth as LogicNets, with bigger constants because higher accuracy
+//! demands higher F. PolyLUT-Add splits each neuron into A sub-LUTs of
+//! fan-in F/A combined by an adder, trading address width for adders —
+//! exactly the structural trick KANELE gets "for free" from the KAN
+//! formulation (every edge is additive, A = fan-in).
+
+use super::BaselineReport;
+use crate::netlist::adder_depth;
+use crate::synth::plut_cost;
+
+#[derive(Clone, Copy, Debug)]
+pub struct PolyLutLayer {
+    pub d_out: usize,
+    pub fanin: usize,
+    pub bits: u32,
+    pub degree: u32,
+    /// Number of additive sub-LUTs per neuron (1 = plain PolyLUT).
+    pub n_sub: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct PolyLutCfg {
+    pub name: String,
+    pub layers: Vec<PolyLutLayer>,
+}
+
+/// Binomial coefficient (n choose k) saturating at u64::MAX.
+pub fn binom(n: u64, k: u64) -> u64 {
+    let k = k.min(n - k.min(n));
+    let mut acc: u128 = 1;
+    for i in 0..k {
+        acc = acc * (n - i) as u128 / (i + 1) as u128;
+        if acc > u64::MAX as u128 {
+            return u64::MAX;
+        }
+    }
+    acc as u64
+}
+
+impl PolyLutCfg {
+    /// JSC-sized plain PolyLUT (fan-in 6, degree 2) per the paper's setup.
+    pub fn jsc(degree: u32) -> Self {
+        PolyLutCfg {
+            name: if degree > 1 { "PolyLUT JSC".into() } else { "LUT-MLP JSC".into() },
+            layers: vec![
+                PolyLutLayer { d_out: 32, fanin: 6, bits: 3, degree, n_sub: 1 },
+                PolyLutLayer { d_out: 16, fanin: 6, bits: 3, degree, n_sub: 1 },
+                PolyLutLayer { d_out: 5, fanin: 6, bits: 3, degree, n_sub: 1 },
+            ],
+        }
+    }
+
+    /// PolyLUT-Add: same topology, each neuron split into `a` sub-LUTs.
+    pub fn jsc_add(degree: u32, a: usize) -> Self {
+        let mut cfg = Self::jsc(degree);
+        cfg.name = format!("PolyLUT-Add(A={a}) JSC");
+        for l in &mut cfg.layers {
+            l.n_sub = a;
+        }
+        cfg
+    }
+
+    /// Number of polynomial features per sub-LUT (monomials up to degree D
+    /// in F/A variables) — informational; hardware cost is address-bound.
+    pub fn monomials(fanin: usize, degree: u32) -> u64 {
+        binom(fanin as u64 + degree as u64, degree as u64)
+    }
+
+    pub fn estimate(&self) -> BaselineReport {
+        let mut luts = 0u64;
+        let mut ffs = 0u64;
+        let mut worst_addr = 0u32;
+        let mut extra_depth = 0usize;
+        for l in &self.layers {
+            let sub_fanin = l.fanin.div_ceil(l.n_sub);
+            let addr = sub_fanin as u32 * l.bits;
+            worst_addr = worst_addr.max(addr);
+            let sub_out_bits = l.bits + 2; // sub-sums carry guard bits
+            luts += (l.d_out * l.n_sub) as u64 * plut_cost(addr, sub_out_bits);
+            ffs += (l.d_out * l.n_sub) as u64 * sub_out_bits as u64;
+            if l.n_sub > 1 {
+                let d = adder_depth(l.n_sub, 2);
+                extra_depth = extra_depth.max(d);
+                luts += l.d_out as u64 * (l.n_sub as u64 - 1) * sub_out_bits as u64;
+                ffs += l.d_out as u64 * sub_out_bits as u64 * d as u64;
+            }
+        }
+        let mux_levels = worst_addr.saturating_sub(6) as f64;
+        let period = 0.35 + 0.16 * mux_levels + 0.12;
+        let fmax_mhz = (1000.0 / period).min(900.0);
+        let cycles = self.layers.len() * (1 + extra_depth) + 1;
+        BaselineReport {
+            name: self.name.clone(),
+            luts,
+            ffs,
+            dsps: 0,
+            brams: 0,
+            fmax_mhz,
+            latency_cycles: cycles,
+            latency_ns: 0.0,
+            area_delay: 0.0,
+        }
+        .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binom_values() {
+        assert_eq!(binom(6, 2), 15);
+        assert_eq!(binom(8, 0), 1);
+        assert_eq!(binom(8, 8), 1);
+        assert_eq!(binom(10, 3), 120);
+    }
+
+    #[test]
+    fn monomial_count() {
+        // degree-2 polynomial in 6 vars: C(8,2) = 28 monomials
+        assert_eq!(PolyLutCfg::monomials(6, 2), 28);
+    }
+
+    #[test]
+    fn add_variant_cheaper_than_plain() {
+        // The PolyLUT-Add claim: splitting fan-in across added sub-LUTs
+        // shrinks the exponential term more than the adders cost.
+        let plain = PolyLutCfg::jsc(2).estimate();
+        let added = PolyLutCfg::jsc_add(2, 2).estimate();
+        assert!(added.luts < plain.luts, "{} !< {}", added.luts, plain.luts);
+    }
+
+    #[test]
+    fn polylut_much_bigger_than_logicnets_at_same_task() {
+        use crate::baselines::logicnets::LogicNetsCfg;
+        let poly = PolyLutCfg::jsc(2).estimate();
+        let logic = LogicNetsCfg::jsc_l().estimate();
+        // PolyLUT's fan-in 6 x 3 bits = 18 address bits dwarfs LogicNets' 12
+        assert!(poly.luts > logic.luts, "{} !> {}", poly.luts, logic.luts);
+    }
+
+    #[test]
+    fn latency_grows_with_add_depth() {
+        let a1 = PolyLutCfg::jsc_add(2, 1).estimate();
+        let a4 = PolyLutCfg::jsc_add(2, 4).estimate();
+        assert!(a4.latency_cycles > a1.latency_cycles);
+    }
+}

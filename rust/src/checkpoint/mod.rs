@@ -1,0 +1,408 @@
+//! Typed checkpoint model loaded from the JSON exported by
+//! `python/compile/export.py` (format `kanele-ckpt-v1`).
+//!
+//! The checkpoint carries everything the toolflow needs: spline parameters
+//! (for L-LUT regeneration per the paper's flow), the authoritative tables
+//! exported by the Python oracle (for bit-exact cross-language tests),
+//! pruning masks, quantizer specs, the folded input preprocessing, and
+//! oracle test vectors.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::fixed::Quantizer;
+use crate::json::{self, Value};
+
+/// One KAN layer's parameters + mask + exported truth tables.
+#[derive(Clone, Debug)]
+pub struct LayerCkpt {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub in_bits: u32,
+    pub out_bits: u32,
+    /// w_spline[q][p][k], f64 — row-major (d_out, d_in, n_basis).
+    pub w_spline: Vec<f64>,
+    pub n_basis: usize,
+    /// w_base[q][p], f64 — (d_out, d_in).
+    pub w_base: Vec<f64>,
+    /// mask[q][p] — true = surviving edge.
+    pub mask: Vec<bool>,
+    /// Exported (authoritative) tables: table[q][p] is None for pruned edges,
+    /// else 2^in_bits i64 entries.
+    pub table: Vec<Option<Vec<i64>>>,
+}
+
+impl LayerCkpt {
+    pub fn mask_at(&self, q: usize, p: usize) -> bool {
+        self.mask[q * self.d_in + p]
+    }
+
+    pub fn table_at(&self, q: usize, p: usize) -> Option<&Vec<i64>> {
+        self.table[q * self.d_in + p].as_ref()
+    }
+
+    pub fn w_base_at(&self, q: usize, p: usize) -> f64 {
+        self.w_base[q * self.d_in + p]
+    }
+
+    pub fn w_spline_at(&self, q: usize, p: usize) -> &[f64] {
+        let off = (q * self.d_in + p) * self.n_basis;
+        &self.w_spline[off..off + self.n_basis]
+    }
+
+    /// Surviving edges in this layer.
+    pub fn active_edges(&self) -> usize {
+        self.mask.iter().filter(|&&m| m).count()
+    }
+}
+
+/// Folded input preprocessing: y = (x - shift) / span per feature.
+#[derive(Clone, Debug)]
+pub struct Preproc {
+    pub shift: Vec<f64>,
+    pub span: Vec<f64>,
+}
+
+impl Preproc {
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        x.iter()
+            .zip(self.shift.iter().zip(&self.span))
+            .map(|(v, (s, p))| (v - s) / p)
+            .collect()
+    }
+}
+
+/// Oracle test vectors: input codes and expected final-layer i64 sums.
+#[derive(Clone, Debug, Default)]
+pub struct TestVectors {
+    pub input_codes: Vec<Vec<u32>>,
+    pub output_sums: Vec<Vec<i64>>,
+}
+
+/// Full checkpoint.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub name: String,
+    pub task: String, // classify | binary | regress
+    pub grid_size: usize,
+    pub order: usize,
+    pub domain: (f64, f64),
+    pub dims: Vec<usize>,
+    pub bits: Vec<u32>,
+    pub frac_bits: u32,
+    pub prune_threshold: f64,
+    pub preproc: Preproc,
+    pub layers: Vec<LayerCkpt>,
+    pub test_vectors: TestVectors,
+}
+
+impl Checkpoint {
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Quantizer in front of layer `l` (l = 0 is the input quantizer).
+    pub fn quantizer(&self, l: usize) -> Quantizer {
+        Quantizer::new(self.bits[l], self.domain.0, self.domain.1)
+    }
+
+    /// Total surviving edges (Fig. 6b x-axis).
+    pub fn active_edges(&self) -> usize {
+        self.layers.iter().map(|l| l.active_edges()).sum()
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let doc = json::from_file(path)?;
+        Self::from_json(&doc).with_context(|| format!("loading checkpoint {}", path.display()))
+    }
+
+    pub fn from_json(doc: &Value) -> Result<Checkpoint> {
+        let format = doc.req_str("format")?;
+        if format != "kanele-ckpt-v1" {
+            bail!("unsupported checkpoint format {format:?}");
+        }
+        let dims: Vec<usize> = doc.req("dims")?.to_i64_vec()?.iter().map(|&v| v as usize).collect();
+        let bits: Vec<u32> = doc.req("bits")?.to_i64_vec()?.iter().map(|&v| v as u32).collect();
+        if bits.len() != dims.len() {
+            bail!("bits/dims length mismatch: {} vs {}", bits.len(), dims.len());
+        }
+        let domain_arr = doc.req("domain")?.to_f64_vec()?;
+        if domain_arr.len() != 2 || domain_arr[1] <= domain_arr[0] {
+            bail!("bad domain {domain_arr:?}");
+        }
+        let grid_size = doc.req_i64("grid_size")? as usize;
+        let order = doc.req_i64("order")? as usize;
+        let n_basis = grid_size + order;
+
+        let pre = doc.req("preproc")?;
+        let preproc = Preproc {
+            shift: pre.req("shift")?.to_f64_vec()?,
+            span: pre.req("span")?.to_f64_vec()?,
+        };
+        if preproc.shift.len() != dims[0] || preproc.span.len() != dims[0] {
+            bail!("preproc length != d_in");
+        }
+        if preproc.span.iter().any(|&s| s == 0.0 || !s.is_finite()) {
+            bail!("preproc span has zero/non-finite entries");
+        }
+
+        let layers_json = doc.req_array("layers")?;
+        if layers_json.len() != dims.len() - 1 {
+            bail!("layer count {} != dims-1 {}", layers_json.len(), dims.len() - 1);
+        }
+        let mut layers = Vec::with_capacity(layers_json.len());
+        for (l, lj) in layers_json.iter().enumerate() {
+            let d_in = lj.req_i64("d_in")? as usize;
+            let d_out = lj.req_i64("d_out")? as usize;
+            if d_in != dims[l] || d_out != dims[l + 1] {
+                bail!("layer {l} dims mismatch");
+            }
+            let in_bits = lj.req_i64("in_bits")? as u32;
+            let out_bits = lj.req_i64("out_bits")? as u32;
+            if in_bits != bits[l] || out_bits != bits[l + 1] {
+                bail!("layer {l} bits mismatch");
+            }
+
+            let ws_rows = lj.req_array("w_spline")?;
+            let mut w_spline = Vec::with_capacity(d_out * d_in * n_basis);
+            for row in ws_rows {
+                for cell in row.as_array().context("w_spline row")? {
+                    let ks = cell.to_f64_vec()?;
+                    if ks.len() != n_basis {
+                        bail!("w_spline basis count {} != {}", ks.len(), n_basis);
+                    }
+                    w_spline.extend_from_slice(&ks);
+                }
+            }
+            if w_spline.len() != d_out * d_in * n_basis {
+                bail!("w_spline size mismatch in layer {l}");
+            }
+
+            let mut w_base = Vec::with_capacity(d_out * d_in);
+            for row in lj.req_array("w_base")? {
+                w_base.extend(row.to_f64_vec()?);
+            }
+            if w_base.len() != d_out * d_in {
+                bail!("w_base size mismatch in layer {l}");
+            }
+
+            let mut mask = Vec::with_capacity(d_out * d_in);
+            for row in lj.req_array("mask")? {
+                for v in row.as_array().context("mask row")? {
+                    mask.push(v.as_i64().context("mask entry")? != 0);
+                }
+            }
+            if mask.len() != d_out * d_in {
+                bail!("mask size mismatch in layer {l}");
+            }
+
+            let mut table = Vec::with_capacity(d_out * d_in);
+            for row in lj.req_array("table")? {
+                for cell in row.as_array().context("table row")? {
+                    if cell.is_null() {
+                        table.push(None);
+                    } else {
+                        let t = cell.to_i64_vec()?;
+                        if t.len() != (1usize << in_bits) {
+                            bail!("table size {} != 2^{in_bits} in layer {l}", t.len());
+                        }
+                        table.push(Some(t));
+                    }
+                }
+            }
+            if table.len() != d_out * d_in {
+                bail!("table count mismatch in layer {l}");
+            }
+            // consistency: table presence must match the mask
+            for (i, t) in table.iter().enumerate() {
+                if t.is_some() != mask[i] {
+                    bail!("table/mask inconsistency at edge {i} of layer {l}");
+                }
+            }
+
+            layers.push(LayerCkpt {
+                d_in,
+                d_out,
+                in_bits,
+                out_bits,
+                w_spline,
+                n_basis,
+                w_base,
+                mask,
+                table,
+            });
+        }
+
+        let mut test_vectors = TestVectors::default();
+        if let Some(tv) = doc.get("test_vectors") {
+            for row in tv.req_array("input_codes")? {
+                test_vectors
+                    .input_codes
+                    .push(row.to_i64_vec()?.iter().map(|&v| v as u32).collect());
+            }
+            for row in tv.req_array("output_sums")? {
+                test_vectors.output_sums.push(row.to_i64_vec()?);
+            }
+            if test_vectors.input_codes.len() != test_vectors.output_sums.len() {
+                bail!("test vector count mismatch");
+            }
+        }
+
+        Ok(Checkpoint {
+            name: doc.req_str("name")?.to_string(),
+            task: doc.req_str("task")?.to_string(),
+            grid_size,
+            order,
+            domain: (domain_arr[0], domain_arr[1]),
+            dims,
+            bits,
+            frac_bits: doc.req_i64("frac_bits")? as u32,
+            prune_threshold: doc.get("prune_threshold").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            preproc,
+            layers,
+            test_vectors,
+        })
+    }
+}
+
+/// Evaluation set exported alongside a checkpoint (`kanele-testset-v1`).
+#[derive(Clone, Debug)]
+pub struct TestSet {
+    pub input_codes: Vec<Vec<u32>>,
+    pub labels: Vec<i64>,
+}
+
+impl TestSet {
+    pub fn load(path: &Path) -> Result<TestSet> {
+        let doc = json::from_file(path)?;
+        let format = doc.req_str("format")?;
+        if format != "kanele-testset-v1" {
+            bail!("unsupported testset format {format:?}");
+        }
+        let mut input_codes = Vec::new();
+        for row in doc.req_array("input_codes")? {
+            input_codes.push(row.to_i64_vec()?.iter().map(|&v| v as u32).collect());
+        }
+        let labels = doc.req("labels")?.to_i64_vec()?;
+        if labels.len() != input_codes.len() {
+            bail!("labels/inputs length mismatch");
+        }
+        Ok(TestSet { input_codes, labels })
+    }
+}
+
+pub mod testutil {
+    //! Synthetic checkpoint builder used across the crate's unit and
+    //! integration tests (kept in the public API, `doc(hidden)`).
+    use super::*;
+    use crate::fixed;
+    use crate::util::Rng;
+
+    /// Build a small random (but internally consistent) checkpoint.
+    /// Tables are generated from random per-edge functions, not splines —
+    /// table semantics, not spline math, is what most tests exercise.
+    pub fn synthetic(dims: &[usize], bits: &[u32], seed: u64) -> Checkpoint {
+        assert_eq!(dims.len(), bits.len());
+        let mut rng = Rng::new(seed);
+        let (lo, hi) = (-4.0, 4.0);
+        let frac_bits = 12u32;
+        let grid_size = 4;
+        let order = 2;
+        let n_basis = grid_size + order;
+        let mut layers = Vec::new();
+        for l in 0..dims.len() - 1 {
+            let (d_in, d_out) = (dims[l], dims[l + 1]);
+            let n_codes = 1usize << bits[l];
+            let mut mask = Vec::new();
+            let mut table = Vec::new();
+            let mut w_base = Vec::new();
+            let mut w_spline = Vec::new();
+            for _q in 0..d_out {
+                for _p in 0..d_in {
+                    let keep = rng.chance(0.8);
+                    mask.push(keep);
+                    w_base.push(rng.normal());
+                    for _ in 0..n_basis {
+                        w_spline.push(rng.normal() * 0.3);
+                    }
+                    if keep {
+                        let amp = rng.range_f64(0.2, 1.5);
+                        let phase = rng.range_f64(0.0, 6.28);
+                        let t: Vec<i64> = (0..n_codes)
+                            .map(|c| {
+                                let x = lo + (hi - lo) * c as f64 / (n_codes - 1).max(1) as f64;
+                                fixed::to_fixed(amp * (x + phase).sin(), frac_bits)
+                            })
+                            .collect();
+                        table.push(Some(t));
+                    } else {
+                        table.push(None);
+                    }
+                }
+            }
+            layers.push(LayerCkpt {
+                d_in,
+                d_out,
+                in_bits: bits[l],
+                out_bits: bits[l + 1],
+                w_spline,
+                n_basis,
+                w_base,
+                mask,
+                table,
+            });
+        }
+        Checkpoint {
+            name: "synthetic".into(),
+            task: "classify".into(),
+            grid_size,
+            order,
+            domain: (lo, hi),
+            dims: dims.to_vec(),
+            bits: bits.to_vec(),
+            frac_bits,
+            prune_threshold: 0.0,
+            preproc: Preproc {
+                shift: vec![0.0; dims[0]],
+                span: vec![1.0; dims[0]],
+            },
+            layers,
+            test_vectors: TestVectors::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_checkpoint_consistent() {
+        let ck = testutil::synthetic(&[4, 3, 2], &[4, 5, 6], 1);
+        assert_eq!(ck.n_layers(), 2);
+        assert_eq!(ck.layers[0].table.len(), 12);
+        for l in &ck.layers {
+            for (i, t) in l.table.iter().enumerate() {
+                assert_eq!(t.is_some(), l.mask[i]);
+                if let Some(t) = t {
+                    assert_eq!(t.len(), 1 << l.in_bits);
+                }
+            }
+        }
+        assert!(ck.active_edges() > 0);
+    }
+
+    #[test]
+    fn quantizer_accessor() {
+        let ck = testutil::synthetic(&[2, 2], &[3, 8], 2);
+        assert_eq!(ck.quantizer(0).bits, 3);
+        assert_eq!(ck.quantizer(1).bits, 8);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let doc = crate::json::parse(r#"{"format": "nope"}"#).unwrap();
+        assert!(Checkpoint::from_json(&doc).is_err());
+    }
+}

@@ -1,0 +1,110 @@
+//! Experiment configurations — the Rust mirror of `python/compile/configs.py`
+//! (one entry per paper Table 2 row) plus artifact path resolution.
+
+use std::path::{Path, PathBuf};
+
+/// Task type of a benchmark.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Classify,
+    Binary,
+    Regress,
+}
+
+impl Task {
+    pub fn parse(s: &str) -> Option<Task> {
+        match s {
+            "classify" => Some(Task::Classify),
+            "binary" => Some(Task::Binary),
+            "regress" => Some(Task::Regress),
+            _ => None,
+        }
+    }
+}
+
+/// One benchmark row (Table 2 hyperparameters).
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    pub name: &'static str,
+    pub task: Task,
+    pub dims: &'static [usize],
+    pub bits: &'static [u32],
+    pub grid_size: usize,
+    pub order: usize,
+    pub domain: (f64, f64),
+    pub prune_threshold: f64,
+    /// Device used for the paper's hardware table containing this row.
+    pub device: &'static str,
+}
+
+/// All Table 2 rows.
+pub const EXPERIMENTS: &[Experiment] = &[
+    Experiment { name: "moons", task: Task::Binary, dims: &[2, 2, 1], bits: &[6, 5, 8], grid_size: 6, order: 3, domain: (-8.0, 8.0), prune_threshold: 0.0, device: "xczu7ev" },
+    Experiment { name: "wine", task: Task::Classify, dims: &[13, 4, 3], bits: &[6, 7, 8], grid_size: 6, order: 3, domain: (-8.0, 8.0), prune_threshold: 0.0, device: "xczu7ev" },
+    Experiment { name: "dry_bean", task: Task::Classify, dims: &[16, 2, 7], bits: &[6, 6, 8], grid_size: 6, order: 3, domain: (-8.0, 8.0), prune_threshold: 0.0, device: "xczu7ev" },
+    Experiment { name: "jsc_cernbox", task: Task::Classify, dims: &[16, 12, 5], bits: &[8, 8, 6], grid_size: 30, order: 10, domain: (-2.0, 2.0), prune_threshold: 0.14, device: "xcvu9p" },
+    Experiment { name: "jsc_openml", task: Task::Classify, dims: &[16, 8, 5], bits: &[6, 7, 6], grid_size: 40, order: 10, domain: (-2.0, 2.0), prune_threshold: 0.9, device: "xcvu9p" },
+    Experiment { name: "mnist", task: Task::Classify, dims: &[784, 62, 10], bits: &[1, 6, 6], grid_size: 30, order: 3, domain: (-8.0, 8.0), prune_threshold: 1.0, device: "xcvu9p" },
+    Experiment { name: "toyadmos", task: Task::Regress, dims: &[64, 16, 8, 16, 64], bits: &[7, 8, 8, 7, 8], grid_size: 30, order: 10, domain: (-2.0, 2.0), prune_threshold: 0.9, device: "xc7a100t" },
+];
+
+pub fn experiment(name: &str) -> Option<&'static Experiment> {
+    EXPERIMENTS.iter().find(|e| e.name == name)
+}
+
+/// Artifact directory: $KANELE_ARTIFACTS or `<repo>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("KANELE_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Checkpoint / testset / HLO paths for a benchmark name.
+pub fn ckpt_path(name: &str) -> PathBuf {
+    artifacts_dir().join(format!("{name}.ckpt.json"))
+}
+
+pub fn testset_path(name: &str) -> PathBuf {
+    artifacts_dir().join(format!("{name}.testset.json"))
+}
+
+pub fn hlo_path(name: &str) -> PathBuf {
+    artifacts_dir().join(format!("{name}.hlo.txt"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_rows_present_and_consistent() {
+        assert_eq!(EXPERIMENTS.len(), 7);
+        for e in EXPERIMENTS {
+            assert_eq!(e.bits.len(), e.dims.len(), "{}", e.name);
+            assert!(e.domain.1 > e.domain.0);
+            assert!(crate::synth::device_by_name(e.device).is_some(), "{}", e.device);
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(experiment("moons").is_some());
+        assert_eq!(experiment("mnist").unwrap().dims, &[784, 62, 10]);
+        assert!(experiment("nope").is_none());
+    }
+
+    #[test]
+    fn task_parse() {
+        assert_eq!(Task::parse("classify"), Some(Task::Classify));
+        assert_eq!(Task::parse("binary"), Some(Task::Binary));
+        assert_eq!(Task::parse("regress"), Some(Task::Regress));
+        assert_eq!(Task::parse("x"), None);
+    }
+
+    #[test]
+    fn paths_shaped() {
+        assert!(ckpt_path("moons").to_string_lossy().ends_with("moons.ckpt.json"));
+        assert!(hlo_path("moons").to_string_lossy().ends_with("moons.hlo.txt"));
+    }
+}

@@ -1,0 +1,87 @@
+//! Standalone dynamic-batching policy, extracted so the policy itself can
+//! be unit-tested and swept by the ablation benches (batch-size vs latency
+//! trade-off) without spinning up threads.
+
+use std::time::Duration;
+
+/// Decision state for one forming batch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Decision {
+    /// Keep waiting for more requests.
+    Wait(Duration),
+    /// Dispatch now.
+    Dispatch,
+}
+
+/// Dispatch policy: fill to `max_batch` or flush after `max_wait`.
+#[derive(Clone, Copy, Debug)]
+pub struct Policy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Policy {
+    /// Given the current batch fill and the age of its oldest request,
+    /// decide whether to dispatch.
+    pub fn decide(&self, fill: usize, oldest_age: Duration) -> Decision {
+        if fill >= self.max_batch {
+            return Decision::Dispatch;
+        }
+        if fill > 0 && oldest_age >= self.max_wait {
+            return Decision::Dispatch;
+        }
+        Decision::Wait(self.max_wait.saturating_sub(oldest_age))
+    }
+
+    /// Expected batching latency added to a request arriving at a Poisson
+    /// rate `lambda_rps` (analytic model used by the tuning bench): the
+    /// batch dispatches after min(time to fill, max_wait).
+    pub fn expected_added_latency_us(&self, lambda_rps: f64) -> f64 {
+        if lambda_rps <= 0.0 {
+            return self.max_wait.as_secs_f64() * 1e6;
+        }
+        let fill_time = (self.max_batch as f64 - 1.0) / lambda_rps;
+        fill_time.min(self.max_wait.as_secs_f64()) * 0.5 * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatches_when_full() {
+        let p = Policy { max_batch: 8, max_wait: Duration::from_micros(100) };
+        assert_eq!(p.decide(8, Duration::ZERO), Decision::Dispatch);
+        assert_eq!(p.decide(9, Duration::ZERO), Decision::Dispatch);
+    }
+
+    #[test]
+    fn dispatches_on_timeout() {
+        let p = Policy { max_batch: 8, max_wait: Duration::from_micros(100) };
+        assert_eq!(p.decide(3, Duration::from_micros(100)), Decision::Dispatch);
+        assert_eq!(p.decide(3, Duration::from_micros(150)), Decision::Dispatch);
+    }
+
+    #[test]
+    fn waits_otherwise() {
+        let p = Policy { max_batch: 8, max_wait: Duration::from_micros(100) };
+        match p.decide(3, Duration::from_micros(40)) {
+            Decision::Wait(d) => assert_eq!(d, Duration::from_micros(60)),
+            other => panic!("expected Wait, got {other:?}"),
+        }
+        // empty batch: full wait budget
+        match p.decide(0, Duration::ZERO) {
+            Decision::Wait(d) => assert_eq!(d, Duration::from_micros(100)),
+            other => panic!("expected Wait, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn expected_latency_monotone_in_batch() {
+        let lam = 1e6; // 1M rps
+        let small = Policy { max_batch: 4, max_wait: Duration::from_micros(200) };
+        let big = Policy { max_batch: 256, max_wait: Duration::from_micros(200) };
+        assert!(small.expected_added_latency_us(lam) <= big.expected_added_latency_us(lam));
+    }
+}

@@ -1,0 +1,388 @@
+//! L3 coordinator: threaded batched-inference service over the netlist.
+//!
+//! The paper's deployment story is a streaming accelerator core (II = 1)
+//! fed by a host; this module is that host-side system: a request router
+//! with a **dynamic batcher** (dispatch on `max_batch` or `max_wait`,
+//! whichever first), a worker pool executing batches on the bit-exact
+//! netlist simulator, bounded queues for backpressure, and end-to-end
+//! latency/throughput accounting. Tokio is not available offline; the
+//! implementation uses std threads + channels, which for this workload
+//! (CPU-bound microsecond batches) is the right tool anyway.
+
+pub mod batcher;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::netlist::hotswap::NetlistCell;
+use crate::netlist::Netlist;
+use crate::sim;
+use crate::util::Summary;
+
+/// One inference request (input codes).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub codes: Vec<u32>,
+    pub submitted: Instant,
+}
+
+/// Completed response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub sums: Vec<i64>,
+    /// Queue + batch + execute time.
+    pub latency: Duration,
+}
+
+struct Pending {
+    req: Request,
+    reply: SyncSender<Response>,
+}
+
+/// Service configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceCfg {
+    pub workers: usize,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Bounded admission queue (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for ServiceCfg {
+    fn default() -> Self {
+        ServiceCfg {
+            workers: 4,
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 4096,
+        }
+    }
+}
+
+/// Aggregated service statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceStats {
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
+    pub throughput_rps: f64,
+}
+
+struct Shared {
+    latencies: Mutex<Summary>,
+    batch_sizes: Mutex<Summary>,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    batches: AtomicU64,
+}
+
+/// Batched inference service over a netlist.
+pub struct Service {
+    tx: SyncSender<Pending>,
+    /// Kept so the queue survives even with zero workers (tests/backpressure).
+    rx_keepalive: Arc<Mutex<Receiver<Pending>>>,
+    /// Hot-swappable model handle (paper §6: online LUT updates).
+    cell: Arc<NetlistCell>,
+    shared: Arc<Shared>,
+    next_id: AtomicU64,
+    started: Instant,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    cfg: ServiceCfg,
+}
+
+impl Service {
+    pub fn start(net: Arc<Netlist>, cfg: ServiceCfg) -> Service {
+        Self::start_swappable(Arc::new(NetlistCell::new(net)), cfg)
+    }
+
+    /// Start over a swappable cell: edge tables (or the whole model) can be
+    /// replaced while serving; in-flight batches finish on their snapshot.
+    pub fn start_swappable(cell: Arc<NetlistCell>, cfg: ServiceCfg) -> Service {
+        let (tx, rx) = sync_channel::<Pending>(cfg.queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            latencies: Mutex::new(Summary::new()),
+            batch_sizes: Mutex::new(Summary::new()),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+        });
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let rx = Arc::clone(&rx);
+            let cell2 = Arc::clone(&cell);
+            let shared = Arc::clone(&shared);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("kanele-worker-{w}"))
+                    .spawn(move || worker_loop(rx, cell2, shared, cfg))
+                    .expect("spawn worker"),
+            );
+        }
+        Service {
+            tx,
+            rx_keepalive: rx,
+            cell,
+            shared,
+            next_id: AtomicU64::new(0),
+            started: Instant::now(),
+            workers,
+            cfg,
+        }
+    }
+
+    /// Hot-swap one edge table while serving (paper §6 future work).
+    pub fn swap_edge(&self, layer: usize, q: usize, p: usize, table: Vec<i64>) -> Result<()> {
+        self.cell.swap_edge(layer, q, p, table)
+    }
+
+    /// Replace the whole model while serving.
+    pub fn replace_model(&self, net: Arc<Netlist>) {
+        self.cell.replace(net);
+    }
+
+    /// Submit a request; the returned receiver yields the response.
+    /// Errors immediately when the admission queue is full (backpressure).
+    pub fn submit(&self, codes: Vec<u32>) -> Result<Receiver<Response>> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            codes,
+            submitted: Instant::now(),
+        };
+        match self.tx.try_send(Pending { req, reply: reply_tx }) {
+            Ok(()) => Ok(reply_rx),
+            Err(TrySendError::Full(_)) => {
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("admission queue full (backpressure)")
+            }
+            Err(TrySendError::Disconnected(_)) => anyhow::bail!("service stopped"),
+        }
+    }
+
+    /// Submit with blocking retry (used by the closed-loop example).
+    pub fn submit_blocking(&self, codes: Vec<u32>) -> Result<Response> {
+        loop {
+            match self.submit(codes.clone()) {
+                Ok(rx) => return Ok(rx.recv()?),
+                Err(_) => std::thread::sleep(Duration::from_micros(20)),
+            }
+        }
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        let lat = self.shared.latencies.lock().unwrap();
+        let bs = self.shared.batch_sizes.lock().unwrap();
+        let completed = self.shared.completed.load(Ordering::Relaxed);
+        ServiceStats {
+            completed,
+            rejected: self.shared.rejected.load(Ordering::Relaxed),
+            batches: self.shared.batches.load(Ordering::Relaxed),
+            mean_batch: bs.mean(),
+            latency_p50_us: lat.quantile(0.5) * 1e6,
+            latency_p99_us: lat.quantile(0.99) * 1e6,
+            throughput_rps: completed as f64 / self.started.elapsed().as_secs_f64(),
+        }
+    }
+
+    pub fn cfg(&self) -> ServiceCfg {
+        self.cfg
+    }
+
+    /// Stop workers and join them.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        drop(self.rx_keepalive);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Pending>>>,
+    cell: Arc<NetlistCell>,
+    shared: Arc<Shared>,
+    cfg: ServiceCfg,
+) {
+    loop {
+        // dynamic batch collection: block for the first item, then fill the
+        // batch until max_batch or max_wait
+        let mut batch: Vec<Pending> = Vec::with_capacity(cfg.max_batch);
+        {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(p) => batch.push(p),
+                Err(_) => return, // service dropped
+            }
+            let deadline = Instant::now() + cfg.max_wait;
+            while batch.len() < cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match guard.recv_timeout(deadline - now) {
+                    Ok(p) => batch.push(p),
+                    Err(_) => break,
+                }
+            }
+        } // release the receiver so other workers can batch concurrently
+
+        shared.batches.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut bs = shared.batch_sizes.lock().unwrap();
+            bs.push(batch.len() as f64);
+        }
+        // batch-consistent snapshot: a concurrent hot-swap applies to the
+        // NEXT batch, never mid-batch (PR-region semantics)
+        let net = cell.load();
+        let mut ev = sim::Evaluator::new(&net);
+        for p in batch {
+            let sums = ev.eval(&p.req.codes).to_vec();
+            let latency = p.req.submitted.elapsed();
+            {
+                let mut lat = shared.latencies.lock().unwrap();
+                lat.push(latency.as_secs_f64());
+            }
+            shared.completed.fetch_add(1, Ordering::Relaxed);
+            let _ = p.reply.send(Response { id: p.req.id, sums, latency });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::synthetic;
+    use crate::lut;
+    use crate::util::Rng;
+
+    fn service(cfg: ServiceCfg) -> (Arc<Netlist>, Service) {
+        let ck = synthetic(&[4, 3, 2], &[4, 5, 6], 2024);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Arc::new(Netlist::build(&ck, &tables, 2));
+        let svc = Service::start(Arc::clone(&net), cfg);
+        (net, svc)
+    }
+
+    #[test]
+    fn responses_match_direct_eval() {
+        let (net, svc) = service(ServiceCfg::default());
+        let mut rng = Rng::new(1);
+        let mut pending = Vec::new();
+        let mut want = Vec::new();
+        for _ in 0..200 {
+            let codes: Vec<u32> = (0..4).map(|_| rng.below(16) as u32).collect();
+            want.push(sim::eval(&net, &codes));
+            pending.push(svc.submit(codes).unwrap());
+        }
+        for (rx, w) in pending.into_iter().zip(want) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.sums, w);
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.completed, 200);
+        assert!(stats.batches >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (net, svc) = service(ServiceCfg { workers: 4, ..Default::default() });
+        let svc = Arc::new(svc);
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let svc = Arc::clone(&svc);
+            let net = Arc::clone(&net);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t);
+                for _ in 0..50 {
+                    let codes: Vec<u32> = (0..4).map(|_| rng.below(16) as u32).collect();
+                    let want = sim::eval(&net, &codes);
+                    let got = svc.submit_blocking(codes).unwrap();
+                    assert_eq!(got.sums, want);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(Arc::try_unwrap(svc).ok().unwrap().stats().completed, 400);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // zero workers can't drain; queue_depth 4 must reject the 5th+
+        let ck = synthetic(&[2, 2], &[3, 6], 7);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Arc::new(Netlist::build(&ck, &tables, 2));
+        let svc = Service::start(
+            net,
+            ServiceCfg { workers: 0, queue_depth: 4, ..Default::default() },
+        );
+        let mut oks = 0;
+        let mut errs = 0;
+        let mut rxs = Vec::new();
+        for _ in 0..10 {
+            match svc.submit(vec![0, 1]) {
+                Ok(rx) => {
+                    oks += 1;
+                    rxs.push(rx);
+                }
+                Err(_) => errs += 1,
+            }
+        }
+        assert_eq!(oks, 4);
+        assert_eq!(errs, 6);
+        assert_eq!(svc.stats().rejected, 6);
+    }
+
+    #[test]
+    fn hot_swap_while_serving() {
+        // paper §6: LUT updates during operation; in-flight batches keep
+        // their snapshot, later requests see the new table
+        let ck = synthetic(&[3, 2], &[3, 6], 99);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Arc::new(Netlist::build(&ck, &tables, 2));
+        let svc = Service::start(Arc::clone(&net), ServiceCfg::default());
+        let codes = vec![1u32, 2, 3];
+        let before = svc.submit_blocking(codes.clone()).unwrap().sums;
+        assert_eq!(before, sim::eval(&net, &codes));
+        // swap neuron 0's first active edge to a constant table
+        let p = net.layers[0].neurons[0].luts[0].input;
+        let n_codes = 1usize << ck.bits[0];
+        svc.swap_edge(0, 0, p, vec![999_999; n_codes]).unwrap();
+        let after = svc.submit_blocking(codes.clone()).unwrap().sums;
+        assert_ne!(before[0], after[0]);
+        // invalid swaps rejected while serving
+        assert!(svc.swap_edge(7, 0, 0, vec![0; n_codes]).is_err());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batching_aggregates() {
+        let (_, svc) = service(ServiceCfg {
+            workers: 1,
+            max_batch: 32,
+            max_wait: Duration::from_millis(5),
+            queue_depth: 1024,
+        });
+        let rxs: Vec<_> = (0..64).map(|_| svc.submit(vec![1, 2, 3, 0]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let stats = svc.stats();
+        assert!(stats.mean_batch > 1.5, "mean batch {}", stats.mean_batch);
+        svc.shutdown();
+    }
+}

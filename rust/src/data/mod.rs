@@ -1,0 +1,71 @@
+//! Request-path data utilities: synthetic request streams for the
+//! coordinator benches and helpers over exported test sets.
+
+use crate::checkpoint::{Checkpoint, TestSet};
+use crate::util::Rng;
+
+/// Generate `n` uniform-random input-code vectors valid for a checkpoint.
+pub fn random_code_stream(ck: &Checkpoint, n: usize, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(seed);
+    let d = ck.dims[0];
+    let levels = 1u64 << ck.bits[0];
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.below(levels) as u32).collect())
+        .collect()
+}
+
+/// Cycle a test set into a longer stream (serving benches replay the
+/// evaluation distribution rather than uniform noise).
+pub fn replay_stream(ts: &TestSet, n: usize) -> Vec<Vec<u32>> {
+    (0..n).map(|i| ts.input_codes[i % ts.input_codes.len()].clone()).collect()
+}
+
+/// Poisson-ish inter-arrival jitter for open-loop serving benches: returns
+/// nanosecond offsets of each request from t0 at the given rate.
+pub fn poisson_arrivals(n: usize, rate_rps: f64, seed: u64) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        // exponential inter-arrival
+        let u = rng.f64().max(1e-12);
+        t += -u.ln() / rate_rps;
+        out.push((t * 1e9) as u64);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::synthetic;
+
+    #[test]
+    fn stream_codes_in_range() {
+        let ck = synthetic(&[5, 3], &[4, 6], 3);
+        for codes in random_code_stream(&ck, 100, 7) {
+            assert_eq!(codes.len(), 5);
+            assert!(codes.iter().all(|&c| c < 16));
+        }
+    }
+
+    #[test]
+    fn replay_cycles() {
+        let ts = TestSet {
+            input_codes: vec![vec![1, 2], vec![3, 4]],
+            labels: vec![0, 1],
+        };
+        let s = replay_stream(&ts, 5);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s[4], vec![1, 2]);
+    }
+
+    #[test]
+    fn arrivals_monotone_and_rate_scaled() {
+        let a = poisson_arrivals(1000, 1e6, 1);
+        assert!(a.windows(2).all(|w| w[1] >= w[0]));
+        let total_s = *a.last().unwrap() as f64 / 1e9;
+        // ~1000 arrivals at 1M rps ~ 1 ms
+        assert!(total_s > 2e-4 && total_s < 5e-3, "{total_s}");
+    }
+}

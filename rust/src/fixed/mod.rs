@@ -1,0 +1,187 @@
+//! Fixed-point arithmetic helpers shared by the L-LUT extractor, netlist
+//! simulator and synthesis estimator.
+//!
+//! Hardware contract (mirrors `python/compile/export.py`):
+//! * accumulator values are i64 with `frac_bits` fractional bits,
+//! * quantizer codes are unsigned `bits`-wide integers over a fixed domain
+//!   `[lo, hi]` with scale `s = (hi - lo) / (2^bits - 1)`,
+//! * rounding is floor(v + 0.5) on the non-negative shifted value (codes)
+//!   and round-half-away-from-zero (table entries).
+
+/// A uniform quantizer over a fixed domain (paper Eq. 7/8, frozen form).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Quantizer {
+    pub bits: u32,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Quantizer {
+    pub fn new(bits: u32, lo: f64, hi: f64) -> Self {
+        assert!(bits >= 1 && bits <= 32, "bits out of range: {bits}");
+        assert!(hi > lo, "domain must satisfy hi > lo");
+        Quantizer { bits, lo, hi }
+    }
+
+    /// Number of code levels, 2^bits.
+    pub fn levels(&self) -> u64 {
+        1u64 << self.bits
+    }
+
+    /// Code scale s = (hi - lo) / (2^bits - 1).
+    pub fn scale(&self) -> f64 {
+        (self.hi - self.lo) / (self.levels() - 1) as f64
+    }
+
+    /// Value -> code: clamp(floor((clip(v) - lo)/s + 0.5), 0, 2^bits - 1).
+    pub fn encode(&self, v: f64) -> u32 {
+        let c = v.clamp(self.lo, self.hi);
+        let raw = ((c - self.lo) / self.scale() + 0.5).floor();
+        (raw.max(0.0) as u64).min(self.levels() - 1) as u32
+    }
+
+    /// Code -> dequantized value lo + c*s.
+    pub fn decode(&self, code: u32) -> f64 {
+        self.lo + code as f64 * self.scale()
+    }
+}
+
+/// Round-half-away-from-zero, the table-entry rounding rule
+/// (matches Python's `round_half_away_np` and rust f64::round()).
+pub fn round_half_away(v: f64) -> i64 {
+    v.round() as i64
+}
+
+/// Convert a real value to the i64 accumulator fixed-point representation.
+pub fn to_fixed(v: f64, frac_bits: u32) -> i64 {
+    round_half_away(v * (1i64 << frac_bits) as f64)
+}
+
+/// Convert an i64 accumulator value back to a real value.
+pub fn from_fixed(v: i64, frac_bits: u32) -> f64 {
+    v as f64 / (1i64 << frac_bits) as f64
+}
+
+/// Minimum signed bit width that can represent `v` (two's complement).
+pub fn signed_width(v: i64) -> u32 {
+    if v == 0 {
+        return 1;
+    }
+    if v > 0 {
+        64 - v.leading_zeros() + 1
+    } else {
+        64 - (!v).leading_zeros() + 1
+    }
+}
+
+/// Minimum signed width covering an inclusive range.
+pub fn signed_width_range(lo: i64, hi: i64) -> u32 {
+    signed_width(lo).max(signed_width(hi))
+}
+
+/// Saturating add clamped to a given signed width (hardware adder semantics
+/// when the RTL config narrows the accumulator).
+pub fn sat_add(a: i64, b: i64, width: u32) -> i64 {
+    let hi = (1i64 << (width - 1)) - 1;
+    let lo = -(1i64 << (width - 1));
+    (a.saturating_add(b)).clamp(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn quantizer_roundtrip_codes() {
+        let q = Quantizer::new(6, -8.0, 8.0);
+        for code in 0..q.levels() as u32 {
+            assert_eq!(q.encode(q.decode(code)), code);
+        }
+    }
+
+    #[test]
+    fn encode_clamps() {
+        let q = Quantizer::new(4, -2.0, 2.0);
+        assert_eq!(q.encode(-100.0), 0);
+        assert_eq!(q.encode(100.0), 15);
+        assert_eq!(q.encode(-2.0), 0);
+        assert_eq!(q.encode(2.0), 15);
+    }
+
+    #[test]
+    fn one_bit_quantizer() {
+        let q = Quantizer::new(1, -8.0, 8.0);
+        assert_eq!(q.levels(), 2);
+        assert_eq!(q.encode(-8.0), 0);
+        assert_eq!(q.encode(8.0), 1);
+        assert_eq!(q.encode(0.1), 1); // midpoint rounds up
+    }
+
+    #[test]
+    fn rounding_matches_python_rule() {
+        assert_eq!(round_half_away(0.5), 1);
+        assert_eq!(round_half_away(-0.5), -1);
+        assert_eq!(round_half_away(1.5), 2);
+        assert_eq!(round_half_away(-1.5), -2);
+        assert_eq!(round_half_away(2.4), 2);
+    }
+
+    #[test]
+    fn fixed_roundtrip() {
+        for v in [-3.75, 0.0, 1.0 / 3.0, 100.125] {
+            let f = to_fixed(v, 14);
+            assert!((from_fixed(f, 14) - v).abs() <= 0.5 / (1 << 14) as f64 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn widths() {
+        assert_eq!(signed_width(0), 1);
+        assert_eq!(signed_width(1), 2);
+        assert_eq!(signed_width(-1), 1);
+        assert_eq!(signed_width(127), 8);
+        assert_eq!(signed_width(-128), 8);
+        assert_eq!(signed_width(128), 9);
+        assert_eq!(signed_width_range(-128, 127), 8);
+        assert_eq!(signed_width_range(-129, 0), 9);
+    }
+
+    #[test]
+    fn sat_add_saturates() {
+        assert_eq!(sat_add(100, 100, 8), 127);
+        assert_eq!(sat_add(-100, -100, 8), -128);
+        assert_eq!(sat_add(3, 4, 8), 7);
+    }
+
+    #[test]
+    fn prop_encode_monotone() {
+        prop::check("quantizer-monotone", 200, |g| {
+            let bits = g.usize_in(1, 10) as u32;
+            let lo = g.f64_in(-10.0, 0.0);
+            let hi = lo + g.f64_in(0.5, 20.0);
+            let q = Quantizer::new(bits, lo, hi);
+            let a = g.f64_in(lo - 2.0, hi + 2.0);
+            let b = g.f64_in(lo - 2.0, hi + 2.0);
+            let (a, b) = if a <= b { (a, b) } else { (b, a) };
+            if q.encode(a) > q.encode(b) {
+                return Err(format!("encode not monotone: {a} -> {}, {b} -> {}", q.encode(a), q.encode(b)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_decode_in_domain() {
+        prop::check("decode-in-domain", 100, |g| {
+            let bits = g.usize_in(1, 12) as u32;
+            let q = Quantizer::new(bits, -4.0, 4.0);
+            let c = g.i64_in(0, q.levels() as i64 - 1) as u32;
+            let v = q.decode(c);
+            if v < q.lo - 1e-12 || v > q.hi + 1e-12 {
+                return Err(format!("decode({c}) = {v} outside domain"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,116 @@
+//! Minimal JSON parser + serializer (substrate — `serde_json` is not in the
+//! offline registry).
+//!
+//! Full RFC 8259 value model; strict parsing with byte-offset error
+//! reporting. Numbers are kept as `f64` with an `i64` fast path so L-LUT
+//! truth tables (large integer arrays) round-trip exactly.
+
+mod parse;
+mod value;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use value::Value;
+pub use write::to_string;
+
+/// Parse a JSON file from disk.
+pub fn from_file(path: &std::path::Path) -> anyhow::Result<Value> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn roundtrip_scalars() {
+        for s in ["null", "true", "false", "0", "-1", "3.5", "\"hi\"", "1e-3"] {
+            let v = parse(s).unwrap();
+            let back = parse(&to_string(&v)).unwrap();
+            assert_eq!(v, back, "{s}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_nested() {
+        let src = r#"{"a": [1, 2.5, {"b": null, "c": [true, false]}], "d": "x\ny"}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v, parse(&to_string(&v)).unwrap());
+        assert_eq!(v.get("a").unwrap().as_array().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn integers_exact() {
+        let v = parse("[9007199254740993, -9007199254740993]").unwrap();
+        // beyond f64's 2^53: must survive via the i64 representation
+        let arr = v.as_array().unwrap();
+        assert_eq!(arr[0].as_i64(), Some(9007199254740993));
+        assert_eq!(arr[1].as_i64(), Some(-9007199254740993));
+        assert_eq!(to_string(&v), "[9007199254740993,-9007199254740993]");
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#""a\"b\\c\/d\b\f\n\r\tAé""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\"b\\c/d\u{8}\u{c}\n\r\tA\u{e9}");
+    }
+
+    #[test]
+    fn surrogate_pairs() {
+        let v = parse(r#""😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{1F600}");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for s in ["", "{", "[1,]", "{\"a\":}", "01", "nul", "\"\\q\"", "[1 2]", "1.2.3", "{\"a\" 1}"] {
+            assert!(parse(s).is_err(), "should reject {s:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing() {
+        assert!(parse("1 2").is_err());
+        assert!(parse("{} x").is_err());
+    }
+
+    #[test]
+    fn prop_i64_roundtrip() {
+        prop::check("json-i64-roundtrip", 200, |g| {
+            let n = g.usize_in(0, 50);
+            let xs = g.vec_i64(n, i64::MIN / 2, i64::MAX / 2);
+            let v = Value::Array(xs.iter().map(|&x| Value::Int(x)).collect());
+            let back = parse(&to_string(&v)).map_err(|e| e.to_string())?;
+            let ys: Vec<i64> = back
+                .as_array()
+                .ok_or("not array")?
+                .iter()
+                .map(|v| v.as_i64().ok_or("not int".to_string()))
+                .collect::<Result<_, _>>()?;
+            if xs != ys {
+                return Err(format!("{xs:?} != {ys:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_f64_roundtrip() {
+        prop::check("json-f64-roundtrip", 200, |g| {
+            let n = g.usize_in(0, 30);
+            let xs = g.vec_f64(n, -1e9, 1e9);
+            let v = Value::Array(xs.iter().map(|&x| Value::Float(x)).collect());
+            let back = parse(&to_string(&v)).map_err(|e| e.to_string())?;
+            for (i, x) in xs.iter().enumerate() {
+                let y = back.as_array().unwrap()[i].as_f64().ok_or("not num")?;
+                if (x - y).abs() > 1e-12 * x.abs().max(1.0) {
+                    return Err(format!("{x} != {y}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,178 @@
+//! JSON value model. Integers and floats are distinct variants so i64 truth
+//! tables survive round-trips beyond 2^53.
+
+use std::collections::BTreeMap;
+
+/// A JSON document node.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Array(Vec<Value>),
+    /// BTreeMap keeps serialization deterministic (sorted keys).
+    Object(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Float(f) if f.fract() == 0.0 && f.abs() < 9.0e15 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Object(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_object().and_then(|o| o.get(key))
+    }
+
+    /// Required-field helpers with contextual errors — checkpoint loading
+    /// uses these everywhere.
+    pub fn req(&self, key: &str) -> anyhow::Result<&Value> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing required field '{key}'"))
+    }
+
+    pub fn req_i64(&self, key: &str) -> anyhow::Result<i64> {
+        self.req(key)?
+            .as_i64()
+            .ok_or_else(|| anyhow::anyhow!("field '{key}' is not an integer"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a number"))
+    }
+
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.req(key)?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a string"))
+    }
+
+    pub fn req_array(&self, key: &str) -> anyhow::Result<&[Value]> {
+        self.req(key)?
+            .as_array()
+            .ok_or_else(|| anyhow::anyhow!("field '{key}' is not an array"))
+    }
+
+    /// Convert an array of numbers to Vec<f64>.
+    pub fn to_f64_vec(&self) -> anyhow::Result<Vec<f64>> {
+        self.as_array()
+            .ok_or_else(|| anyhow::anyhow!("not an array"))?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| anyhow::anyhow!("non-numeric element")))
+            .collect()
+    }
+
+    /// Convert an array of integers to Vec<i64>.
+    pub fn to_i64_vec(&self) -> anyhow::Result<Vec<i64>> {
+        self.as_array()
+            .ok_or_else(|| anyhow::anyhow!("not an array"))?
+            .iter()
+            .map(|v| v.as_i64().ok_or_else(|| anyhow::anyhow!("non-integer element")))
+            .collect()
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+
+impl From<i64> for Value {
+    fn from(i: i64) -> Self {
+        Value::Int(i)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(f: f64) -> Self {
+        Value::Float(f)
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+
+impl<T: Into<Value>> From<Vec<T>> for Value {
+    fn from(v: Vec<T>) -> Self {
+        Value::Array(v.into_iter().map(Into::into).collect())
+    }
+}
+
+/// Convenience constructor for objects.
+#[allow(dead_code)]
+pub fn obj(fields: Vec<(&str, Value)>) -> Value {
+    Value::Object(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let v = obj(vec![("x", Value::Int(3)), ("y", Value::Float(1.5))]);
+        assert_eq!(v.req_i64("x").unwrap(), 3);
+        assert_eq!(v.req_f64("y").unwrap(), 1.5);
+        assert!(v.req_i64("z").is_err());
+        assert!(v.req_str("x").is_err());
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        assert_eq!(Value::Float(4.0).as_i64(), Some(4));
+        assert_eq!(Value::Float(4.5).as_i64(), None);
+        assert_eq!(Value::Int(4).as_f64(), Some(4.0));
+    }
+}

@@ -1,0 +1,104 @@
+//! JSON serializer (compact form, deterministic key order via BTreeMap).
+
+use super::value::Value;
+
+/// Serialize a value to a compact JSON string.
+pub fn to_string(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out);
+    out
+}
+
+fn write_value(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Int(i) => out.push_str(&i.to_string()),
+        Value::Float(f) => write_f64(*f, out),
+        Value::Str(s) => write_string(s, out),
+        Value::Array(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(item, out);
+            }
+            out.push(']');
+        }
+        Value::Object(map) => {
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(k, out);
+                out.push(':');
+                write_value(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_f64(f: f64, out: &mut String) {
+    if f.is_finite() {
+        if f.fract() == 0.0 && f.abs() < 1e15 {
+            // keep a decimal point so it re-parses as float-compatible
+            out.push_str(&format!("{f:.1}"));
+        } else {
+            // shortest round-trippable representation
+            out.push_str(&format!("{f}"));
+        }
+    } else {
+        // JSON has no Inf/NaN; emit null (matching python json.dumps default
+        // would be an error; we choose null and assert finiteness upstream)
+        out.push_str("null");
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::*;
+    use crate::json::value::obj;
+
+    #[test]
+    fn floats_reparse_as_floats() {
+        let s = to_string(&Value::Float(2.0));
+        assert_eq!(s, "2.0");
+        assert!(matches!(parse(&s).unwrap(), Value::Float(_)));
+    }
+
+    #[test]
+    fn object_key_order_deterministic() {
+        let v = obj(vec![("b", Value::Int(1)), ("a", Value::Int(2))]);
+        assert_eq!(to_string(&v), r#"{"a":2,"b":1}"#);
+    }
+
+    #[test]
+    fn control_chars_escaped() {
+        let s = to_string(&Value::Str("\u{1}".into()));
+        assert_eq!(s, "\"\\u0001\"");
+        assert_eq!(parse(&s).unwrap().as_str().unwrap(), "\u{1}");
+    }
+}

@@ -1,0 +1,37 @@
+//! KANELE: Kolmogorov-Arnold Networks for Efficient LUT-based Evaluation.
+//!
+//! Full-system reproduction of the FPGA '26 paper. The library is organised
+//! around the paper's toolflow (Fig. 4):
+//!
+//! 1. A quantization-aware-trained, pruned KAN checkpoint (produced by the
+//!    build-time JAX/Pallas stack in `python/`) is loaded by [`checkpoint`].
+//! 2. [`lut`] enumerates every surviving edge's quantized input state space
+//!    and evaluates the spline fixed-point response -> Logical-LUT truth
+//!    tables.
+//! 3. [`netlist`] assembles L-LUTs, balanced pipelined adder trees and
+//!    inter-layer registers into a hardware graph; [`vhdl`] emits RTL.
+//! 4. [`sim`] executes the netlist bit- and cycle-accurately (the FPGA
+//!    substrate substitute), and [`synth`] estimates P-LUT/FF/Fmax/power the
+//!    way Vivado out-of-context synthesis would.
+//! 5. [`runtime`] cross-checks everything against the AOT-compiled XLA
+//!    artifact via PJRT, and [`coordinator`] serves batched inference.
+//!
+//! Baselines from the paper's evaluation (LogicNets, PolyLUT, hls4ml-style
+//! dense MLP, Tran et al.'s direct-spline KAN) live in [`baselines`].
+
+pub mod baselines;
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fixed;
+pub mod json;
+pub mod lut;
+pub mod netlist;
+pub mod report;
+pub mod rl;
+pub mod runtime;
+pub mod sim;
+pub mod synth;
+pub mod util;
+pub mod vhdl;

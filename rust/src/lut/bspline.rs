@@ -1,0 +1,147 @@
+//! f64 Cox-de Boor B-spline basis — exact mirror of
+//! `python/compile/kan/bspline.py::bspline_basis_np` (same operation order,
+//! same domain clamping, same closed right edge), so L-LUT regeneration
+//! agrees with the Python oracle to the last bit modulo libm `exp`.
+
+/// Uniform extended knot vector: G intervals over [a, b], extended by
+/// `order` knots each side. Length G + 2*order + 1.
+pub fn make_knots(grid_size: usize, domain: (f64, f64), order: usize) -> Vec<f64> {
+    let (a, b) = domain;
+    assert!(b > a, "domain must satisfy b > a");
+    assert!(grid_size >= 1);
+    let h = (b - a) / grid_size as f64;
+    (0..grid_size + 2 * order + 1)
+        .map(|i| a + (i as f64 - order as f64) * h)
+        .collect()
+}
+
+/// silu(x) = x / (1 + e^-x), the Eq. 2 base activation.
+pub fn silu(x: f64) -> f64 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Evaluate all G + S basis functions at x. Input outside the domain is
+/// clamped (hardware clip). Returns a vector of length `knots.len() - 1 - order`.
+pub fn bspline_basis(x: f64, knots: &[f64], order: usize) -> Vec<f64> {
+    let n_knots = knots.len();
+    let a = knots[order];
+    let b = knots[n_knots - 1 - order];
+    let x = x.clamp(a, b);
+
+    // degree 0: half-open indicators, right edge of the domain closed
+    let mut basis: Vec<f64> = (0..n_knots - 1)
+        .map(|i| {
+            if x >= knots[i] && x < knots[i + 1] {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let domain_last = n_knots - 2 - order;
+    if x >= b {
+        // x == b belongs to the (closed) last domain interval, not to the
+        // extension interval [b, b + h) that the half-open rule would pick
+        // (the extension interval only exists for order >= 1).
+        basis[domain_last] = 1.0;
+        if order > 0 {
+            basis[domain_last + 1] = 0.0;
+        }
+    }
+
+    for k in 1..=order {
+        let m = n_knots - k - 1;
+        let mut next = vec![0.0f64; m];
+        for i in 0..m {
+            let ti = knots[i];
+            let tik = knots[i + k];
+            let ti1 = knots[i + 1];
+            let tik1 = knots[i + k + 1];
+            let d0 = if tik - ti > 0.0 { tik - ti } else { 1.0 };
+            let d1 = if tik1 - ti1 > 0.0 { tik1 - ti1 } else { 1.0 };
+            // same expression shape as the numpy twin:
+            // (x - ti)/d0 * B_i + (tik1 - x)/d1 * B_{i+1}
+            next[i] = (x - ti) / d0 * basis[i] + (tik1 - x) / d1 * basis[i + 1];
+        }
+        basis = next;
+    }
+    basis
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn knot_vector_shape_and_spacing() {
+        let k = make_knots(6, (-8.0, 8.0), 3);
+        assert_eq!(k.len(), 6 + 2 * 3 + 1);
+        let h = (k[1] - k[0]).abs();
+        for w in k.windows(2) {
+            assert!((w[1] - w[0] - h).abs() < 1e-12);
+        }
+        assert!((k[3] - -8.0).abs() < 1e-12);
+        assert!((k[k.len() - 4] - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partition_of_unity_on_domain() {
+        for (g, s) in [(4, 2), (6, 3), (30, 10)] {
+            let knots = make_knots(g, (-2.0, 2.0), s);
+            for i in 0..=100 {
+                let x = -2.0 + 4.0 * i as f64 / 100.0;
+                let b = bspline_basis(x, &knots, s);
+                assert_eq!(b.len(), g + s);
+                let sum: f64 = b.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-9, "sum {sum} at x={x} (G={g},S={s})");
+            }
+        }
+    }
+
+    #[test]
+    fn clamps_outside_domain() {
+        let knots = make_knots(6, (-8.0, 8.0), 3);
+        let inside = bspline_basis(8.0, &knots, 3);
+        let outside = bspline_basis(100.0, &knots, 3);
+        assert_eq!(inside, outside);
+    }
+
+    #[test]
+    fn basis_nonnegative() {
+        prop::check("basis-nonneg", 100, |g| {
+            let order = g.usize_in(0, 5);
+            let grid = g.usize_in(1, 12);
+            let knots = make_knots(grid, (-3.0, 3.0), order);
+            let x = g.f64_in(-4.0, 4.0);
+            for (i, v) in bspline_basis(x, &knots, order).iter().enumerate() {
+                if *v < -1e-12 {
+                    return Err(format!("basis[{i}] = {v} < 0 at x={x}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn locality_support() {
+        // each basis function has support on at most order+1 intervals
+        let (g, s) = (8, 3);
+        let knots = make_knots(g, (0.0, 8.0), s);
+        let b = bspline_basis(0.5, &knots, s); // x in interval 0
+        // only the first s+1 bases can be nonzero there
+        for (i, v) in b.iter().enumerate() {
+            if i > s {
+                assert_eq!(*v, 0.0, "basis {i} should vanish at x=0.5");
+            }
+        }
+    }
+
+    #[test]
+    fn silu_known_values() {
+        assert_eq!(silu(0.0), 0.0);
+        assert!((silu(100.0) - 100.0).abs() < 1e-9);
+        assert!(silu(-100.0).abs() < 1e-9);
+        assert!((silu(1.0) - 1.0 / (1.0 + (-1.0f64).exp())).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,255 @@
+//! KAN -> Logical-LUT conversion (paper §4.1.2).
+//!
+//! For every surviving edge the quantized input state space is enumerated
+//! and the edge's pre-activation response (Eq. 2) is evaluated in f64 and
+//! converted to accumulator fixed point. The operation order mirrors
+//! `python/compile/export.py::edge_phi_np` exactly; the only cross-language
+//! wiggle is libm `exp` in the silu term, so the extraction test tolerates
+//! <=1 LSB against the checkpoint's exported tables while the *netlist*
+//! always consumes whichever table set the caller selects.
+
+pub mod bspline;
+
+use crate::checkpoint::Checkpoint;
+use crate::fixed::{self, Quantizer};
+
+pub use bspline::{bspline_basis, make_knots, silu};
+
+/// Truth tables for one layer: `tables[q][p]`, None for pruned edges.
+#[derive(Clone, Debug)]
+pub struct LayerTables {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub in_bits: u32,
+    pub tables: Vec<Option<Vec<i64>>>,
+}
+
+impl LayerTables {
+    pub fn at(&self, q: usize, p: usize) -> Option<&Vec<i64>> {
+        self.tables[q * self.d_in + p].as_ref()
+    }
+
+    /// Min/max entry over all tables (drives adder-tree width sizing).
+    pub fn entry_range(&self) -> (i64, i64) {
+        let mut lo = 0i64;
+        let mut hi = 0i64;
+        for t in self.tables.iter().flatten() {
+            for &v in t {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+        (lo, hi)
+    }
+}
+
+/// Evaluate one edge's phi at `x` (Eq. 2), f64, Python-mirrored op order:
+/// spline contributions accumulated in ascending k, base term added last.
+pub fn edge_phi(
+    x: f64,
+    w_spline: &[f64],
+    w_base: f64,
+    knots: &[f64],
+    order: usize,
+) -> f64 {
+    let basis = bspline_basis(x, knots, order);
+    debug_assert_eq!(basis.len(), w_spline.len());
+    let mut acc = 0.0f64;
+    for (k, b) in basis.iter().enumerate() {
+        acc += w_spline[k] * b;
+    }
+    acc + w_base * silu(x)
+}
+
+/// Regenerate the L-LUT truth tables of one layer from spline parameters
+/// (the paper's conversion step).
+pub fn extract_layer(ck: &Checkpoint, l: usize) -> LayerTables {
+    let layer = &ck.layers[l];
+    let in_q = Quantizer::new(layer.in_bits, ck.domain.0, ck.domain.1);
+    let knots = make_knots(ck.grid_size, ck.domain, ck.order);
+    let n_codes = in_q.levels() as usize;
+    // precompute dequantized input values once per layer
+    let xs: Vec<f64> = (0..n_codes).map(|c| in_q.decode(c as u32)).collect();
+    // basis values are shared by every edge of the layer: (n_codes, n_basis)
+    let basis: Vec<Vec<f64>> = xs.iter().map(|&x| bspline_basis(x, &knots, ck.order)).collect();
+    let silus: Vec<f64> = xs.iter().map(|&x| silu(x)).collect();
+
+    let mut tables = Vec::with_capacity(layer.d_out * layer.d_in);
+    for q in 0..layer.d_out {
+        for p in 0..layer.d_in {
+            if !layer.mask_at(q, p) {
+                tables.push(None);
+                continue;
+            }
+            let ws = layer.w_spline_at(q, p);
+            let wb = layer.w_base_at(q, p);
+            let t: Vec<i64> = (0..n_codes)
+                .map(|c| {
+                    let mut acc = 0.0f64;
+                    for (k, b) in basis[c].iter().enumerate() {
+                        acc += ws[k] * b;
+                    }
+                    fixed::to_fixed(acc + wb * silus[c], ck.frac_bits)
+                })
+                .collect();
+            tables.push(Some(t));
+        }
+    }
+    LayerTables {
+        d_in: layer.d_in,
+        d_out: layer.d_out,
+        in_bits: layer.in_bits,
+        tables,
+    }
+}
+
+/// Extract every layer.
+pub fn extract_all(ck: &Checkpoint) -> Vec<LayerTables> {
+    (0..ck.n_layers()).map(|l| extract_layer(ck, l)).collect()
+}
+
+/// Use the checkpoint's exported (authoritative) tables instead of
+/// regenerating — bit-identical to the Python oracle by construction.
+pub fn from_checkpoint(ck: &Checkpoint) -> Vec<LayerTables> {
+    ck.layers
+        .iter()
+        .map(|layer| LayerTables {
+            d_in: layer.d_in,
+            d_out: layer.d_out,
+            in_bits: layer.in_bits,
+            tables: layer.table.clone(),
+        })
+        .collect()
+}
+
+/// Compare regenerated tables against the checkpoint's exported ones.
+/// Returns (n_entries, n_mismatched, max_abs_diff).
+pub fn compare_with_exported(ck: &Checkpoint) -> (usize, usize, i64) {
+    let mut total = 0usize;
+    let mut mismatched = 0usize;
+    let mut max_diff = 0i64;
+    for l in 0..ck.n_layers() {
+        let regen = extract_layer(ck, l);
+        let layer = &ck.layers[l];
+        for (i, t) in regen.tables.iter().enumerate() {
+            match (t, &layer.table[i]) {
+                (Some(a), Some(b)) => {
+                    for (x, y) in a.iter().zip(b) {
+                        total += 1;
+                        let d = (x - y).abs();
+                        if d != 0 {
+                            mismatched += 1;
+                            max_diff = max_diff.max(d);
+                        }
+                    }
+                }
+                (None, None) => {}
+                _ => {
+                    mismatched += usize::MAX / 2; // structural mismatch: fail loudly
+                }
+            }
+        }
+    }
+    (total, mismatched, max_diff)
+}
+
+/// Table statistics used by the synthesis reports.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TableStats {
+    pub n_tables: usize,
+    pub n_constant: usize,
+    pub n_entries: usize,
+    pub out_width_max: u32,
+}
+
+pub fn stats(layers: &[LayerTables]) -> TableStats {
+    let mut s = TableStats::default();
+    for lt in layers {
+        for t in lt.tables.iter().flatten() {
+            s.n_tables += 1;
+            s.n_entries += t.len();
+            let (lo, hi) = t.iter().fold((i64::MAX, i64::MIN), |(a, b), &v| (a.min(v), b.max(v)));
+            if lo == hi {
+                s.n_constant += 1;
+            }
+            s.out_width_max = s.out_width_max.max(fixed::signed_width_range(lo, hi));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::synthetic;
+    use crate::util::prop;
+
+    #[test]
+    fn from_checkpoint_matches_layer_shapes() {
+        let ck = synthetic(&[4, 3, 2], &[4, 5, 6], 3);
+        let ts = from_checkpoint(&ck);
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].tables.len(), 12);
+        for (i, t) in ts[0].tables.iter().enumerate() {
+            assert_eq!(t.is_some(), ck.layers[0].mask[i]);
+        }
+    }
+
+    #[test]
+    fn extract_layer_covers_all_codes() {
+        let ck = synthetic(&[3, 2], &[5, 8], 7);
+        let lt = extract_layer(&ck, 0);
+        for t in lt.tables.iter().flatten() {
+            assert_eq!(t.len(), 32);
+        }
+    }
+
+    #[test]
+    fn edge_phi_zero_weights_is_zero() {
+        let knots = make_knots(4, (-2.0, 2.0), 2);
+        let ws = vec![0.0; 6];
+        for x in [-2.0, -0.5, 0.0, 1.7, 2.0] {
+            assert_eq!(edge_phi(x, &ws, 0.0, &knots, 2), 0.0);
+        }
+    }
+
+    #[test]
+    fn edge_phi_pure_base_is_silu() {
+        let knots = make_knots(4, (-2.0, 2.0), 2);
+        let ws = vec![0.0; 6];
+        for x in [-1.0, 0.0, 0.5] {
+            let y = edge_phi(x, &ws, 2.0, &knots, 2);
+            assert!((y - 2.0 * silu(x)).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn prop_table_entries_bounded_by_weight_scale() {
+        // |phi| <= sum|w_spline| * max basis (=1, partition of unity) + |w_base| * max|silu| on domain
+        prop::check("lut-bounded", 50, |g| {
+            let order = g.usize_in(1, 3);
+            let grid = g.usize_in(2, 8);
+            let knots = make_knots(grid, (-4.0, 4.0), order);
+            let nb = grid + order;
+            let ws: Vec<f64> = (0..nb).map(|_| g.f64_in(-2.0, 2.0)).collect();
+            let wb = g.f64_in(-2.0, 2.0);
+            let x = g.f64_in(-4.0, 4.0);
+            let y = edge_phi(x, &ws, wb, &knots, order);
+            let bound = ws.iter().map(|w| w.abs()).sum::<f64>() + wb.abs() * 4.0;
+            if y.abs() > bound + 1e-9 {
+                return Err(format!("phi({x}) = {y} exceeds bound {bound}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stats_counts_tables() {
+        let ck = synthetic(&[4, 3], &[4, 8], 11);
+        let ts = from_checkpoint(&ck);
+        let s = stats(&ts);
+        assert_eq!(s.n_tables, ck.active_edges());
+        assert_eq!(s.n_entries, ck.active_edges() * 16);
+        assert!(s.out_width_max >= 1);
+    }
+}

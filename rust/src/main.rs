@@ -1,0 +1,309 @@
+//! kanele — command-line driver for the KANELE toolflow.
+//!
+//! Subcommands mirror the paper's flow (Fig. 4): checkpoints produced by
+//! the Python build path are compiled to netlists, simulated bit-exactly,
+//! synthesized (estimator), emitted as VHDL, served, and reported as the
+//! paper's tables. Run `kanele help` for usage.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use kanele::checkpoint::{Checkpoint, TestSet};
+use kanele::config;
+use kanele::coordinator::{Service, ServiceCfg};
+use kanele::netlist::Netlist;
+use kanele::report;
+use kanele::sim;
+use kanele::synth;
+use kanele::vhdl;
+use kanele::{data, lut};
+
+const USAGE: &str = "\
+kanele — Kolmogorov-Arnold Networks for Efficient LUT-based Evaluation
+
+USAGE: kanele <command> [args]
+
+COMMANDS:
+  compile <name|path> [--n-add N] [--device D] [--vhdl DIR]
+      checkpoint -> L-LUTs -> netlist; print synthesis report; optionally
+      emit the VHDL bundle.
+  verify <name|path> [--n-add N]
+      bit-exact equivalence: netlist sim vs the checkpoint's Python oracle
+      vectors, plus L-LUT regeneration vs exported tables.
+  eval <name> [--n-add N]
+      run the netlist on the exported test set; print the task metric.
+  serve <name> [--requests N] [--workers W] [--batch B] [--wait-us U]
+      batched inference service benchmark over the netlist simulator.
+  table2|table3|table4|table5|fig6|table7|report-all [--n-add N]
+      regenerate the paper's tables/figures (report-all renders everything
+      and saves to artifacts/reports/).
+  devices
+      list device models.
+  help
+      this text.
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` pairs after positional args.
+struct Flags<'a> {
+    args: &'a [String],
+}
+
+impl<'a> Flags<'a> {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.args
+            .iter()
+            .position(|a| a == key)
+            .and_then(|i| self.args.get(i + 1))
+            .map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("bad {key}: {v}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn load_checkpoint(name_or_path: &str) -> Result<Checkpoint> {
+    let p = PathBuf::from(name_or_path);
+    let path = if p.exists() { p } else { config::ckpt_path(name_or_path) };
+    if !path.exists() {
+        bail!(
+            "no checkpoint at {} — train it first (cd python && python -m compile.trainer {name_or_path})",
+            path.display()
+        );
+    }
+    Checkpoint::load(&path)
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let flags = Flags { args: rest };
+    match cmd {
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        "devices" => {
+            for d in [synth::XCVU9P, synth::XCZU7EV, synth::XC7A100T] {
+                println!(
+                    "{:<28} LUT {:>9}  FF {:>9}  BRAM {:>5}  DSP {:>5}  ceiling {:.2} GHz",
+                    d.name, d.luts, d.ffs, d.brams, d.dsps, d.fmax_ceiling_ghz
+                );
+            }
+            Ok(())
+        }
+        "compile" => {
+            let name = rest.first().context("compile <name>")?;
+            let n_add = flags.get_usize("--n-add", 2)?;
+            let ck = load_checkpoint(name)?;
+            let device = flags
+                .get("--device")
+                .map(String::from)
+                .or_else(|| config::experiment(&ck.name).map(|e| e.device.to_string()))
+                .unwrap_or_else(|| "xcvu9p".into());
+            let t0 = Instant::now();
+            let tables = lut::extract_all(&ck);
+            let t_extract = t0.elapsed();
+            let net = Netlist::build(&ck, &tables, n_add);
+            let dev = synth::device_by_name(&device).with_context(|| format!("device {device}"))?;
+            let r = synth::synthesize(&net, &dev);
+            println!("model          : {}", ck.name);
+            println!("dims / bits    : {:?} / {:?}", ck.dims, ck.bits);
+            println!(
+                "active edges   : {} (of {})",
+                ck.active_edges(),
+                ck.dims.windows(2).map(|w| w[0] * w[1]).sum::<usize>()
+            );
+            println!("L-LUT extract  : {:.1} ms", t_extract.as_secs_f64() * 1e3);
+            println!("device         : {}", r.device);
+            println!("P-LUTs         : {}", r.luts);
+            println!("FFs            : {}", r.ffs);
+            println!("BRAM / DSP     : {} / {}", r.brams, r.dsps);
+            println!("Fmax           : {:.0} MHz", r.fmax_mhz);
+            println!("latency        : {} cycles = {:.1} ns", r.latency_cycles, r.latency_ns);
+            println!("Area x Delay   : {:.2e} LUT*ns", r.area_delay);
+            println!(
+                "dyn power      : {:.3} W  ({:.4} uJ/inf @ II=1)",
+                r.dyn_power_w, r.energy_per_inf_uj
+            );
+            println!("fits device    : {}", r.fits);
+            if let Some(dir) = flags.get("--vhdl") {
+                let oracle_in = &ck.test_vectors.input_codes;
+                let oracle_out = &ck.test_vectors.output_sums;
+                vhdl::write_bundle(
+                    &net,
+                    &PathBuf::from(dir),
+                    (!oracle_in.is_empty()).then_some((oracle_in.as_slice(), oracle_out.as_slice())),
+                )?;
+                println!("VHDL bundle    : {dir}");
+            }
+            Ok(())
+        }
+        "verify" => {
+            let name = rest.first().context("verify <name>")?;
+            let n_add = flags.get_usize("--n-add", 2)?;
+            let ck = load_checkpoint(name)?;
+            // 1. L-LUT regeneration vs exported tables
+            let (total, mismatched, maxdiff) = lut::compare_with_exported(&ck);
+            println!(
+                "L-LUT regeneration: {total} entries, {mismatched} mismatched (max |diff| {maxdiff} LSB)"
+            );
+            if maxdiff > 1 {
+                bail!("regenerated tables deviate by more than 1 LSB");
+            }
+            // 2. netlist (exported tables) vs Python oracle vectors
+            let tables = lut::from_checkpoint(&ck);
+            let net = Netlist::build(&ck, &tables, n_add);
+            let tv = &ck.test_vectors;
+            let mut bad = 0usize;
+            for (codes, want) in tv.input_codes.iter().zip(&tv.output_sums) {
+                if &sim::eval(&net, codes) != want {
+                    bad += 1;
+                }
+            }
+            println!(
+                "netlist vs oracle : {}/{} vectors bit-exact",
+                tv.input_codes.len() - bad,
+                tv.input_codes.len()
+            );
+            if bad > 0 {
+                bail!("{bad} oracle vectors mismatched");
+            }
+            // 3. cycle-accurate simulator vs functional eval
+            let mut cyc = sim::CycleSim::new(&net);
+            let completions = cyc.run_stream(&tv.input_codes);
+            let ok = completions
+                .iter()
+                .all(|c| c.sums == tv.output_sums[c.id as usize]);
+            println!(
+                "cycle-sim (II=1)  : {} vectors in {} cycles (latency {}), match = {ok}",
+                completions.len(),
+                cyc.cycle(),
+                net.latency_cycles()
+            );
+            if !ok {
+                bail!("cycle-accurate simulation mismatched");
+            }
+            println!("VERIFY OK");
+            Ok(())
+        }
+        "eval" => {
+            let name = rest.first().context("eval <name>")?;
+            let n_add = flags.get_usize("--n-add", 2)?;
+            let ck = load_checkpoint(name)?;
+            let tables = lut::from_checkpoint(&ck);
+            let net = Netlist::build(&ck, &tables, n_add);
+            let metric = report::eval_metric(&ck, &net)?;
+            let unit = if ck.task == "regress" { "AUC" } else { "% accuracy" };
+            println!("{name}: {metric:.2} {unit} (bit-exact netlist, full exported test set)");
+            Ok(())
+        }
+        "serve" => {
+            let name = rest.first().context("serve <name>")?;
+            let n_requests = flags.get_usize("--requests", 100_000)?;
+            let workers = flags.get_usize("--workers", 2)?;
+            let batch = flags.get_usize("--batch", 64)?;
+            let wait_us = flags.get_usize("--wait-us", 100)?;
+            let ck = load_checkpoint(name)?;
+            let tables = lut::from_checkpoint(&ck);
+            let net = Arc::new(Netlist::build(&ck, &tables, 2));
+            let ts_path = config::testset_path(&ck.name);
+            let stream = if ts_path.exists() {
+                data::replay_stream(&TestSet::load(&ts_path)?, n_requests)
+            } else {
+                data::random_code_stream(&ck, n_requests, 7)
+            };
+            let svc = Service::start(
+                Arc::clone(&net),
+                ServiceCfg {
+                    workers,
+                    max_batch: batch,
+                    max_wait: Duration::from_micros(wait_us as u64),
+                    queue_depth: 1 << 14,
+                },
+            );
+            let t0 = Instant::now();
+            let mut receivers = Vec::with_capacity(1024);
+            let mut done = 0usize;
+            for codes in stream {
+                loop {
+                    match svc.submit(codes.clone()) {
+                        Ok(rx) => {
+                            receivers.push(rx);
+                            break;
+                        }
+                        Err(_) => {
+                            // backpressure: drain pending completions
+                            for rx in receivers.drain(..) {
+                                let _ = rx.recv();
+                                done += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            for rx in receivers {
+                let _ = rx.recv();
+                done += 1;
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let stats = svc.stats();
+            println!("served          : {done} requests in {wall:.3} s");
+            println!("throughput      : {:.0} req/s", done as f64 / wall);
+            println!(
+                "latency p50/p99 : {:.1} / {:.1} us",
+                stats.latency_p50_us, stats.latency_p99_us
+            );
+            println!("mean batch      : {:.1} (batches: {})", stats.mean_batch, stats.batches);
+            println!("rejected (bp)   : {}", stats.rejected);
+            svc.shutdown();
+            Ok(())
+        }
+        "table2" => {
+            print!("{}", report::table2()?);
+            Ok(())
+        }
+        "table3" => {
+            print!("{}", report::table3(flags.get_usize("--n-add", 2)?)?);
+            Ok(())
+        }
+        "table4" => {
+            print!("{}", report::table4(flags.get_usize("--n-add", 2)?)?);
+            Ok(())
+        }
+        "table5" => {
+            print!("{}", report::table5(flags.get_usize("--n-add", 2)?)?);
+            Ok(())
+        }
+        "fig6" => {
+            print!("{}", report::fig6(flags.get_usize("--n-add", 2)?)?);
+            Ok(())
+        }
+        "table7" => {
+            print!("{}", report::table7(flags.get_usize("--n-add", 2)?)?);
+            Ok(())
+        }
+        "report-all" => {
+            let out = report::all(flags.get_usize("--n-add", 2)?)?;
+            print!("{out}");
+            let p = report::save("all", &out)?;
+            eprintln!("(saved to {})", p.display());
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; run `kanele help`"),
+    }
+}

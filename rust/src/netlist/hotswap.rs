@@ -1,0 +1,167 @@
+//! Hot-swappable netlists (paper §6 future work: "hot-swapping edge tables
+//! via partial reconfiguration or LUT updates, enabling lightweight online
+//! learning with minimal latency").
+//!
+//! On a real FPGA this is a partial-reconfiguration write to one LUT ROM;
+//! here it is an atomic pointer swap: readers (`load`) grab the current
+//! `Arc<Netlist>` per batch and are never torn, writers build the updated
+//! netlist and publish it. In-flight batches finish on the old tables —
+//! exactly the semantics of a PR region swap between inferences.
+
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Result};
+
+use super::Netlist;
+use crate::fixed::signed_width_range;
+
+/// Shared, swappable handle to a netlist.
+pub struct NetlistCell {
+    inner: RwLock<Arc<Netlist>>,
+    swaps: std::sync::atomic::AtomicU64,
+}
+
+impl NetlistCell {
+    pub fn new(net: Arc<Netlist>) -> Self {
+        NetlistCell {
+            inner: RwLock::new(net),
+            swaps: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Current netlist snapshot (cheap: one Arc clone).
+    pub fn load(&self) -> Arc<Netlist> {
+        self.inner.read().unwrap().clone()
+    }
+
+    /// Number of successful swaps so far.
+    pub fn swap_count(&self) -> u64 {
+        self.swaps.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Replace the whole netlist (e.g. a freshly retrained checkpoint).
+    pub fn replace(&self, net: Arc<Netlist>) {
+        *self.inner.write().unwrap() = net;
+        self.swaps.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Swap one edge's truth table: layer `l`, output neuron `q`, input `p`.
+    /// The new table must have exactly `2^in_bits` entries. Sum widths and
+    /// adder metadata are recomputed for the affected neuron.
+    pub fn swap_edge(&self, l: usize, q: usize, p: usize, table: Vec<i64>) -> Result<()> {
+        let current = self.load();
+        if l >= current.layers.len() {
+            bail!("layer {l} out of range");
+        }
+        let layer = &current.layers[l];
+        if q >= layer.neurons.len() {
+            bail!("neuron {q} out of range in layer {l}");
+        }
+        let expect = 1usize << layer.in_bits;
+        if table.len() != expect {
+            bail!("table must have {expect} entries, got {}", table.len());
+        }
+        let mut net = (*current).clone();
+        let neuron = &mut net.layers[l].neurons[q];
+        let Some(lut) = neuron.luts.iter_mut().find(|lt| lt.input == p) else {
+            bail!("neuron {q} of layer {l} has no active edge from input {p} (pruned edges cannot be hot-added without re-synthesis)");
+        };
+        let (lo, hi) = table
+            .iter()
+            .fold((i64::MAX, i64::MIN), |(a, b), &v| (a.min(v), b.max(v)));
+        lut.out_width = signed_width_range(lo.min(0), hi.max(0));
+        lut.table = table;
+        // recompute the neuron's sum width (exact per-table extremes + bias)
+        let (sum_lo, sum_hi) = neuron.luts.iter().fold((neuron.bias, neuron.bias), |(a, b), lt| {
+            let (l2, h2) = lt
+                .table
+                .iter()
+                .fold((i64::MAX, i64::MIN), |(x, y), &v| (x.min(v), y.max(v)));
+            (a + l2, b + h2)
+        });
+        neuron.sum_width = signed_width_range(sum_lo.min(0), sum_hi.max(0));
+        self.replace(Arc::new(net));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::synthetic;
+    use crate::lut;
+    use crate::sim;
+
+    fn cell(seed: u64) -> (crate::checkpoint::Checkpoint, NetlistCell) {
+        let ck = synthetic(&[3, 2], &[3, 6], seed);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, 2);
+        (ck, NetlistCell::new(Arc::new(net)))
+    }
+
+    #[test]
+    fn swap_changes_function_only_through_that_edge() {
+        let (_, cell) = cell(1);
+        let before = cell.load();
+        // find an active edge on neuron 0
+        let p = before.layers[0].neurons[0].luts[0].input;
+        let n_codes = 1usize << before.layers[0].in_bits;
+        let new_table = vec![12345i64; n_codes];
+        cell.swap_edge(0, 0, p, new_table.clone()).unwrap();
+        let after = cell.load();
+        assert_eq!(cell.swap_count(), 1);
+        let codes = vec![0u32; 3];
+        let a = sim::eval(&before, &codes);
+        let b = sim::eval(&after, &codes);
+        assert_ne!(a[0], b[0]);
+        // old snapshot unchanged (in-flight batches safe)
+        assert_eq!(sim::eval(&before, &codes), a);
+    }
+
+    #[test]
+    fn swap_validates_shape_and_indices() {
+        let (_, cell) = cell(2);
+        assert!(cell.swap_edge(9, 0, 0, vec![0; 8]).is_err());
+        assert!(cell.swap_edge(0, 9, 0, vec![0; 8]).is_err());
+        assert!(cell.swap_edge(0, 0, 0, vec![0; 3]).is_err());
+    }
+
+    #[test]
+    fn swap_updates_widths() {
+        let (_, cell) = cell(3);
+        let p = cell.load().layers[0].neurons[0].luts[0].input;
+        let n_codes = 1usize << cell.load().layers[0].in_bits;
+        cell.swap_edge(0, 0, p, vec![1i64 << 40; n_codes]).unwrap();
+        let after = cell.load();
+        let neuron = &after.layers[0].neurons[0];
+        assert!(neuron.sum_width >= 42, "width {}", neuron.sum_width);
+    }
+
+    #[test]
+    fn concurrent_readers_never_torn() {
+        let (ck, cell) = cell(4);
+        let cell = Arc::new(cell);
+        let n_codes = 1usize << ck.bits[0];
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let cell = Arc::clone(&cell);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200 {
+                    if t == 0 && i % 10 == 0 {
+                        let net = cell.load();
+                        let p = net.layers[0].neurons[0].luts[0].input;
+                        cell.swap_edge(0, 0, p, vec![i as i64; n_codes]).unwrap();
+                    } else {
+                        let net = cell.load();
+                        let out = sim::eval(&net, &[0, 1, 2]);
+                        assert_eq!(out.len(), 2);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(cell.swap_count() >= 20);
+    }
+}

@@ -1,0 +1,276 @@
+//! Hardware netlist IR (paper §4.1.3 + §4.2).
+//!
+//! Structure generated from the L-LUT graph:
+//!
+//! * per output neuron: the surviving edge LUTs feeding it, a **balanced
+//!   pipelined adder tree** combining up to `n_add` operands per stage
+//!   (registers after every stage), and
+//! * between layers: the requantize/saturate node + pipeline register.
+//!
+//! Latency (cycles) = 1 input register + sum over layers of
+//! (1 LUT-read stage + adder-tree depth), with depth
+//! `ceil(log_{n_add} max(fan_in, 1))`. The cycle-accurate simulator in
+//! [`crate::sim`] executes exactly this schedule; [`crate::synth`] prices it.
+
+pub mod hotswap;
+pub mod opt;
+
+use crate::checkpoint::Checkpoint;
+use crate::fixed::{signed_width_range, Quantizer};
+use crate::lut::LayerTables;
+
+/// One instantiated edge LUT.
+#[derive(Clone, Debug)]
+pub struct LutInst {
+    /// Index of the input neuron this LUT reads (its address port).
+    pub input: usize,
+    /// 2^in_bits truth-table entries (accumulator fixed point).
+    pub table: Vec<i64>,
+    /// Minimum signed width of the table's entries.
+    pub out_width: u32,
+}
+
+/// One output neuron: LUTs + balanced adder tree.
+#[derive(Clone, Debug)]
+pub struct NeuronNet {
+    pub luts: Vec<LutInst>,
+    /// Compile-time constant operand (introduced by constant-table folding
+    /// in [`opt`]; 0 for freshly built netlists).
+    pub bias: i64,
+    /// Adder tree depth at this neuron (0 when <= 1 operand).
+    pub depth: usize,
+    /// Signed width of the final sum.
+    pub sum_width: u32,
+}
+
+/// One layer of the netlist.
+#[derive(Clone, Debug)]
+pub struct LayerNet {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub in_bits: u32,
+    pub out_bits: u32,
+    pub neurons: Vec<NeuronNet>,
+    /// Requantizer to the next layer's input codes; None for the output layer.
+    pub requant: Option<Quantizer>,
+    /// Max adder depth across neurons = the layer's pipeline depth.
+    pub depth: usize,
+}
+
+/// Full netlist.
+#[derive(Clone, Debug)]
+pub struct Netlist {
+    pub name: String,
+    pub layers: Vec<LayerNet>,
+    pub n_add: usize,
+    pub frac_bits: u32,
+    pub domain: (f64, f64),
+}
+
+/// Adder tree depth for `n` operands combining up to `n_add` per stage.
+pub fn adder_depth(n: usize, n_add: usize) -> usize {
+    assert!(n_add >= 2);
+    if n <= 1 {
+        return 0;
+    }
+    let mut ops = n;
+    let mut d = 0;
+    while ops > 1 {
+        ops = ops.div_ceil(n_add);
+        d += 1;
+    }
+    d
+}
+
+impl Netlist {
+    /// Build from extracted tables + checkpoint metadata.
+    pub fn build(ck: &Checkpoint, tables: &[LayerTables], n_add: usize) -> Netlist {
+        assert_eq!(tables.len(), ck.n_layers());
+        assert!(n_add >= 2, "adder tree needs n_add >= 2");
+        let mut layers = Vec::with_capacity(ck.n_layers());
+        for (l, lt) in tables.iter().enumerate() {
+            let mut neurons = Vec::with_capacity(lt.d_out);
+            for q in 0..lt.d_out {
+                let mut luts = Vec::new();
+                for p in 0..lt.d_in {
+                    if let Some(t) = lt.at(q, p) {
+                        let (lo, hi) = t.iter().fold((i64::MAX, i64::MIN), |(a, b), &v| {
+                            (a.min(v), b.max(v))
+                        });
+                        luts.push(LutInst {
+                            input: p,
+                            table: t.clone(),
+                            out_width: if lo > hi { 1 } else { signed_width_range(lo, hi) },
+                        });
+                    }
+                }
+                // sum range: sum of per-table extremes (exact bound)
+                let (sum_lo, sum_hi) = luts.iter().fold((0i64, 0i64), |(a, b), lut| {
+                    let (lo, hi) = lut
+                        .table
+                        .iter()
+                        .fold((i64::MAX, i64::MIN), |(x, y), &v| (x.min(v), y.max(v)));
+                    (a + lo, b + hi)
+                });
+                let depth = adder_depth(luts.len(), n_add);
+                neurons.push(NeuronNet {
+                    bias: 0,
+                    depth,
+                    sum_width: signed_width_range(sum_lo.min(0), sum_hi.max(0)),
+                    luts,
+                });
+            }
+            let depth = neurons.iter().map(|n| n.depth).max().unwrap_or(0);
+            layers.push(LayerNet {
+                d_in: lt.d_in,
+                d_out: lt.d_out,
+                in_bits: lt.in_bits,
+                out_bits: ck.bits[l + 1],
+                neurons,
+                requant: if l + 1 < ck.n_layers() {
+                    Some(ck.quantizer(l + 1))
+                } else {
+                    None
+                },
+                depth,
+            });
+        }
+        Netlist {
+            name: ck.name.clone(),
+            layers,
+            n_add,
+            frac_bits: ck.frac_bits,
+            domain: ck.domain,
+        }
+    }
+
+    /// Pipeline latency in cycles: input register + per-layer LUT stage +
+    /// adder stages (balanced across neurons: every neuron is padded to the
+    /// layer's max depth by the register insertion pass).
+    pub fn latency_cycles(&self) -> usize {
+        1 + self
+            .layers
+            .iter()
+            .map(|l| 1 + l.depth)
+            .sum::<usize>()
+    }
+
+    /// Total L-LUT instances.
+    pub fn n_luts(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.neurons.iter().map(|n| n.luts.len()).sum::<usize>())
+            .sum()
+    }
+
+    /// Total adder count (nodes of every reduction tree).
+    pub fn n_adders(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.neurons.iter())
+            .map(|n| {
+                // a tree over k operands with arity n_add has ceil((k-1)/(n_add-1)) nodes
+                if n.luts.len() <= 1 {
+                    0
+                } else {
+                    (n.luts.len() - 1).div_ceil(self.n_add - 1)
+                }
+            })
+            .sum()
+    }
+
+    /// Dead-input detection: inputs of layer l read by no LUT (feed nothing).
+    pub fn dead_inputs(&self, l: usize) -> Vec<usize> {
+        let layer = &self.layers[l];
+        let mut used = vec![false; layer.d_in];
+        for n in &layer.neurons {
+            for lut in &n.luts {
+                used[lut.input] = true;
+            }
+        }
+        (0..layer.d_in).filter(|&p| !used[p]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::synthetic;
+    use crate::lut;
+    use crate::util::prop;
+
+    #[test]
+    fn adder_depth_cases() {
+        assert_eq!(adder_depth(0, 2), 0);
+        assert_eq!(adder_depth(1, 2), 0);
+        assert_eq!(adder_depth(2, 2), 1);
+        assert_eq!(adder_depth(3, 2), 2);
+        assert_eq!(adder_depth(8, 2), 3);
+        assert_eq!(adder_depth(9, 2), 4);
+        assert_eq!(adder_depth(16, 4), 2);
+        assert_eq!(adder_depth(17, 4), 3);
+    }
+
+    #[test]
+    fn build_from_synthetic() {
+        let ck = synthetic(&[4, 3, 2], &[4, 5, 6], 9);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, 2);
+        assert_eq!(net.layers.len(), 2);
+        assert_eq!(net.n_luts(), ck.active_edges());
+        assert!(net.latency_cycles() >= 3);
+        // requant only between layers
+        assert!(net.layers[0].requant.is_some());
+        assert!(net.layers[1].requant.is_none());
+    }
+
+    #[test]
+    fn sum_width_covers_extremes() {
+        let ck = synthetic(&[5, 2], &[4, 8], 21);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, 2);
+        for neuron in &net.layers[0].neurons {
+            let worst_pos: i64 = neuron
+                .luts
+                .iter()
+                .map(|l| *l.table.iter().max().unwrap())
+                .sum();
+            let worst_neg: i64 = neuron
+                .luts
+                .iter()
+                .map(|l| *l.table.iter().min().unwrap())
+                .sum();
+            let w = neuron.sum_width;
+            let hi = (1i64 << (w - 1)) - 1;
+            let lo = -(1i64 << (w - 1));
+            assert!(worst_pos <= hi, "{worst_pos} > {hi}");
+            assert!(worst_neg >= lo, "{worst_neg} < {lo}");
+        }
+    }
+
+    #[test]
+    fn prop_adder_nodes_and_depth_consistent() {
+        prop::check("adder-tree", 200, |g| {
+            let n = g.usize_in(0, 64);
+            let n_add = g.usize_in(2, 6);
+            let d = adder_depth(n, n_add);
+            // depth property: n_add^d >= n for n >= 1
+            if n >= 1 && n_add.pow(d as u32) < n {
+                return Err(format!("depth {d} too small for {n} ops arity {n_add}"));
+            }
+            if n >= 2 && n_add.pow((d - 1) as u32) >= n {
+                return Err(format!("depth {d} not minimal for {n} ops arity {n_add}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn latency_grows_with_narrower_adders() {
+        let ck = synthetic(&[16, 4, 2], &[4, 5, 6], 33);
+        let tables = lut::from_checkpoint(&ck);
+        let wide = Netlist::build(&ck, &tables, 6).latency_cycles();
+        let narrow = Netlist::build(&ck, &tables, 2).latency_cycles();
+        assert!(narrow >= wide);
+    }
+}

@@ -1,0 +1,153 @@
+//! Netlist optimization passes (design-choice ablations in DESIGN.md):
+//!
+//! * **constant-table folding** — a pruned/QAT'd edge whose truth table is
+//!   a single constant contributes a compile-time bias, not a LUT: fold it
+//!   into the neuron's bias operand and delete the LUT + its register.
+//! * **duplicate-table sharing** — identical (input, table) pairs within a
+//!   neuron collapse to one LUT with a x2 weight... which for tables means
+//!   doubling entries; within a *layer* across neurons, identical pairs
+//!   can share one physical LUT when the device allows multi-fanout reads
+//!   (always true for LUTROMs). We count shareable duplicates and expose
+//!   the saving; the builder keeps them separate for timing fidelity, so
+//!   sharing is reported as an optimization option (`SharingReport`).
+//! * **dead-input pruning** — inputs read by no LUT need no input register.
+//!
+//! All passes preserve bit-exactness: `sim::eval` results are identical
+//! before and after (tested below).
+
+use std::collections::HashMap;
+
+use super::{LutInst, Netlist};
+
+/// Result of running [`optimize`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OptReport {
+    pub constant_tables_folded: usize,
+    pub dead_inputs: usize,
+    pub shareable_duplicates: usize,
+}
+
+/// Per-neuron constant bias introduced by folding (added to the adder tree
+/// as a compile-time operand; the simulator adds it after the LUT gather).
+pub fn optimize(net: &mut Netlist) -> OptReport {
+    let mut report = OptReport::default();
+    for layer in &mut net.layers {
+        // share-detection across the layer: (input, table) -> count
+        let mut seen: HashMap<(usize, &[i64]), usize> = HashMap::new();
+        for neuron in &layer.neurons {
+            for lut in &neuron.luts {
+                *seen.entry((lut.input, lut.table.as_slice())).or_default() += 1;
+            }
+        }
+        report.shareable_duplicates += seen.values().filter(|&&c| c > 1).map(|c| c - 1).sum::<usize>();
+
+        for neuron in &mut layer.neurons {
+            let (constants, kept): (Vec<LutInst>, Vec<LutInst>) = neuron
+                .luts
+                .drain(..)
+                .partition(|l| l.table.iter().all(|&v| v == l.table[0]));
+            let bias: i64 = constants.iter().map(|l| l.table[0]).sum();
+            report.constant_tables_folded += constants.len();
+            neuron.luts = kept;
+            neuron.bias = neuron.bias + bias;
+            // depth may shrink with fewer operands
+            neuron.depth = super::adder_depth(
+                neuron.luts.len() + usize::from(neuron.bias != 0),
+                net.n_add,
+            );
+        }
+        layer.depth = layer.neurons.iter().map(|n| n.depth).max().unwrap_or(0);
+    }
+    // dead inputs (after folding)
+    for l in 0..net.layers.len() {
+        report.dead_inputs += net.dead_inputs(l).len();
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::synthetic;
+    use crate::lut;
+    use crate::sim;
+    use crate::util::Rng;
+
+    fn make_net_with_constants(seed: u64) -> (crate::checkpoint::Checkpoint, Netlist) {
+        let mut ck = synthetic(&[4, 3, 2], &[4, 5, 6], seed);
+        // force two constant tables in layer 0
+        let n_codes = 1usize << ck.bits[0];
+        ck.layers[0].table[0] = Some(vec![42; n_codes]);
+        ck.layers[0].table[1] = Some(vec![-7; n_codes]);
+        ck.layers[0].mask[0] = true;
+        ck.layers[0].mask[1] = true;
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, 2);
+        (ck, net)
+    }
+
+    #[test]
+    fn folding_preserves_function() {
+        let (ck, net) = make_net_with_constants(3);
+        let mut optimized = net.clone();
+        let report = optimize(&mut optimized);
+        assert!(report.constant_tables_folded >= 2);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let codes: Vec<u32> = (0..4).map(|_| rng.below(1 << ck.bits[0]) as u32).collect();
+            assert_eq!(sim::eval(&net, &codes), sim::eval(&optimized, &codes));
+        }
+    }
+
+    #[test]
+    fn folding_reduces_resources() {
+        let (_, net) = make_net_with_constants(5);
+        let mut optimized = net.clone();
+        optimize(&mut optimized);
+        assert!(optimized.n_luts() < net.n_luts());
+        let dev = crate::synth::XCVU9P;
+        let before = crate::synth::synthesize(&net, &dev);
+        let after = crate::synth::synthesize(&optimized, &dev);
+        assert!(after.luts < before.luts, "{} !< {}", after.luts, before.luts);
+    }
+
+    #[test]
+    fn idempotent() {
+        let (_, net) = make_net_with_constants(7);
+        let mut a = net.clone();
+        optimize(&mut a);
+        let mut b = a.clone();
+        let r2 = optimize(&mut b);
+        assert_eq!(r2.constant_tables_folded, 0);
+        assert_eq!(a.n_luts(), b.n_luts());
+    }
+
+    #[test]
+    fn duplicate_detection() {
+        let mut ck = synthetic(&[2, 3], &[3, 6], 11);
+        let t = vec![1i64, 2, 3, 4, 5, 6, 7, 8];
+        for q in 0..3 {
+            ck.layers[0].table[q * 2] = Some(t.clone());
+            ck.layers[0].mask[q * 2] = true;
+        }
+        let tables = lut::from_checkpoint(&ck);
+        let mut net = Netlist::build(&ck, &tables, 2);
+        let report = optimize(&mut net);
+        assert!(report.shareable_duplicates >= 2, "{report:?}");
+    }
+
+    #[test]
+    fn cycle_sim_still_matches_after_opt() {
+        let (ck, net) = make_net_with_constants(13);
+        let mut optimized = net.clone();
+        optimize(&mut optimized);
+        let mut rng = Rng::new(2);
+        let inputs: Vec<Vec<u32>> = (0..20)
+            .map(|_| (0..4).map(|_| rng.below(1 << ck.bits[0]) as u32).collect())
+            .collect();
+        let mut cs = sim::CycleSim::new(&optimized);
+        for c in cs.run_stream(&inputs) {
+            assert_eq!(c.sums, sim::eval(&net, &inputs[c.id as usize]));
+        }
+    }
+}

@@ -1,0 +1,441 @@
+//! Bit- and cycle-accurate netlist simulation — the FPGA-substrate
+//! substitute (DESIGN.md §3).
+//!
+//! Two engines over the same [`Netlist`]:
+//!
+//! * [`eval`] / [`eval_batch`] — functional, bit-exact, used on the serving
+//!   hot path (the coordinator) and for equivalence checks against the
+//!   Python integer oracle.
+//! * [`CycleSim`] — cycle-accurate pipeline model (LUT stage, one register
+//!   per adder stage, requant register), II = 1: a new sample can enter
+//!   every cycle and results emerge after `netlist.latency_cycles()`.
+//!   Tests assert CycleSim == eval on random streams, plus the latency and
+//!   occupancy invariants.
+
+use crate::fixed::from_fixed;
+use crate::netlist::{LayerNet, Netlist};
+
+/// Functional evaluation of one sample (input codes -> final i64 sums).
+///
+/// Convenience wrapper over [`Evaluator`]; allocates per call. The serving
+/// hot path uses a reused `Evaluator` instead (§Perf: ~35% faster).
+pub fn eval(net: &Netlist, codes: &[u32]) -> Vec<i64> {
+    let mut ev = Evaluator::new(net);
+    ev.eval(codes).to_vec()
+}
+
+/// Reusable evaluator with preallocated scratch buffers — the optimized
+/// functional hot path (EXPERIMENTS.md §Perf, L3 iteration 2).
+pub struct Evaluator<'a> {
+    net: &'a Netlist,
+    codes: Vec<u32>,
+    sums: Vec<i64>,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(net: &'a Netlist) -> Self {
+        let max_d: usize = net.layers.iter().map(|l| l.d_in.max(l.d_out)).max().unwrap_or(1);
+        Evaluator {
+            net,
+            codes: Vec::with_capacity(max_d),
+            sums: Vec::with_capacity(max_d),
+        }
+    }
+
+    /// Evaluate one sample; the returned slice is valid until the next call.
+    pub fn eval(&mut self, codes: &[u32]) -> &[i64] {
+        debug_assert_eq!(codes.len(), self.net.layers[0].d_in);
+        self.codes.clear();
+        self.codes.extend_from_slice(codes);
+        for layer in &self.net.layers {
+            self.sums.clear();
+            for n in &layer.neurons {
+                let mut acc = n.bias;
+                for lut in &n.luts {
+                    // tables are 2^in_bits entries; masking the address is
+                    // exactly the RTL's truncation semantics and lets the
+                    // compiler elide the bounds check
+                    let addr = self.codes[lut.input] as usize & (lut.table.len() - 1);
+                    acc += lut.table[addr];
+                }
+                self.sums.push(acc);
+            }
+            if let Some(q) = &layer.requant {
+                self.codes.clear();
+                self.codes.extend(
+                    self.sums
+                        .iter()
+                        .map(|&s| q.encode(from_fixed(s, self.net.frac_bits))),
+                );
+            }
+        }
+        &self.sums
+    }
+}
+
+/// Batch functional evaluation.
+pub fn eval_batch(net: &Netlist, batch: &[Vec<u32>]) -> Vec<Vec<i64>> {
+    batch.iter().map(|c| eval(net, c)).collect()
+}
+
+/// Decision helpers shared with the report harness.
+pub fn argmax(sums: &[i64]) -> usize {
+    sums.iter()
+        .enumerate()
+        .max_by_key(|(_, &v)| v)
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Classification/binary accuracy of a netlist on (codes, labels).
+pub fn accuracy(net: &Netlist, inputs: &[Vec<u32>], labels: &[i64], binary: bool) -> f64 {
+    let mut correct = 0usize;
+    for (codes, &label) in inputs.iter().zip(labels) {
+        let sums = eval(net, codes);
+        let pred = if binary {
+            (sums[0] > 0) as i64
+        } else {
+            argmax(&sums) as i64
+        };
+        if pred == label {
+            correct += 1;
+        }
+    }
+    correct as f64 / inputs.len().max(1) as f64
+}
+
+// ---------------------------------------------------------------------------
+// Cycle-accurate pipeline simulation
+// ---------------------------------------------------------------------------
+
+/// In-flight value at one pipeline register: per-neuron partial sums.
+#[derive(Clone, Debug)]
+enum Slot {
+    Empty,
+    /// Codes waiting at a layer's LUT-input register.
+    Codes(u64, Vec<u32>),
+    /// Partial operand vectors per neuron inside the adder tree.
+    Partial(u64, Vec<Vec<i64>>),
+    /// Final sums leaving the network.
+    Done(u64, Vec<i64>),
+}
+
+/// A completed sample: id tag + output sums.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Completion {
+    pub id: u64,
+    pub sums: Vec<i64>,
+}
+
+/// Cycle-accurate pipelined execution of a netlist.
+///
+/// Stage layout per layer: `[LUT read] -> depth x [adder stage]` with a
+/// register after each stage; requantization happens combinationally with
+/// the last register write of a layer (as in the RTL, where the quantize/
+/// saturate logic sits before the inter-layer register).
+pub struct CycleSim<'a> {
+    net: &'a Netlist,
+    /// stages[s] = register bank after pipeline stage s.
+    stages: Vec<Slot>,
+    cycle: u64,
+    completed: Vec<Completion>,
+}
+
+impl<'a> CycleSim<'a> {
+    pub fn new(net: &'a Netlist) -> Self {
+        // stage count = latency (each stage has exactly one register)
+        let n_stages = net.latency_cycles();
+        CycleSim {
+            net,
+            stages: vec![Slot::Empty; n_stages],
+            cycle: 0,
+            completed: Vec::new(),
+        }
+    }
+
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Pipeline occupancy (non-empty stages).
+    pub fn occupancy(&self) -> usize {
+        self.stages.iter().filter(|s| !matches!(s, Slot::Empty)).count()
+    }
+
+    /// Advance one clock, optionally inserting a new sample (II = 1).
+    /// Returns the completion that exited this cycle, if any.
+    pub fn step(&mut self, input: Option<(u64, &[u32])>) -> Option<Completion> {
+        self.cycle += 1;
+        // walk stages from the back so each value moves exactly one stage
+        let n = self.stages.len();
+        let mut out = None;
+        if let Slot::Done(id, sums) = std::mem::replace(&mut self.stages[n - 1], Slot::Empty) {
+            let c = Completion { id, sums };
+            self.completed.push(c.clone());
+            out = Some(c);
+        }
+        for s in (0..n - 1).rev() {
+            let v = std::mem::replace(&mut self.stages[s], Slot::Empty);
+            self.stages[s + 1] = self.advance(v, s + 1);
+        }
+        if let Some((id, codes)) = input {
+            debug_assert_eq!(codes.len(), self.net.layers[0].d_in);
+            self.stages[0] = Slot::Codes(id, codes.to_vec());
+        }
+        out
+    }
+
+    /// Map a value crossing into stage `stage_idx` through that stage's logic.
+    fn advance(&self, v: Slot, stage_idx: usize) -> Slot {
+        let v = match v {
+            Slot::Empty => return Slot::Empty,
+            other => other,
+        };
+        // decode which (layer, sub-stage) this register index corresponds to
+        let (layer_idx, sub) = self.locate(stage_idx);
+        let layer = match layer_idx {
+            Some(l) => &self.net.layers[l],
+            None => return v, // input register: pass through
+        };
+        match (v, sub) {
+            // LUT-read stage: codes -> per-neuron operand vectors (the
+            // folded constant bias, when present, rides as an extra operand)
+            (Slot::Codes(id, codes), 0) => {
+                let partial: Vec<Vec<i64>> = layer
+                    .neurons
+                    .iter()
+                    .map(|n| {
+                        let mut ops: Vec<i64> =
+                            n.luts.iter().map(|l| l.table[codes[l.input] as usize]).collect();
+                        if n.bias != 0 {
+                            ops.push(n.bias);
+                        }
+                        ops
+                    })
+                    .collect();
+                self.finish_layer_if_done(id, partial, layer, sub)
+            }
+            // adder stage: reduce up to n_add operands per node
+            (Slot::Partial(id, ops), s) if s >= 1 => {
+                let reduced: Vec<Vec<i64>> = ops
+                    .into_iter()
+                    .map(|v| {
+                        if v.len() <= 1 {
+                            v
+                        } else {
+                            v.chunks(self.net.n_add).map(|c| c.iter().sum()).collect()
+                        }
+                    })
+                    .collect();
+                self.finish_layer_if_done(id, reduced, layer, s)
+            }
+            (Slot::Done(id, s), _) => Slot::Done(id, s),
+            (v, s) => unreachable!("slot {v:?} at sub-stage {s}"),
+        }
+    }
+
+    /// After the layer's final sub-stage, requantize (or mark done).
+    fn finish_layer_if_done(
+        &self,
+        id: u64,
+        partial: Vec<Vec<i64>>,
+        layer: &LayerNet,
+        sub: usize,
+    ) -> Slot {
+        if sub < layer.depth {
+            return Slot::Partial(id, partial);
+        }
+        // all trees reduced to single operands now
+        let sums: Vec<i64> = partial
+            .into_iter()
+            .map(|v| {
+                debug_assert!(v.len() <= 1);
+                v.first().copied().unwrap_or(0)
+            })
+            .collect();
+        match &layer.requant {
+            Some(q) => Slot::Codes(
+                id,
+                sums.iter()
+                    .map(|&s| q.encode(from_fixed(s, self.net.frac_bits)))
+                    .collect(),
+            ),
+            None => Slot::Done(id, sums),
+        }
+    }
+
+    /// Register index -> (layer, sub-stage). Stage 0 is the input register
+    /// (None); then each layer occupies 1 + depth stages.
+    fn locate(&self, stage_idx: usize) -> (Option<usize>, usize) {
+        if stage_idx == 0 {
+            return (None, 0);
+        }
+        let mut off = 1;
+        for (l, layer) in self.net.layers.iter().enumerate() {
+            let span = 1 + layer.depth;
+            if stage_idx < off + span {
+                return (Some(l), stage_idx - off);
+            }
+            off += span;
+        }
+        panic!("stage index {stage_idx} out of range");
+    }
+
+    /// Run a full stream with II=1 and drain; returns completions in order.
+    pub fn run_stream(&mut self, inputs: &[Vec<u32>]) -> Vec<Completion> {
+        let mut out = Vec::with_capacity(inputs.len());
+        for (i, codes) in inputs.iter().enumerate() {
+            if let Some(c) = self.step(Some((i as u64, codes))) {
+                out.push(c);
+            }
+        }
+        while out.len() < inputs.len() {
+            match self.step(None) {
+                Some(c) => out.push(c),
+                None if self.occupancy() == 0 => break,
+                None => {}
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::synthetic;
+    use crate::lut;
+    use crate::netlist::Netlist;
+    use crate::util::{prop, Rng};
+
+    fn net_for(dims: &[usize], bits: &[u32], seed: u64, n_add: usize) -> (crate::checkpoint::Checkpoint, Netlist) {
+        let ck = synthetic(dims, bits, seed);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, n_add);
+        (ck, net)
+    }
+
+    fn random_codes(rng: &mut Rng, d: usize, bits: u32) -> Vec<u32> {
+        (0..d).map(|_| rng.below(1 << bits) as u32).collect()
+    }
+
+    #[test]
+    fn eval_deterministic() {
+        let (ck, net) = net_for(&[4, 3, 2], &[4, 5, 6], 17, 2);
+        let mut rng = Rng::new(5);
+        let codes = random_codes(&mut rng, 4, ck.bits[0]);
+        assert_eq!(eval(&net, &codes), eval(&net, &codes));
+    }
+
+    #[test]
+    fn cycle_sim_matches_eval_single() {
+        let (ck, net) = net_for(&[4, 3, 2], &[4, 5, 6], 23, 2);
+        let mut rng = Rng::new(6);
+        let codes = random_codes(&mut rng, 4, ck.bits[0]);
+        let want = eval(&net, &codes);
+        let mut sim = CycleSim::new(&net);
+        let mut got = None;
+        sim.step(Some((7, &codes)));
+        for _ in 0..net.latency_cycles() + 2 {
+            if let Some(c) = sim.step(None) {
+                got = Some(c);
+                break;
+            }
+        }
+        let got = got.expect("sample never completed");
+        assert_eq!(got.id, 7);
+        assert_eq!(got.sums, want);
+    }
+
+    #[test]
+    fn latency_exact() {
+        let (ck, net) = net_for(&[5, 4, 3], &[4, 4, 5], 31, 2);
+        let mut rng = Rng::new(9);
+        let codes = random_codes(&mut rng, 5, ck.bits[0]);
+        let mut sim = CycleSim::new(&net);
+        sim.step(Some((0, &codes)));
+        let mut cycles = 1;
+        loop {
+            match sim.step(None) {
+                Some(_) => break,
+                None => cycles += 1,
+            }
+            assert!(cycles < 1000, "never completed");
+        }
+        assert_eq!(cycles + 1, net.latency_cycles() + 1, "latency mismatch");
+    }
+
+    #[test]
+    fn ii_one_streaming_matches_eval() {
+        let (ck, net) = net_for(&[6, 5, 4, 2], &[3, 4, 4, 6], 41, 2);
+        let mut rng = Rng::new(10);
+        let inputs: Vec<Vec<u32>> = (0..50)
+            .map(|_| random_codes(&mut rng, 6, ck.bits[0]))
+            .collect();
+        let mut sim = CycleSim::new(&net);
+        let completions = sim.run_stream(&inputs);
+        assert_eq!(completions.len(), inputs.len());
+        for c in &completions {
+            assert_eq!(c.sums, eval(&net, &inputs[c.id as usize]), "sample {}", c.id);
+        }
+        // in-order completion (rigid pipeline)
+        for (i, c) in completions.iter().enumerate() {
+            assert_eq!(c.id, i as u64);
+        }
+        // II = 1: total cycles = n + latency
+        assert_eq!(
+            sim.cycle() as usize,
+            inputs.len() + net.latency_cycles(),
+        );
+    }
+
+    #[test]
+    fn prop_cycle_sim_equals_eval() {
+        prop::check("cyclesim-equals-eval", 25, |g| {
+            let n_layers = g.usize_in(1, 3);
+            let mut dims = vec![g.usize_in(1, 6)];
+            let mut bits = vec![g.usize_in(1, 5) as u32];
+            for _ in 0..n_layers {
+                dims.push(g.usize_in(1, 6));
+                bits.push(g.usize_in(2, 6) as u32);
+            }
+            let n_add = g.usize_in(2, 4);
+            let seed = g.rng().next_u64();
+            let (ck, net) = net_for(&dims, &bits, seed, n_add);
+            let inputs: Vec<Vec<u32>> = (0..10)
+                .map(|_| {
+                    (0..dims[0])
+                        .map(|_| g.rng().below(1 << ck.bits[0]) as u32)
+                        .collect()
+                })
+                .collect();
+            let mut sim = CycleSim::new(&net);
+            let completions = sim.run_stream(&inputs);
+            if completions.len() != inputs.len() {
+                return Err(format!("{} of {} completed", completions.len(), inputs.len()));
+            }
+            for c in &completions {
+                let want = eval(&net, &inputs[c.id as usize]);
+                if c.sums != want {
+                    return Err(format!("sample {}: {:?} != {:?}", c.id, c.sums, want));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dead_neuron_outputs_zero() {
+        // craft a checkpoint where one output has no active edges
+        let mut ck = synthetic(&[3, 2], &[4, 6], 55);
+        let l = &mut ck.layers[0];
+        for p in 0..l.d_in {
+            l.mask[0 * l.d_in + p] = false;
+            l.table[0 * l.d_in + p] = None;
+        }
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, 2);
+        let sums = eval(&net, &[0, 1, 2]);
+        assert_eq!(sums[0], 0);
+    }
+}

@@ -1,0 +1,357 @@
+//! Synthesis + place-and-route estimator — the Vivado 2024.1 substitute
+//! (DESIGN.md §3).
+//!
+//! The paper's hardware metrics (P-LUT count, FF count, Fmax, latency,
+//! Area x Delay, power) are *structural* functions of the L-LUT netlist.
+//! This module implements the same arithmetic Vivado applies to ROM-style
+//! logic on UltraScale+/7-series fabrics:
+//!
+//! * **Technology mapping** — an A-address-bit, W-output-bit logical LUT
+//!   maps to fracturable 6-input physical LUTs: `ceil(W/2)` for A <= 5
+//!   (LUT6_2, two 5-input functions sharing inputs), `W` for A = 6, and
+//!   `W * 2^(A-6)` for 6 < A <= 9 (free F7/F8/F9 muxes), beyond that extra
+//!   mux LUTs.
+//! * **Adders** — one LUT per result bit per 2-operand add (carry chain);
+//!   an `n_add`-ary stage over m operands costs `(m-1) * width` LUTs.
+//! * **FFs** — every pipeline register bit (codes, adder stages, requant).
+//! * **Timing** — per-stage delay model (logic + net + clocking overhead),
+//!   Fmax = min(1 / critical_stage, device clock ceiling).
+//! * **Power** — dynamic power proportional to toggling LUT/FF count and
+//!   clock, calibrated against the paper's Table 5 (xc7a100t).
+//!
+//! Calibration quality is reported in EXPERIMENTS.md (paper-vs-model); the
+//! comparisons the paper draws (who wins, by what factor) depend on netlist
+//! structure, which is exact.
+
+use crate::fixed::signed_width_range;
+use crate::netlist::Netlist;
+
+/// FPGA device description.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    pub luts: u64,
+    pub ffs: u64,
+    pub brams: u64,
+    pub dsps: u64,
+    /// Fabric speed scale (1.0 = UltraScale+ -2; 7-series is slower).
+    pub delay_scale: f64,
+    /// Global clock ceiling in GHz.
+    pub fmax_ceiling_ghz: f64,
+    /// Dynamic power coefficients, W per (resource * GHz).
+    pub p_lut_w_per_ghz: f64,
+    pub p_ff_w_per_ghz: f64,
+}
+
+/// xcvu9p-flgb2104-2-i — the LUT-NN benchmarking part (paper Table 3).
+pub const XCVU9P: Device = Device {
+    name: "xcvu9p-flgb2104-2-i",
+    luts: 1_182_240,
+    ffs: 2_364_480,
+    brams: 2_160,
+    dsps: 6_840,
+    delay_scale: 1.0,
+    fmax_ceiling_ghz: 1.85,
+    p_lut_w_per_ghz: 0.22e-3,
+    p_ff_w_per_ghz: 0.08e-3,
+};
+
+/// xczu7ev-ffvc1156-2-e — prior-KAN-work comparison part (paper Table 4/7).
+pub const XCZU7EV: Device = Device {
+    name: "xczu7ev-ffvc1156-2-e",
+    luts: 230_400,
+    ffs: 460_800,
+    brams: 312,
+    dsps: 1_728,
+    delay_scale: 1.0,
+    fmax_ceiling_ghz: 1.80,
+    p_lut_w_per_ghz: 0.22e-3,
+    p_ff_w_per_ghz: 0.08e-3,
+};
+
+/// xc7a100t-1csg324 — MLPerf-Tiny part (paper Table 5; Artix-7, slower).
+pub const XC7A100T: Device = Device {
+    name: "xc7a100t-1csg324",
+    luts: 63_400,
+    ffs: 126_800,
+    brams: 135,
+    dsps: 240,
+    delay_scale: 2.4,
+    fmax_ceiling_ghz: 0.65,
+    p_lut_w_per_ghz: 0.30e-3,
+    p_ff_w_per_ghz: 0.10e-3,
+};
+
+pub fn device_by_name(name: &str) -> Option<Device> {
+    match name {
+        "xcvu9p" | "xcvu9p-flgb2104-2-i" => Some(XCVU9P),
+        "xczu7ev" | "xczu7ev-ffvc1156-2-e" => Some(XCZU7EV),
+        "xc7a100t" | "xc7a100t-1csg324" => Some(XC7A100T),
+        _ => None,
+    }
+}
+
+/// Physical LUT cost of one logical LUT: A address bits -> W output bits.
+pub fn plut_cost(addr_bits: u32, out_bits: u32) -> u64 {
+    let w = out_bits as u64;
+    match addr_bits {
+        0 => 0, // constant: folded into downstream logic
+        1..=5 => w.div_ceil(2),
+        6 => w,
+        7..=9 => w << (addr_bits - 6),
+        // beyond F9: mux tree in fabric LUTs (3 leaves per extra LUT3 level)
+        a => {
+            let base = w << 3; // 2^(9-6) per bit at the F9 boundary
+            let extra_factor = 1u64 << (a - 9);
+            base * extra_factor + w * (extra_factor - 1)
+        }
+    }
+}
+
+/// Full resource/timing/power report (one paper-table row).
+#[derive(Clone, Debug)]
+pub struct SynthReport {
+    pub device: &'static str,
+    pub luts: u64,
+    pub ffs: u64,
+    pub brams: u64,
+    pub dsps: u64,
+    pub fmax_mhz: f64,
+    pub latency_cycles: usize,
+    pub latency_ns: f64,
+    pub area_delay: f64,
+    /// Dynamic power at Fmax, watts.
+    pub dyn_power_w: f64,
+    /// Energy per inference at II=1, microjoules.
+    pub energy_per_inf_uj: f64,
+    /// Throughput at II=1, inferences/second.
+    pub throughput_inf_s: f64,
+    pub fits: bool,
+}
+
+/// Per-stage delay model (nanoseconds, UltraScale+ -2 baseline).
+mod delay {
+    /// LUT-read stage: logic + local route; extra mux levels past 6 inputs.
+    pub fn lut_stage(addr_bits: u32) -> f64 {
+        let mux_levels = addr_bits.saturating_sub(6) as f64;
+        0.29 + 0.10 * mux_levels
+    }
+
+    /// Carry-chain adder delay for one stage at the given result width,
+    /// combining up to n_add operands (n_add-1 chained adds worst case
+    /// within a stage is avoided by the tree, so one add + mux margin).
+    pub fn adder_stage(width: u32, n_add: usize) -> f64 {
+        0.24 + 0.011 * width as f64 + 0.05 * (n_add as f64 - 2.0)
+    }
+
+    /// Requantize/saturate: compare + shift + round before the register.
+    pub fn requant_stage(sum_width: u32) -> f64 {
+        0.22 + 0.009 * sum_width as f64
+    }
+
+    /// Fixed clocking overhead (clk->q, setup, skew).
+    pub const CLOCK_OVERHEAD: f64 = 0.12;
+}
+
+/// Estimate resources + timing for a netlist on a device.
+pub fn synthesize(net: &Netlist, dev: &Device) -> SynthReport {
+    let mut luts = 0u64;
+    let mut ffs = 0u64;
+    let mut critical = 0.0f64;
+
+    // input register: one FF per input code bit
+    ffs += net.layers[0]
+        .neurons
+        .first()
+        .map(|_| (net.layers[0].d_in as u64) * net.layers[0].in_bits as u64)
+        .unwrap_or(0);
+
+    for layer in &net.layers {
+        let mut layer_critical = delay::lut_stage(layer.in_bits);
+        for neuron in &layer.neurons {
+            // LUT-read stage: each edge L-LUT becomes P-LUTs + its output reg
+            let mut operand_widths: Vec<u32> = Vec::with_capacity(neuron.luts.len());
+            for lut in &neuron.luts {
+                luts += plut_cost(layer.in_bits, lut.out_width);
+                ffs += lut.out_width as u64;
+                operand_widths.push(lut.out_width);
+            }
+            // adder tree stages: widths grow toward the final sum width
+            let mut widths = operand_widths;
+            while widths.len() > 1 {
+                let mut next = Vec::with_capacity(widths.len().div_ceil(net.n_add));
+                for chunk in widths.chunks(net.n_add) {
+                    let w = (chunk.iter().copied().max().unwrap_or(1)
+                        + (chunk.len() as u32).next_power_of_two().trailing_zeros())
+                    .min(neuron.sum_width);
+                    // (k-1) adds of width w cost (k-1)*w LUTs; register w FFs
+                    luts += (chunk.len() as u64 - 1) * w as u64;
+                    ffs += w as u64;
+                    next.push(w);
+                    layer_critical = layer_critical.max(delay::adder_stage(w, net.n_add));
+                }
+                widths = next;
+            }
+            // requant / output capture
+            match &layer.requant {
+                Some(_) => {
+                    // clip+shift+round logic ~ sum_width LUTs, out_bits FFs
+                    luts += neuron.sum_width as u64;
+                    ffs += layer.out_bits as u64;
+                    layer_critical = layer_critical.max(delay::requant_stage(neuron.sum_width));
+                }
+                None => {
+                    ffs += neuron.sum_width as u64;
+                }
+            }
+        }
+        critical = critical.max(layer_critical);
+    }
+
+    let period_ns = (critical + delay::CLOCK_OVERHEAD) * dev.delay_scale;
+    let fmax_ghz = (1.0 / period_ns).min(dev.fmax_ceiling_ghz);
+    let fmax_mhz = fmax_ghz * 1000.0;
+    let cycles = net.latency_cycles();
+    let latency_ns = cycles as f64 / fmax_ghz;
+    let dyn_power_w = fmax_ghz * (luts as f64 * dev.p_lut_w_per_ghz + ffs as f64 * dev.p_ff_w_per_ghz);
+    let throughput = fmax_ghz * 1e9; // II = 1
+    SynthReport {
+        device: dev.name,
+        luts,
+        ffs,
+        brams: 0, // LUT-native design: no BRAM
+        dsps: 0,  // and no DSP (paper contribution #1)
+        fmax_mhz,
+        latency_cycles: cycles,
+        latency_ns,
+        area_delay: luts as f64 * latency_ns,
+        dyn_power_w,
+        energy_per_inf_uj: dyn_power_w / throughput * 1e6,
+        throughput_inf_s: throughput,
+        fits: luts <= dev.luts && ffs <= dev.ffs,
+    }
+}
+
+/// Width helper exposed for baseline models.
+pub fn width_for_range(lo: i64, hi: i64) -> u32 {
+    signed_width_range(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::synthetic;
+    use crate::lut;
+    use crate::netlist::Netlist;
+    use crate::util::prop;
+
+    #[test]
+    fn plut_costs() {
+        assert_eq!(plut_cost(4, 16), 8); // fracturable
+        assert_eq!(plut_cost(5, 15), 8);
+        assert_eq!(plut_cost(6, 16), 16);
+        assert_eq!(plut_cost(7, 16), 32);
+        assert_eq!(plut_cost(8, 16), 64);
+        assert_eq!(plut_cost(9, 1), 8);
+        assert_eq!(plut_cost(0, 16), 0);
+        assert!(plut_cost(10, 1) > plut_cost(9, 1) * 2 - 1);
+    }
+
+    fn report_for(dims: &[usize], bits: &[u32], seed: u64) -> SynthReport {
+        let ck = synthetic(dims, bits, seed);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, 2);
+        synthesize(&net, &XCVU9P)
+    }
+
+    #[test]
+    fn no_bram_no_dsp() {
+        let r = report_for(&[4, 3, 2], &[4, 5, 6], 2);
+        assert_eq!(r.brams, 0);
+        assert_eq!(r.dsps, 0);
+        assert!(r.fits);
+    }
+
+    #[test]
+    fn bigger_nets_cost_more() {
+        let small = report_for(&[4, 3, 2], &[4, 4, 6], 3);
+        let big = report_for(&[16, 12, 5], &[4, 4, 6], 3);
+        assert!(big.luts > small.luts);
+        assert!(big.ffs > small.ffs);
+    }
+
+    #[test]
+    fn higher_bitwidth_costs_exponentially_more_luts() {
+        // Fig. 6d: LUT usage vs activation bitwidth
+        let b4 = report_for(&[8, 4, 3], &[4, 4, 6], 5);
+        let b6 = report_for(&[8, 4, 3], &[6, 6, 6], 5);
+        let b8 = report_for(&[8, 4, 3], &[8, 8, 6], 5);
+        assert!(b6.luts > b4.luts);
+        assert!(b8.luts as f64 > b6.luts as f64 * 2.0, "{} vs {}", b8.luts, b6.luts);
+    }
+
+    #[test]
+    fn fmax_bounded_by_ceiling() {
+        let r = report_for(&[2, 1], &[2, 4], 8);
+        assert!(r.fmax_mhz <= XCVU9P.fmax_ceiling_ghz * 1000.0 + 1e-9);
+        assert!(r.fmax_mhz > 400.0, "tiny design should clock fast, got {}", r.fmax_mhz);
+    }
+
+    #[test]
+    fn latency_consistent() {
+        let ck = synthetic(&[6, 4, 2], &[4, 5, 6], 13);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, 2);
+        let r = synthesize(&net, &XCVU9P);
+        assert_eq!(r.latency_cycles, net.latency_cycles());
+        let expect_ns = r.latency_cycles as f64 / (r.fmax_mhz / 1000.0);
+        assert!((r.latency_ns - expect_ns).abs() < 1e-9);
+        assert!((r.area_delay - r.luts as f64 * r.latency_ns).abs() < 1e-6);
+    }
+
+    #[test]
+    fn artix_slower_than_ultrascale() {
+        let ck = synthetic(&[8, 4, 2], &[6, 6, 6], 17);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, 2);
+        let us = synthesize(&net, &XCVU9P);
+        let a7 = synthesize(&net, &XC7A100T);
+        assert!(a7.fmax_mhz < us.fmax_mhz);
+        assert_eq!(a7.luts, us.luts); // same mapping, different timing
+    }
+
+    #[test]
+    fn prop_resources_monotone_in_edges() {
+        prop::check("synth-monotone", 20, |g| {
+            let d = g.usize_in(2, 8);
+            let seed = g.rng().next_u64();
+            let ck_full = synthetic(&[d, d], &[4, 6], seed);
+            // pruned variant: drop half the edges
+            let mut ck_pruned = ck_full.clone();
+            {
+                let l = &mut ck_pruned.layers[0];
+                let mut dropped = 0;
+                for i in 0..l.mask.len() {
+                    if l.mask[i] && dropped < l.mask.len() / 2 {
+                        l.mask[i] = false;
+                        l.table[i] = None;
+                        dropped += 1;
+                    }
+                }
+            }
+            let rf = synthesize(&Netlist::build(&ck_full, &lut::from_checkpoint(&ck_full), 2), &XCVU9P);
+            let rp = synthesize(&Netlist::build(&ck_pruned, &lut::from_checkpoint(&ck_pruned), 2), &XCVU9P);
+            if rp.luts > rf.luts {
+                return Err(format!("pruning increased LUTs: {} > {}", rp.luts, rf.luts));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn device_lookup() {
+        assert!(device_by_name("xcvu9p").is_some());
+        assert!(device_by_name("xczu7ev-ffvc1156-2-e").is_some());
+        assert!(device_by_name("nope").is_none());
+    }
+}

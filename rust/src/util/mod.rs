@@ -1,0 +1,14 @@
+//! Small self-contained utilities: PRNG, statistics, timing, and a
+//! property-testing micro-framework (the offline registry has no `rand`,
+//! `proptest` or `criterion`, so these substrates are built here and tested
+//! like everything else).
+
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use prop::Gen;
+pub use rng::Rng;
+pub use stats::Summary;
+pub use timer::Timer;

@@ -1,0 +1,116 @@
+//! Property-testing micro-framework (proptest is unavailable offline).
+//!
+//! A [`Gen`] wraps the deterministic [`Rng`](super::Rng) with value
+//! generators; [`check`] runs a property over many generated cases and, on
+//! failure, reports the seed + case index so the failure replays exactly.
+//! No shrinking — cases are kept small instead.
+
+use super::rng::Rng;
+
+/// Value generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed) }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_i64(lo as i64, hi as i64) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range_i64(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn vec_i64(&mut self, len: usize, lo: i64, hi: i64) -> Vec<i64> {
+        (0..len).map(|_| self.i64_in(lo, hi)).collect()
+    }
+}
+
+/// Run `prop` over `cases` generated cases. Panics with seed + case index on
+/// the first failing case (properties signal failure by returning an
+/// `Err(String)`).
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check_seeded(name, 0xC0FFEE, cases, &mut prop);
+}
+
+/// Like [`check`] with an explicit base seed (for replaying failures).
+pub fn check_seeded<F>(name: &str, seed: u64, cases: usize, prop: &mut F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut g = Gen::new(seed.wrapping_add(case as u64));
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (replay: seed {})\n  {msg}",
+                seed.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("tautology", 50, |g| {
+            n += 1;
+            let v = g.i64_in(-5, 5);
+            if (-5..=5).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_context() {
+        check("always-fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 200, |g| {
+            let lo = g.i64_in(-100, 0);
+            let hi = g.i64_in(1, 100);
+            let v = g.i64_in(lo, hi);
+            if v < lo || v > hi {
+                return Err(format!("{v} outside [{lo}, {hi}]"));
+            }
+            let f = g.f64_in(lo as f64, hi as f64);
+            if f < lo as f64 || f >= hi as f64 + 1.0 {
+                return Err(format!("float {f} outside range"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,161 @@
+//! Streaming statistics used by the bench harness and the coordinator's
+//! latency tracking.
+
+/// Online summary (Welford) + retained samples for exact quantiles.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    mean: f64,
+    m2: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+        let n = self.samples.len() as f64;
+        let d = x - self.mean;
+        self.mean += d / n;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.samples.len() < 2 {
+            0.0
+        } else {
+            self.m2 / (self.samples.len() - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Exact quantile by sorting retained samples; q in [0, 1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        s[idx]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    /// Median absolute deviation — robust spread for the bench harness.
+    pub fn mad(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let med = self.median();
+        let mut devs: Vec<f64> = self.samples.iter().map(|x| (x - med).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        devs[(devs.len() - 1) / 2]
+    }
+}
+
+/// Area under the ROC curve from (score, label) pairs — used by the
+/// ToyADMOS anomaly-detection harness (paper Table 5's AUC column).
+pub fn auc(scores: &[f64], labels: &[bool]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // rank-sum (Mann-Whitney U), with tie handling via average ranks
+    let n = scores.len();
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = avg_rank;
+        }
+        i = j + 1;
+    }
+    let n_pos = labels.iter().filter(|&&l| l).count();
+    let n_neg = n - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return f64::NAN;
+    }
+    let rank_sum_pos: f64 = labels
+        .iter()
+        .zip(&ranks)
+        .filter(|(l, _)| **l)
+        .map(|(_, r)| *r)
+        .sum();
+    (rank_sum_pos - n_pos as f64 * (n_pos as f64 + 1.0) / 2.0) / (n_pos as f64 * n_neg as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_mean_var() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.var() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let mut s = Summary::new();
+        for i in 0..101 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.median(), 50.0);
+        assert_eq!(s.quantile(0.0), 0.0);
+        assert_eq!(s.quantile(1.0), 100.0);
+    }
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let scores = [0.1, 0.2, 0.3, 0.8, 0.9, 1.0];
+        let labels = [false, false, false, true, true, true];
+        assert!((auc(&scores, &labels) - 1.0).abs() < 1e-12);
+        let labels_rev = [true, true, true, false, false, false];
+        assert!(auc(&scores, &labels_rev).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_with_ties() {
+        let scores = [0.5, 0.5, 0.5, 0.5];
+        let labels = [true, false, true, false];
+        assert!((auc(&scores, &labels) - 0.5).abs() < 1e-12);
+    }
+}

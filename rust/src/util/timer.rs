@@ -1,0 +1,58 @@
+//! Wall-clock timing helper for the bench harness and coordinator metrics.
+
+use std::time::Instant;
+
+/// Simple scoped timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ns(&self) -> f64 {
+        self.start.elapsed().as_nanos() as f64
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time a closure over `n` iterations, returning seconds per iteration.
+pub fn time_per_iter<F: FnMut()>(n: usize, mut f: F) -> f64 {
+    let t = Timer::start();
+    for _ in 0..n {
+        f();
+    }
+    t.elapsed_s() / n.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed_ns();
+        let b = t.elapsed_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn per_iter_positive() {
+        let v = time_per_iter(10, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(v >= 0.0);
+    }
+}

@@ -1,0 +1,219 @@
+//! Integration tests across the full toolflow: checkpoint -> L-LUTs ->
+//! netlist -> simulators -> synthesis -> reports, on real artifacts when
+//! `make artifacts` has run and on synthetic checkpoints otherwise.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use kanele::checkpoint::{testutil, Checkpoint, TestSet};
+use kanele::coordinator::{Service, ServiceCfg};
+use kanele::netlist::Netlist;
+use kanele::{config, data, lut, report, sim, synth, vhdl};
+
+fn artifact_ckpt(name: &str) -> Option<Checkpoint> {
+    let p = config::ckpt_path(name);
+    p.exists().then(|| Checkpoint::load(&p).expect("valid checkpoint"))
+}
+
+#[test]
+fn moons_checkpoint_loads_and_verifies() {
+    let Some(ck) = artifact_ckpt("moons") else {
+        eprintln!("skipping (run make artifacts)");
+        return;
+    };
+    assert_eq!(ck.dims, vec![2, 2, 1]);
+    assert_eq!(ck.bits, vec![6, 5, 8]);
+    // regeneration within 1 LSB of exported tables (libm exp tolerance)
+    let (total, mismatched, maxdiff) = lut::compare_with_exported(&ck);
+    assert!(total > 0);
+    assert!(maxdiff <= 1, "max diff {maxdiff}");
+    assert!(
+        (mismatched as f64) < 0.01 * total as f64 + 2.0,
+        "{mismatched}/{total} mismatched"
+    );
+}
+
+#[test]
+fn moons_netlist_bit_exact_vs_python_oracle() {
+    let Some(ck) = artifact_ckpt("moons") else {
+        eprintln!("skipping (run make artifacts)");
+        return;
+    };
+    let tables = lut::from_checkpoint(&ck);
+    let net = Netlist::build(&ck, &tables, 2);
+    let tv = &ck.test_vectors;
+    assert!(!tv.input_codes.is_empty());
+    for (codes, want) in tv.input_codes.iter().zip(&tv.output_sums) {
+        assert_eq!(&sim::eval(&net, codes), want);
+    }
+    // cycle-accurate pipeline agrees too
+    let mut cs = sim::CycleSim::new(&net);
+    let comps = cs.run_stream(&tv.input_codes);
+    assert_eq!(comps.len(), tv.input_codes.len());
+    for c in comps {
+        assert_eq!(c.sums, tv.output_sums[c.id as usize]);
+    }
+}
+
+#[test]
+fn any_available_dataset_full_flow() {
+    // run the complete flow for every checkpoint artifact that exists
+    for exp in config::EXPERIMENTS {
+        let Some(ck) = artifact_ckpt(exp.name) else { continue };
+        let tables = lut::from_checkpoint(&ck);
+        for n_add in [2usize, 4] {
+            let net = Netlist::build(&ck, &tables, n_add);
+            let dev = synth::device_by_name(exp.device).unwrap();
+            let r = synth::synthesize(&net, &dev);
+            assert_eq!(r.brams, 0, "{}: LUT-native design must use no BRAM", exp.name);
+            assert_eq!(r.dsps, 0, "{}: and no DSP", exp.name);
+            assert!(r.fmax_mhz > 100.0);
+            assert!(r.latency_cycles == net.latency_cycles());
+            // paper's headline: everything fits its device
+            assert!(r.fits, "{} does not fit {}", exp.name, exp.device);
+        }
+        // bit-exactness against the embedded oracle
+        let net = Netlist::build(&ck, &tables, 2);
+        for (codes, want) in ck
+            .test_vectors
+            .input_codes
+            .iter()
+            .zip(&ck.test_vectors.output_sums)
+            .take(64)
+        {
+            assert_eq!(&sim::eval(&net, codes), want, "{}", exp.name);
+        }
+    }
+}
+
+#[test]
+fn testset_metrics_match_training_claims() {
+    // the netlist metric must be in the ballpark the Python trainer logged
+    for (name, floor) in [("moons", 90.0), ("wine", 90.0), ("jsc_openml", 80.0)] {
+        let Some(ck) = artifact_ckpt(name) else { continue };
+        if !config::testset_path(name).exists() {
+            continue;
+        }
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, 2);
+        let m = report::eval_metric(&ck, &net).unwrap();
+        assert!(m > floor, "{name}: netlist metric {m} below {floor}");
+    }
+}
+
+#[test]
+fn serving_over_real_checkpoint() {
+    let Some(ck) = artifact_ckpt("moons") else {
+        eprintln!("skipping (run make artifacts)");
+        return;
+    };
+    let tables = lut::from_checkpoint(&ck);
+    let net = Arc::new(Netlist::build(&ck, &tables, 2));
+    let svc = Service::start(
+        Arc::clone(&net),
+        ServiceCfg {
+            workers: 2,
+            max_batch: 32,
+            max_wait: Duration::from_micros(50),
+            queue_depth: 4096,
+        },
+    );
+    let stream = data::random_code_stream(&ck, 2000, 3);
+    let mut pending = Vec::new();
+    for codes in &stream {
+        pending.push((codes.clone(), svc.submit(codes.clone()).unwrap()));
+    }
+    for (codes, rx) in pending {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.sums, sim::eval(&net, &codes));
+    }
+    assert_eq!(svc.stats().completed, 2000);
+    svc.shutdown();
+}
+
+#[test]
+fn vhdl_bundle_for_real_model() {
+    let Some(ck) = artifact_ckpt("moons") else {
+        eprintln!("skipping (run make artifacts)");
+        return;
+    };
+    let tables = lut::from_checkpoint(&ck);
+    let net = Netlist::build(&ck, &tables, 2);
+    let files = vhdl::emit_bundle(
+        &net,
+        Some((&ck.test_vectors.input_codes, &ck.test_vectors.output_sums)),
+    );
+    assert!(files.len() >= 2 + 2 * ck.n_layers());
+    // every surviving edge's table is in some package
+    let all_pkgs: String = files
+        .iter()
+        .filter(|f| f.name.contains("_pkg"))
+        .map(|f| f.contents.as_str())
+        .collect();
+    assert_eq!(
+        all_pkgs.matches("_ROM : ").count(),
+        ck.active_edges(),
+        "one ROM constant per active edge"
+    );
+}
+
+#[test]
+fn synthetic_flow_with_extreme_shapes() {
+    // single-input, single-output, 1-bit codes
+    let ck = testutil::synthetic(&[1, 1], &[1, 8], 99);
+    let tables = lut::from_checkpoint(&ck);
+    let net = Netlist::build(&ck, &tables, 2);
+    let out0 = sim::eval(&net, &[0]);
+    let out1 = sim::eval(&net, &[1]);
+    assert_eq!(out0.len(), 1);
+    // deep narrow network
+    let ck2 = testutil::synthetic(&[2, 2, 2, 2, 2, 2], &[3, 3, 3, 3, 3, 4], 7);
+    let tables2 = lut::from_checkpoint(&ck2);
+    let net2 = Netlist::build(&ck2, &tables2, 2);
+    let mut cs = sim::CycleSim::new(&net2);
+    let inputs: Vec<Vec<u32>> = (0..8).map(|i| vec![i % 8, (i * 3) % 8]).collect();
+    let comps = cs.run_stream(&inputs);
+    assert_eq!(comps.len(), 8);
+    for c in &comps {
+        assert_eq!(c.sums, sim::eval(&net2, &inputs[c.id as usize]));
+    }
+    let _ = (out0, out1);
+}
+
+#[test]
+fn reports_render_end_to_end() {
+    // must never panic regardless of which artifacts exist
+    let all = report::all(2).unwrap();
+    assert!(all.contains("Table 2"));
+    assert!(all.contains("Table 3"));
+    assert!(all.contains("Table 4"));
+    assert!(all.contains("Table 5"));
+}
+
+#[test]
+fn rl_actor_checkpoint_flow() {
+    let Some(ck) = artifact_ckpt("rl_kan_actor") else {
+        eprintln!("skipping (run python -m compile.experiments fig7/rl_export)");
+        return;
+    };
+    assert_eq!(ck.dims, vec![17, 6]);
+    let tables = lut::from_checkpoint(&ck);
+    let net = Netlist::build(&ck, &tables, 2);
+    let policy = kanele::rl::NetlistPolicy { ck: &ck, net: &net };
+    let reward = kanele::rl::rollout(&policy, 0);
+    assert!(reward.is_finite());
+    // hardware must comfortably fit the paper's device
+    let r = synth::synthesize(&net, &synth::device_by_name("xczu7ev").unwrap());
+    assert!(r.fits);
+    assert_eq!(r.dsps + r.brams, 0);
+}
+
+#[test]
+fn testset_loader_rejects_garbage() {
+    let dir = std::env::temp_dir().join("kanele_ts_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("bad.json");
+    std::fs::write(&p, r#"{"format": "wrong"}"#).unwrap();
+    assert!(TestSet::load(&p).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
