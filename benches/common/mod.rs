@@ -2,6 +2,9 @@
 //! timed iterations, median / MAD / throughput reporting, environment knobs
 //! via KANELE_BENCH_{WARMUP,ITERS}.
 
+// shared by several bench binaries; each uses a subset of the helpers
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 pub struct BenchResult {
@@ -61,4 +64,16 @@ pub fn try_checkpoint(name: &str) -> Option<kanele::checkpoint::Checkpoint> {
         return None;
     }
     kanele::checkpoint::Checkpoint::load(&p).ok()
+}
+
+/// Real checkpoint when the artifact exists, otherwise a synthetic twin
+/// with the experiment's dims/bits — lets structural benches (e.g. the
+/// interpreted-vs-compiled comparison) run in artifact-less environments.
+pub fn checkpoint_or_synthetic(name: &str) -> kanele::checkpoint::Checkpoint {
+    if let Some(ck) = try_checkpoint(name) {
+        return ck;
+    }
+    let exp = kanele::config::experiment(name).expect("unknown experiment");
+    println!("bench {name}: using a synthetic twin (dims {:?}, bits {:?})", exp.dims, exp.bits);
+    kanele::checkpoint::testutil::synthetic(exp.dims, exp.bits, 0xB5EED)
 }

@@ -1,70 +1,107 @@
-//! Coordinator serving bench: throughput/latency across worker counts and
-//! batching policies (the L3 hot path + the batching-policy ablation that
+//! Coordinator serving bench: the interpreted-vs-compiled backend
+//! comparison plus throughput/latency across worker counts and batching
+//! policies (the L3 hot path + the batching-policy ablation that
 //! DESIGN.md calls out).
 //!
 //!     cargo bench --bench serving
+//!
+//! Runs on the real jet-tagging checkpoint when `make artifacts-all` has
+//! produced it, and on a synthetic twin with the same dims/bits otherwise
+//! (backend *speedups* are structural, so the twin is representative even
+//! though absolute accuracy is meaningless there).
 
 mod common;
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use kanele::coordinator::{Service, ServiceCfg};
+use kanele::coordinator::{Backend, Service, ServiceCfg};
 use kanele::netlist::Netlist;
-use kanele::{data, lut};
+use kanele::{data, engine, lut, sim};
 
 fn main() {
-    println!("=== serving bench: coordinator throughput/latency ===");
-    let Some(ck) = common::try_checkpoint("jsc_openml")
-        .or_else(|| common::try_checkpoint("moons"))
-    else {
-        return;
-    };
+    println!("=== serving bench: interpreted vs compiled + coordinator grid ===");
+    let ck = common::checkpoint_or_synthetic("jsc_openml");
     let tables = lut::from_checkpoint(&ck);
     let net = Arc::new(Netlist::build(&ck, &tables, 2));
     let stream = data::random_code_stream(&ck, 20_000, 11);
 
-    for workers in [1usize, 2, 4] {
-        for (batch, wait_us) in [(1usize, 0u64), (16, 50), (64, 100), (256, 200)] {
-            let svc = Service::start(
-                Arc::clone(&net),
-                ServiceCfg {
-                    workers,
-                    max_batch: batch,
-                    max_wait: Duration::from_micros(wait_us),
-                    queue_depth: 1 << 14,
-                },
-            );
-            let t = std::time::Instant::now();
-            let mut pending = Vec::with_capacity(4096);
-            for codes in &stream {
-                loop {
-                    match svc.submit(codes.clone()) {
-                        Ok(rx) => {
-                            pending.push(rx);
-                            break;
-                        }
-                        Err(_) => {
-                            for rx in pending.drain(..) {
-                                let _ = rx.recv();
+    // -- 1. direct backend comparison (no threads, no batcher) -------------
+    // chunked execution of the same 20k-request stream through both
+    // executors; the acceptance bar is >= 2x at batch 64
+    let prog = engine::compile(&net);
+    println!(
+        "netlist {}: {} L-LUTs -> {} fused ops, {} packed table words",
+        ck.name,
+        net.n_luts(),
+        prog.n_ops(),
+        prog.table_words()
+    );
+    for batch in [1usize, 16, 64, 256] {
+        let r_interp = common::bench(&format!("interpreted eval_batch (batch {batch})"), || {
+            for chunk in stream.chunks(batch) {
+                std::hint::black_box(sim::eval_batch(&net, chunk));
+            }
+        });
+        let mut exec = engine::Executor::with_capacity(&prog, batch);
+        let r_comp = common::bench(&format!("compiled run_batch    (batch {batch})"), || {
+            for chunk in stream.chunks(batch) {
+                std::hint::black_box(exec.run_batch(&prog, chunk));
+            }
+        });
+        common::report_throughput(&r_comp, stream.len());
+        println!(
+            "      batch {batch:>3}: compiled is {:.2}x interpreted",
+            r_interp.median_ns / r_comp.median_ns
+        );
+    }
+
+    // -- 2. end-to-end coordinator grid -------------------------------------
+    for backend in [Backend::Interpreted, Backend::Compiled] {
+        for workers in [1usize, 2, 4] {
+            for (batch, wait_us) in [(1usize, 0u64), (16, 50), (64, 100), (256, 200)] {
+                let svc = Service::start(
+                    Arc::clone(&net),
+                    ServiceCfg {
+                        workers,
+                        max_batch: batch,
+                        max_wait: Duration::from_micros(wait_us),
+                        queue_depth: 1 << 14,
+                        backend,
+                    },
+                );
+                let t = std::time::Instant::now();
+                let mut pending = Vec::with_capacity(4096);
+                for codes in &stream {
+                    loop {
+                        match svc.submit(codes.clone()) {
+                            Ok(rx) => {
+                                pending.push(rx);
+                                break;
+                            }
+                            Err(_) => {
+                                for rx in pending.drain(..) {
+                                    let _ = rx.recv();
+                                }
                             }
                         }
                     }
                 }
+                for rx in pending.drain(..) {
+                    let _ = rx.recv();
+                }
+                let wall = t.elapsed().as_secs_f64();
+                let st = svc.stats();
+                println!(
+                    "{:<11} workers {workers} batch {batch:>3} wait {wait_us:>3} us -> {:>9.0} req/s | p50 {:>7.1} us p99 {:>8.1} us | mean batch {:>6.1}",
+                    format!("{backend:?}"),
+                    20_000.0 / wall,
+                    st.latency_p50_us,
+                    st.latency_p99_us,
+                    st.mean_batch
+                );
+                svc.shutdown();
             }
-            for rx in pending.drain(..) {
-                let _ = rx.recv();
-            }
-            let wall = t.elapsed().as_secs_f64();
-            let st = svc.stats();
-            println!(
-                "workers {workers} batch {batch:>3} wait {wait_us:>3} us -> {:>9.0} req/s | p50 {:>7.1} us p99 {:>8.1} us | mean batch {:>6.1}",
-                20_000.0 / wall,
-                st.latency_p50_us,
-                st.latency_p99_us,
-                st.mean_batch
-            );
-            svc.shutdown();
         }
     }
 }

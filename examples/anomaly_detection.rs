@@ -42,6 +42,7 @@ fn main() -> Result<()> {
             max_batch: 64,
             max_wait: Duration::from_micros(100),
             queue_depth: 8192,
+            ..Default::default()
         },
     );
     let mut scores = Vec::with_capacity(ts.input_codes.len());

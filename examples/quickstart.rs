@@ -9,7 +9,7 @@ use anyhow::{bail, Context, Result};
 use kanele::checkpoint::Checkpoint;
 use kanele::netlist::Netlist;
 use kanele::synth;
-use kanele::{config, lut, report, sim, vhdl};
+use kanele::{config, engine, lut, report, sim, vhdl};
 
 fn main() -> Result<()> {
     let path = config::ckpt_path("moons");
@@ -36,7 +36,8 @@ fn main() -> Result<()> {
         net.latency_cycles()
     );
 
-    // 3. Bit-exact check vs the Python integer oracle.
+    // 3. Bit-exact check vs the Python integer oracle — through both the
+    //    interpreter and the compiled serving engine.
     let tv = &ck.test_vectors;
     let ok = tv
         .input_codes
@@ -47,6 +48,15 @@ fn main() -> Result<()> {
     if !ok {
         bail!("netlist does not match the training-side oracle");
     }
+    let prog = engine::compile(&net);
+    if engine::run_batch(&prog, &tv.input_codes) != tv.output_sums {
+        bail!("compiled engine does not match the training-side oracle");
+    }
+    println!(
+        "compiled engine:  {} fused ops over {} packed table words, same vectors BIT-EXACT",
+        prog.n_ops(),
+        prog.table_words()
+    );
 
     // 4. Test-set accuracy of the hardware pipeline.
     let tables_metric = report::eval_metric(&ck, &net)?;

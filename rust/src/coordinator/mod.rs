@@ -3,11 +3,17 @@
 //! The paper's deployment story is a streaming accelerator core (II = 1)
 //! fed by a host; this module is that host-side system: a request router
 //! with a **dynamic batcher** (dispatch on `max_batch` or `max_wait`,
-//! whichever first), a worker pool executing batches on the bit-exact
-//! netlist simulator, bounded queues for backpressure, and end-to-end
-//! latency/throughput accounting. Tokio is not available offline; the
-//! implementation uses std threads + channels, which for this workload
-//! (CPU-bound microsecond batches) is the right tool anyway.
+//! whichever first), a worker pool executing batches, bounded queues for
+//! backpressure, and end-to-end latency/throughput accounting. Tokio is
+//! not available offline; the implementation uses std threads + channels,
+//! which for this workload (CPU-bound microsecond batches) is the right
+//! tool anyway.
+//!
+//! Workers execute on a [`Backend`]: the default is the compiled flat
+//! program of [`crate::engine`] (batch-major, hot-swap aware via
+//! [`ProgramCell`], cross-checked against [`crate::sim`] in debug builds);
+//! the netlist-walking interpreter remains selectable for debugging and
+//! A/B benchmarking.
 
 pub mod batcher;
 
@@ -18,6 +24,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::engine::{Executor, ProgramCell};
 use crate::netlist::hotswap::NetlistCell;
 use crate::netlist::Netlist;
 use crate::sim;
@@ -45,6 +52,28 @@ struct Pending {
     reply: SyncSender<Response>,
 }
 
+/// Which executor the worker pool runs batches on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// Flat compiled program ([`crate::engine`]): batch-major table scans.
+    /// The serving default.
+    #[default]
+    Compiled,
+    /// Netlist-graph interpreter ([`crate::sim::Evaluator`]): per-sample
+    /// walk. Kept for debugging and as the A/B baseline.
+    Interpreted,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "compiled" | "engine" => Some(Backend::Compiled),
+            "interpreted" | "sim" => Some(Backend::Interpreted),
+            _ => None,
+        }
+    }
+}
+
 /// Service configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ServiceCfg {
@@ -53,6 +82,7 @@ pub struct ServiceCfg {
     pub max_wait: Duration,
     /// Bounded admission queue (backpressure).
     pub queue_depth: usize,
+    pub backend: Backend,
 }
 
 impl Default for ServiceCfg {
@@ -62,6 +92,7 @@ impl Default for ServiceCfg {
             max_batch: 64,
             max_wait: Duration::from_micros(200),
             queue_depth: 4096,
+            backend: Backend::Compiled,
         }
     }
 }
@@ -71,6 +102,10 @@ impl Default for ServiceCfg {
 pub struct ServiceStats {
     pub completed: u64,
     pub rejected: u64,
+    /// Admitted but never executed: the request's width stopped matching
+    /// the model snapshot (admission raced a `replace_model`). The client
+    /// observes a closed reply channel.
+    pub dropped: u64,
     pub batches: u64,
     pub mean_batch: f64,
     pub latency_p50_us: f64,
@@ -83,6 +118,7 @@ struct Shared {
     batch_sizes: Mutex<Summary>,
     completed: AtomicU64,
     rejected: AtomicU64,
+    dropped: AtomicU64,
     batches: AtomicU64,
 }
 
@@ -115,17 +151,27 @@ impl Service {
             batch_sizes: Mutex::new(Summary::new()),
             completed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
             batches: AtomicU64::new(0),
         });
+        // backend resources: the compiled path shares one program cache
+        // (compiled once here, recompiled lazily after hot-swaps); the
+        // interpreted path never pays for compilation
+        let exec_backend = match cfg.backend {
+            Backend::Compiled => {
+                WorkerBackend::Compiled(Arc::new(ProgramCell::new(Arc::clone(&cell))))
+            }
+            Backend::Interpreted => WorkerBackend::Interpreted(Arc::clone(&cell)),
+        };
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
             let rx = Arc::clone(&rx);
-            let cell2 = Arc::clone(&cell);
+            let backend = exec_backend.clone();
             let shared = Arc::clone(&shared);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("kanele-worker-{w}"))
-                    .spawn(move || worker_loop(rx, cell2, shared, cfg))
+                    .spawn(move || worker_loop(rx, backend, shared, cfg))
                     .expect("spawn worker"),
             );
         }
@@ -151,9 +197,24 @@ impl Service {
         self.cell.replace(net);
     }
 
+    /// Reject malformed requests at admission: a wrong-width row inside a
+    /// compiled batch would otherwise shift every later sample in the
+    /// batch-major input plane (cross-request corruption).
+    fn check_width(&self, codes: &[u32]) -> Result<()> {
+        let want = self.cell.input_width();
+        anyhow::ensure!(
+            codes.len() == want,
+            "request width {} != model input width {want}",
+            codes.len()
+        );
+        Ok(())
+    }
+
     /// Submit a request; the returned receiver yields the response.
-    /// Errors immediately when the admission queue is full (backpressure).
+    /// Errors immediately on a wrong-width request or when the admission
+    /// queue is full (backpressure).
     pub fn submit(&self, codes: Vec<u32>) -> Result<Receiver<Response>> {
+        self.check_width(&codes)?;
         let (reply_tx, reply_rx) = sync_channel(1);
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -171,8 +232,13 @@ impl Service {
     }
 
     /// Submit with blocking retry (used by the closed-loop example).
+    /// Malformed requests fail immediately; only backpressure retries.
     pub fn submit_blocking(&self, codes: Vec<u32>) -> Result<Response> {
         loop {
+            // re-validate every attempt: a width error must never be
+            // retried as if it were backpressure (a concurrent
+            // replace_model can change the expected width)
+            self.check_width(&codes)?;
             match self.submit(codes.clone()) {
                 Ok(rx) => return Ok(rx.recv()?),
                 Err(_) => std::thread::sleep(Duration::from_micros(20)),
@@ -187,6 +253,7 @@ impl Service {
         ServiceStats {
             completed,
             rejected: self.shared.rejected.load(Ordering::Relaxed),
+            dropped: self.shared.dropped.load(Ordering::Relaxed),
             batches: self.shared.batches.load(Ordering::Relaxed),
             mean_batch: bs.mean(),
             latency_p50_us: lat.quantile(0.5) * 1e6,
@@ -209,12 +276,21 @@ impl Service {
     }
 }
 
+/// Per-worker execution resources, fixed at service start.
+#[derive(Clone)]
+enum WorkerBackend {
+    Compiled(Arc<ProgramCell>),
+    Interpreted(Arc<NetlistCell>),
+}
+
 fn worker_loop(
     rx: Arc<Mutex<Receiver<Pending>>>,
-    cell: Arc<NetlistCell>,
+    backend: WorkerBackend,
     shared: Arc<Shared>,
     cfg: ServiceCfg,
 ) {
+    // per-worker scratch, reused across batches and hot-swaps
+    let mut exec = Executor::new();
     loop {
         // dynamic batch collection: block for the first item, then fill the
         // batch until max_batch or max_wait
@@ -244,11 +320,54 @@ fn worker_loop(
             bs.push(batch.len() as f64);
         }
         // batch-consistent snapshot: a concurrent hot-swap applies to the
-        // NEXT batch, never mid-batch (PR-region semantics)
-        let net = cell.load();
-        let mut ev = sim::Evaluator::new(&net);
-        for p in batch {
-            let sums = ev.eval(&p.req.codes).to_vec();
+        // NEXT batch, never mid-batch (PR-region semantics). Requests whose
+        // width no longer matches the snapshot (admission raced a
+        // whole-model replace) yield None: their reply channel is dropped
+        // instead of corrupting co-batched samples.
+        let outputs: Vec<Option<Vec<i64>>> = match &backend {
+            WorkerBackend::Compiled(programs) => {
+                let (net, prog) = programs.load();
+                let d_in = prog.d_in();
+                let rows: Vec<&[u32]> = batch
+                    .iter()
+                    .map(|p| p.req.codes.as_slice())
+                    .filter(|r| r.len() == d_in)
+                    .collect();
+                let outs = exec.run_batch(&prog, &rows);
+                // checked invariant: the compiled program IS the netlist
+                if cfg!(debug_assertions) {
+                    let mut ev = sim::Evaluator::new(&net);
+                    for (row, out) in rows.iter().zip(&outs) {
+                        debug_assert_eq!(ev.eval(row), out.as_slice(), "engine/sim divergence");
+                    }
+                }
+                let mut outs = outs.into_iter();
+                batch
+                    .iter()
+                    .map(|p| {
+                        (p.req.codes.len() == d_in)
+                            .then(|| outs.next().expect("one output per valid row"))
+                    })
+                    .collect()
+            }
+            WorkerBackend::Interpreted(cell) => {
+                let net = cell.load();
+                let d_in = net.input_width();
+                let mut ev = sim::Evaluator::new(&net);
+                batch
+                    .iter()
+                    .map(|p| {
+                        (p.req.codes.len() == d_in).then(|| ev.eval(&p.req.codes).to_vec())
+                    })
+                    .collect()
+            }
+        };
+        for (p, sums) in batch.into_iter().zip(outputs) {
+            let Some(sums) = sums else {
+                // client sees RecvError on its reply channel
+                shared.dropped.fetch_add(1, Ordering::Relaxed);
+                continue;
+            };
             let latency = p.req.submitted.elapsed();
             {
                 let mut lat = shared.latencies.lock().unwrap();
@@ -273,6 +392,25 @@ mod tests {
         let net = Arc::new(Netlist::build(&ck, &tables, 2));
         let svc = Service::start(Arc::clone(&net), cfg);
         (net, svc)
+    }
+
+    #[test]
+    fn both_backends_match_direct_eval() {
+        for backend in [Backend::Compiled, Backend::Interpreted] {
+            let (net, svc) = service(ServiceCfg { backend, ..Default::default() });
+            let mut rng = Rng::new(42);
+            let mut pending = Vec::new();
+            let mut want = Vec::new();
+            for _ in 0..100 {
+                let codes: Vec<u32> = (0..4).map(|_| rng.below(16) as u32).collect();
+                want.push(sim::eval(&net, &codes));
+                pending.push(svc.submit(codes).unwrap());
+            }
+            for (rx, w) in pending.into_iter().zip(want) {
+                assert_eq!(rx.recv().unwrap().sums, w, "{backend:?}");
+            }
+            svc.shutdown();
+        }
     }
 
     #[test]
@@ -318,6 +456,20 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(Arc::try_unwrap(svc).ok().unwrap().stats().completed, 400);
+    }
+
+    #[test]
+    fn wrong_width_request_rejected_at_admission() {
+        let (net, svc) = service(ServiceCfg::default());
+        assert!(svc.submit(vec![1, 2, 3]).is_err()); // model wants 4 codes
+        assert!(svc.submit(vec![1, 2, 3, 0, 0]).is_err());
+        assert!(svc.submit_blocking(vec![0; 9]).is_err());
+        // a well-formed neighbor is unaffected
+        let codes = vec![1u32, 2, 3, 0];
+        let resp = svc.submit_blocking(codes.clone()).unwrap();
+        assert_eq!(resp.sums, sim::eval(&net, &codes));
+        assert_eq!(svc.stats().completed, 1);
+        svc.shutdown();
     }
 
     #[test]
@@ -376,6 +528,7 @@ mod tests {
             max_batch: 32,
             max_wait: Duration::from_millis(5),
             queue_depth: 1024,
+            ..Default::default()
         });
         let rxs: Vec<_> = (0..64).map(|_| svc.submit(vec![1, 2, 3, 0]).unwrap()).collect();
         for rx in rxs {

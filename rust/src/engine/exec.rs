@@ -1,0 +1,116 @@
+//! Batch-major execution of a [`CompiledProgram`].
+//!
+//! The interpreter ([`crate::sim::Evaluator`]) advances one *sample* at a
+//! time, re-walking the whole structure per request. The executor inverts
+//! the loops: every fused op runs across all N samples of the batch before
+//! the next op is touched, so each truth table is streamed through exactly
+//! once per batch and the per-op bookkeeping (offset, mask, indices)
+//! amortizes over N samples.
+//!
+//! Scratch is double-buffered and planned at compile time: one `u32` code
+//! plane and one `i64` sum plane, each `batch x max_width`, flipped at the
+//! requant boundary between layers. No allocation happens on the serving
+//! hot path after the first batch of a given size.
+
+use crate::fixed::from_fixed;
+
+use super::program::CompiledProgram;
+
+/// Reusable batch executor: owns the double-buffered scratch planes.
+///
+/// Independent of any particular program (scratch grows to the largest
+/// `batch x max_width` seen), so one executor per worker thread serves
+/// across hot-swaps.
+#[derive(Default)]
+pub struct Executor {
+    /// Front buffer: current layer's input codes, batch-major
+    /// (`codes[s * d_in + p]` = input `p` of sample `s`).
+    codes: Vec<u32>,
+    /// Back buffer: current layer's accumulator sums, batch-major.
+    sums: Vec<i64>,
+}
+
+impl Executor {
+    pub fn new() -> Executor {
+        Executor::default()
+    }
+
+    /// Preallocate scratch for batches up to `batch` samples of `prog`.
+    pub fn with_capacity(prog: &CompiledProgram, batch: usize) -> Executor {
+        Executor {
+            codes: Vec::with_capacity(batch * prog.max_width()),
+            sums: Vec::with_capacity(batch * prog.max_width()),
+        }
+    }
+
+    /// Run every sample of `batch` through the program; returns one sum
+    /// vector per sample. Bit-exact with [`crate::sim::eval`] per sample.
+    ///
+    /// Every row must be exactly `prog.d_in()` codes wide (panics
+    /// otherwise — in a batch-major plane a wrong-width row would shift
+    /// every later sample; the coordinator validates widths at admission).
+    pub fn run_batch<S: AsRef<[u32]>>(
+        &mut self,
+        prog: &CompiledProgram,
+        batch: &[S],
+    ) -> Vec<Vec<i64>> {
+        let n = batch.len();
+        if n == 0 || prog.layers().is_empty() {
+            return vec![Vec::new(); n];
+        }
+        // pack the request rows into the batch-major input plane
+        let d0 = prog.d_in();
+        self.codes.clear();
+        self.codes.reserve(n * prog.max_width());
+        for row in batch {
+            let row = row.as_ref();
+            assert_eq!(row.len(), d0, "batch row width != program d_in");
+            self.codes.extend_from_slice(row);
+        }
+
+        let ops = prog.ops();
+        let tables = prog.tables();
+        for plan in prog.layers() {
+            let (d_in, d_out) = (plan.d_in, plan.d_out);
+            // seed the sum plane with the per-neuron constant operands
+            let biases = &prog.biases()[plan.bias_off..plan.bias_off + d_out];
+            self.sums.clear();
+            self.sums.reserve(n * prog.max_width());
+            for _ in 0..n {
+                self.sums.extend_from_slice(biases);
+            }
+            let codes = &self.codes[..n * d_in];
+            let sums = &mut self.sums[..n * d_out];
+            // fused gather + accumulate, batch-major: one sequential scan
+            // of the table arena per batch
+            for op in &ops[plan.ops.clone()] {
+                let off = op.table_off as usize;
+                let mask = op.addr_mask as usize;
+                let table = &tables[off..off + mask + 1];
+                let (input, neuron) = (op.input as usize, op.neuron as usize);
+                for s in 0..n {
+                    let addr = codes[s * d_in + input] as usize & mask;
+                    sums[s * d_out + neuron] += table[addr];
+                }
+            }
+            // requant boundary: flip sums back into the code plane
+            if let Some(q) = &plan.requant {
+                self.codes.clear();
+                for &sum in self.sums[..n * d_out].iter() {
+                    self.codes.push(q.encode(from_fixed(sum, prog.frac_bits)));
+                }
+            }
+        }
+
+        let d_out = prog.d_out();
+        (0..n)
+            .map(|s| self.sums[s * d_out..(s + 1) * d_out].to_vec())
+            .collect()
+    }
+}
+
+/// One-shot convenience over a fresh [`Executor`] (allocates; the serving
+/// path holds a per-worker executor instead).
+pub fn run_batch<S: AsRef<[u32]>>(prog: &CompiledProgram, batch: &[S]) -> Vec<Vec<i64>> {
+    Executor::new().run_batch(prog, batch)
+}

@@ -1,0 +1,184 @@
+//! Compiled netlist execution engine — the serving backend.
+//!
+//! The paper's deployment target is a streaming II=1 accelerator; the
+//! software substitute for *correctness* is [`crate::sim`], which walks the
+//! `Netlist` object graph (`layers -> neurons -> luts`) per sample. That
+//! pointer chase is the wrong shape for the serving hot path, so this
+//! module splits execution into **compile once, run batches**:
+//!
+//! * [`CompiledProgram`] ([`program`]) — the netlist lowered to flat
+//!   arrays: one packed table arena, a fused gather+accumulate op stream
+//!   with resolved indices, per-layer requant plans, and the scratch
+//!   geometry, all fixed at compile time.
+//! * [`Executor`] ([`exec`]) — batch-major execution: each op is applied
+//!   to all N samples before the next op, turning the per-sample random
+//!   walk into sequential table scans. Bit-exact with [`crate::sim::eval`]
+//!   by construction (i64 accumulation is order-exact, requant is the same
+//!   [`crate::fixed::Quantizer`] code path).
+//! * [`ProgramCell`] ([`swap`]) — hot-swap support: recompile on netlist
+//!   change + atomic program publication, preserving the netlist cell's
+//!   batch-consistent snapshot semantics.
+//!
+//! Division of labor: `sim` stays the debugging / cycle-accuracy oracle
+//! (and the cross-check that gates every batch in debug builds); `engine`
+//! is what the [`crate::coordinator`] workers run in production.
+
+pub mod exec;
+pub mod program;
+pub mod swap;
+
+pub use exec::{run_batch, Executor};
+pub use program::{CompiledProgram, LayerPlan, LutOp};
+pub use swap::ProgramCell;
+
+use crate::netlist::Netlist;
+
+/// Lower a netlist into its flat batch-major program.
+pub fn compile(net: &Netlist) -> CompiledProgram {
+    CompiledProgram::compile(net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::synthetic;
+    use crate::lut;
+    use crate::sim;
+    use crate::util::{prop, Rng};
+
+    fn net_for(dims: &[usize], bits: &[u32], seed: u64, n_add: usize) -> Netlist {
+        let ck = synthetic(dims, bits, seed);
+        let tables = lut::from_checkpoint(&ck);
+        Netlist::build(&ck, &tables, n_add)
+    }
+
+    fn random_batch(rng: &mut Rng, n: usize, d: usize, bits: u32) -> Vec<Vec<u32>> {
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.below(1 << bits) as u32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn matches_interpreter_on_random_batches() {
+        let net = net_for(&[4, 3, 2], &[4, 5, 6], 17, 2);
+        let prog = compile(&net);
+        let mut rng = Rng::new(3);
+        let batch = random_batch(&mut rng, 64, 4, 4);
+        assert_eq!(run_batch(&prog, &batch), sim::eval_batch(&net, &batch));
+    }
+
+    #[test]
+    fn executor_reuse_across_batch_sizes_and_programs() {
+        let net_a = net_for(&[4, 3, 2], &[4, 5, 6], 21, 2);
+        let net_b = net_for(&[6, 5, 4, 2], &[3, 4, 4, 6], 22, 3);
+        let (pa, pb) = (compile(&net_a), compile(&net_b));
+        let mut ex = Executor::with_capacity(&pa, 8);
+        let mut rng = Rng::new(9);
+        for &n in &[1usize, 7, 64, 3, 256, 1] {
+            let ba = random_batch(&mut rng, n, 4, 4);
+            assert_eq!(ex.run_batch(&pa, &ba), sim::eval_batch(&net_a, &ba));
+            let bb = random_batch(&mut rng, n, 6, 3);
+            assert_eq!(ex.run_batch(&pb, &bb), sim::eval_batch(&net_b, &bb));
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_slice_inputs() {
+        let net = net_for(&[3, 2], &[3, 6], 5, 2);
+        let prog = compile(&net);
+        let empty: Vec<Vec<u32>> = Vec::new();
+        assert!(run_batch(&prog, &empty).is_empty());
+        // &[u32] rows work too (the coordinator passes borrowed rows)
+        let rows: Vec<&[u32]> = vec![&[0, 1, 2], &[7, 0, 3]];
+        let owned: Vec<Vec<u32>> = rows.iter().map(|r| r.to_vec()).collect();
+        assert_eq!(run_batch(&prog, &rows), sim::eval_batch(&net, &owned));
+    }
+
+    #[test]
+    fn pruned_to_empty_fan_in_neuron() {
+        // neuron 0 of the first layer loses every incoming edge: its sum
+        // must be exactly the folded bias (0 for fresh netlists)
+        let mut ck = synthetic(&[3, 2, 2], &[4, 4, 6], 55);
+        let l = &mut ck.layers[0];
+        for p in 0..l.d_in {
+            l.mask[p] = false;
+            l.table[p] = None;
+        }
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, 2);
+        let prog = compile(&net);
+        let batch = vec![vec![0u32, 1, 2], vec![3, 3, 3]];
+        assert_eq!(run_batch(&prog, &batch), sim::eval_batch(&net, &batch));
+    }
+
+    #[test]
+    fn requant_boundary_codes() {
+        // extreme accumulator sums must hit the quantizer's clamp rails
+        // identically in both engines: drive all-min / all-max codes
+        let net = net_for(&[4, 3, 2], &[5, 2, 6], 77, 2);
+        let prog = compile(&net);
+        let lo = vec![vec![0u32; 4]];
+        let hi = vec![vec![31u32; 4]];
+        assert_eq!(run_batch(&prog, &lo), sim::eval_batch(&net, &lo));
+        assert_eq!(run_batch(&prog, &hi), sim::eval_batch(&net, &hi));
+    }
+
+    #[test]
+    fn prop_engine_equals_eval_batch_equals_cycle_sim() {
+        // the three executors are one function: compiled == interpreted ==
+        // cycle-accurate, over random shapes (including 1-neuron layers),
+        // arities, seeds and input streams
+        prop::check("engine-equals-sim-equals-cyclesim", 40, |g| {
+            let n_layers = g.usize_in(1, 3);
+            let mut dims = vec![g.usize_in(1, 6)];
+            let mut bits = vec![g.usize_in(1, 5) as u32];
+            for _ in 0..n_layers {
+                dims.push(g.usize_in(1, 6));
+                bits.push(g.usize_in(2, 6) as u32);
+            }
+            let n_add = g.usize_in(2, 4);
+            let seed = g.rng().next_u64();
+            let net = net_for(&dims, &bits, seed, n_add);
+            let prog = compile(&net);
+            let n = g.usize_in(1, 24);
+            let inputs: Vec<Vec<u32>> = (0..n)
+                .map(|_| {
+                    (0..dims[0])
+                        .map(|_| g.rng().below(1u64 << bits[0]) as u32)
+                        .collect()
+                })
+                .collect();
+            let compiled = run_batch(&prog, &inputs);
+            let interpreted = sim::eval_batch(&net, &inputs);
+            if compiled != interpreted {
+                return Err(format!(
+                    "engine != eval_batch for dims {dims:?} bits {bits:?} seed {seed}"
+                ));
+            }
+            let mut cyc = sim::CycleSim::new(&net);
+            let completions = cyc.run_stream(&inputs);
+            if completions.len() != inputs.len() {
+                return Err(format!("{} of {} completed", completions.len(), inputs.len()));
+            }
+            for c in &completions {
+                if c.sums != compiled[c.id as usize] {
+                    return Err(format!(
+                        "cycle-sim sample {} diverges for dims {dims:?} seed {seed}",
+                        c.id
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn compile_is_deterministic() {
+        let net = net_for(&[5, 4, 3], &[4, 4, 5], 31, 2);
+        let (a, b) = (compile(&net), compile(&net));
+        assert_eq!(a.n_ops(), b.n_ops());
+        assert_eq!(a.table_words(), b.table_words());
+        assert_eq!(a.tables(), b.tables());
+        assert_eq!(a.biases(), b.biases());
+    }
+}

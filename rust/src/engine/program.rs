@@ -1,0 +1,235 @@
+//! The compiled program representation: structure-of-arrays LUT storage and
+//! a preplanned, fused op stream.
+//!
+//! [`CompiledProgram::compile`] lowers a [`Netlist`] once; execution then
+//! never touches the netlist object graph again. Layout decisions:
+//!
+//! * **Packed tables** — every truth table is appended to one contiguous
+//!   `Vec<i64>`; an op addresses its table by `(offset, mask)`. Ops are
+//!   emitted in `(layer, neuron, lut)` order, so a batch-major executor
+//!   walks the table arena front to back: sequential scans instead of the
+//!   interpreter's per-sample pointer chase.
+//! * **Fused ops** — one [`LutOp`] is a LUT gather *and* the accumulate
+//!   into its neuron's sum; the adder tree is a compile-time fiction here
+//!   (i64 addition is exact, so any summation order is bit-identical to
+//!   the pipelined tree the RTL and [`crate::sim::CycleSim`] implement).
+//! * **Requant plans** — the inter-layer quantize/saturate node is carried
+//!   as the layer's [`Quantizer`] copy, applied when flipping the
+//!   double-buffered scratch (see [`super::exec`]).
+
+use std::ops::Range;
+
+use crate::fixed::Quantizer;
+use crate::netlist::Netlist;
+
+/// One fused LUT-gather + accumulate op with fully resolved indices.
+#[derive(Clone, Copy, Debug)]
+pub struct LutOp {
+    /// Start of this op's truth table in the packed arena.
+    pub table_off: u32,
+    /// `table_len - 1`; masking the address reproduces the RTL's
+    /// truncation semantics (tables are power-of-two sized).
+    pub addr_mask: u32,
+    /// Input index within the layer's input vector (address port).
+    pub input: u32,
+    /// Output neuron index this op accumulates into.
+    pub neuron: u32,
+}
+
+/// Execution plan for one layer: an op-stream slice plus the inter-layer
+/// requantization (None for the output layer).
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// This layer's slice of [`CompiledProgram::ops`].
+    pub ops: Range<usize>,
+    /// Offset of this layer's `d_out` bias constants in the bias arena.
+    pub bias_off: usize,
+    pub requant: Option<Quantizer>,
+}
+
+/// An immutable netlist lowered to flat arrays — cheap to share, cheap to
+/// rebuild (hot-swap recompiles in O(total table entries)).
+#[derive(Clone, Debug)]
+pub struct CompiledProgram {
+    pub name: String,
+    pub frac_bits: u32,
+    /// All truth tables, packed back to back in op order.
+    tables: Vec<i64>,
+    /// The fused op stream, grouped by layer.
+    ops: Vec<LutOp>,
+    /// Per-neuron constant operands (folded biases), grouped by layer.
+    biases: Vec<i64>,
+    layers: Vec<LayerPlan>,
+    d_in: usize,
+    d_out: usize,
+    /// Widest layer interface — the per-sample scratch stride planned at
+    /// compile time (see [`super::exec::Executor`]).
+    max_width: usize,
+}
+
+impl CompiledProgram {
+    /// Lower a netlist into the flat batch-major program.
+    pub fn compile(net: &Netlist) -> CompiledProgram {
+        let mut tables = Vec::new();
+        let mut ops = Vec::new();
+        let mut biases = Vec::new();
+        let mut layers = Vec::with_capacity(net.layers.len());
+        let mut max_width = 1usize;
+        for layer in &net.layers {
+            let ops_start = ops.len();
+            let bias_off = biases.len();
+            for (q, neuron) in layer.neurons.iter().enumerate() {
+                biases.push(neuron.bias);
+                for lut in &neuron.luts {
+                    debug_assert!(lut.table.len().is_power_of_two());
+                    debug_assert!(lut.input < layer.d_in);
+                    let off = tables.len();
+                    tables.extend_from_slice(&lut.table);
+                    ops.push(LutOp {
+                        table_off: off as u32,
+                        addr_mask: (lut.table.len() - 1) as u32,
+                        input: lut.input as u32,
+                        neuron: q as u32,
+                    });
+                }
+            }
+            max_width = max_width.max(layer.d_in).max(layer.d_out);
+            layers.push(LayerPlan {
+                d_in: layer.d_in,
+                d_out: layer.d_out,
+                ops: ops_start..ops.len(),
+                bias_off,
+                requant: layer.requant,
+            });
+        }
+        assert!(tables.len() <= u32::MAX as usize, "table arena exceeds u32 addressing");
+        CompiledProgram {
+            name: net.name.clone(),
+            frac_bits: net.frac_bits,
+            tables,
+            ops,
+            biases,
+            d_in: net.input_width(),
+            d_out: net.layers.last().map(|l| l.d_out).unwrap_or(0),
+            max_width,
+            layers,
+        }
+    }
+
+    /// Input width (codes per sample).
+    pub fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    /// Output width (sums per sample).
+    pub fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    /// Per-sample scratch stride (widest layer interface).
+    pub fn max_width(&self) -> usize {
+        self.max_width
+    }
+
+    /// Total fused ops (== L-LUT instances of the source netlist).
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Total packed table entries.
+    pub fn table_words(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn layers(&self) -> &[LayerPlan] {
+        &self.layers
+    }
+
+    pub fn ops(&self) -> &[LutOp] {
+        &self.ops
+    }
+
+    pub fn tables(&self) -> &[i64] {
+        &self.tables
+    }
+
+    pub fn biases(&self) -> &[i64] {
+        &self.biases
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::synthetic;
+    use crate::lut;
+    use crate::netlist::Netlist;
+
+    fn compiled(dims: &[usize], bits: &[u32], seed: u64) -> (Netlist, CompiledProgram) {
+        let ck = synthetic(dims, bits, seed);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, 2);
+        let prog = CompiledProgram::compile(&net);
+        (net, prog)
+    }
+
+    #[test]
+    fn op_count_matches_netlist() {
+        let (net, prog) = compiled(&[4, 3, 2], &[4, 5, 6], 11);
+        assert_eq!(prog.n_ops(), net.n_luts());
+        assert_eq!(prog.layers().len(), net.layers.len());
+        assert_eq!(prog.d_in(), 4);
+        assert_eq!(prog.d_out(), 2);
+        let entries: usize = net
+            .layers
+            .iter()
+            .flat_map(|l| l.neurons.iter())
+            .flat_map(|n| n.luts.iter())
+            .map(|l| l.table.len())
+            .sum();
+        assert_eq!(prog.table_words(), entries);
+    }
+
+    #[test]
+    fn ops_scan_tables_sequentially() {
+        // table offsets must be monotone in op order — that is the whole
+        // point of the packed layout (sequential arena scans)
+        let (_, prog) = compiled(&[5, 4, 3], &[4, 4, 5], 23);
+        let mut expect_off = 0u32;
+        for op in prog.ops() {
+            assert_eq!(op.table_off, expect_off);
+            expect_off += op.addr_mask + 1;
+        }
+        assert_eq!(expect_off as usize, prog.table_words());
+    }
+
+    #[test]
+    fn layer_plans_partition_the_op_stream() {
+        let (net, prog) = compiled(&[6, 5, 4, 2], &[3, 4, 4, 6], 31);
+        let mut next = 0usize;
+        for (plan, layer) in prog.layers().iter().zip(&net.layers) {
+            assert_eq!(plan.ops.start, next);
+            next = plan.ops.end;
+            assert_eq!(plan.d_in, layer.d_in);
+            assert_eq!(plan.d_out, layer.d_out);
+            assert_eq!(plan.requant.is_some(), layer.requant.is_some());
+            for op in &prog.ops()[plan.ops.clone()] {
+                assert!((op.input as usize) < plan.d_in);
+                assert!((op.neuron as usize) < plan.d_out);
+            }
+        }
+        assert_eq!(next, prog.n_ops());
+        assert_eq!(prog.biases().len(), net.layers.iter().map(|l| l.d_out).sum::<usize>());
+    }
+
+    #[test]
+    fn scratch_stride_covers_every_interface() {
+        let (net, prog) = compiled(&[2, 7, 1, 5], &[3, 3, 3, 4], 7);
+        for l in &net.layers {
+            assert!(prog.max_width() >= l.d_in);
+            assert!(prog.max_width() >= l.d_out);
+        }
+    }
+}

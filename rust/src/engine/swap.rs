@@ -1,0 +1,130 @@
+//! Hot-swap bridge: keep a compiled program in lockstep with a swappable
+//! netlist.
+//!
+//! [`crate::netlist::hotswap::NetlistCell`] stays the single source of
+//! truth for online updates (edge-table swaps, whole-model replacement);
+//! the [`ProgramCell`] layers a compiled-program cache on top. Readers get
+//! a *consistent* `(netlist, program)` snapshot pair; the first reader
+//! after a swap pays the recompile (O(total table entries) — microseconds
+//! for paper-scale netlists) and publishes it atomically for everyone else.
+
+use std::sync::{Arc, RwLock};
+
+use crate::netlist::hotswap::NetlistCell;
+use crate::netlist::Netlist;
+
+use super::program::CompiledProgram;
+
+/// Swappable compiled-program handle, derived from a [`NetlistCell`].
+pub struct ProgramCell {
+    source: Arc<NetlistCell>,
+    /// The netlist snapshot the cached program was compiled from, plus the
+    /// program itself. Pointer equality against `source.load()` detects
+    /// staleness exactly (every swap publishes a fresh `Arc`). RwLock so
+    /// the steady state (no swap) is a shared read, same as the netlist
+    /// cell itself.
+    cached: RwLock<(Arc<Netlist>, Arc<CompiledProgram>)>,
+}
+
+impl ProgramCell {
+    /// Wrap a netlist cell, compiling its current snapshot eagerly.
+    pub fn new(source: Arc<NetlistCell>) -> ProgramCell {
+        let net = source.load();
+        let prog = Arc::new(CompiledProgram::compile(&net));
+        ProgramCell { source, cached: RwLock::new((net, prog)) }
+    }
+
+    /// The underlying swappable netlist handle.
+    pub fn source(&self) -> &Arc<NetlistCell> {
+        &self.source
+    }
+
+    /// Consistent `(netlist, program)` snapshot; recompiles if and only if
+    /// the netlist changed since the last load. In-flight batches keep the
+    /// pair they loaded — exactly the PR-region semantics of the netlist
+    /// cell itself.
+    pub fn load(&self) -> (Arc<Netlist>, Arc<CompiledProgram>) {
+        let net = self.source.load();
+        {
+            let cached = self.cached.read().unwrap();
+            if Arc::ptr_eq(&cached.0, &net) {
+                return (net, Arc::clone(&cached.1));
+            }
+        }
+        let mut cached = self.cached.write().unwrap();
+        // Re-check under the write lock against the *current* source
+        // snapshot: another thread may have recompiled already, and a
+        // concurrent swap may have superseded the `net` we read above —
+        // never regress the cache to an older snapshot.
+        let net = self.source.load();
+        if !Arc::ptr_eq(&cached.0, &net) {
+            *cached = (Arc::clone(&net), Arc::new(CompiledProgram::compile(&net)));
+        }
+        (Arc::clone(&cached.0), Arc::clone(&cached.1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::synthetic;
+    use crate::engine;
+    use crate::lut;
+    use crate::sim;
+
+    fn cell(seed: u64) -> (u32, Arc<NetlistCell>) {
+        let ck = synthetic(&[3, 2], &[3, 6], seed);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, 2);
+        (ck.bits[0], Arc::new(NetlistCell::new(Arc::new(net))))
+    }
+
+    #[test]
+    fn load_is_cached_until_swap() {
+        let (_, nc) = cell(5);
+        let pc = ProgramCell::new(Arc::clone(&nc));
+        let (n1, p1) = pc.load();
+        let (n2, p2) = pc.load();
+        assert!(Arc::ptr_eq(&n1, &n2));
+        assert!(Arc::ptr_eq(&p1, &p2));
+    }
+
+    #[test]
+    fn swap_recompiles_and_matches_new_netlist() {
+        let (bits, nc) = cell(6);
+        let pc = ProgramCell::new(Arc::clone(&nc));
+        let (_, before) = pc.load();
+        // first neuron that still has an active edge (synthetic pruning is
+        // random, so neuron 0 may have none)
+        let (q, p) = nc.load().layers[0]
+            .neurons
+            .iter()
+            .enumerate()
+            .find_map(|(q, n)| n.luts.first().map(|l| (q, l.input)))
+            .expect("at least one active edge");
+        nc.swap_edge(0, q, p, vec![424_242; 1usize << bits]).unwrap();
+        let (net_after, after) = pc.load();
+        let codes = vec![vec![0u32, 1, 2]];
+        let want = sim::eval_batch(&net_after, &codes);
+        assert_eq!(engine::run_batch(&after, &codes), want);
+        // old program still reflects the old tables (snapshot semantics)
+        assert_ne!(engine::run_batch(&before, &codes), want);
+    }
+
+    #[test]
+    fn whole_model_replace_recompiles() {
+        let (_, nc) = cell(7);
+        let pc = ProgramCell::new(Arc::clone(&nc));
+        let (_, p1) = pc.load();
+        let ck2 = synthetic(&[3, 4, 2], &[3, 4, 6], 99);
+        let tables2 = lut::from_checkpoint(&ck2);
+        let net2 = Arc::new(Netlist::build(&ck2, &tables2, 2));
+        nc.replace(Arc::clone(&net2));
+        let (nl, p2) = pc.load();
+        assert!(Arc::ptr_eq(&nl, &net2));
+        assert!(!Arc::ptr_eq(&p1, &p2));
+        assert_eq!(p2.layers().len(), 2);
+        let inputs = vec![vec![1u32, 2, 3], vec![0, 0, 0]];
+        assert_eq!(engine::run_batch(&p2, &inputs), sim::eval_batch(&net2, &inputs));
+    }
+}

@@ -1,7 +1,8 @@
 //! KANELE: Kolmogorov-Arnold Networks for Efficient LUT-based Evaluation.
 //!
 //! Full-system reproduction of the FPGA '26 paper. The library is organised
-//! around the paper's toolflow (Fig. 4):
+//! around the paper's toolflow (Fig. 4), plus a compile→execute split on
+//! the serving side:
 //!
 //! 1. A quantization-aware-trained, pruned KAN checkpoint (produced by the
 //!    build-time JAX/Pallas stack in `python/`) is loaded by [`checkpoint`].
@@ -13,8 +14,18 @@
 //! 4. [`sim`] executes the netlist bit- and cycle-accurately (the FPGA
 //!    substrate substitute), and [`synth`] estimates P-LUT/FF/Fmax/power the
 //!    way Vivado out-of-context synthesis would.
-//! 5. [`runtime`] cross-checks everything against the AOT-compiled XLA
-//!    artifact via PJRT, and [`coordinator`] serves batched inference.
+//! 5. [`engine`] **compiles** the netlist into a flat batch-major program
+//!    (packed table arena + fused op stream) and executes request batches
+//!    with sequential table scans — bit-exact with [`sim`], several times
+//!    faster, hot-swappable.
+//! 6. [`runtime`] cross-checks everything against the AOT-compiled XLA
+//!    artifact via PJRT (behind the `xla` feature), and [`coordinator`]
+//!    serves batched inference on the compiled engine by default.
+//!
+//! Choosing an executor: [`sim::eval`] for debugging and oracle
+//! equivalence, [`sim::CycleSim`] when cycle/latency behaviour matters,
+//! [`engine::run_batch`] (or a reused [`engine::Executor`]) on every
+//! serving hot path.
 //!
 //! Baselines from the paper's evaluation (LogicNets, PolyLUT, hls4ml-style
 //! dense MLP, Tran et al.'s direct-spline KAN) live in [`baselines`].
@@ -24,6 +35,7 @@ pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod fixed;
 pub mod json;
 pub mod lut;

@@ -13,7 +13,8 @@ use anyhow::{bail, Context, Result};
 
 use kanele::checkpoint::{Checkpoint, TestSet};
 use kanele::config;
-use kanele::coordinator::{Service, ServiceCfg};
+use kanele::coordinator::{Backend, Service, ServiceCfg};
+use kanele::engine;
 use kanele::netlist::Netlist;
 use kanele::report;
 use kanele::sim;
@@ -36,7 +37,9 @@ COMMANDS:
   eval <name> [--n-add N]
       run the netlist on the exported test set; print the task metric.
   serve <name> [--requests N] [--workers W] [--batch B] [--wait-us U]
-      batched inference service benchmark over the netlist simulator.
+        [--backend compiled|interpreted]
+      batched inference service benchmark (default backend: the compiled
+      batch-major engine; `interpreted` selects the netlist simulator).
   table2|table3|table4|table5|fig6|table7|report-all [--n-add N]
       regenerate the paper's tables/figures (report-all renders everything
       and saves to artifacts/reports/).
@@ -198,6 +201,24 @@ fn run(args: &[String]) -> Result<()> {
             if !ok {
                 bail!("cycle-accurate simulation mismatched");
             }
+            // 4. compiled engine (the serving backend) vs oracle
+            let prog = engine::compile(&net);
+            let compiled = engine::run_batch(&prog, &tv.input_codes);
+            let bad = compiled
+                .iter()
+                .zip(&tv.output_sums)
+                .filter(|(got, want)| got != want)
+                .count();
+            println!(
+                "compiled engine   : {}/{} vectors bit-exact ({} ops, {} table words)",
+                tv.input_codes.len() - bad,
+                tv.input_codes.len(),
+                prog.n_ops(),
+                prog.table_words()
+            );
+            if bad > 0 {
+                bail!("{bad} vectors mismatched on the compiled engine");
+            }
             println!("VERIFY OK");
             Ok(())
         }
@@ -218,6 +239,11 @@ fn run(args: &[String]) -> Result<()> {
             let workers = flags.get_usize("--workers", 2)?;
             let batch = flags.get_usize("--batch", 64)?;
             let wait_us = flags.get_usize("--wait-us", 100)?;
+            let backend = match flags.get("--backend") {
+                Some(s) => Backend::parse(s)
+                    .with_context(|| format!("bad --backend {s:?} (compiled|interpreted)"))?,
+                None => Backend::Compiled,
+            };
             let ck = load_checkpoint(name)?;
             let tables = lut::from_checkpoint(&ck);
             let net = Arc::new(Netlist::build(&ck, &tables, 2));
@@ -234,8 +260,10 @@ fn run(args: &[String]) -> Result<()> {
                     max_batch: batch,
                     max_wait: Duration::from_micros(wait_us as u64),
                     queue_depth: 1 << 14,
+                    backend,
                 },
             );
+            println!("backend         : {backend:?}");
             let t0 = Instant::now();
             let mut receivers = Vec::with_capacity(1024);
             let mut done = 0usize;
@@ -269,7 +297,7 @@ fn run(args: &[String]) -> Result<()> {
                 stats.latency_p50_us, stats.latency_p99_us
             );
             println!("mean batch      : {:.1} (batches: {})", stats.mean_batch, stats.batches);
-            println!("rejected (bp)   : {}", stats.rejected);
+            println!("rejected (bp)   : {} (dropped mid-swap: {})", stats.rejected, stats.dropped);
             svc.shutdown();
             Ok(())
         }

@@ -39,6 +39,12 @@ impl NetlistCell {
         self.swaps.load(std::sync::atomic::Ordering::Relaxed)
     }
 
+    /// Input width of the current snapshot (request admission validation;
+    /// avoids the `Arc` clone of a full [`load`](Self::load)).
+    pub fn input_width(&self) -> usize {
+        self.inner.read().unwrap().input_width()
+    }
+
     /// Replace the whole netlist (e.g. a freshly retrained checkpoint).
     pub fn replace(&self, net: Arc<Netlist>) {
         *self.inner.write().unwrap() = net;

@@ -155,6 +155,11 @@ impl Netlist {
             .sum::<usize>()
     }
 
+    /// Input width (codes per sample); 0 for an empty netlist.
+    pub fn input_width(&self) -> usize {
+        self.layers.first().map(|l| l.d_in).unwrap_or(0)
+    }
+
     /// Total L-LUT instances.
     pub fn n_luts(&self) -> usize {
         self.layers

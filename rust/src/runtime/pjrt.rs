@@ -1,0 +1,129 @@
+//! PJRT-backed [`Engine`] (compiled only with `--features xla`).
+//!
+//! `python/compile/aot.py` lowers the quantized KAN inference function
+//! (fake-quant JAX graph calling the Pallas kernel) to HLO text; here we
+//! parse it with `HloModuleProto::from_text_file`, compile on the PJRT CPU
+//! client, and execute from the request path.
+//!
+//! Text — NOT serialized protos — is the interchange format: jax >= 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A compiled HLO artifact ready to execute.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    /// Expected (batch, features) of the single input parameter.
+    pub batch: usize,
+    pub features: usize,
+}
+
+impl Engine {
+    /// Load and compile `<name>.hlo.txt`.
+    ///
+    /// `batch`/`features` must match the shapes baked at lowering time
+    /// (jax.jit AOT artifacts are shape-monomorphic).
+    pub fn load(path: &Path, batch: usize, features: usize) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling HLO")?;
+        Ok(Engine { client, exe, batch, features })
+    }
+
+    /// Execute on a full batch of `batch x features` f32 inputs.
+    /// Returns the flattened f32 outputs of the first tuple element plus
+    /// the number of output columns.
+    pub fn run(&self, input: &[f32]) -> Result<(Vec<f32>, usize)> {
+        anyhow::ensure!(
+            input.len() == self.batch * self.features,
+            "input length {} != {} x {}",
+            input.len(),
+            self.batch,
+            self.features
+        );
+        let lit = xla::Literal::vec1(input).reshape(&[self.batch as i64, self.features as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True -> 1-tuple
+        let out = result.to_tuple1()?;
+        let shape = out.array_shape()?;
+        let dims = shape.dims();
+        anyhow::ensure!(dims.len() == 2, "expected rank-2 output, got {dims:?}");
+        let cols = dims[1] as usize;
+        Ok((out.to_vec::<f32>()?, cols))
+    }
+
+    /// Run a sub-batch, padding up to the compiled batch size.
+    pub fn run_padded(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(rows.len() <= self.batch, "sub-batch too large");
+        let mut flat = vec![0f32; self.batch * self.features];
+        for (i, r) in rows.iter().enumerate() {
+            anyhow::ensure!(r.len() == self.features, "row {} has wrong width", i);
+            flat[i * self.features..(i + 1) * self.features].copy_from_slice(r);
+        }
+        let (out, cols) = self.run(&flat)?;
+        Ok(rows
+            .iter()
+            .enumerate()
+            .map(|(i, _)| out[i * cols..(i + 1) * cols].to_vec())
+            .collect())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Raw executable access (multi-parameter artifacts like the demo).
+    pub fn executable(&self) -> &xla::PjRtLoadedExecutable {
+        &self.exe
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifact(name: &str) -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(name);
+        p.exists().then_some(p)
+    }
+
+    #[test]
+    fn demo_artifact_roundtrip() {
+        // artifacts/model.hlo.txt is the 2x2 matmul demo from aot.py
+        let Some(path) = artifact("model.hlo.txt") else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let eng = Engine::load(&path, 2, 2).unwrap();
+        // demo fn(x, y) takes TWO params; use the raw executable
+        let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2]).unwrap();
+        let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2]).unwrap();
+        let res = eng.executable().execute::<xla::Literal>(&[x, y]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        let vals = res.to_tuple1().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(vals, vec![5., 5., 9., 9.]);
+    }
+
+    #[test]
+    fn kan_artifact_executes() {
+        let Some(path) = artifact("moons.hlo.txt") else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let eng = Engine::load(&path, 256, 2).unwrap();
+        let input = vec![0.25f32; 256 * 2];
+        let (out, cols) = eng.run(&input).unwrap();
+        assert_eq!(cols, 1); // moons has a single-logit head
+        assert_eq!(out.len(), 256);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+}

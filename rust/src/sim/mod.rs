@@ -3,9 +3,12 @@
 //!
 //! Two engines over the same [`Netlist`]:
 //!
-//! * [`eval`] / [`eval_batch`] — functional, bit-exact, used on the serving
-//!   hot path (the coordinator) and for equivalence checks against the
-//!   Python integer oracle.
+//! * [`eval`] / [`eval_batch`] — functional, bit-exact, the debugging
+//!   reference and the equivalence oracle against the Python integer
+//!   oracle. The serving hot path does NOT run this interpreter anymore:
+//!   it runs the compiled batch-major program of [`crate::engine`], which
+//!   is asserted bit-identical to [`eval`] (property tests here and in
+//!   `engine`, plus a per-batch debug cross-check in the coordinator).
 //! * [`CycleSim`] — cycle-accurate pipeline model (LUT stage, one register
 //!   per adder stage, requant register), II = 1: a new sample can enter
 //!   every cycle and results emerge after `netlist.latency_cycles()`.
@@ -73,9 +76,12 @@ impl<'a> Evaluator<'a> {
     }
 }
 
-/// Batch functional evaluation.
+/// Batch functional evaluation. One [`Evaluator`] is reused across the
+/// whole batch (the per-sample `eval()` wrapper would reallocate scratch
+/// every call).
 pub fn eval_batch(net: &Netlist, batch: &[Vec<u32>]) -> Vec<Vec<i64>> {
-    batch.iter().map(|c| eval(net, c)).collect()
+    let mut ev = Evaluator::new(net);
+    batch.iter().map(|c| ev.eval(c).to_vec()).collect()
 }
 
 /// Decision helpers shared with the report harness.

@@ -6,9 +6,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use kanele::checkpoint::{testutil, Checkpoint, TestSet};
-use kanele::coordinator::{Service, ServiceCfg};
+use kanele::coordinator::{Backend, Service, ServiceCfg};
 use kanele::netlist::Netlist;
-use kanele::{config, data, lut, report, sim, synth, vhdl};
+use kanele::{config, data, engine, lut, report, sim, synth, vhdl};
 
 fn artifact_ckpt(name: &str) -> Option<Checkpoint> {
     let p = config::ckpt_path(name);
@@ -52,6 +52,38 @@ fn moons_netlist_bit_exact_vs_python_oracle() {
     assert_eq!(comps.len(), tv.input_codes.len());
     for c in comps {
         assert_eq!(c.sums, tv.output_sums[c.id as usize]);
+    }
+    // ... and so does the compiled serving engine
+    let prog = engine::compile(&net);
+    assert_eq!(engine::run_batch(&prog, &tv.input_codes), tv.output_sums);
+}
+
+#[test]
+fn compiled_engine_bit_exact_on_all_artifacts() {
+    // engine::run_batch == sim::eval on every existing checkpoint artifact
+    // (acceptance criterion of the compile→execute split)
+    for exp in config::EXPERIMENTS {
+        let Some(ck) = artifact_ckpt(exp.name) else { continue };
+        let tables = lut::from_checkpoint(&ck);
+        for n_add in [2usize, 4] {
+            let net = Netlist::build(&ck, &tables, n_add);
+            let prog = engine::compile(&net);
+            assert_eq!(prog.n_ops(), net.n_luts(), "{}", exp.name);
+            let oracle = &ck.test_vectors.input_codes;
+            let stream;
+            let inputs: &[Vec<u32>] = if oracle.is_empty() {
+                stream = data::random_code_stream(&ck, 256, 5);
+                &stream
+            } else {
+                oracle
+            };
+            assert_eq!(
+                engine::run_batch(&prog, inputs),
+                sim::eval_batch(&net, inputs),
+                "{} (n_add {n_add})",
+                exp.name
+            );
+        }
     }
 }
 
@@ -109,26 +141,31 @@ fn serving_over_real_checkpoint() {
     };
     let tables = lut::from_checkpoint(&ck);
     let net = Arc::new(Netlist::build(&ck, &tables, 2));
-    let svc = Service::start(
-        Arc::clone(&net),
-        ServiceCfg {
-            workers: 2,
-            max_batch: 32,
-            max_wait: Duration::from_micros(50),
-            queue_depth: 4096,
-        },
-    );
-    let stream = data::random_code_stream(&ck, 2000, 3);
-    let mut pending = Vec::new();
-    for codes in &stream {
-        pending.push((codes.clone(), svc.submit(codes.clone()).unwrap()));
+    // the compiled default backend and the interpreter must be
+    // indistinguishable from the client side
+    for backend in [Backend::Compiled, Backend::Interpreted] {
+        let svc = Service::start(
+            Arc::clone(&net),
+            ServiceCfg {
+                workers: 2,
+                max_batch: 32,
+                max_wait: Duration::from_micros(50),
+                queue_depth: 4096,
+                backend,
+            },
+        );
+        let stream = data::random_code_stream(&ck, 2000, 3);
+        let mut pending = Vec::new();
+        for codes in &stream {
+            pending.push((codes.clone(), svc.submit(codes.clone()).unwrap()));
+        }
+        for (codes, rx) in pending {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.sums, sim::eval(&net, &codes), "{backend:?}");
+        }
+        assert_eq!(svc.stats().completed, 2000);
+        svc.shutdown();
     }
-    for (codes, rx) in pending {
-        let resp = rx.recv().unwrap();
-        assert_eq!(resp.sums, sim::eval(&net, &codes));
-    }
-    assert_eq!(svc.stats().completed, 2000);
-    svc.shutdown();
 }
 
 #[test]
@@ -177,7 +214,15 @@ fn synthetic_flow_with_extreme_shapes() {
     for c in &comps {
         assert_eq!(c.sums, sim::eval(&net2, &inputs[c.id as usize]));
     }
-    let _ = (out0, out1);
+    // compiled engine handles the extreme shapes identically
+    assert_eq!(
+        engine::run_batch(&engine::compile(&net), &[vec![0u32], vec![1u32]]),
+        vec![out0, out1]
+    );
+    assert_eq!(
+        engine::run_batch(&engine::compile(&net2), &inputs),
+        sim::eval_batch(&net2, &inputs)
+    );
 }
 
 #[test]

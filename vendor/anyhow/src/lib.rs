@@ -1,0 +1,246 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build image has no registry access, so the real `anyhow` cannot be
+//! fetched; this shim implements the exact surface the workspace uses:
+//!
+//! * [`Error`] — a context-chain error (outermost message first), with
+//!   `{e}` printing the top message, `{e:#}` the full `a: b: c` chain and
+//!   `{e:?}` an anyhow-style "Caused by:" listing,
+//! * [`Result`] with the `E = Error` default,
+//! * the [`Context`] extension trait on `Result` and `Option`,
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros,
+//! * a blanket `From<E: std::error::Error>` so `?` converts std errors
+//!   (their `source()` chain is preserved as context).
+//!
+//! Deliberately out of scope (unused here): backtraces, downcasting, and
+//! `std::error::Error` for [`Error`] itself (omitting it is what makes the
+//! blanket `From` coherent — the same trick the real crate uses via
+//! specialization-free trickery).
+
+use std::fmt;
+
+/// Context-chain error. `msg` is the outermost description; `source` the
+/// next inner layer.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string(), source: None }
+    }
+
+    /// Wrap `self` in an outer context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: ctx.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The error chain, outermost first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    /// Innermost error of the chain.
+    pub fn root_cause(&self) -> &Error {
+        let mut e = self;
+        while let Some(s) = e.source.as_deref() {
+            e = s;
+        }
+        e
+    }
+}
+
+/// Iterator over an error's context chain.
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+
+    fn next(&mut self) -> Option<&'a Error> {
+        let cur = self.next.take()?;
+        self.next = cur.source.as_deref();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut e = self.source.as_deref();
+            while let Some(s) = e {
+                write!(f, ": {}", s.msg)?;
+                e = s.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut e = self.source.as_deref();
+            while let Some(s) = e {
+                write!(f, "\n    {}", s.msg)?;
+                e = s.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut cur = e.source();
+        while let Some(c) = cur {
+            msgs.push(c.to_string());
+            cur = c.source();
+        }
+        let mut out: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            out = Some(Error { msg, source: out.map(Box::new) });
+        }
+        out.expect("at least one message")
+    }
+}
+
+/// `std::result::Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (`Result`) or turn `None` into an error
+/// (`Option`), exactly like anyhow's trait of the same name.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)+) => {
+        $crate::Error::msg(format!($fmt, $($arg)+))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Early-return with an [`Error`] when `cond` is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($tt:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($tt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_top_and_alternate_chain() {
+        let e = Error::msg("inner").context("middle").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: inner");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("inner"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert_eq!(format!("{e}"), "gone");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("while reading").unwrap_err();
+        assert_eq!(format!("{e:#}"), "while reading: gone");
+
+        let n: Option<u32> = None;
+        let e = n.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+        assert_eq!(Some(3).context("nope").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("got {}", x);
+            }
+            Err(anyhow!("fell through"))
+        }
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", f(7).unwrap_err()), "got 7");
+        assert_eq!(format!("{}", f(1).unwrap_err()), "fell through");
+    }
+
+    #[test]
+    fn chain_and_root_cause() {
+        let e = Error::msg("a").context("b").context("c");
+        let msgs: Vec<String> = e.chain().map(|x| format!("{x}")).collect();
+        assert_eq!(msgs, vec!["c", "b", "a"]);
+        assert_eq!(format!("{}", e.root_cause()), "a");
+    }
+}
