@@ -15,7 +15,7 @@ mod common;
 use std::sync::Arc;
 use std::time::Duration;
 
-use kanele::coordinator::{Backend, Service, ServiceCfg};
+use kanele::coordinator::{Backend, Service, ServiceCfg, SubmitError};
 use kanele::netlist::Netlist;
 use kanele::{data, engine, lut, sim};
 
@@ -57,9 +57,14 @@ fn main() {
     }
 
     // -- 2. end-to-end coordinator grid -------------------------------------
+    // backend x batching-policy x workers through the dispatcher/executor
+    // pipeline; workers is the innermost loop so each row reports its
+    // throughput scaling against the same config at workers = 1 (the
+    // pipelined coordinator's whole point is that this scales)
     for backend in [Backend::Interpreted, Backend::Compiled] {
-        for workers in [1usize, 2, 4] {
-            for (batch, wait_us) in [(1usize, 0u64), (16, 50), (64, 100), (256, 200)] {
+        for (batch, wait_us) in [(1usize, 0u64), (16, 50), (64, 100), (256, 200)] {
+            let mut base_rps = None;
+            for workers in [1usize, 2, 4] {
                 let svc = Service::start(
                     Arc::clone(&net),
                     ServiceCfg {
@@ -68,6 +73,7 @@ fn main() {
                         max_wait: Duration::from_micros(wait_us),
                         queue_depth: 1 << 14,
                         backend,
+                        ..Default::default()
                     },
                 );
                 let t = std::time::Instant::now();
@@ -79,11 +85,12 @@ fn main() {
                                 pending.push(rx);
                                 break;
                             }
-                            Err(_) => {
+                            Err(SubmitError::Backpressure) => {
                                 for rx in pending.drain(..) {
                                     let _ = rx.recv();
                                 }
                             }
+                            Err(e) => panic!("serving bench submit failed: {e}"),
                         }
                     }
                 }
@@ -91,14 +98,16 @@ fn main() {
                     let _ = rx.recv();
                 }
                 let wall = t.elapsed().as_secs_f64();
+                let rps = stream.len() as f64 / wall;
+                let scaling = rps / *base_rps.get_or_insert(rps);
                 let st = svc.stats();
                 println!(
-                    "{:<11} workers {workers} batch {batch:>3} wait {wait_us:>3} us -> {:>9.0} req/s | p50 {:>7.1} us p99 {:>8.1} us | mean batch {:>6.1}",
+                    "{:<11} batch {batch:>3} wait {wait_us:>3} us workers {workers} -> {rps:>9.0} req/s ({scaling:>4.2}x vs 1 worker) | p50 {:>7.1} us p99 {:>8.1} us | mean batch {:>6.1} ({} batches)",
                     format!("{backend:?}"),
-                    20_000.0 / wall,
                     st.latency_p50_us,
                     st.latency_p99_us,
-                    st.mean_batch
+                    st.mean_batch,
+                    st.batches
                 );
                 svc.shutdown();
             }

@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 use kanele::checkpoint::{Checkpoint, TestSet};
-use kanele::coordinator::{Service, ServiceCfg};
+use kanele::coordinator::{Service, ServiceCfg, SubmitError};
 use kanele::netlist::Netlist;
 use kanele::runtime::Engine;
 use kanele::synth;
@@ -151,12 +151,15 @@ fn main() -> Result<()> {
                     pending.push(rx);
                     break;
                 }
-                Err(_) => {
+                // only backpressure is retryable; a stopped service or a
+                // malformed request must abort instead of spinning
+                Err(SubmitError::Backpressure) => {
                     for rx in pending.drain(..) {
                         rx.recv()?;
                         done += 1;
                     }
                 }
+                Err(e) => return Err(e.into()),
             }
         }
     }
@@ -167,11 +170,12 @@ fn main() -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     let st = svc.stats();
     println!(
-        "served {done} requests in {wall:.2} s -> {:.0} req/s | p50 {:.0} us p99 {:.0} us | mean batch {:.1}",
+        "served {done} requests in {wall:.2} s -> {:.0} req/s | p50 {:.0} us p99 {:.0} us | mean batch {:.1} over {} batches",
         done as f64 / wall,
         st.latency_p50_us,
         st.latency_p99_us,
-        st.mean_batch
+        st.mean_batch,
+        st.batches
     );
     svc.shutdown();
 

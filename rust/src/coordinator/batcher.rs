@@ -1,8 +1,21 @@
-//! Standalone dynamic-batching policy, extracted so the policy itself can
-//! be unit-tested and swept by the ablation benches (batch-size vs latency
-//! trade-off) without spinning up threads.
+//! Dynamic-batching policy **and** the dispatcher's batch-collection loop.
+//!
+//! [`Policy::decide`] is the single source of dispatch decisions (fill to
+//! `max_batch`, flush once the *oldest request* has waited `max_wait`);
+//! [`collect`] is the loop the coordinator's dispatcher thread runs to turn
+//! a request channel into [`Batch`]es, consulting `decide` before every
+//! wait. Both are thread-free and unit-testable: `collect` only needs a
+//! channel of [`Timestamped`] items, so the policy/dispatcher equivalence
+//! is asserted directly in tests instead of being an emergent property of
+//! the worker pool.
+//!
+//! Age is always measured from each request's *submission* time, never
+//! from when collection started: a request that queued behind a busy
+//! service is dispatched as soon as the dispatcher sees it has already
+//! spent its `max_wait` budget, instead of waiting a second full window.
 
-use std::time::Duration;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::time::{Duration, Instant};
 
 /// Decision state for one forming batch.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -45,9 +58,92 @@ impl Policy {
     }
 }
 
+/// Anything carrying a submission timestamp can be collected into batches.
+pub trait Timestamped {
+    fn submitted(&self) -> Instant;
+}
+
+/// Bare timestamps batch as themselves (tests and simulations).
+impl Timestamped for Instant {
+    fn submitted(&self) -> Instant {
+        *self
+    }
+}
+
+/// One formed batch: the unit of work handed from the dispatcher to the
+/// executor pool.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub items: Vec<T>,
+    /// Earliest submission time across `items`.
+    pub oldest: Instant,
+}
+
+impl<T: Timestamped> Batch<T> {
+    /// Wrap a non-empty item list, computing the oldest submission time.
+    /// Convenience for tests and external producers; [`collect`] builds
+    /// batches directly from its incrementally-tracked oldest timestamp.
+    pub fn new(items: Vec<T>) -> Batch<T> {
+        let oldest = items
+            .iter()
+            .map(|t| t.submitted())
+            .min()
+            .expect("batch must be non-empty");
+        Batch { items, oldest }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+/// Collect the next batch from `rx`, consulting [`Policy::decide`] before
+/// every wait. Returns `None` once the channel is disconnected and fully
+/// drained (service shutdown); a partial batch in hand at disconnection is
+/// still dispatched so admitted requests always complete.
+///
+/// A backlog is drained greedily first: requests already queued fill the
+/// batch to `max_batch` without any waiting, so sustained load produces
+/// full batches regardless of how old the queue head is.
+pub fn collect<T: Timestamped>(rx: &Receiver<T>, policy: &Policy) -> Option<Batch<T>> {
+    let first = rx.recv().ok()?;
+    let mut oldest = first.submitted();
+    let mut items = vec![first];
+    loop {
+        // greedy drain: whatever is already queued joins for free
+        while items.len() < policy.max_batch {
+            match rx.try_recv() {
+                Ok(t) => {
+                    oldest = oldest.min(t.submitted());
+                    items.push(t);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return Some(Batch { items, oldest }),
+            }
+        }
+        match policy.decide(items.len(), oldest.elapsed()) {
+            Decision::Dispatch => return Some(Batch { items, oldest }),
+            Decision::Wait(d) => match rx.recv_timeout(d) {
+                Ok(t) => {
+                    oldest = oldest.min(t.submitted());
+                    items.push(t);
+                }
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                    return Some(Batch { items, oldest })
+                }
+            },
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::mpsc::sync_channel;
 
     #[test]
     fn dispatches_when_full() {
@@ -83,5 +179,112 @@ mod tests {
         let small = Policy { max_batch: 4, max_wait: Duration::from_micros(200) };
         let big = Policy { max_batch: 256, max_wait: Duration::from_micros(200) };
         assert!(small.expected_added_latency_us(lam) <= big.expected_added_latency_us(lam));
+    }
+
+    #[test]
+    fn batch_tracks_oldest_submission() {
+        let now = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        let later = Instant::now();
+        let b = Batch::new(vec![later, now, later]);
+        assert_eq!(b.oldest, now);
+        assert_eq!(b.len(), 3);
+        assert!(!b.is_empty());
+    }
+
+    #[test]
+    fn collect_honors_max_wait_from_submission_not_collection_start() {
+        // a request that aged past max_wait while queued dispatches
+        // immediately — the dispatcher must NOT grant it a fresh window
+        // (generous margins: correct behavior returns in microseconds, the
+        // old bug waits the full 400 ms)
+        let p = Policy { max_batch: 8, max_wait: Duration::from_millis(400) };
+        let (tx, rx) = sync_channel::<Instant>(8);
+        let submitted = Instant::now();
+        std::thread::sleep(Duration::from_millis(450)); // ages in "the queue"
+        tx.send(submitted).unwrap();
+        let t = Instant::now();
+        let batch = collect(&rx, &p).expect("one batch");
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t.elapsed() < Duration::from_millis(200),
+            "collect waited a fresh max_wait window ({:?}) for an already-expired request",
+            t.elapsed()
+        );
+    }
+
+    #[test]
+    fn collect_fills_full_batches_from_backlog() {
+        // 20 queued requests, max_batch 8: two immediate full batches, then
+        // a timeout-flushed remainder of 4 (generous margins for loaded
+        // CI runners: immediate means microseconds, the timeout is 400 ms)
+        let p = Policy { max_batch: 8, max_wait: Duration::from_millis(400) };
+        let (tx, rx) = sync_channel::<Instant>(32);
+        let t = Instant::now();
+        for _ in 0..20 {
+            tx.send(Instant::now()).unwrap();
+        }
+        assert_eq!(collect(&rx, &p).unwrap().len(), 8);
+        assert_eq!(collect(&rx, &p).unwrap().len(), 8);
+        assert!(
+            t.elapsed() < Duration::from_millis(200),
+            "full batches from a backlog must not wait ({:?})",
+            t.elapsed()
+        );
+        let rest = collect(&rx, &p).unwrap();
+        assert_eq!(rest.len(), 4);
+        assert!(t.elapsed() >= Duration::from_millis(400), "partial batch flushes on timeout");
+        drop(tx);
+        assert!(collect(&rx, &p).is_none(), "drained + disconnected ends collection");
+    }
+
+    #[test]
+    fn collect_dispatches_partial_batch_at_disconnect() {
+        let p = Policy { max_batch: 8, max_wait: Duration::from_secs(5) };
+        let (tx, rx) = sync_channel::<Instant>(8);
+        tx.send(Instant::now()).unwrap();
+        tx.send(Instant::now()).unwrap();
+        drop(tx);
+        // would otherwise wait 5 s: disconnection flushes what was admitted
+        let t = Instant::now();
+        let b = collect(&rx, &p).expect("partial batch");
+        assert_eq!(b.len(), 2);
+        assert!(t.elapsed() < Duration::from_secs(1));
+        assert!(collect(&rx, &p).is_none());
+    }
+
+    #[test]
+    fn collect_agrees_with_decide_at_every_dispatch() {
+        // scripted arrivals; every batch collect() emits must be one that
+        // Policy::decide marks Dispatch at the moment of dispatch — the
+        // dispatcher loop adds no decision logic of its own
+        let p = Policy { max_batch: 4, max_wait: Duration::from_millis(200) };
+        let (tx, rx) = sync_channel::<Instant>(64);
+        let producer = std::thread::spawn(move || {
+            for _ in 0..3 {
+                tx.send(Instant::now()).unwrap();
+            }
+            std::thread::sleep(Duration::from_millis(50));
+            tx.send(Instant::now()).unwrap(); // fills batch 1 to max_batch
+            std::thread::sleep(Duration::from_millis(250));
+            for _ in 0..5 {
+                tx.send(Instant::now()).unwrap(); // batch 2 (full) + batch 3 (1, flushes on timeout)
+            }
+            std::thread::sleep(Duration::from_millis(500));
+            // tx drops here: channel already drained, collect returns None
+        });
+        let mut lens = Vec::new();
+        while let Some(b) = collect(&rx, &p) {
+            let age_at_dispatch = b.oldest.elapsed();
+            assert_eq!(
+                p.decide(b.len(), age_at_dispatch),
+                Decision::Dispatch,
+                "collect dispatched a batch (len {}, age {age_at_dispatch:?}) the policy would hold",
+                b.len()
+            );
+            lens.push(b.len());
+        }
+        producer.join().unwrap();
+        assert_eq!(lens, vec![4, 4, 1]);
     }
 }

@@ -1,34 +1,61 @@
-//! L3 coordinator: threaded batched-inference service over the netlist.
+//! L3 coordinator: a dispatcher/executor serving pipeline over the netlist.
 //!
 //! The paper's deployment story is a streaming accelerator core (II = 1)
-//! fed by a host; this module is that host-side system: a request router
-//! with a **dynamic batcher** (dispatch on `max_batch` or `max_wait`,
-//! whichever first), a worker pool executing batches, bounded queues for
-//! backpressure, and end-to-end latency/throughput accounting. Tokio is
-//! not available offline; the implementation uses std threads + channels,
-//! which for this workload (CPU-bound microsecond batches) is the right
-//! tool anyway.
+//! fed by a host; this module is that host-side system, structured as a
+//! two-stage pipeline so batch *formation* never serializes behind batch
+//! *execution*:
 //!
-//! Workers execute on a [`Backend`]: the default is the compiled flat
+//! ```text
+//! clients --submit--> [admission queue] --> dispatcher --> [work queue] --> executors 0..N-1
+//!                      bounded,              owns the        bounded         run batches,
+//!                      backpressure          receiver,       handoff         reply to clients
+//!                                            forms batches
+//! ```
+//!
+//! A single **dispatcher** thread owns the admission receiver outright, so
+//! no thread ever holds a lock across a batch-collection wait. It forms
+//! batches with [`batcher::collect`], which consults
+//! [`batcher::Policy::decide`] for every dispatch decision — fill to
+//! `max_batch`, or flush once the *oldest request* (measured from its
+//! submission, not from when collection started) has waited `max_wait`.
+//! Formed [`batcher::Batch`]es travel over a bounded work channel to the
+//! **executor** pool: while one batch executes, the dispatcher is already
+//! forming the next, and N executors run N batches concurrently. Tokio is
+//! not available offline; std threads + channels are the right tool for
+//! these CPU-bound microsecond batches anyway.
+//!
+//! Executors run on a [`Backend`]: the default is the compiled flat
 //! program of [`crate::engine`] (batch-major, hot-swap aware via
 //! [`ProgramCell`], cross-checked against [`crate::sim`] in debug builds);
 //! the netlist-walking interpreter remains selectable for debugging and
 //! A/B benchmarking.
+//!
+//! Shutdown is graceful: [`Service::shutdown`] disconnects admission, the
+//! dispatcher drains and dispatches what was already admitted, executors
+//! finish and exit, and any later `submit*` call fails fast with
+//! [`SubmitError::Stopped`] instead of spinning.
 
 pub mod batcher;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::engine::{Executor, ProgramCell};
 use crate::netlist::hotswap::NetlistCell;
 use crate::netlist::Netlist;
 use crate::sim;
-use crate::util::Summary;
+use crate::util::Reservoir;
+
+use batcher::{Batch, Policy, Timestamped};
+
+/// Retained latency samples: quantiles stay approximately correct under
+/// sustained load at O(1) memory (the previous unbounded summary retained
+/// every sample of every request forever).
+const LATENCY_RESERVOIR: usize = 4096;
 
 /// One inference request (input codes).
 #[derive(Clone, Debug)]
@@ -51,6 +78,37 @@ struct Pending {
     req: Request,
     reply: SyncSender<Response>,
 }
+
+impl Timestamped for Pending {
+    fn submitted(&self) -> Instant {
+        self.req.submitted
+    }
+}
+
+/// Why admission failed. Callers must distinguish retryable backpressure
+/// from terminal conditions — retrying a stopped service or a malformed
+/// request spins forever.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Admission queue full; retrying later can succeed.
+    Backpressure,
+    /// Service shut down; no retry will ever succeed.
+    Stopped,
+    /// Malformed request (wrong input width); no retry will ever succeed.
+    Invalid(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Backpressure => write!(f, "admission queue full (backpressure)"),
+            SubmitError::Stopped => write!(f, "service stopped"),
+            SubmitError::Invalid(msg) => write!(f, "invalid request: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Which executor the worker pool runs batches on.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -77,12 +135,18 @@ impl Backend {
 /// Service configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ServiceCfg {
+    /// Executor threads; batch formation always uses one extra dispatcher
+    /// thread (none of either is spawned when `workers == 0`).
     pub workers: usize,
     pub max_batch: usize,
     pub max_wait: Duration,
     /// Bounded admission queue (backpressure).
     pub queue_depth: usize,
     pub backend: Backend,
+    /// Artificial per-batch execution delay. Zero in production; test and
+    /// bench instrumentation that stretches execution so pipeline overlap
+    /// is observable on microsecond workloads.
+    pub exec_delay: Duration,
 }
 
 impl Default for ServiceCfg {
@@ -93,6 +157,7 @@ impl Default for ServiceCfg {
             max_wait: Duration::from_micros(200),
             queue_depth: 4096,
             backend: Backend::Compiled,
+            exec_delay: Duration::ZERO,
         }
     }
 }
@@ -106,6 +171,8 @@ pub struct ServiceStats {
     /// the model snapshot (admission raced a `replace_model`). The client
     /// observes a closed reply channel.
     pub dropped: u64,
+    /// Batches formed by the dispatcher (counted at formation, so under
+    /// load this runs ahead of execution — the pipeline is visible here).
     pub batches: u64,
     pub mean_batch: f64,
     pub latency_p50_us: f64,
@@ -114,25 +181,33 @@ pub struct ServiceStats {
 }
 
 struct Shared {
-    latencies: Mutex<Summary>,
-    batch_sizes: Mutex<Summary>,
+    /// Bounded reservoir — O(1) memory no matter how long the service runs.
+    latencies: Mutex<Reservoir>,
     completed: AtomicU64,
     rejected: AtomicU64,
     dropped: AtomicU64,
     batches: AtomicU64,
+    /// Total requests across all formed batches (mean batch = this / batches).
+    batched: AtomicU64,
 }
 
 /// Batched inference service over a netlist.
 pub struct Service {
-    tx: SyncSender<Pending>,
-    /// Kept so the queue survives even with zero workers (tests/backpressure).
-    rx_keepalive: Arc<Mutex<Receiver<Pending>>>,
+    /// Admission sender; taken (→ `None`) by [`Service::shutdown`], which
+    /// disconnects the dispatcher. RwLock so concurrent submitters share a
+    /// read lock on the hot path.
+    tx: RwLock<Option<SyncSender<Pending>>>,
+    /// With zero workers there is no dispatcher to own the admission
+    /// receiver; parked here so the queue stays connected and backpressure
+    /// is observable without anything draining it.
+    rx_parked: Mutex<Option<Receiver<Pending>>>,
     /// Hot-swappable model handle (paper §6: online LUT updates).
     cell: Arc<NetlistCell>,
     shared: Arc<Shared>,
     next_id: AtomicU64,
     started: Instant,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Dispatcher + executors; drained on shutdown.
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
     cfg: ServiceCfg,
 }
 
@@ -145,44 +220,60 @@ impl Service {
     /// replaced while serving; in-flight batches finish on their snapshot.
     pub fn start_swappable(cell: Arc<NetlistCell>, cfg: ServiceCfg) -> Service {
         let (tx, rx) = sync_channel::<Pending>(cfg.queue_depth);
-        let rx = Arc::new(Mutex::new(rx));
         let shared = Arc::new(Shared {
-            latencies: Mutex::new(Summary::new()),
-            batch_sizes: Mutex::new(Summary::new()),
+            latencies: Mutex::new(Reservoir::new(LATENCY_RESERVOIR)),
             completed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
             batches: AtomicU64::new(0),
+            batched: AtomicU64::new(0),
         });
-        // backend resources: the compiled path shares one program cache
-        // (compiled once here, recompiled lazily after hot-swaps); the
-        // interpreted path never pays for compilation
-        let exec_backend = match cfg.backend {
-            Backend::Compiled => {
-                WorkerBackend::Compiled(Arc::new(ProgramCell::new(Arc::clone(&cell))))
+        let mut threads = Vec::with_capacity(cfg.workers + 1);
+        let mut rx_parked = None;
+        if cfg.workers == 0 {
+            rx_parked = Some(rx);
+        } else {
+            // backend resources: the compiled path shares one program cache
+            // (compiled once here, recompiled lazily after hot-swaps); the
+            // interpreted path never pays for compilation
+            let exec_backend = match cfg.backend {
+                Backend::Compiled => {
+                    WorkerBackend::Compiled(Arc::new(ProgramCell::new(Arc::clone(&cell))))
+                }
+                Backend::Interpreted => WorkerBackend::Interpreted(Arc::clone(&cell)),
+            };
+            // handoff depth = workers: every executor can be running one
+            // batch with another staged before the dispatcher blocks
+            let (work_tx, work_rx) = sync_channel::<Batch<Pending>>(cfg.workers);
+            let work_rx = Arc::new(Mutex::new(work_rx));
+            for w in 0..cfg.workers {
+                let work_rx = Arc::clone(&work_rx);
+                let backend = exec_backend.clone();
+                let shared = Arc::clone(&shared);
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("kanele-exec-{w}"))
+                        .spawn(move || executor_loop(work_rx, backend, shared, cfg))
+                        .expect("spawn executor"),
+                );
             }
-            Backend::Interpreted => WorkerBackend::Interpreted(Arc::clone(&cell)),
-        };
-        let mut workers = Vec::with_capacity(cfg.workers);
-        for w in 0..cfg.workers {
-            let rx = Arc::clone(&rx);
-            let backend = exec_backend.clone();
-            let shared = Arc::clone(&shared);
-            workers.push(
+            let policy = Policy { max_batch: cfg.max_batch, max_wait: cfg.max_wait };
+            let shared_d = Arc::clone(&shared);
+            threads.push(
                 std::thread::Builder::new()
-                    .name(format!("kanele-worker-{w}"))
-                    .spawn(move || worker_loop(rx, backend, shared, cfg))
-                    .expect("spawn worker"),
+                    .name("kanele-dispatch".into())
+                    .spawn(move || dispatcher_loop(rx, work_tx, policy, shared_d))
+                    .expect("spawn dispatcher"),
             );
         }
         Service {
-            tx,
-            rx_keepalive: rx,
+            tx: RwLock::new(Some(tx)),
+            rx_parked: Mutex::new(rx_parked),
             cell,
             shared,
             next_id: AtomicU64::new(0),
             started: Instant::now(),
-            workers,
+            threads: Mutex::new(threads),
             cfg,
         }
     }
@@ -200,20 +291,23 @@ impl Service {
     /// Reject malformed requests at admission: a wrong-width row inside a
     /// compiled batch would otherwise shift every later sample in the
     /// batch-major input plane (cross-request corruption).
-    fn check_width(&self, codes: &[u32]) -> Result<()> {
+    fn check_width(&self, codes: &[u32]) -> Result<(), SubmitError> {
         let want = self.cell.input_width();
-        anyhow::ensure!(
-            codes.len() == want,
-            "request width {} != model input width {want}",
-            codes.len()
-        );
+        if codes.len() != want {
+            return Err(SubmitError::Invalid(format!(
+                "request width {} != model input width {want}",
+                codes.len()
+            )));
+        }
         Ok(())
     }
 
-    /// Submit a request; the returned receiver yields the response.
-    /// Errors immediately on a wrong-width request or when the admission
-    /// queue is full (backpressure).
-    pub fn submit(&self, codes: Vec<u32>) -> Result<Receiver<Response>> {
+    /// Submit a request; the returned receiver yields the response. Fails
+    /// fast with a typed [`SubmitError`]: wrong width and shutdown are
+    /// terminal, a full admission queue is retryable backpressure.
+    pub fn submit(&self, codes: Vec<u32>) -> Result<Receiver<Response>, SubmitError> {
+        // validated on every call: a concurrent replace_model can change
+        // the expected width between retries
         self.check_width(&codes)?;
         let (reply_tx, reply_rx) = sync_channel(1);
         let req = Request {
@@ -221,43 +315,49 @@ impl Service {
             codes,
             submitted: Instant::now(),
         };
-        match self.tx.try_send(Pending { req, reply: reply_tx }) {
+        let tx = self.tx.read().unwrap();
+        let Some(tx) = tx.as_ref() else {
+            return Err(SubmitError::Stopped);
+        };
+        match tx.try_send(Pending { req, reply: reply_tx }) {
             Ok(()) => Ok(reply_rx),
             Err(TrySendError::Full(_)) => {
                 self.shared.rejected.fetch_add(1, Ordering::Relaxed);
-                anyhow::bail!("admission queue full (backpressure)")
+                Err(SubmitError::Backpressure)
             }
-            Err(TrySendError::Disconnected(_)) => anyhow::bail!("service stopped"),
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Stopped),
         }
     }
 
-    /// Submit with blocking retry (used by the closed-loop example).
-    /// Malformed requests fail immediately; only backpressure retries.
+    /// Submit with blocking retry (used by the closed-loop example). Only
+    /// backpressure retries; malformed requests and a stopped service
+    /// return the error immediately instead of spinning forever.
     pub fn submit_blocking(&self, codes: Vec<u32>) -> Result<Response> {
         loop {
-            // re-validate every attempt: a width error must never be
-            // retried as if it were backpressure (a concurrent
-            // replace_model can change the expected width)
-            self.check_width(&codes)?;
             match self.submit(codes.clone()) {
-                Ok(rx) => return Ok(rx.recv()?),
-                Err(_) => std::thread::sleep(Duration::from_micros(20)),
+                Ok(rx) => {
+                    return rx.recv().context("request dropped (model swap or shutdown mid-flight)")
+                }
+                Err(SubmitError::Backpressure) => std::thread::sleep(Duration::from_micros(20)),
+                Err(e) => return Err(e.into()),
             }
         }
     }
 
     pub fn stats(&self) -> ServiceStats {
-        let lat = self.shared.latencies.lock().unwrap();
-        let bs = self.shared.batch_sizes.lock().unwrap();
+        let qs = self.shared.latencies.lock().unwrap().quantiles(&[0.5, 0.99]);
+        let (p50, p99) = (qs[0], qs[1]);
         let completed = self.shared.completed.load(Ordering::Relaxed);
+        let batches = self.shared.batches.load(Ordering::Relaxed);
+        let batched = self.shared.batched.load(Ordering::Relaxed);
         ServiceStats {
             completed,
             rejected: self.shared.rejected.load(Ordering::Relaxed),
             dropped: self.shared.dropped.load(Ordering::Relaxed),
-            batches: self.shared.batches.load(Ordering::Relaxed),
-            mean_batch: bs.mean(),
-            latency_p50_us: lat.quantile(0.5) * 1e6,
-            latency_p99_us: lat.quantile(0.99) * 1e6,
+            batches,
+            mean_batch: if batches == 0 { 0.0 } else { batched as f64 / batches as f64 },
+            latency_p50_us: p50 * 1e6,
+            latency_p99_us: p99 * 1e6,
             throughput_rps: completed as f64 / self.started.elapsed().as_secs_f64(),
         }
     }
@@ -266,114 +366,164 @@ impl Service {
         self.cfg
     }
 
-    /// Stop workers and join them.
-    pub fn shutdown(self) {
-        drop(self.tx);
-        drop(self.rx_keepalive);
-        for w in self.workers {
-            let _ = w.join();
+    /// Stop the pipeline and join its threads. Graceful: everything already
+    /// admitted is dispatched and executed first. Idempotent, and callable
+    /// through a shared reference (e.g. an `Arc<Service>` while other
+    /// clients still hold clones — their next `submit*` fails fast with
+    /// [`SubmitError::Stopped`]).
+    pub fn shutdown(&self) {
+        // disconnect admission: the dispatcher drains the queue, forwards
+        // the final partial batch, then hangs up the work channel, which
+        // winds down the executors
+        self.tx.write().unwrap().take();
+        self.rx_parked.lock().unwrap().take();
+        let threads: Vec<_> = self.threads.lock().unwrap().drain(..).collect();
+        for t in threads {
+            let _ = t.join();
         }
     }
 }
 
-/// Per-worker execution resources, fixed at service start.
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Per-executor execution resources, fixed at service start.
 #[derive(Clone)]
 enum WorkerBackend {
     Compiled(Arc<ProgramCell>),
     Interpreted(Arc<NetlistCell>),
 }
 
-fn worker_loop(
-    rx: Arc<Mutex<Receiver<Pending>>>,
-    backend: WorkerBackend,
-    shared: Arc<Shared>,
-    cfg: ServiceCfg,
-) {
-    // per-worker scratch, reused across batches and hot-swaps
-    let mut exec = Executor::new();
-    loop {
-        // dynamic batch collection: block for the first item, then fill the
-        // batch until max_batch or max_wait
-        let mut batch: Vec<Pending> = Vec::with_capacity(cfg.max_batch);
-        {
-            let guard = rx.lock().unwrap();
-            match guard.recv() {
-                Ok(p) => batch.push(p),
-                Err(_) => return, // service dropped
-            }
-            let deadline = Instant::now() + cfg.max_wait;
-            while batch.len() < cfg.max_batch {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                match guard.recv_timeout(deadline - now) {
-                    Ok(p) => batch.push(p),
-                    Err(_) => break,
-                }
-            }
-        } // release the receiver so other workers can batch concurrently
+/// Shared handoff end of the dispatcher → executor work channel.
+type WorkQueue = Arc<Mutex<Receiver<Batch<Pending>>>>;
 
+/// Pipeline stage 1 — sole owner of the admission receiver. Every dispatch
+/// decision comes from [`batcher::Policy::decide`] via
+/// [`batcher::collect`]; formed batches are handed downstream over the
+/// bounded work channel. Exits when admission is disconnected and drained.
+fn dispatcher_loop(
+    rx: Receiver<Pending>,
+    work_tx: SyncSender<Batch<Pending>>,
+    policy: Policy,
+    shared: Arc<Shared>,
+) {
+    while let Some(batch) = batcher::collect(&rx, &policy) {
         shared.batches.fetch_add(1, Ordering::Relaxed);
-        {
-            let mut bs = shared.batch_sizes.lock().unwrap();
-            bs.push(batch.len() as f64);
+        shared.batched.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        if work_tx.send(batch).is_err() {
+            return; // executors gone; nothing left to feed
         }
-        // batch-consistent snapshot: a concurrent hot-swap applies to the
-        // NEXT batch, never mid-batch (PR-region semantics). Requests whose
-        // width no longer matches the snapshot (admission raced a
-        // whole-model replace) yield None: their reply channel is dropped
-        // instead of corrupting co-batched samples.
-        let outputs: Vec<Option<Vec<i64>>> = match &backend {
-            WorkerBackend::Compiled(programs) => {
-                let (net, prog) = programs.load();
-                let d_in = prog.d_in();
-                let rows: Vec<&[u32]> = batch
-                    .iter()
-                    .map(|p| p.req.codes.as_slice())
-                    .filter(|r| r.len() == d_in)
-                    .collect();
-                let outs = exec.run_batch(&prog, &rows);
-                // checked invariant: the compiled program IS the netlist
-                if cfg!(debug_assertions) {
-                    let mut ev = sim::Evaluator::new(&net);
-                    for (row, out) in rows.iter().zip(&outs) {
-                        debug_assert_eq!(ev.eval(row), out.as_slice(), "engine/sim divergence");
-                    }
-                }
-                let mut outs = outs.into_iter();
-                batch
-                    .iter()
-                    .map(|p| {
-                        (p.req.codes.len() == d_in)
-                            .then(|| outs.next().expect("one output per valid row"))
-                    })
-                    .collect()
-            }
-            WorkerBackend::Interpreted(cell) => {
-                let net = cell.load();
-                let d_in = net.input_width();
-                let mut ev = sim::Evaluator::new(&net);
-                batch
-                    .iter()
-                    .map(|p| {
-                        (p.req.codes.len() == d_in).then(|| ev.eval(&p.req.codes).to_vec())
-                    })
-                    .collect()
-            }
+    }
+    // dropping work_tx here lets executors finish queued batches and exit
+}
+
+/// Pipeline stage 2 — pull formed batches off the work queue and run them.
+/// An *idle* executor does hold the work-receiver lock while blocked in
+/// `recv`, but releases it the moment a batch arrives (before executing),
+/// so batch *formation* never waits on executors, executions overlap
+/// freely, and only executors with nothing to do queue on the mutex —
+/// unlike the old design, no lock is held across a batch-collection wait.
+fn executor_loop(work_rx: WorkQueue, backend: WorkerBackend, shared: Arc<Shared>, cfg: ServiceCfg) {
+    // per-executor scratch, reused across batches and hot-swaps; sized so
+    // the compiled hot path never allocates planes after startup
+    let mut exec = match &backend {
+        WorkerBackend::Compiled(programs) => {
+            Executor::with_capacity(&programs.load().1, cfg.max_batch)
+        }
+        WorkerBackend::Interpreted(_) => Executor::new(),
+    };
+    loop {
+        let batch = match work_rx.lock().unwrap().recv() {
+            Ok(b) => b,
+            Err(_) => return, // dispatcher hung up and the queue is drained
         };
-        for (p, sums) in batch.into_iter().zip(outputs) {
-            let Some(sums) = sums else {
-                // client sees RecvError on its reply channel
-                shared.dropped.fetch_add(1, Ordering::Relaxed);
-                continue;
-            };
-            let latency = p.req.submitted.elapsed();
-            {
-                let mut lat = shared.latencies.lock().unwrap();
+        execute_batch(batch, &backend, &mut exec, &shared, &cfg);
+    }
+}
+
+/// Run one batch on the backend and complete its requests.
+fn execute_batch(
+    batch: Batch<Pending>,
+    backend: &WorkerBackend,
+    exec: &mut Executor,
+    shared: &Shared,
+    cfg: &ServiceCfg,
+) {
+    let items = batch.items;
+    // batch-consistent snapshot: a concurrent hot-swap applies to the
+    // NEXT batch, never mid-batch (PR-region semantics). Requests whose
+    // width no longer matches the snapshot (admission raced a
+    // whole-model replace) yield None: their reply channel is dropped
+    // instead of corrupting co-batched samples.
+    let outputs: Vec<Option<Vec<i64>>> = match backend {
+        WorkerBackend::Compiled(programs) => {
+            let (net, prog) = programs.load();
+            let d_in = prog.d_in();
+            let rows: Vec<&[u32]> = items
+                .iter()
+                .map(|p| p.req.codes.as_slice())
+                .filter(|r| r.len() == d_in)
+                .collect();
+            let outs = exec.run_batch(&prog, &rows);
+            // checked invariant: the compiled program IS the netlist
+            if cfg!(debug_assertions) {
+                let mut ev = sim::Evaluator::new(&net);
+                for (row, out) in rows.iter().zip(&outs) {
+                    debug_assert_eq!(ev.eval(row), out.as_slice(), "engine/sim divergence");
+                }
+            }
+            let mut outs = outs.into_iter();
+            items
+                .iter()
+                .map(|p| {
+                    (p.req.codes.len() == d_in)
+                        .then(|| outs.next().expect("one output per valid row"))
+                })
+                .collect()
+        }
+        WorkerBackend::Interpreted(cell) => {
+            let net = cell.load();
+            let d_in = net.input_width();
+            let mut ev = sim::Evaluator::new(&net);
+            items
+                .iter()
+                .map(|p| (p.req.codes.len() == d_in).then(|| ev.eval(&p.req.codes).to_vec()))
+                .collect()
+        }
+    };
+    if !cfg.exec_delay.is_zero() {
+        std::thread::sleep(cfg.exec_delay);
+    }
+    let mut dropped = 0u64;
+    let mut done: Vec<(Pending, Vec<i64>, Duration)> = Vec::with_capacity(items.len());
+    for (p, sums) in items.into_iter().zip(outputs) {
+        match sums {
+            Some(sums) => {
+                let latency = p.req.submitted.elapsed();
+                done.push((p, sums, latency));
+            }
+            // client sees RecvError on its reply channel
+            None => dropped += 1,
+        }
+    }
+    if dropped > 0 {
+        shared.dropped.fetch_add(dropped, Ordering::Relaxed);
+    }
+    if !done.is_empty() {
+        // one lock acquisition for the whole batch, not one per response
+        {
+            let mut lat = shared.latencies.lock().unwrap();
+            for (_, _, latency) in &done {
                 lat.push(latency.as_secs_f64());
             }
-            shared.completed.fetch_add(1, Ordering::Relaxed);
+        }
+        // publish counts before replying so a client holding its response
+        // always observes itself in `completed`
+        shared.completed.fetch_add(done.len() as u64, Ordering::Relaxed);
+        for (p, sums, latency) in done {
             let _ = p.reply.send(Response { id: p.req.id, sums, latency });
         }
     }
@@ -461,8 +611,9 @@ mod tests {
     #[test]
     fn wrong_width_request_rejected_at_admission() {
         let (net, svc) = service(ServiceCfg::default());
-        assert!(svc.submit(vec![1, 2, 3]).is_err()); // model wants 4 codes
-        assert!(svc.submit(vec![1, 2, 3, 0, 0]).is_err());
+        assert!(matches!(svc.submit(vec![1, 2, 3]), Err(SubmitError::Invalid(_))));
+        assert!(matches!(svc.submit(vec![1, 2, 3, 0, 0]), Err(SubmitError::Invalid(_))));
+        // submit_blocking must return the width error, not retry it
         assert!(svc.submit_blocking(vec![0; 9]).is_err());
         // a well-formed neighbor is unaffected
         let codes = vec![1u32, 2, 3, 0];
@@ -491,7 +642,10 @@ mod tests {
                     oks += 1;
                     rxs.push(rx);
                 }
-                Err(_) => errs += 1,
+                Err(e) => {
+                    assert_eq!(e, SubmitError::Backpressure);
+                    errs += 1;
+                }
             }
         }
         assert_eq!(oks, 4);
@@ -536,6 +690,109 @@ mod tests {
         }
         let stats = svc.stats();
         assert!(stats.mean_batch > 1.5, "mean batch {}", stats.mean_batch);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_blocking_errors_after_shutdown() {
+        // regression: the old catch-all retry loop treated "service
+        // stopped" as backpressure and spun forever
+        let (_, svc) = service(ServiceCfg::default());
+        svc.submit_blocking(vec![1, 2, 3, 0]).unwrap();
+        svc.shutdown();
+        assert_eq!(svc.submit(vec![1, 2, 3, 0]).unwrap_err(), SubmitError::Stopped);
+        let t = Instant::now();
+        assert!(svc.submit_blocking(vec![1, 2, 3, 0]).is_err());
+        assert!(
+            t.elapsed() < Duration::from_secs(1),
+            "submit_blocking kept retrying after shutdown ({:?})",
+            t.elapsed()
+        );
+        // shutdown is idempotent
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batches_form_while_others_execute() {
+        // pipelining witness: with both executors asleep inside a batch,
+        // the dispatcher must keep forming batches (under the old
+        // lock-convoy design, formation was serialized with execution and
+        // nothing could form until a worker finished)
+        let (_, svc) = service(ServiceCfg {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_micros(50),
+            queue_depth: 1024,
+            exec_delay: Duration::from_millis(500),
+            ..Default::default()
+        });
+        // 16 requests = 4 full batches; 2 execute (sleeping), 2 must form behind them
+        let rxs: Vec<_> = (0..16).map(|_| svc.submit(vec![1, 2, 3, 0]).unwrap()).collect();
+        std::thread::sleep(Duration::from_millis(200));
+        let st = svc.stats();
+        assert_eq!(st.completed, 0, "executors are still sleeping");
+        assert!(
+            st.batches >= 3,
+            "dispatcher should pipeline formation past the 2 executing batches, formed {}",
+            st.batches
+        );
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn lone_request_flushes_after_max_wait_from_submission() {
+        let (_, svc) = service(ServiceCfg {
+            workers: 1,
+            max_batch: 64,
+            max_wait: Duration::from_millis(40),
+            ..Default::default()
+        });
+        let t = Instant::now();
+        let resp = svc.submit_blocking(vec![1, 2, 3, 0]).unwrap();
+        // dispatched by the max_wait flush (not earlier), measured from
+        // submission (not from some later collection start)
+        assert!(resp.latency >= Duration::from_millis(30), "flushed early: {:?}", resp.latency);
+        assert!(t.elapsed() < Duration::from_secs(2), "waited far past max_wait");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn latency_tracking_is_bounded() {
+        // more requests than the reservoir retains: quantiles stay sane
+        let (_, svc) = service(ServiceCfg {
+            workers: 2,
+            max_batch: 64,
+            max_wait: Duration::from_micros(10),
+            queue_depth: 1 << 14,
+            ..Default::default()
+        });
+        let mut pending = Vec::new();
+        for _ in 0..2 * LATENCY_RESERVOIR {
+            loop {
+                match svc.submit(vec![1, 2, 3, 0]) {
+                    Ok(rx) => {
+                        pending.push(rx);
+                        break;
+                    }
+                    Err(SubmitError::Backpressure) => {
+                        for rx in pending.drain(..) {
+                            rx.recv().unwrap();
+                        }
+                    }
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                }
+            }
+        }
+        for rx in pending {
+            rx.recv().unwrap();
+        }
+        let st = svc.stats();
+        assert_eq!(st.completed, 2 * LATENCY_RESERVOIR as u64);
+        assert!(st.latency_p50_us.is_finite() && st.latency_p50_us > 0.0);
+        assert!(st.latency_p99_us >= st.latency_p50_us);
         svc.shutdown();
     }
 }

@@ -13,7 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use kanele::checkpoint::{Checkpoint, TestSet};
 use kanele::config;
-use kanele::coordinator::{Backend, Service, ServiceCfg};
+use kanele::coordinator::{Backend, Service, ServiceCfg, SubmitError};
 use kanele::engine;
 use kanele::netlist::Netlist;
 use kanele::report;
@@ -37,9 +37,12 @@ COMMANDS:
   eval <name> [--n-add N]
       run the netlist on the exported test set; print the task metric.
   serve <name> [--requests N] [--workers W] [--batch B] [--wait-us U]
-        [--backend compiled|interpreted]
-      batched inference service benchmark (default backend: the compiled
-      batch-major engine; `interpreted` selects the netlist simulator).
+        [--queue-depth Q] [--backend compiled|interpreted]
+      batched inference service benchmark through the dispatcher/executor
+      pipeline: one dispatcher forms batches (fill to --batch or flush
+      --wait-us after the oldest request's submission) while W executors
+      run them concurrently (default backend: the compiled batch-major
+      engine; `interpreted` selects the netlist simulator).
   table2|table3|table4|table5|fig6|table7|report-all [--n-add N]
       regenerate the paper's tables/figures (report-all renders everything
       and saves to artifacts/reports/).
@@ -239,6 +242,7 @@ fn run(args: &[String]) -> Result<()> {
             let workers = flags.get_usize("--workers", 2)?;
             let batch = flags.get_usize("--batch", 64)?;
             let wait_us = flags.get_usize("--wait-us", 100)?;
+            let queue_depth = flags.get_usize("--queue-depth", 1 << 14)?;
             let backend = match flags.get("--backend") {
                 Some(s) => Backend::parse(s)
                     .with_context(|| format!("bad --backend {s:?} (compiled|interpreted)"))?,
@@ -259,11 +263,13 @@ fn run(args: &[String]) -> Result<()> {
                     workers,
                     max_batch: batch,
                     max_wait: Duration::from_micros(wait_us as u64),
-                    queue_depth: 1 << 14,
+                    queue_depth,
                     backend,
+                    ..Default::default()
                 },
             );
             println!("backend         : {backend:?}");
+            println!("pipeline        : 1 dispatcher + {workers} executors (queue depth {queue_depth})");
             let t0 = Instant::now();
             let mut receivers = Vec::with_capacity(1024);
             let mut done = 0usize;
@@ -274,13 +280,14 @@ fn run(args: &[String]) -> Result<()> {
                             receivers.push(rx);
                             break;
                         }
-                        Err(_) => {
-                            // backpressure: drain pending completions
+                        Err(SubmitError::Backpressure) => {
+                            // retryable: drain pending completions first
                             for rx in receivers.drain(..) {
                                 let _ = rx.recv();
                                 done += 1;
                             }
                         }
+                        Err(e) => return Err(e.into()),
                     }
                 }
             }

@@ -10,5 +10,5 @@ pub mod timer;
 
 pub use prop::Gen;
 pub use rng::Rng;
-pub use stats::Summary;
+pub use stats::{Reservoir, Summary};
 pub use timer::Timer;

@@ -1,5 +1,12 @@
 //! Streaming statistics used by the bench harness and the coordinator's
 //! latency tracking.
+//!
+//! [`Summary`] retains every sample for exact quantiles — right for
+//! benches with a known, bounded sample count. Long-running services use
+//! [`Reservoir`] instead: O(cap) memory forever, exact mean, approximate
+//! quantiles.
+
+use super::rng::Rng;
 
 /// Online summary (Welford) + retained samples for exact quantiles.
 #[derive(Clone, Debug, Default)]
@@ -81,6 +88,94 @@ impl Summary {
     }
 }
 
+/// Bounded-memory sample summary: exact streaming mean plus a fixed-size
+/// uniform reservoir (Vitter's Algorithm R) for approximate quantiles.
+///
+/// Unlike [`Summary`], pushing forever never grows memory and `quantile()`
+/// sorts at most `cap` samples — the right trade for a service tracking
+/// latencies under sustained load. Quantiles are exact until `cap` samples
+/// have been seen and an unbiased uniform subsample estimate after.
+/// Deterministic: the replacement PRNG is seeded from `cap`.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    cap: usize,
+    /// Total samples observed (not retained).
+    seen: u64,
+    samples: Vec<f64>,
+    mean: f64,
+    rng: Rng,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize) -> Reservoir {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        Reservoir {
+            cap,
+            seen: 0,
+            samples: Vec::new(),
+            mean: 0.0,
+            rng: Rng::new(0xC0FFEE ^ cap as u64),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        self.mean += (x - self.mean) / self.seen as f64;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            // Algorithm R: after this step every one of the `seen` samples
+            // is retained with equal probability cap/seen
+            let j = self.rng.below(self.seen) as usize;
+            if j < self.cap {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    /// Total samples observed (not the retained count — see [`Reservoir::retained`]).
+    pub fn len(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
+    /// Samples currently retained (bounded by the construction capacity).
+    pub fn retained(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Exact mean over everything observed.
+    pub fn mean(&self) -> f64 {
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Quantile over the retained reservoir; q in [0, 1]. Exact while
+    /// fewer than `cap` samples have been seen, approximate after.
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.quantiles(&[q])[0]
+    }
+
+    /// Several quantiles from one sort of the retained samples — cheaper
+    /// than repeated [`Reservoir::quantile`] calls for stats scrapes.
+    pub fn quantiles(&self, qs: &[f64]) -> Vec<f64> {
+        if self.samples.is_empty() {
+            return vec![f64::NAN; qs.len()];
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        qs.iter()
+            .map(|q| s[((s.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize])
+            .collect()
+    }
+}
+
 /// Area under the ROC curve from (score, label) pairs — used by the
 /// ToyADMOS anomaly-detection harness (paper Table 5's AUC column).
 pub fn auc(scores: &[f64], labels: &[bool]) -> f64 {
@@ -141,6 +236,59 @@ mod tests {
         assert_eq!(s.median(), 50.0);
         assert_eq!(s.quantile(0.0), 0.0);
         assert_eq!(s.quantile(1.0), 100.0);
+    }
+
+    #[test]
+    fn reservoir_exact_below_capacity() {
+        // under cap, Reservoir and Summary agree exactly
+        let mut r = Reservoir::new(256);
+        let mut s = Summary::new();
+        for i in 0..100 {
+            let x = (i * 37 % 100) as f64;
+            r.push(x);
+            s.push(x);
+        }
+        assert_eq!(r.len(), 100);
+        assert_eq!(r.retained(), 100);
+        assert!((r.mean() - s.mean()).abs() < 1e-12);
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(r.quantile(q), s.quantile(q));
+        }
+    }
+
+    #[test]
+    fn reservoir_memory_is_bounded() {
+        let mut r = Reservoir::new(512);
+        for i in 0..100_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 100_000);
+        assert_eq!(r.retained(), 512);
+        // the mean is exact even though only 512 samples are retained
+        assert!((r.mean() - 49_999.5).abs() < 1e-6, "mean {}", r.mean());
+    }
+
+    #[test]
+    fn reservoir_quantiles_approximately_correct_under_load() {
+        // uniform stream in [0, 1): quantile(q) must land near q. The
+        // deterministic PRNG makes the tolerances safe (binomial std for
+        // p50 at cap 4096 is ~0.008).
+        let mut r = Reservoir::new(4096);
+        let mut rng = Rng::new(2026);
+        for _ in 0..200_000 {
+            r.push(rng.f64());
+        }
+        assert!((r.quantile(0.5) - 0.5).abs() < 0.05, "p50 {}", r.quantile(0.5));
+        assert!((r.quantile(0.99) - 0.99).abs() < 0.02, "p99 {}", r.quantile(0.99));
+        assert!((r.mean() - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn reservoir_empty_is_nan() {
+        let r = Reservoir::new(8);
+        assert!(r.is_empty());
+        assert!(r.quantile(0.5).is_nan());
+        assert_eq!(r.mean(), 0.0);
     }
 
     #[test]

@@ -6,8 +6,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use kanele::checkpoint::{testutil, Checkpoint, TestSet};
-use kanele::coordinator::{Backend, Service, ServiceCfg};
+use kanele::coordinator::{Backend, Service, ServiceCfg, SubmitError};
 use kanele::netlist::Netlist;
+use kanele::util::Rng;
 use kanele::{config, data, engine, lut, report, sim, synth, vhdl};
 
 fn artifact_ckpt(name: &str) -> Option<Checkpoint> {
@@ -152,6 +153,7 @@ fn serving_over_real_checkpoint() {
                 max_wait: Duration::from_micros(50),
                 queue_depth: 4096,
                 backend,
+                ..Default::default()
             },
         );
         let stream = data::random_code_stream(&ck, 2000, 3);
@@ -166,6 +168,74 @@ fn serving_over_real_checkpoint() {
         assert_eq!(svc.stats().completed, 2000);
         svc.shutdown();
     }
+}
+
+#[test]
+fn coordinator_pipeline_under_saturating_load() {
+    // dispatcher/executor pipeline end to end: 8 concurrent clients
+    // saturate a 4-executor service; every response is bit-exact, batches
+    // actually aggregate, and after shutdown submission fails fast
+    let ck = testutil::synthetic(&[4, 3, 2], &[4, 5, 6], 77);
+    let tables = lut::from_checkpoint(&ck);
+    let net = Arc::new(Netlist::build(&ck, &tables, 2));
+    let svc = Arc::new(Service::start(
+        Arc::clone(&net),
+        ServiceCfg {
+            workers: 4,
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 1 << 12,
+            ..Default::default()
+        },
+    ));
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        let svc = Arc::clone(&svc);
+        let net = Arc::clone(&net);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t);
+            let mut pending = Vec::new();
+            for _ in 0..500 {
+                let codes: Vec<u32> = (0..4).map(|_| rng.below(16) as u32).collect();
+                let want = sim::eval(&net, &codes);
+                loop {
+                    match svc.submit(codes.clone()) {
+                        Ok(rx) => {
+                            pending.push((rx, want));
+                            break;
+                        }
+                        Err(SubmitError::Backpressure) => {
+                            std::thread::sleep(Duration::from_micros(10))
+                        }
+                        Err(e) => panic!("unexpected submit error: {e}"),
+                    }
+                }
+            }
+            for (rx, want) in pending {
+                assert_eq!(rx.recv().unwrap().sums, want);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let st = svc.stats();
+    assert_eq!(st.completed, 4000);
+    assert!(st.batches >= 1);
+    assert!(
+        st.mean_batch > 2.0,
+        "saturating load must aggregate batches, mean {}",
+        st.mean_batch
+    );
+    // shutdown through a shared handle while clients still hold clones
+    svc.shutdown();
+    assert!(matches!(svc.submit(vec![0, 0, 0, 0]), Err(SubmitError::Stopped)));
+    let t0 = std::time::Instant::now();
+    assert!(svc.submit_blocking(vec![0, 0, 0, 0]).is_err());
+    assert!(
+        t0.elapsed() < Duration::from_secs(1),
+        "submit_blocking must error after shutdown, not spin"
+    );
 }
 
 #[test]
