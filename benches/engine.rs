@@ -1,0 +1,265 @@
+//! Engine hot-path bench: the feature-major, integer-requant, narrowed-arena
+//! executor against the PR-2 compiled executor (sample-major planes, one i64
+//! arena, f64 requant), which is frozen below as `mod baseline` so the A/B
+//! stays honest across future refactors. Also microbenches the requant plan
+//! against the float oracle and the flat-output path against the
+//! `Vec<Vec<i64>>` convenience.
+//!
+//!     cargo bench --bench engine
+//!     KANELE_BENCH_QUICK=1 cargo bench --bench engine    # CI smoke mode
+//!
+//! Acceptance bar (ISSUE 3): transposed integer executor >= 1.5x baseline at
+//! batch 64 on the jet-tagging twin. Bit-exactness vs `sim::eval_batch` is
+//! asserted here before any timing (and enforced by the crate's tests).
+
+mod common;
+
+use kanele::engine::{self, RequantPlan};
+use kanele::fixed::Quantizer;
+use kanele::netlist::Netlist;
+use kanele::{data, lut, sim};
+
+/// The PR-2 compiled executor, reproduced verbatim as the A/B baseline:
+/// batch-major (sample-major) scratch planes indexed `[s * width + f]`, a
+/// single packed i64 table arena, and the float `encode(from_fixed(..))`
+/// requant on every inter-layer flip.
+mod baseline {
+    use kanele::fixed::{from_fixed, Quantizer};
+    use kanele::netlist::Netlist;
+    use std::ops::Range;
+
+    pub struct Op {
+        pub table_off: u32,
+        pub addr_mask: u32,
+        pub input: u32,
+        pub neuron: u32,
+    }
+
+    pub struct Layer {
+        pub d_in: usize,
+        pub d_out: usize,
+        pub ops: Range<usize>,
+        pub bias_off: usize,
+        pub requant: Option<Quantizer>,
+    }
+
+    pub struct Program {
+        pub frac_bits: u32,
+        pub tables: Vec<i64>,
+        pub ops: Vec<Op>,
+        pub biases: Vec<i64>,
+        pub layers: Vec<Layer>,
+        pub d_in: usize,
+        pub max_width: usize,
+    }
+
+    pub fn compile(net: &Netlist) -> Program {
+        let mut tables = Vec::new();
+        let mut ops = Vec::new();
+        let mut biases = Vec::new();
+        let mut layers = Vec::with_capacity(net.layers.len());
+        let mut max_width = 1usize;
+        for layer in &net.layers {
+            let ops_start = ops.len();
+            let bias_off = biases.len();
+            for (q, neuron) in layer.neurons.iter().enumerate() {
+                biases.push(neuron.bias);
+                for lut in &neuron.luts {
+                    let off = tables.len();
+                    tables.extend_from_slice(&lut.table);
+                    ops.push(Op {
+                        table_off: off as u32,
+                        addr_mask: (lut.table.len() - 1) as u32,
+                        input: lut.input as u32,
+                        neuron: q as u32,
+                    });
+                }
+            }
+            max_width = max_width.max(layer.d_in).max(layer.d_out);
+            layers.push(Layer {
+                d_in: layer.d_in,
+                d_out: layer.d_out,
+                ops: ops_start..ops.len(),
+                bias_off,
+                requant: layer.requant,
+            });
+        }
+        Program {
+            frac_bits: net.frac_bits,
+            tables,
+            ops,
+            biases,
+            d_in: net.input_width(),
+            max_width,
+            layers,
+        }
+    }
+
+    #[derive(Default)]
+    pub struct Executor {
+        codes: Vec<u32>,
+        sums: Vec<i64>,
+    }
+
+    impl Executor {
+        pub fn with_capacity(prog: &Program, batch: usize) -> Executor {
+            Executor {
+                codes: Vec::with_capacity(batch * prog.max_width),
+                sums: Vec::with_capacity(batch * prog.max_width),
+            }
+        }
+
+        pub fn run_batch<S: AsRef<[u32]>>(&mut self, prog: &Program, batch: &[S]) -> Vec<Vec<i64>> {
+            let n = batch.len();
+            if n == 0 || prog.layers.is_empty() {
+                return vec![Vec::new(); n];
+            }
+            let d0 = prog.d_in;
+            self.codes.clear();
+            self.codes.reserve(n * prog.max_width);
+            for row in batch {
+                let row = row.as_ref();
+                assert_eq!(row.len(), d0, "batch row width != program d_in");
+                self.codes.extend_from_slice(row);
+            }
+            for plan in &prog.layers {
+                let (d_in, d_out) = (plan.d_in, plan.d_out);
+                let biases = &prog.biases[plan.bias_off..plan.bias_off + d_out];
+                self.sums.clear();
+                self.sums.reserve(n * prog.max_width);
+                for _ in 0..n {
+                    self.sums.extend_from_slice(biases);
+                }
+                let codes = &self.codes[..n * d_in];
+                let sums = &mut self.sums[..n * d_out];
+                for op in &prog.ops[plan.ops.clone()] {
+                    let off = op.table_off as usize;
+                    let mask = op.addr_mask as usize;
+                    let table = &prog.tables[off..off + mask + 1];
+                    let (input, neuron) = (op.input as usize, op.neuron as usize);
+                    for s in 0..n {
+                        let addr = codes[s * d_in + input] as usize & mask;
+                        sums[s * d_out + neuron] += table[addr];
+                    }
+                }
+                if let Some(q) = &plan.requant {
+                    self.codes.clear();
+                    for &sum in self.sums[..n * d_out].iter() {
+                        self.codes.push(q.encode(from_fixed(sum, prog.frac_bits)));
+                    }
+                }
+            }
+            let d_out = prog.layers.last().unwrap().d_out;
+            (0..n)
+                .map(|s| self.sums[s * d_out..(s + 1) * d_out].to_vec())
+                .collect()
+        }
+    }
+}
+
+fn main() {
+    let quick = std::env::var("KANELE_BENCH_QUICK").is_ok();
+    println!("=== engine bench: feature-major integer hot path vs PR-2 baseline ===");
+    let ck = common::checkpoint_or_synthetic("jsc_openml");
+    let tables = lut::from_checkpoint(&ck);
+    let net = Netlist::build(&ck, &tables, 2);
+    let prog = engine::compile(&net);
+    let base_prog = baseline::compile(&net);
+    println!(
+        "netlist {}: {} fused ops, {} table words ({} B narrowed vs {} B all-i64)",
+        ck.name,
+        prog.n_ops(),
+        prog.table_words(),
+        prog.table_bytes(),
+        prog.table_words() * std::mem::size_of::<i64>()
+    );
+    for (l, plan) in prog.layers().iter().enumerate() {
+        println!(
+            "  layer {l}: {}x{} lane {:?}, requant {}",
+            plan.d_in,
+            plan.d_out,
+            plan.lane,
+            plan.requant.as_ref().map(|r| r.kind_name()).unwrap_or("none")
+        );
+    }
+
+    let n_stream = if quick { 2_000 } else { 20_000 };
+    let stream = data::random_code_stream(&ck, n_stream, 11);
+
+    // bit-exactness gate before timing anything: engine == baseline == sim
+    let probe = &stream[..stream.len().min(256)];
+    let oracle = sim::eval_batch(&net, probe);
+    assert_eq!(engine::run_batch(&prog, probe), oracle, "engine diverges from sim");
+    {
+        let mut bex = baseline::Executor::with_capacity(&base_prog, probe.len());
+        assert_eq!(bex.run_batch(&base_prog, probe), oracle, "baseline diverges from sim");
+    }
+
+    // -- 1. executor A/B across batch sizes ---------------------------------
+    println!("-- transposed integer executor vs PR-2 sample-major baseline --");
+    for batch in [1usize, 16, 64, 256] {
+        let mut bex = baseline::Executor::with_capacity(&base_prog, batch);
+        let r_base = common::bench(&format!("baseline sample-major f64 (batch {batch})"), || {
+            for chunk in stream.chunks(batch) {
+                std::hint::black_box(bex.run_batch(&base_prog, chunk));
+            }
+        });
+        let mut ex = engine::Executor::with_capacity(&prog, batch);
+        let mut flat: Vec<i64> = Vec::new();
+        let r_new = common::bench(&format!("feature-major int into-flat (batch {batch})"), || {
+            for chunk in stream.chunks(batch) {
+                ex.run_batch_into(&prog, chunk, &mut flat);
+                std::hint::black_box(&flat);
+            }
+        });
+        common::report_throughput(&r_new, stream.len());
+        let samples_per_s = stream.len() as f64 / (r_new.median_ns / 1e9);
+        println!(
+            "      batch {batch:>3}: transposed integer engine is {:.2}x baseline | {:.3e} fused ops/s ({:.0} samples/s) | scratch {} B",
+            r_base.median_ns / r_new.median_ns,
+            samples_per_s * prog.n_ops() as f64,
+            samples_per_s,
+            ex.scratch_bytes()
+        );
+    }
+
+    // -- 2. requant plan vs float oracle ------------------------------------
+    println!("-- integer requant plan vs float encode(from_fixed(..)) oracle --");
+    let q = Quantizer::new(6, ck.domain.0, ck.domain.1);
+    let plan = RequantPlan::build(q, ck.frac_bits);
+    println!("  plan lowering: {} (bits {})", plan.kind_name(), q.bits);
+    let sums: Vec<i64> = (0..65_536i64).map(|i| (i * 2_654_435_761) % (1 << 20) - (1 << 19)).collect();
+    let r_float = common::bench("requant float oracle (64k sums)", || {
+        let mut acc = 0u32;
+        for &s in &sums {
+            acc = acc.wrapping_add(q.encode_fixed(s, ck.frac_bits));
+        }
+        std::hint::black_box(acc);
+    });
+    let r_plan = common::bench("requant integer plan (64k sums)", || {
+        let mut acc = 0u32;
+        for &s in &sums {
+            acc = acc.wrapping_add(plan.encode_sum(s));
+        }
+        std::hint::black_box(acc);
+    });
+    println!("      integer plan is {:.2}x the float oracle", r_float.median_ns / r_plan.median_ns);
+
+    // -- 3. flat outputs vs per-sample Vec<Vec<i64>> -------------------------
+    println!("-- run_batch_into (zero-alloc) vs run_batch (nested vecs) --");
+    let batch = 64usize;
+    let mut ex = engine::Executor::with_capacity(&prog, batch);
+    let r_nested = common::bench("run_batch nested vecs (batch 64)", || {
+        for chunk in stream.chunks(batch) {
+            std::hint::black_box(ex.run_batch(&prog, chunk));
+        }
+    });
+    let mut flat: Vec<i64> = Vec::new();
+    let r_flat = common::bench("run_batch_into flat plane (batch 64)", || {
+        for chunk in stream.chunks(batch) {
+            ex.run_batch_into(&prog, chunk, &mut flat);
+            std::hint::black_box(&flat);
+        }
+    });
+    println!("      flat outputs are {:.2}x nested vecs", r_nested.median_ns / r_flat.median_ns);
+}

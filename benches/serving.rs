@@ -43,16 +43,23 @@ fn main() {
                 std::hint::black_box(sim::eval_batch(&net, chunk));
             }
         });
+        // reused flat output plane — exactly what the coordinator's
+        // executor workers run
         let mut exec = engine::Executor::with_capacity(&prog, batch);
-        let r_comp = common::bench(&format!("compiled run_batch    (batch {batch})"), || {
+        let mut flat: Vec<i64> = Vec::new();
+        let r_comp = common::bench(&format!("compiled run_batch_into (batch {batch})"), || {
             for chunk in stream.chunks(batch) {
-                std::hint::black_box(exec.run_batch(&prog, chunk));
+                exec.run_batch_into(&prog, chunk, &mut flat);
+                std::hint::black_box(&flat);
             }
         });
         common::report_throughput(&r_comp, stream.len());
+        let samples_per_s = stream.len() as f64 / (r_comp.median_ns / 1e9);
         println!(
-            "      batch {batch:>3}: compiled is {:.2}x interpreted",
-            r_interp.median_ns / r_comp.median_ns
+            "      batch {batch:>3}: compiled is {:.2}x interpreted | {:.3e} fused ops/s ({:.0} samples/s)",
+            r_interp.median_ns / r_comp.median_ns,
+            samples_per_s * prog.n_ops() as f64,
+            samples_per_s
         );
     }
 
@@ -102,8 +109,9 @@ fn main() {
                 let scaling = rps / *base_rps.get_or_insert(rps);
                 let st = svc.stats();
                 println!(
-                    "{:<11} batch {batch:>3} wait {wait_us:>3} us workers {workers} -> {rps:>9.0} req/s ({scaling:>4.2}x vs 1 worker) | p50 {:>7.1} us p99 {:>8.1} us | mean batch {:>6.1} ({} batches)",
+                    "{:<11} batch {batch:>3} wait {wait_us:>3} us workers {workers} -> {rps:>9.0} req/s ({scaling:>4.2}x vs 1 worker) | {:.3e} ops/s | p50 {:>7.1} us p99 {:>8.1} us | mean batch {:>6.1} ({} batches)",
                     format!("{backend:?}"),
+                    st.throughput_ops,
                     st.latency_p50_us,
                     st.latency_p99_us,
                     st.mean_batch,

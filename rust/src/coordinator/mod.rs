@@ -177,7 +177,15 @@ pub struct ServiceStats {
     pub mean_batch: f64,
     pub latency_p50_us: f64,
     pub latency_p99_us: f64,
+    /// Samples per second over the service lifetime.
     pub throughput_rps: f64,
+    /// Fused LUT ops executed (samples x ops-per-sample).
+    pub fused_ops: u64,
+    /// Fused LUT ops per second over the service lifetime — the single
+    /// comparable perf number across backends, batch sizes and PRs.
+    pub throughput_ops: f64,
+    /// Largest executor scratch footprint observed (bytes).
+    pub scratch_bytes: u64,
 }
 
 struct Shared {
@@ -189,6 +197,13 @@ struct Shared {
     batches: AtomicU64,
     /// Total requests across all formed batches (mean batch = this / batches).
     batched: AtomicU64,
+    /// Fused LUT ops executed (valid samples x ops-per-sample), counted at
+    /// execution: the backend-independent work unit that makes perf numbers
+    /// comparable across PRs.
+    fused_ops: AtomicU64,
+    /// Largest executor scratch footprint observed, bytes (feature-major
+    /// planes grow to the biggest batch seen and never shrink).
+    scratch: AtomicU64,
 }
 
 /// Batched inference service over a netlist.
@@ -227,6 +242,8 @@ impl Service {
             dropped: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched: AtomicU64::new(0),
+            fused_ops: AtomicU64::new(0),
+            scratch: AtomicU64::new(0),
         });
         let mut threads = Vec::with_capacity(cfg.workers + 1);
         let mut rx_parked = None;
@@ -350,6 +367,8 @@ impl Service {
         let completed = self.shared.completed.load(Ordering::Relaxed);
         let batches = self.shared.batches.load(Ordering::Relaxed);
         let batched = self.shared.batched.load(Ordering::Relaxed);
+        let fused_ops = self.shared.fused_ops.load(Ordering::Relaxed);
+        let elapsed = self.started.elapsed().as_secs_f64();
         ServiceStats {
             completed,
             rejected: self.shared.rejected.load(Ordering::Relaxed),
@@ -358,7 +377,10 @@ impl Service {
             mean_batch: if batches == 0 { 0.0 } else { batched as f64 / batches as f64 },
             latency_p50_us: p50 * 1e6,
             latency_p99_us: p99 * 1e6,
-            throughput_rps: completed as f64 / self.started.elapsed().as_secs_f64(),
+            throughput_rps: completed as f64 / elapsed,
+            fused_ops,
+            throughput_ops: fused_ops as f64 / elapsed,
+            scratch_bytes: self.shared.scratch.load(Ordering::Relaxed),
         }
     }
 
@@ -428,19 +450,22 @@ fn dispatcher_loop(
 /// unlike the old design, no lock is held across a batch-collection wait.
 fn executor_loop(work_rx: WorkQueue, backend: WorkerBackend, shared: Arc<Shared>, cfg: ServiceCfg) {
     // per-executor scratch, reused across batches and hot-swaps; sized so
-    // the compiled hot path never allocates planes after startup
+    // the compiled hot path never allocates planes after startup. `flat` is
+    // the caller-owned output plane of `run_batch_into`: one flat buffer
+    // per executor instead of a Vec<Vec<i64>> per batch.
     let mut exec = match &backend {
         WorkerBackend::Compiled(programs) => {
             Executor::with_capacity(&programs.load().1, cfg.max_batch)
         }
         WorkerBackend::Interpreted(_) => Executor::new(),
     };
+    let mut flat: Vec<i64> = Vec::new();
     loop {
         let batch = match work_rx.lock().unwrap().recv() {
             Ok(b) => b,
             Err(_) => return, // dispatcher hung up and the queue is drained
         };
-        execute_batch(batch, &backend, &mut exec, &shared, &cfg);
+        execute_batch(batch, &backend, &mut exec, &mut flat, &shared, &cfg);
     }
 }
 
@@ -449,6 +474,7 @@ fn execute_batch(
     batch: Batch<Pending>,
     backend: &WorkerBackend,
     exec: &mut Executor,
+    flat: &mut Vec<i64>,
     shared: &Shared,
     cfg: &ServiceCfg,
 ) {
@@ -462,36 +488,59 @@ fn execute_batch(
         WorkerBackend::Compiled(programs) => {
             let (net, prog) = programs.load();
             let d_in = prog.d_in();
+            let d_out = prog.d_out();
             let rows: Vec<&[u32]> = items
                 .iter()
                 .map(|p| p.req.codes.as_slice())
                 .filter(|r| r.len() == d_in)
                 .collect();
-            let outs = exec.run_batch(&prog, &rows);
+            // whole batch into the reused flat plane: the engine allocates
+            // nothing; per-request sums are sliced out at completion
+            exec.run_batch_into(&prog, &rows, flat);
+            shared
+                .fused_ops
+                .fetch_add((rows.len() * prog.n_ops()) as u64, Ordering::Relaxed);
+            shared.scratch.fetch_max(exec.scratch_bytes() as u64, Ordering::Relaxed);
             // checked invariant: the compiled program IS the netlist
             if cfg!(debug_assertions) {
                 let mut ev = sim::Evaluator::new(&net);
-                for (row, out) in rows.iter().zip(&outs) {
-                    debug_assert_eq!(ev.eval(row), out.as_slice(), "engine/sim divergence");
+                for (i, row) in rows.iter().enumerate() {
+                    debug_assert_eq!(
+                        ev.eval(row),
+                        &flat[i * d_out..(i + 1) * d_out],
+                        "engine/sim divergence"
+                    );
                 }
             }
-            let mut outs = outs.into_iter();
+            let mut next = 0usize;
             items
                 .iter()
                 .map(|p| {
-                    (p.req.codes.len() == d_in)
-                        .then(|| outs.next().expect("one output per valid row"))
+                    (p.req.codes.len() == d_in).then(|| {
+                        let sums = flat[next * d_out..(next + 1) * d_out].to_vec();
+                        next += 1;
+                        sums
+                    })
                 })
                 .collect()
         }
         WorkerBackend::Interpreted(cell) => {
             let net = cell.load();
             let d_in = net.input_width();
+            let ops_per_sample = net.n_luts() as u64;
             let mut ev = sim::Evaluator::new(&net);
-            items
+            let mut valid = 0u64;
+            let outs: Vec<Option<Vec<i64>>> = items
                 .iter()
-                .map(|p| (p.req.codes.len() == d_in).then(|| ev.eval(&p.req.codes).to_vec()))
-                .collect()
+                .map(|p| {
+                    (p.req.codes.len() == d_in).then(|| {
+                        valid += 1;
+                        ev.eval(&p.req.codes).to_vec()
+                    })
+                })
+                .collect();
+            shared.fused_ops.fetch_add(valid * ops_per_sample, Ordering::Relaxed);
+            outs
         }
     };
     if !cfg.exec_delay.is_zero() {
@@ -559,6 +608,8 @@ mod tests {
             for (rx, w) in pending.into_iter().zip(want) {
                 assert_eq!(rx.recv().unwrap().sums, w, "{backend:?}");
             }
+            // both backends count the same backend-independent work unit
+            assert_eq!(svc.stats().fused_ops, 100 * net.n_luts() as u64, "{backend:?}");
             svc.shutdown();
         }
     }
@@ -581,6 +632,11 @@ mod tests {
         let stats = svc.stats();
         assert_eq!(stats.completed, 200);
         assert!(stats.batches >= 1);
+        // ops accounting: every completed sample ran the whole program once
+        assert_eq!(stats.fused_ops, 200 * net.n_luts() as u64);
+        assert!(stats.throughput_ops > 0.0);
+        // the compiled backend publishes its feature-major scratch footprint
+        assert!(stats.scratch_bytes > 0);
         svc.shutdown();
     }
 

@@ -1,4 +1,4 @@
-//! Batch-major execution of a [`CompiledProgram`].
+//! Feature-major, integer-only batch execution of a [`CompiledProgram`].
 //!
 //! The interpreter ([`crate::sim::Evaluator`]) advances one *sample* at a
 //! time, re-walking the whole structure per request. The executor inverts
@@ -7,27 +7,97 @@
 //! once per batch and the per-op bookkeeping (offset, mask, indices)
 //! amortizes over N samples.
 //!
-//! Scratch is double-buffered and planned at compile time: one `u32` code
-//! plane and one `i64` sum plane, each `batch x max_width`, flipped at the
-//! requant boundary between layers. No allocation happens on the serving
-//! hot path after the first batch of a given size.
+//! **Layout contract (feature-major planes).** Scratch planes are stored
+//! transposed: `plane[feature * n + sample]`, where `n` is the current
+//! batch size. An op reading input `i` and accumulating into neuron `q`
+//! therefore touches exactly two *contiguous* runs of `n` words — the old
+//! sample-major layout (`plane[sample * width + feature]`) strided both
+//! accesses by the layer width, defeating prefetch and auto-vectorization.
+//! Requests are transposed in at batch entry and the final sums transposed
+//! out at batch exit; everything in between is sequential.
+//!
+//! **Integer requant contract.** The inter-layer flip applies the layer's
+//! [`RequantPlan`] (`encode_sum`: fixed-point multiply/shift or threshold
+//! search), which is bit-exact with the float oracle
+//! `Quantizer::encode_fixed` by construction — so the hot path performs no
+//! floating-point arithmetic for any paper-scale program (code widths
+//! `<=` [`super::program::PLAN_MAX_BITS`]).
+//!
+//! **Lanes.** Each layer runs in the scratch lane its compile-time range
+//! analysis proved safe: i32 planes and tables where no partial sum can
+//! overflow, i64 otherwise ([`super::program::Lane`]).
+//!
+//! **Scratch growth.** Planes are grown (never shrunk) to
+//! `batch x max_width` on demand: the first batch of a new largest size
+//! allocates, every later batch of any smaller size reuses the same
+//! capacity, so the serving hot path settles to zero allocation. The
+//! current footprint is observable via [`Executor::scratch_bytes`] (the
+//! `kanele serve` stats line reports the max across executors).
 
-use crate::fixed::from_fixed;
+use super::program::{CompiledProgram, Lane, LutOp};
 
-use super::program::CompiledProgram;
-
-/// Reusable batch executor: owns the double-buffered scratch planes.
+/// Reusable batch executor: owns the feature-major scratch planes.
 ///
 /// Independent of any particular program (scratch grows to the largest
-/// `batch x max_width` seen), so one executor per worker thread serves
-/// across hot-swaps.
+/// `batch x max_width` seen and never shrinks), so one executor per worker
+/// thread serves across hot-swaps.
 #[derive(Default)]
 pub struct Executor {
-    /// Front buffer: current layer's input codes, batch-major
-    /// (`codes[s * d_in + p]` = input `p` of sample `s`).
+    /// Code plane, feature-major (`codes[f * n + s]` = feature `f` of
+    /// sample `s`): the current layer's inputs.
     codes: Vec<u32>,
-    /// Back buffer: current layer's accumulator sums, batch-major.
-    sums: Vec<i64>,
+    /// Narrow accumulator plane (layers whose range analysis fits i32).
+    sums32: Vec<i32>,
+    /// Wide accumulator plane (exact fallback lane).
+    sums64: Vec<i64>,
+}
+
+/// The two accumulator widths the per-layer loop is monomorphized over.
+trait LaneWord: Copy + std::ops::AddAssign {
+    fn from_i64(v: i64) -> Self;
+}
+
+impl LaneWord for i64 {
+    #[inline(always)]
+    fn from_i64(v: i64) -> i64 {
+        v
+    }
+}
+
+impl LaneWord for i32 {
+    #[inline(always)]
+    fn from_i64(v: i64) -> i32 {
+        // lossless: the compile-time range analysis proved the value fits
+        debug_assert!(i32::try_from(v).is_ok(), "narrow-lane value out of range");
+        v as i32
+    }
+}
+
+/// One layer over the whole batch: seed biases, then stream the op slice.
+/// Every op reads `codes[input*n..][..n]` and writes `sums[neuron*n..][..n]`
+/// — two contiguous runs; the table gather stays in cache (tables are
+/// `2^bits` entries).
+fn run_layer<T: LaneWord>(
+    ops: &[LutOp],
+    tables: &[T],
+    biases: &[i64],
+    codes: &[u32],
+    sums: &mut [T],
+    n: usize,
+) {
+    for (q, &bias) in biases.iter().enumerate() {
+        sums[q * n..(q + 1) * n].fill(T::from_i64(bias));
+    }
+    for op in ops {
+        let off = op.table_off as usize;
+        let mask = op.addr_mask as usize;
+        let table = &tables[off..off + mask + 1];
+        let src = &codes[op.input as usize * n..op.input as usize * n + n];
+        let dst = &mut sums[op.neuron as usize * n..op.neuron as usize * n + n];
+        for (acc, &code) in dst.iter_mut().zip(src) {
+            *acc += table[code as usize & mask];
+        }
+    }
 }
 
 impl Executor {
@@ -35,82 +105,371 @@ impl Executor {
         Executor::default()
     }
 
-    /// Preallocate scratch for batches up to `batch` samples of `prog`.
+    /// Preallocate scratch for batches up to `batch` samples of `prog`
+    /// (only the lanes `prog` actually uses).
     pub fn with_capacity(prog: &CompiledProgram, batch: usize) -> Executor {
-        Executor {
-            codes: Vec::with_capacity(batch * prog.max_width()),
-            sums: Vec::with_capacity(batch * prog.max_width()),
+        let mut ex = Executor::default();
+        let words = batch * prog.max_width();
+        ex.codes.reserve(words);
+        if prog.uses_i32() {
+            ex.sums32.reserve(words);
+        }
+        if prog.uses_i64() {
+            ex.sums64.reserve(words);
+        }
+        ex
+    }
+
+    /// Current scratch footprint in bytes (plane capacities). Monotone
+    /// nondecreasing across the executor's life: planes grow to the largest
+    /// `batch x max_width` seen and are never shrunk, so this number
+    /// stabilizes after the first largest batch — the serving hot path
+    /// allocates nothing after that point.
+    pub fn scratch_bytes(&self) -> usize {
+        self.codes.capacity() * std::mem::size_of::<u32>()
+            + self.sums32.capacity() * std::mem::size_of::<i32>()
+            + self.sums64.capacity() * std::mem::size_of::<i64>()
+    }
+
+    /// Run every sample of `batch` through the program, writing the flat
+    /// sample-major output plane (`out[s * d_out + q]`) into the
+    /// caller-owned buffer: `out` is cleared and refilled, so a reused
+    /// buffer makes the whole call allocation-free at steady state.
+    /// Bit-exact with [`crate::sim::eval`] per sample.
+    ///
+    /// Every row must be exactly `prog.d_in()` codes wide (panics
+    /// otherwise — in a feature-major plane a wrong-width row would shift
+    /// every later sample; the coordinator validates widths at admission).
+    pub fn run_batch_into<S: AsRef<[u32]>>(
+        &mut self,
+        prog: &CompiledProgram,
+        batch: &[S],
+        out: &mut Vec<i64>,
+    ) {
+        out.clear();
+        let n = batch.len();
+        let d_out = prog.d_out();
+        if n == 0 || d_out == 0 {
+            return;
+        }
+        // grow-only scratch: planes keep the largest length ever needed, so
+        // a new largest batch pays one grow and every other batch pays
+        // nothing — no per-batch zeroing (every word the layer loop reads
+        // is written first: packed inputs, bias-seeded sums, requant codes)
+        let words = n * prog.max_width();
+        if self.codes.len() < words {
+            self.codes.resize(words, 0);
+        }
+        if prog.uses_i32() && self.sums32.len() < words {
+            self.sums32.resize(words, 0);
+        }
+        if prog.uses_i64() && self.sums64.len() < words {
+            self.sums64.resize(words, 0);
+        }
+
+        // pack: transpose request rows into the feature-major code plane
+        // (the only strided writes of the whole batch)
+        let d0 = prog.d_in();
+        for (s, row) in batch.iter().enumerate() {
+            let row = row.as_ref();
+            assert_eq!(row.len(), d0, "batch row width != program d_in");
+            for (f, &code) in row.iter().enumerate() {
+                self.codes[f * n + s] = code;
+            }
+        }
+
+        let ops = prog.ops();
+        for plan in prog.layers() {
+            let biases = &prog.biases()[plan.bias_off..plan.bias_off + plan.d_out];
+            let layer_ops = &ops[plan.ops.clone()];
+            match plan.lane {
+                Lane::I32 => {
+                    run_layer(layer_ops, prog.tables32(), biases, &self.codes, &mut self.sums32, n)
+                }
+                Lane::I64 => {
+                    run_layer(layer_ops, prog.tables64(), biases, &self.codes, &mut self.sums64, n)
+                }
+            }
+            // requant boundary: integer flip of the sum plane back into the
+            // code plane — same feature-major layout on both sides, so this
+            // is one contiguous pass (and float-free for integer plans)
+            if let Some(rq) = &plan.requant {
+                let m = n * plan.d_out;
+                match plan.lane {
+                    Lane::I32 => {
+                        for (code, &sum) in self.codes[..m].iter_mut().zip(&self.sums32[..m]) {
+                            *code = rq.encode_sum(sum as i64);
+                        }
+                    }
+                    Lane::I64 => {
+                        for (code, &sum) in self.codes[..m].iter_mut().zip(&self.sums64[..m]) {
+                            *code = rq.encode_sum(sum);
+                        }
+                    }
+                }
+            }
+        }
+
+        // unpack: transpose the final feature-major sum plane into the flat
+        // sample-major output. Appending (instead of zero-resizing and
+        // index-writing) keeps the write stream sequential and skips a
+        // whole-plane memset that would be overwritten anyway.
+        out.reserve(n * d_out);
+        let last = prog.layers().last().expect("d_out > 0 implies layers");
+        match last.lane {
+            Lane::I32 => {
+                let sums = &self.sums32[..n * d_out];
+                for s in 0..n {
+                    out.extend((0..d_out).map(|q| sums[q * n + s] as i64));
+                }
+            }
+            Lane::I64 => {
+                let sums = &self.sums64[..n * d_out];
+                for s in 0..n {
+                    out.extend((0..d_out).map(|q| sums[q * n + s]));
+                }
+            }
         }
     }
 
-    /// Run every sample of `batch` through the program; returns one sum
-    /// vector per sample. Bit-exact with [`crate::sim::eval`] per sample.
-    ///
-    /// Every row must be exactly `prog.d_in()` codes wide (panics
-    /// otherwise — in a batch-major plane a wrong-width row would shift
-    /// every later sample; the coordinator validates widths at admission).
+    /// Per-sample convenience over [`Executor::run_batch_into`]: returns
+    /// one sum vector per sample (allocates the nested vectors; the serving
+    /// path threads a reused flat buffer instead).
     pub fn run_batch<S: AsRef<[u32]>>(
         &mut self,
         prog: &CompiledProgram,
         batch: &[S],
     ) -> Vec<Vec<i64>> {
         let n = batch.len();
-        if n == 0 || prog.layers().is_empty() {
+        let d_out = prog.d_out();
+        if n == 0 || d_out == 0 {
             return vec![Vec::new(); n];
         }
-        // pack the request rows into the batch-major input plane
-        let d0 = prog.d_in();
-        self.codes.clear();
-        self.codes.reserve(n * prog.max_width());
-        for row in batch {
-            let row = row.as_ref();
-            assert_eq!(row.len(), d0, "batch row width != program d_in");
-            self.codes.extend_from_slice(row);
-        }
-
-        let ops = prog.ops();
-        let tables = prog.tables();
-        for plan in prog.layers() {
-            let (d_in, d_out) = (plan.d_in, plan.d_out);
-            // seed the sum plane with the per-neuron constant operands
-            let biases = &prog.biases()[plan.bias_off..plan.bias_off + d_out];
-            self.sums.clear();
-            self.sums.reserve(n * prog.max_width());
-            for _ in 0..n {
-                self.sums.extend_from_slice(biases);
-            }
-            let codes = &self.codes[..n * d_in];
-            let sums = &mut self.sums[..n * d_out];
-            // fused gather + accumulate, batch-major: one sequential scan
-            // of the table arena per batch
-            for op in &ops[plan.ops.clone()] {
-                let off = op.table_off as usize;
-                let mask = op.addr_mask as usize;
-                let table = &tables[off..off + mask + 1];
-                let (input, neuron) = (op.input as usize, op.neuron as usize);
-                for s in 0..n {
-                    let addr = codes[s * d_in + input] as usize & mask;
-                    sums[s * d_out + neuron] += table[addr];
-                }
-            }
-            // requant boundary: flip sums back into the code plane
-            if let Some(q) = &plan.requant {
-                self.codes.clear();
-                for &sum in self.sums[..n * d_out].iter() {
-                    self.codes.push(q.encode(from_fixed(sum, prog.frac_bits)));
-                }
-            }
-        }
-
-        let d_out = prog.d_out();
-        (0..n)
-            .map(|s| self.sums[s * d_out..(s + 1) * d_out].to_vec())
-            .collect()
+        let mut flat = Vec::with_capacity(n * d_out);
+        self.run_batch_into(prog, batch, &mut flat);
+        flat.chunks(d_out).map(|c| c.to_vec()).collect()
     }
 }
 
-/// One-shot convenience over a fresh [`Executor`] (allocates; the serving
-/// path holds a per-worker executor instead).
+/// One-shot convenience over a fresh [`Executor`] sized for this batch
+/// (allocates once up front; the serving path holds a per-worker executor
+/// plus a reused flat output buffer instead).
 pub fn run_batch<S: AsRef<[u32]>>(prog: &CompiledProgram, batch: &[S]) -> Vec<Vec<i64>> {
-    Executor::new().run_batch(prog, batch)
+    Executor::with_capacity(prog, batch.len()).run_batch(prog, batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::synthetic;
+    use crate::fixed::Quantizer;
+    use crate::lut;
+    use crate::netlist::{adder_depth, LayerNet, LutInst, Netlist, NeuronNet};
+    use crate::sim;
+    use crate::util::Rng;
+
+    fn net_for(dims: &[usize], bits: &[u32], seed: u64) -> Netlist {
+        let ck = synthetic(dims, bits, seed);
+        let tables = lut::from_checkpoint(&ck);
+        Netlist::build(&ck, &tables, 2)
+    }
+
+    fn random_batch(rng: &mut Rng, n: usize, d: usize, bits: u32) -> Vec<Vec<u32>> {
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.below(1 << bits) as u32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn run_batch_into_matches_run_batch_and_sim() {
+        let net = net_for(&[4, 3, 2], &[4, 5, 6], 301);
+        let prog = CompiledProgram::compile(&net);
+        let mut rng = Rng::new(8);
+        let mut ex = Executor::new();
+        let mut flat = Vec::new();
+        for n in [1usize, 5, 64, 2] {
+            let batch = random_batch(&mut rng, n, 4, 4);
+            ex.run_batch_into(&prog, &batch, &mut flat);
+            let want = sim::eval_batch(&net, &batch);
+            assert_eq!(flat.len(), n * prog.d_out());
+            let want_flat: Vec<i64> = want.iter().flatten().copied().collect();
+            assert_eq!(flat, want_flat);
+            assert_eq!(ex.run_batch(&prog, &batch), want);
+        }
+    }
+
+    #[test]
+    fn flat_buffer_is_reused_and_scratch_never_shrinks() {
+        let net = net_for(&[5, 4, 3], &[4, 4, 5], 77);
+        let prog = CompiledProgram::compile(&net);
+        let mut rng = Rng::new(3);
+        let mut ex = Executor::with_capacity(&prog, 8);
+        let mut flat = Vec::new();
+
+        let big = random_batch(&mut rng, 256, 5, 4);
+        ex.run_batch_into(&prog, &big, &mut flat);
+        let peak = ex.scratch_bytes();
+        let flat_cap = flat.capacity();
+        assert!(peak >= 256 * prog.max_width() * std::mem::size_of::<u32>());
+
+        // smaller batches must not shrink scratch or reallocate the buffer
+        for n in [1usize, 31, 256] {
+            let batch = random_batch(&mut rng, n, 5, 4);
+            ex.run_batch_into(&prog, &batch, &mut flat);
+            assert_eq!(ex.scratch_bytes(), peak, "planes must never shrink");
+            assert_eq!(flat.capacity(), flat_cap, "flat buffer must be reused");
+            let want: Vec<i64> =
+                sim::eval_batch(&net, &batch).iter().flatten().copied().collect();
+            assert_eq!(flat, want);
+        }
+    }
+
+    #[test]
+    fn empty_batch_clears_out() {
+        let net = net_for(&[3, 2], &[3, 6], 5);
+        let prog = CompiledProgram::compile(&net);
+        let mut ex = Executor::new();
+        let mut flat = vec![1, 2, 3];
+        let empty: Vec<Vec<u32>> = Vec::new();
+        ex.run_batch_into(&prog, &empty, &mut flat);
+        assert!(flat.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "batch row width != program d_in")]
+    fn wrong_width_row_panics() {
+        let net = net_for(&[3, 2], &[3, 6], 5);
+        let prog = CompiledProgram::compile(&net);
+        let mut ex = Executor::new();
+        ex.run_batch(&prog, &[vec![0u32, 1]]);
+    }
+
+    /// Two-layer netlist whose FIRST layer needs the wide lane (one neuron
+    /// with ±2^40 entries) while the other neuron stays small enough that
+    /// requant produces varied (not rail-clamped) codes, and whose second
+    /// layer is narrow: exercises the i64 lane, the wide->requant flip, and
+    /// the mixed-lane handoff in one program.
+    fn mixed_lane_net() -> Netlist {
+        let small = |seed: i64| -> Vec<i64> { (0..8).map(|i| (i * 97 + seed) % 3000 - 1500).collect() };
+        let big = 1i64 << 40;
+        let l0_neurons = vec![
+            NeuronNet {
+                luts: vec![
+                    LutInst { input: 0, table: small(11), out_width: 12 },
+                    LutInst { input: 1, table: small(23), out_width: 12 },
+                ],
+                bias: 0,
+                depth: adder_depth(2, 2),
+                sum_width: 14,
+            },
+            NeuronNet {
+                luts: vec![
+                    LutInst { input: 0, table: vec![big; 8], out_width: 42 },
+                    LutInst { input: 1, table: vec![-big; 8], out_width: 42 },
+                ],
+                bias: 0,
+                depth: adder_depth(2, 2),
+                sum_width: 43,
+            },
+        ];
+        let l1_neurons = vec![NeuronNet {
+            luts: vec![
+                LutInst { input: 0, table: small(5), out_width: 12 },
+                LutInst { input: 1, table: small(7), out_width: 12 },
+            ],
+            bias: 0,
+            depth: adder_depth(2, 2),
+            sum_width: 14,
+        }];
+        Netlist {
+            name: "mixed-lane".into(),
+            layers: vec![
+                LayerNet {
+                    d_in: 2,
+                    d_out: 2,
+                    in_bits: 3,
+                    out_bits: 3,
+                    neurons: l0_neurons,
+                    requant: Some(Quantizer::new(3, -4.0, 4.0)),
+                    depth: 1,
+                },
+                LayerNet {
+                    d_in: 2,
+                    d_out: 1,
+                    in_bits: 3,
+                    out_bits: 8,
+                    neurons: l1_neurons,
+                    requant: None,
+                    depth: 1,
+                },
+            ],
+            n_add: 2,
+            frac_bits: 12,
+            domain: (-4.0, 4.0),
+        }
+    }
+
+    #[test]
+    fn mixed_lanes_match_interpreter() {
+        let net = mixed_lane_net();
+        let prog = CompiledProgram::compile(&net);
+        assert_eq!(prog.layers()[0].lane, Lane::I64);
+        assert_eq!(prog.layers()[1].lane, Lane::I32);
+        let batch: Vec<Vec<u32>> = (0..64).map(|i| vec![i % 8, (i * 5 + 3) % 8]).collect();
+        assert_eq!(run_batch(&prog, &batch), sim::eval_batch(&net, &batch));
+    }
+
+    #[test]
+    fn wide_lane_output_layer_unpacks_i64() {
+        // wide lane on the LAST layer: the unpack transpose must read the
+        // i64 plane (big raw sums survive to the output untouched)
+        let big = 1i64 << 40;
+        let neurons = vec![NeuronNet {
+            luts: vec![LutInst { input: 0, table: vec![big; 8], out_width: 42 }],
+            bias: 0,
+            depth: 0,
+            sum_width: 42,
+        }];
+        let net = Netlist {
+            name: "wide-out".into(),
+            layers: vec![LayerNet {
+                d_in: 1,
+                d_out: 1,
+                in_bits: 3,
+                out_bits: 8,
+                neurons,
+                requant: None,
+                depth: 0,
+            }],
+            n_add: 2,
+            frac_bits: 12,
+            domain: (-4.0, 4.0),
+        };
+        let prog = CompiledProgram::compile(&net);
+        assert_eq!(prog.layers()[0].lane, Lane::I64);
+        let batch = vec![vec![0u32], vec![7u32]];
+        let got = run_batch(&prog, &batch);
+        assert_eq!(got, sim::eval_batch(&net, &batch));
+        assert_eq!(got[0][0], big);
+    }
+
+    #[test]
+    fn one_shot_run_batch_presizes_scratch() {
+        // the free-function convenience must size its executor via
+        // with_capacity (regression for the old Executor::new() one-shot)
+        let net = net_for(&[4, 3, 2], &[4, 5, 6], 17);
+        let prog = CompiledProgram::compile(&net);
+        let ex = Executor::with_capacity(&prog, 64);
+        let words = 64 * prog.max_width();
+        assert!(ex.scratch_bytes() >= words * (std::mem::size_of::<u32>() + std::mem::size_of::<i32>()));
+        // ... and reserves only the lanes the program uses: this all-narrow
+        // program must not have paid for an i64 plane
+        assert!(
+            ex.scratch_bytes()
+                < words
+                    * (std::mem::size_of::<u32>()
+                        + std::mem::size_of::<i32>()
+                        + std::mem::size_of::<i64>())
+        );
+    }
 }

@@ -1,20 +1,29 @@
 //! Compiled netlist execution engine — the serving backend.
 //!
-//! The paper's deployment target is a streaming II=1 accelerator; the
-//! software substitute for *correctness* is [`crate::sim`], which walks the
+//! The paper's deployment target is a streaming II=1 accelerator whose
+//! whole inference is LUT lookups and integer adds; the software
+//! substitute for *correctness* is [`crate::sim`], which walks the
 //! `Netlist` object graph (`layers -> neurons -> luts`) per sample. That
 //! pointer chase is the wrong shape for the serving hot path, so this
-//! module splits execution into **compile once, run batches**:
+//! module splits execution into **compile once, run batches** — and the
+//! compiled hot path is, like the hardware, integer-only:
 //!
 //! * [`CompiledProgram`] ([`program`]) — the netlist lowered to flat
-//!   arrays: one packed table arena, a fused gather+accumulate op stream
-//!   with resolved indices, per-layer requant plans, and the scratch
-//!   geometry, all fixed at compile time.
-//! * [`Executor`] ([`exec`]) — batch-major execution: each op is applied
-//!   to all N samples before the next op, turning the per-sample random
-//!   walk into sequential table scans. Bit-exact with [`crate::sim::eval`]
-//!   by construction (i64 accumulation is order-exact, requant is the same
-//!   [`crate::fixed::Quantizer`] code path).
+//!   arrays: packed table arenas **narrowed to i32 where a per-layer range
+//!   analysis proves no partial sum can overflow** ([`Lane`]), a fused
+//!   gather+accumulate op stream with resolved indices, **integer requant
+//!   plans** ([`RequantPlan`]: fixed-point multiply/shift or threshold
+//!   table, bit-exact with the float `Quantizer::encode_fixed` oracle by
+//!   construction), and the scratch geometry, all fixed at compile time.
+//! * [`Executor`] ([`exec`]) — **feature-major** batch execution: scratch
+//!   planes are transposed (`plane[feature * n + sample]`) so each op
+//!   reads and writes contiguous runs of `n` words, and each op is applied
+//!   to all N samples before the next op — sequential arena scans instead
+//!   of the per-sample random walk, with no floats and no allocation on
+//!   the steady-state path ([`Executor::run_batch_into`] fills a
+//!   caller-owned flat plane). Bit-exact with [`crate::sim::eval`]
+//!   (in-lane accumulation is order-exact by the range analysis, requant
+//!   plans are proven equal to the float path).
 //! * [`ProgramCell`] ([`swap`]) — hot-swap support: recompile on netlist
 //!   change + atomic program publication, preserving the netlist cell's
 //!   batch-consistent snapshot semantics.
@@ -28,12 +37,12 @@ pub mod program;
 pub mod swap;
 
 pub use exec::{run_batch, Executor};
-pub use program::{CompiledProgram, LayerPlan, LutOp};
+pub use program::{CompiledProgram, Lane, LayerPlan, LutOp, RequantPlan, PLAN_MAX_BITS};
 pub use swap::ProgramCell;
 
 use crate::netlist::Netlist;
 
-/// Lower a netlist into its flat batch-major program.
+/// Lower a netlist into its flat feature-major program.
 pub fn compile(net: &Netlist) -> CompiledProgram {
     CompiledProgram::compile(net)
 }
@@ -178,7 +187,24 @@ mod tests {
         let (a, b) = (compile(&net), compile(&net));
         assert_eq!(a.n_ops(), b.n_ops());
         assert_eq!(a.table_words(), b.table_words());
-        assert_eq!(a.tables(), b.tables());
+        assert_eq!(a.tables32(), b.tables32());
+        assert_eq!(a.tables64(), b.tables64());
         assert_eq!(a.biases(), b.biases());
+        for (pa, pb) in a.layers().iter().zip(b.layers()) {
+            assert_eq!(pa.lane, pb.lane);
+        }
+    }
+
+    #[test]
+    fn serving_hot_path_is_float_free_for_paper_scale_programs() {
+        // every requant plan of a paper-scale (<= 8-bit codes) program must
+        // lower to integer form — the engine's core claim
+        let net = net_for(&[6, 5, 4, 2], &[3, 4, 4, 6], 91, 2);
+        let prog = compile(&net);
+        for plan in prog.layers() {
+            if let Some(rq) = &plan.requant {
+                assert!(rq.is_integer(), "float fallback on a {}-bit quantizer", rq.quantizer().bits);
+            }
+        }
     }
 }

@@ -1,31 +1,46 @@
-//! The compiled program representation: structure-of-arrays LUT storage and
-//! a preplanned, fused op stream.
+//! The compiled program representation: structure-of-arrays LUT storage, a
+//! preplanned fused op stream, integer requantization plans, and per-layer
+//! accumulator lanes.
 //!
 //! [`CompiledProgram::compile`] lowers a [`Netlist`] once; execution then
-//! never touches the netlist object graph again. Layout decisions:
+//! never touches the netlist object graph again — and, since this PR, never
+//! touches floating point either. Layout decisions:
 //!
-//! * **Packed tables** — every truth table is appended to one contiguous
-//!   `Vec<i64>`; an op addresses its table by `(offset, mask)`. Ops are
-//!   emitted in `(layer, neuron, lut)` order, so a batch-major executor
-//!   walks the table arena front to back: sequential scans instead of the
-//!   interpreter's per-sample pointer chase.
+//! * **Packed, narrowed tables** — every truth table is appended to one of
+//!   two contiguous arenas; an op addresses its table by `(offset, mask)`
+//!   within its layer's arena. A compile-time range analysis
+//!   ([`analyze_lane`]) proves, per layer, whether every table entry *and*
+//!   every in-order partial accumulator sum fits in i32; if so the layer's
+//!   tables live in the i32 arena and its sums run in the i32 scratch lane,
+//!   halving hot-loop bandwidth. Layers that could overflow keep the exact
+//!   i64 lane. Ops are emitted in `(layer, neuron, lut)` order, so the
+//!   executor walks each arena front to back: sequential scans instead of
+//!   the interpreter's per-sample pointer chase.
 //! * **Fused ops** — one [`LutOp`] is a LUT gather *and* the accumulate
 //!   into its neuron's sum; the adder tree is a compile-time fiction here
-//!   (i64 addition is exact, so any summation order is bit-identical to
-//!   the pipelined tree the RTL and [`crate::sim::CycleSim`] implement).
-//! * **Requant plans** — the inter-layer quantize/saturate node is carried
-//!   as the layer's [`Quantizer`] copy, applied when flipping the
-//!   double-buffered scratch (see [`super::exec`]).
+//!   (in-lane addition is exact by the range analysis, so any summation
+//!   order is bit-identical to the pipelined tree the RTL and
+//!   [`crate::sim::CycleSim`] implement).
+//! * **Requant plans** — the inter-layer quantize/saturate node is lowered
+//!   by [`RequantPlan::build`] from the layer's [`Quantizer`] into
+//!   integer-only form: a fixed-point multiply/shift/clamp whose constants
+//!   are *constructed from* the exact code-boundary thresholds (so it is
+//!   bit-exact by construction, not by sampling), falling back to a sorted
+//!   threshold table when no linear form fits, and to the float oracle only
+//!   for code widths beyond [`PLAN_MAX_BITS`] (never produced by the
+//!   paper's flows). Equality with `Quantizer::encode_fixed` is enforced by
+//!   exhaustive and property tests below.
 
 use std::ops::Range;
 
 use crate::fixed::Quantizer;
-use crate::netlist::Netlist;
+use crate::netlist::{LayerNet, Netlist};
 
 /// One fused LUT-gather + accumulate op with fully resolved indices.
 #[derive(Clone, Copy, Debug)]
 pub struct LutOp {
-    /// Start of this op's truth table in the packed arena.
+    /// Start of this op's truth table in its layer's packed arena
+    /// (i32 or i64 arena according to [`LayerPlan::lane`]).
     pub table_off: u32,
     /// `table_len - 1`; masking the address reproduces the RTL's
     /// truncation semantics (tables are power-of-two sized).
@@ -36,8 +51,18 @@ pub struct LutOp {
     pub neuron: u32,
 }
 
-/// Execution plan for one layer: an op-stream slice plus the inter-layer
-/// requantization (None for the output layer).
+/// Accumulator/table lane a layer executes in, chosen at compile time by
+/// exact interval analysis (see [`CompiledProgram::compile`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    /// Tables and partial sums provably fit i32: half the memory traffic.
+    I32,
+    /// Conservative exact lane (matches the interpreter's i64 accumulator).
+    I64,
+}
+
+/// Execution plan for one layer: an op-stream slice, the lane, plus the
+/// inter-layer requantization plan (None for the output layer).
 #[derive(Clone, Debug)]
 pub struct LayerPlan {
     pub d_in: usize,
@@ -46,17 +71,22 @@ pub struct LayerPlan {
     pub ops: Range<usize>,
     /// Offset of this layer's `d_out` bias constants in the bias arena.
     pub bias_off: usize,
-    pub requant: Option<Quantizer>,
+    /// Which arena/scratch lane this layer's tables and sums use.
+    pub lane: Lane,
+    pub requant: Option<RequantPlan>,
 }
 
 /// An immutable netlist lowered to flat arrays — cheap to share, cheap to
-/// rebuild (hot-swap recompiles in O(total table entries)).
+/// rebuild (hot-swap recompiles in O(total table entries) plus the requant
+/// planning, O(code levels · log) per quantized boundary).
 #[derive(Clone, Debug)]
 pub struct CompiledProgram {
     pub name: String,
     pub frac_bits: u32,
-    /// All truth tables, packed back to back in op order.
-    tables: Vec<i64>,
+    /// i64 truth tables of wide-lane layers, packed back to back in op order.
+    tables64: Vec<i64>,
+    /// i32 truth tables of narrow-lane layers, packed back to back in op order.
+    tables32: Vec<i32>,
     /// The fused op stream, grouped by layer.
     ops: Vec<LutOp>,
     /// Per-neuron constant operands (folded biases), grouped by layer.
@@ -64,15 +94,20 @@ pub struct CompiledProgram {
     layers: Vec<LayerPlan>,
     d_in: usize,
     d_out: usize,
-    /// Widest layer interface — the per-sample scratch stride planned at
-    /// compile time (see [`super::exec::Executor`]).
+    /// Widest layer interface — the per-feature scratch plane count planned
+    /// at compile time (see [`super::exec::Executor`]).
     max_width: usize,
+    /// Whether any layer runs in the narrow / wide lane (precomputed so the
+    /// per-batch scratch sizing never rescans the layer list).
+    uses_i32: bool,
+    uses_i64: bool,
 }
 
 impl CompiledProgram {
-    /// Lower a netlist into the flat batch-major program.
+    /// Lower a netlist into the flat feature-major program.
     pub fn compile(net: &Netlist) -> CompiledProgram {
-        let mut tables = Vec::new();
+        let mut tables64 = Vec::new();
+        let mut tables32 = Vec::new();
         let mut ops = Vec::new();
         let mut biases = Vec::new();
         let mut layers = Vec::with_capacity(net.layers.len());
@@ -80,13 +115,25 @@ impl CompiledProgram {
         for layer in &net.layers {
             let ops_start = ops.len();
             let bias_off = biases.len();
+            let lane = analyze_lane(layer);
             for (q, neuron) in layer.neurons.iter().enumerate() {
                 biases.push(neuron.bias);
                 for lut in &neuron.luts {
                     debug_assert!(lut.table.len().is_power_of_two());
                     debug_assert!(lut.input < layer.d_in);
-                    let off = tables.len();
-                    tables.extend_from_slice(&lut.table);
+                    let off = match lane {
+                        Lane::I64 => {
+                            let off = tables64.len();
+                            tables64.extend_from_slice(&lut.table);
+                            off
+                        }
+                        Lane::I32 => {
+                            let off = tables32.len();
+                            // lossless: analyze_lane proved every entry fits
+                            tables32.extend(lut.table.iter().map(|&v| v as i32));
+                            off
+                        }
+                    };
                     ops.push(LutOp {
                         table_off: off as u32,
                         addr_mask: (lut.table.len() - 1) as u32,
@@ -101,19 +148,26 @@ impl CompiledProgram {
                 d_out: layer.d_out,
                 ops: ops_start..ops.len(),
                 bias_off,
-                requant: layer.requant,
+                lane,
+                requant: layer.requant.map(|q| RequantPlan::build(q, net.frac_bits)),
             });
         }
-        assert!(tables.len() <= u32::MAX as usize, "table arena exceeds u32 addressing");
+        assert!(
+            tables64.len() <= u32::MAX as usize && tables32.len() <= u32::MAX as usize,
+            "table arena exceeds u32 addressing"
+        );
         CompiledProgram {
             name: net.name.clone(),
             frac_bits: net.frac_bits,
-            tables,
+            tables64,
+            tables32,
             ops,
             biases,
             d_in: net.input_width(),
             d_out: net.layers.last().map(|l| l.d_out).unwrap_or(0),
             max_width,
+            uses_i32: layers.iter().any(|l| l.lane == Lane::I32),
+            uses_i64: layers.iter().any(|l| l.lane == Lane::I64),
             layers,
         }
     }
@@ -128,7 +182,7 @@ impl CompiledProgram {
         self.d_out
     }
 
-    /// Per-sample scratch stride (widest layer interface).
+    /// Widest layer interface (scratch planes per sample).
     pub fn max_width(&self) -> usize {
         self.max_width
     }
@@ -138,9 +192,16 @@ impl CompiledProgram {
         self.ops.len()
     }
 
-    /// Total packed table entries.
+    /// Total packed table entries across both arenas.
     pub fn table_words(&self) -> usize {
-        self.tables.len()
+        self.tables64.len() + self.tables32.len()
+    }
+
+    /// Bytes of packed table storage (the bandwidth the narrowing saves is
+    /// visible here: all-narrow programs cost half the all-wide bytes).
+    pub fn table_bytes(&self) -> usize {
+        self.tables64.len() * std::mem::size_of::<i64>()
+            + self.tables32.len() * std::mem::size_of::<i32>()
     }
 
     pub fn layers(&self) -> &[LayerPlan] {
@@ -151,8 +212,24 @@ impl CompiledProgram {
         &self.ops
     }
 
-    pub fn tables(&self) -> &[i64] {
-        &self.tables
+    /// Wide-lane table arena (layers with `lane == Lane::I64`).
+    pub fn tables64(&self) -> &[i64] {
+        &self.tables64
+    }
+
+    /// Narrow-lane table arena (layers with `lane == Lane::I32`).
+    pub fn tables32(&self) -> &[i32] {
+        &self.tables32
+    }
+
+    /// True iff some layer runs in the narrow (i32) lane.
+    pub fn uses_i32(&self) -> bool {
+        self.uses_i32
+    }
+
+    /// True iff some layer runs in the wide (i64) lane.
+    pub fn uses_i64(&self) -> bool {
+        self.uses_i64
     }
 
     pub fn biases(&self) -> &[i64] {
@@ -160,12 +237,295 @@ impl CompiledProgram {
     }
 }
 
+/// Exact interval analysis over one layer, in the executor's op order:
+/// the layer may run in the narrow lane iff every table entry and every
+/// in-order partial accumulator value provably fits i32. The reachable
+/// accumulator set after k tables is contained in
+/// `[bias + Σ min_i, bias + Σ max_i]` over the first k tables, and the
+/// executor adds in exactly this order, so checking every prefix interval
+/// is sound. Saturating adds keep pathological i64-scale tables from
+/// wrapping the analysis itself (saturation can only widen the interval,
+/// which conservatively selects the wide lane).
+fn analyze_lane(layer: &LayerNet) -> Lane {
+    const LO: i64 = i32::MIN as i64;
+    const HI: i64 = i32::MAX as i64;
+    for neuron in &layer.neurons {
+        let (mut lo, mut hi) = (neuron.bias, neuron.bias);
+        if lo < LO || hi > HI {
+            return Lane::I64;
+        }
+        for lut in &neuron.luts {
+            let (tlo, thi) = lut
+                .table
+                .iter()
+                .fold((i64::MAX, i64::MIN), |(a, b), &v| (a.min(v), b.max(v)));
+            if tlo > thi {
+                continue; // empty table: contributes nothing
+            }
+            if tlo < LO || thi > HI {
+                return Lane::I64;
+            }
+            lo = lo.saturating_add(tlo);
+            hi = hi.saturating_add(thi);
+            if lo < LO || hi > HI {
+                return Lane::I64;
+            }
+        }
+    }
+    Lane::I32
+}
+
+// ---------------------------------------------------------------------------
+// Integer requantization plans
+// ---------------------------------------------------------------------------
+
+/// Largest code width lowered to a fully integer plan. The paper's flows
+/// never exceed 8-bit codes; 16 leaves generous headroom while keeping the
+/// threshold construction (one bisection per code boundary) cheap. Wider
+/// quantizers fall back to the float oracle — still bit-exact, just not
+/// arithmetic-free.
+pub const PLAN_MAX_BITS: u32 = 16;
+
+/// Fixed-point fraction bits of the linear plan's multiplier.
+const LINEAR_SHIFT: u32 = 48;
+
+/// A [`Quantizer`] lowered to integer-only form for the inter-layer flip:
+/// `encode_sum(sum)` == `Quantizer::encode_fixed(sum, frac_bits)` for every
+/// i64 `sum`, bit for bit.
+///
+/// Lowering strategy (see [`RequantPlan::build`]):
+/// 1. Find the exact i64 *boundary* of every code level by monotone
+///    bisection against the float oracle (`thresholds[c-1]` = smallest sum
+///    the oracle maps to a code >= c).
+/// 2. Try to fit `code = clamp((sum * mul + add) >> 48, 0, max)`: the
+///    feasible interval for `add` is intersected over *every* boundary
+///    constraint, so a returned linear plan is exact by construction — no
+///    sampling, no "close enough".
+/// 3. Otherwise keep the sorted thresholds and binary-search them
+///    (`partition_point`), which is exact for any monotone step function.
+#[derive(Clone, Debug)]
+pub struct RequantPlan {
+    q: Quantizer,
+    frac_bits: u32,
+    kind: PlanKind,
+}
+
+#[derive(Clone, Debug)]
+enum PlanKind {
+    /// `code = clamp((clamp(sum, rail_lo, rail_hi) * mul + add) >> LINEAR_SHIFT, 0, max_code)`.
+    Linear { mul: i128, add: i128, rail_lo: i64, rail_hi: i64, max_code: u32 },
+    /// Sorted code boundaries; `code = #thresholds <= sum`.
+    Thresholds(Vec<i64>),
+    /// Code width beyond [`PLAN_MAX_BITS`]: float oracle fallback.
+    Float,
+}
+
+impl RequantPlan {
+    /// Lower a quantizer (at a given accumulator `frac_bits`) to its
+    /// integer plan. Infallible: the threshold form always exists for
+    /// `bits <= PLAN_MAX_BITS`, and wider quantizers get the oracle.
+    pub fn build(q: Quantizer, frac_bits: u32) -> RequantPlan {
+        let kind = if q.bits <= PLAN_MAX_BITS {
+            match boundaries(&q, frac_bits) {
+                Some(thresholds) => match try_linear(&thresholds) {
+                    Some(linear) => linear,
+                    None => PlanKind::Thresholds(thresholds),
+                },
+                // degenerate quantizer (e.g. non-finite scale from a
+                // domain like [-f64::MAX, f64::MAX]): the oracle never
+                // reaches some codes, so no boundary exists — keep the
+                // oracle itself rather than spin or mis-plan
+                None => PlanKind::Float,
+            }
+        } else {
+            PlanKind::Float
+        };
+        RequantPlan { q, frac_bits, kind }
+    }
+
+    /// The source quantizer this plan was lowered from.
+    pub fn quantizer(&self) -> &Quantizer {
+        &self.q
+    }
+
+    /// True unless this plan fell back to the float oracle (bits >
+    /// [`PLAN_MAX_BITS`]); the serving hot path is float-free iff every
+    /// layer plan is integer.
+    pub fn is_integer(&self) -> bool {
+        !matches!(self.kind, PlanKind::Float)
+    }
+
+    /// Which lowering was chosen (bench/stats reporting).
+    pub fn kind_name(&self) -> &'static str {
+        match self.kind {
+            PlanKind::Linear { .. } => "linear",
+            PlanKind::Thresholds(_) => "thresholds",
+            PlanKind::Float => "float",
+        }
+    }
+
+    /// Requantize one accumulator sum. Bit-exact with
+    /// `self.quantizer().encode_fixed(sum, frac_bits)`.
+    #[inline]
+    pub fn encode_sum(&self, sum: i64) -> u32 {
+        match &self.kind {
+            PlanKind::Linear { mul, add, rail_lo, rail_hi, max_code } => {
+                let s = sum.clamp(*rail_lo, *rail_hi) as i128;
+                // arithmetic shift == floor division by 2^LINEAR_SHIFT,
+                // which is exactly the comparison form the boundary
+                // constraints were solved in
+                let c = (s * mul + add) >> LINEAR_SHIFT;
+                c.clamp(0, *max_code as i128) as u32
+            }
+            PlanKind::Thresholds(t) => t.partition_point(|&b| b <= sum) as u32,
+            PlanKind::Float => self.q.encode_fixed(sum, self.frac_bits),
+        }
+    }
+}
+
+/// Exact code boundaries: `out[c-1]` is the smallest i64 sum that the float
+/// oracle maps to a code >= c. Sorted nondecreasing by construction
+/// (oracle monotonicity). None when some code is unreachable (degenerate
+/// quantizer whose scale over/underflowed f64): no integer plan exists.
+fn boundaries(q: &Quantizer, frac_bits: u32) -> Option<Vec<i64>> {
+    let max_code = (q.levels() - 1) as u32;
+    let fixed_one = (1i64 << frac_bits) as f64;
+    let mut out = Vec::with_capacity(max_code as usize);
+    for c in 1..=max_code {
+        // float estimate of where the oracle crosses c, to seed the bracket
+        let est = (q.lo + (c as f64 - 0.5) * q.scale()) * fixed_one;
+        let est = if est.is_finite() {
+            est.clamp(i64::MIN as f64, i64::MAX as f64) as i64
+        } else {
+            0
+        };
+        out.push(boundary_search(q, frac_bits, c, est)?);
+    }
+    Some(out)
+}
+
+/// Smallest `sum` with `q.encode_fixed(sum, frac_bits) >= c`, for c >= 1.
+/// Sound because the oracle is monotone nondecreasing in `sum`. For every
+/// well-formed quantizer the oracle is 0 at i64::MIN (clamped to `q.lo`)
+/// and `max_code` at i64::MAX (clamped to `q.hi`), so the boundary exists;
+/// a degenerate oracle that never reaches `c` (non-finite scale) yields
+/// None instead of a spin. Galloping from the float estimate keeps the
+/// typical search to a handful of oracle calls.
+fn boundary_search(q: &Quantizer, frac_bits: u32, c: u32, est: i64) -> Option<i64> {
+    let p = |s: i64| q.encode_fixed(s, frac_bits) >= c;
+    // establish a bracket: p(lo) == false, p(hi) == true
+    let (mut lo, mut hi);
+    if p(est) {
+        if est == i64::MIN {
+            return Some(est);
+        }
+        hi = est;
+        lo = i64::MIN;
+        let mut step = 1i64;
+        loop {
+            let cand = est.saturating_sub(step);
+            if !p(cand) {
+                lo = cand;
+                break;
+            }
+            hi = cand;
+            if cand == i64::MIN {
+                // oracle true everywhere below est: boundary is i64::MIN
+                return Some(i64::MIN);
+            }
+            step = step.saturating_mul(2);
+        }
+    } else {
+        lo = est;
+        hi = i64::MAX;
+        let mut step = 1i64;
+        loop {
+            let cand = est.saturating_add(step);
+            if p(cand) {
+                hi = cand;
+                break;
+            }
+            if cand == i64::MAX {
+                // oracle never reaches c: code c has no boundary
+                return None;
+            }
+            lo = cand;
+            step = step.saturating_mul(2);
+        }
+    }
+    while (hi as i128) - (lo as i128) > 1 {
+        let mid = ((lo as i128 + hi as i128) / 2) as i64;
+        if p(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi)
+}
+
+/// Try to express the boundary step function as one multiply/shift. The
+/// feasible interval for `add` is the intersection of, for every code c
+/// (1-based) with boundary t_c:
+///
+/// ```text
+///   t_c * mul + add      >= c << SHIFT       (sum at the boundary reaches c)
+///   (t_c - 1) * mul + add <  c << SHIFT      (one below stays at c - 1)
+/// ```
+///
+/// A nonempty intersection proves, constructively, that the linear form
+/// agrees with the oracle at every boundary — and two monotone step
+/// functions that share all boundaries are equal everywhere. Returns None
+/// (caller keeps the threshold table) when no feasible `add` exists or any
+/// constant would overflow the checked i128 arithmetic.
+fn try_linear(thresholds: &[i64]) -> Option<PlanKind> {
+    let max_code = thresholds.len() as u32;
+    let t1 = thresholds[0];
+    let tmax = *thresholds.last().unwrap();
+    let span = tmax as i128 - t1 as i128;
+    let mul: i128 = if max_code == 1 {
+        1i128 << LINEAR_SHIFT
+    } else if span <= 0 {
+        return None; // all boundaries collapsed onto one sum
+    } else {
+        let spacing = span as f64 / (max_code - 1) as f64;
+        let m = ((1u64 << LINEAR_SHIFT) as f64 / spacing).round();
+        if !m.is_finite() || m < 1.0 || m >= (1i128 << 62) as f64 {
+            return None;
+        }
+        m as i128
+    };
+    let mut add_lo = i128::MIN;
+    let mut add_hi = i128::MAX;
+    for (i, &t) in thresholds.iter().enumerate() {
+        let c = (i + 1) as i128;
+        let target = c << LINEAR_SHIFT;
+        let tm = (t as i128).checked_mul(mul)?;
+        let tm1 = (t as i128 - 1).checked_mul(mul)?;
+        add_lo = add_lo.max(target.checked_sub(tm)?);
+        add_hi = add_hi.min((target - 1).checked_sub(tm1)?);
+    }
+    if add_lo > add_hi {
+        return None;
+    }
+    let add = add_lo;
+    let rail_lo = t1.saturating_sub(1);
+    let rail_hi = tmax;
+    // runtime products are bounded by the two rails (monotone in sum):
+    // prove neither overflows i128 once, here, instead of checking per call
+    (rail_lo as i128).checked_mul(mul)?.checked_add(add)?;
+    (rail_hi as i128).checked_mul(mul)?.checked_add(add)?;
+    Some(PlanKind::Linear { mul, add, rail_lo, rail_hi, max_code })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::checkpoint::testutil::synthetic;
+    use crate::fixed::to_fixed;
     use crate::lut;
-    use crate::netlist::Netlist;
+    use crate::netlist::{LutInst, Netlist, NeuronNet};
+    use crate::util::prop;
 
     fn compiled(dims: &[usize], bits: &[u32], seed: u64) -> (Netlist, CompiledProgram) {
         let ck = synthetic(dims, bits, seed);
@@ -193,16 +553,24 @@ mod tests {
     }
 
     #[test]
-    fn ops_scan_tables_sequentially() {
-        // table offsets must be monotone in op order — that is the whole
-        // point of the packed layout (sequential arena scans)
+    fn ops_scan_tables_sequentially_per_lane() {
+        // table offsets must be monotone in op order within each arena —
+        // that is the whole point of the packed layout (sequential scans)
         let (_, prog) = compiled(&[5, 4, 3], &[4, 4, 5], 23);
-        let mut expect_off = 0u32;
-        for op in prog.ops() {
-            assert_eq!(op.table_off, expect_off);
-            expect_off += op.addr_mask + 1;
+        let (mut expect32, mut expect64) = (0u32, 0u32);
+        for plan in prog.layers() {
+            let expect = match plan.lane {
+                Lane::I32 => &mut expect32,
+                Lane::I64 => &mut expect64,
+            };
+            for op in &prog.ops()[plan.ops.clone()] {
+                assert_eq!(op.table_off, *expect);
+                *expect += op.addr_mask + 1;
+            }
         }
-        assert_eq!(expect_off as usize, prog.table_words());
+        assert_eq!(expect32 as usize, prog.tables32().len());
+        assert_eq!(expect64 as usize, prog.tables64().len());
+        assert_eq!((expect32 + expect64) as usize, prog.table_words());
     }
 
     #[test]
@@ -231,5 +599,262 @@ mod tests {
             assert!(prog.max_width() >= l.d_in);
             assert!(prog.max_width() >= l.d_out);
         }
+    }
+
+    // -- narrowed-arena range analysis ----------------------------------
+
+    /// Single-layer netlist built directly from tables (frac_bits 12,
+    /// 3-bit input codes, no requant) for lane-analysis cases.
+    fn manual_net(neuron_tables: Vec<Vec<Vec<i64>>>, d_in: usize) -> Netlist {
+        let neurons: Vec<NeuronNet> = neuron_tables
+            .into_iter()
+            .map(|tables| {
+                let luts: Vec<LutInst> = tables
+                    .into_iter()
+                    .enumerate()
+                    .map(|(p, table)| {
+                        assert!(table.len().is_power_of_two());
+                        LutInst { input: p % d_in, table, out_width: 32 }
+                    })
+                    .collect();
+                let depth = crate::netlist::adder_depth(luts.len(), 2);
+                NeuronNet { luts, bias: 0, depth, sum_width: 48 }
+            })
+            .collect();
+        let d_out = neurons.len();
+        let depth = neurons.iter().map(|n| n.depth).max().unwrap_or(0);
+        Netlist {
+            name: "manual".into(),
+            layers: vec![crate::netlist::LayerNet {
+                d_in,
+                d_out,
+                in_bits: 3,
+                out_bits: 8,
+                neurons,
+                requant: None,
+                depth,
+            }],
+            n_add: 2,
+            frac_bits: 12,
+            domain: (-4.0, 4.0),
+        }
+    }
+
+    #[test]
+    fn synthetic_layers_all_narrow() {
+        // synthetic tables are |v| <= ~1.5 * 2^12 over <= 7-wide fan-in:
+        // comfortably i32, so every layer must pick the narrow lane
+        let (_, prog) = compiled(&[6, 5, 4, 2], &[3, 4, 4, 6], 31);
+        for plan in prog.layers() {
+            assert_eq!(plan.lane, Lane::I32);
+        }
+        assert!(prog.tables64().is_empty());
+        assert_eq!(prog.tables32().len(), prog.table_words());
+    }
+
+    #[test]
+    fn huge_entries_force_wide_lane() {
+        let big = 1i64 << 40;
+        let net = manual_net(vec![vec![vec![big; 8], vec![-big; 8]]], 2);
+        let prog = CompiledProgram::compile(&net);
+        assert_eq!(prog.layers()[0].lane, Lane::I64);
+        assert_eq!(prog.tables64().len(), 16);
+        assert!(prog.tables32().is_empty());
+    }
+
+    #[test]
+    fn accumulator_overflow_forces_wide_lane_even_when_entries_fit() {
+        // each entry fits i32, but three of them sum past i32::MAX: the
+        // prefix-interval analysis must reject the narrow lane
+        let e = 1_000_000_000i64; // < i32::MAX
+        let net = manual_net(vec![vec![vec![e; 8], vec![e; 8], vec![e; 8]]], 3);
+        let prog = CompiledProgram::compile(&net);
+        assert_eq!(prog.layers()[0].lane, Lane::I64);
+        // two of them stay within i32: narrow is kept
+        let net2 = manual_net(vec![vec![vec![e; 8], vec![e; 8]]], 2);
+        assert_eq!(CompiledProgram::compile(&net2).layers()[0].lane, Lane::I32);
+    }
+
+    #[test]
+    fn transient_overflow_on_mixed_signs_forces_wide_lane() {
+        // every entry fits i32 and the FINAL sum (1.2e9) fits i32, but the
+        // in-order partial after two tables is 2.4e9: prefix intervals
+        // catch what a final-sum-only bound would miss
+        let e = 1_200_000_000i64; // e < i32::MAX < 2e
+        let net = manual_net(vec![vec![vec![e; 8], vec![e; 8], vec![-e; 8]]], 3);
+        let prog = CompiledProgram::compile(&net);
+        assert_eq!(prog.layers()[0].lane, Lane::I64);
+    }
+
+    // -- requant plans ---------------------------------------------------
+
+    fn assert_plan_matches(q: Quantizer, frac: u32, sums: &[i64]) {
+        let plan = RequantPlan::build(q, frac);
+        for &s in sums {
+            assert_eq!(
+                plan.encode_sum(s),
+                q.encode_fixed(s, frac),
+                "plan ({}) diverges at sum {s} (bits {}, domain [{}, {}], frac {frac})",
+                plan.kind_name(),
+                q.bits,
+                q.lo,
+                q.hi
+            );
+        }
+    }
+
+    #[test]
+    fn requant_plan_exact_at_every_boundary_all_bits() {
+        // all bits 1..=16: the plan must agree with the float oracle at
+        // every code boundary and its neighbors — the only sums where a
+        // lowering can possibly diverge — plus the clamp rails and i64
+        // extremes. Exhaustive over code levels (every level's boundary is
+        // visited), varied domains/frac for the small widths.
+        for bits in 1..=16u32 {
+            let combos: &[((f64, f64), u32)] = if bits <= 10 {
+                &[
+                    ((-4.0, 4.0), 12),
+                    ((0.0, 1.0), 8),
+                    ((-0.001, 0.0035), 20),
+                    ((-1000.0, 250.0), 0),
+                ]
+            } else {
+                &[((-4.0, 4.0), 12)]
+            };
+            for &((lo, hi), frac) in combos {
+                let q = Quantizer::new(bits, lo, hi);
+                let plan = RequantPlan::build(q, frac);
+                assert!(plan.is_integer(), "bits {bits} must get an integer plan");
+                let mut sums = vec![i64::MIN, i64::MIN + 1, -1, 0, 1, i64::MAX - 1, i64::MAX];
+                for &t in &boundaries(&q, frac).expect("well-formed quantizer has boundaries") {
+                    sums.extend([t.saturating_sub(2), t.saturating_sub(1), t, t.saturating_add(1)]);
+                }
+                assert_plan_matches(q, frac, &sums);
+            }
+        }
+    }
+
+    #[test]
+    fn requant_plan_exhaustive_small_range() {
+        // small domain at frac_bits 4: the clamp rails sit at ~±128, so a
+        // ±1000 window covers every distinguishable sum — compare all of them
+        let q = Quantizer::new(5, -8.0, 8.0);
+        let sums: Vec<i64> = (-1000..=1000).collect();
+        assert_plan_matches(q, 4, &sums);
+        // 1-bit quantizer, the degenerate two-level case
+        let q1 = Quantizer::new(1, -8.0, 8.0);
+        assert_plan_matches(q1, 4, &sums);
+    }
+
+    #[test]
+    fn degenerate_domain_falls_back_to_oracle_instead_of_spinning() {
+        // hi - lo overflows f64 -> scale() is inf -> the oracle returns 0
+        // for every sum, so codes >= 1 have no boundary. build() must
+        // terminate (regression: the upward gallop used to spin at
+        // i64::MAX in release builds) and stay bit-exact via the oracle.
+        let q = Quantizer::new(8, -f64::MAX, f64::MAX);
+        let plan = RequantPlan::build(q, 12);
+        assert!(!plan.is_integer());
+        for s in [i64::MIN, -1, 0, 1, i64::MAX] {
+            assert_eq!(plan.encode_sum(s), q.encode_fixed(s, 12));
+        }
+    }
+
+    #[test]
+    fn requant_plan_wide_bits_fall_back_to_oracle() {
+        let q = Quantizer::new(24, -4.0, 4.0);
+        let plan = RequantPlan::build(q, 12);
+        assert!(!plan.is_integer());
+        assert_eq!(plan.kind_name(), "float");
+        for s in [i64::MIN, -(1 << 50), -5, 0, 9, 1 << 50, i64::MAX] {
+            assert_eq!(plan.encode_sum(s), q.encode_fixed(s, 12));
+        }
+    }
+
+    #[test]
+    fn requant_boundaries_sorted_and_complete() {
+        let q = Quantizer::new(6, -4.0, 4.0);
+        let b = boundaries(&q, 12).unwrap();
+        assert_eq!(b.len(), q.levels() as usize - 1);
+        for w in b.windows(2) {
+            assert!(w[0] <= w[1], "boundaries must be nondecreasing");
+        }
+        // each boundary really is the smallest sum reaching its code
+        for (i, &t) in b.iter().enumerate() {
+            let c = (i + 1) as u32;
+            assert!(q.encode_fixed(t, 12) >= c);
+            assert!(q.encode_fixed(t - 1, 12) < c);
+        }
+    }
+
+    #[test]
+    fn prop_requant_plan_equals_oracle() {
+        // random quantizers (bits 1..=10 to keep plan construction cheap),
+        // random domains and frac_bits; full-range random sums, sums on the
+        // quantization grid, and sums straddling the clamp rails
+        prop::check("requant-plan-equals-oracle", 150, |g| {
+            let bits = g.usize_in(1, 10) as u32;
+            let lo = g.f64_in(-100.0, 0.0);
+            let hi = lo + g.f64_in(1e-3, 200.0);
+            let frac = g.usize_in(0, 24) as u32;
+            let q = Quantizer::new(bits, lo, hi);
+            let plan = RequantPlan::build(q, frac);
+            let probe = |s: i64| -> Result<(), String> {
+                let (got, want) = (plan.encode_sum(s), q.encode_fixed(s, frac));
+                if got != want {
+                    return Err(format!(
+                        "plan ({}) {got} != oracle {want} at sum {s} (bits {bits}, [{lo}, {hi}], frac {frac})",
+                        plan.kind_name()
+                    ));
+                }
+                Ok(())
+            };
+            for _ in 0..48 {
+                probe(g.rng().next_u64() as i64)?;
+            }
+            for _ in 0..24 {
+                let c = g.i64_in(0, (q.levels() - 1) as i64) as u32;
+                let s = to_fixed(q.decode(c), frac);
+                for d in -2..=2i64 {
+                    probe(s.saturating_add(d))?;
+                }
+            }
+            for s in [i64::MIN, i64::MAX, to_fixed(lo, frac), to_fixed(hi, frac)] {
+                probe(s)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn threshold_lowering_matches_oracle_even_when_linear_fits() {
+        // force the threshold form (bypassing try_linear) so the
+        // partition_point path is covered no matter which lowering build()
+        // happens to pick for these quantizers
+        for (bits, frac) in [(1u32, 0u32), (4, 12), (8, 6), (12, 12)] {
+            let q = Quantizer::new(bits, -4.0, 4.0);
+            let plan = RequantPlan {
+                q,
+                frac_bits: frac,
+                kind: PlanKind::Thresholds(boundaries(&q, frac).unwrap()),
+            };
+            let mut sums = vec![i64::MIN, -1, 0, 1, i64::MAX];
+            for &t in &boundaries(&q, frac).unwrap() {
+                sums.extend([t - 1, t, t + 1]);
+            }
+            for s in sums {
+                assert_eq!(plan.encode_sum(s), q.encode_fixed(s, frac), "bits {bits} sum {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_reports_its_lowering() {
+        // paper-scale quantizers should get the linear fast path; whatever
+        // is chosen, the names must be stable for the bench/stats surface
+        let plan = RequantPlan::build(Quantizer::new(6, -4.0, 4.0), 12);
+        assert!(plan.is_integer());
+        assert!(matches!(plan.kind_name(), "linear" | "thresholds"));
+        assert_eq!(plan.quantizer().bits, 6);
     }
 }

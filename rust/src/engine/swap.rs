@@ -5,8 +5,11 @@
 //! truth for online updates (edge-table swaps, whole-model replacement);
 //! the [`ProgramCell`] layers a compiled-program cache on top. Readers get
 //! a *consistent* `(netlist, program)` snapshot pair; the first reader
-//! after a swap pays the recompile (O(total table entries) — microseconds
-//! for paper-scale netlists) and publishes it atomically for everyone else.
+//! after a swap pays the recompile — O(total table entries) for the arena
+//! repack plus the per-layer range analysis, and one bisection per code
+//! boundary to rebuild the integer requant plans; still well under a
+//! millisecond for paper-scale netlists — and publishes it atomically for
+//! everyone else.
 
 use std::sync::{Arc, RwLock};
 

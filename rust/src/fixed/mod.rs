@@ -44,6 +44,16 @@ impl Quantizer {
     pub fn decode(&self, code: u32) -> f64 {
         self.lo + code as f64 * self.scale()
     }
+
+    /// Encode an i64 accumulator value directly: the float requantization
+    /// path `encode(from_fixed(sum, frac_bits))` as one call. This is the
+    /// reference ORACLE that [`crate::engine::RequantPlan`] must reproduce
+    /// bit-exactly with integer-only arithmetic; it is monotone
+    /// nondecreasing in `sum` (`sum as f64` and [`Quantizer::encode`] both
+    /// are), which is what makes the plan's exact threshold search sound.
+    pub fn encode_fixed(&self, sum: i64, frac_bits: u32) -> u32 {
+        self.encode(from_fixed(sum, frac_bits))
+    }
 }
 
 /// Round-half-away-from-zero, the table-entry rounding rule
@@ -166,6 +176,36 @@ mod tests {
             let (a, b) = if a <= b { (a, b) } else { (b, a) };
             if q.encode(a) > q.encode(b) {
                 return Err(format!("encode not monotone: {a} -> {}, {b} -> {}", q.encode(a), q.encode(b)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn encode_fixed_is_encode_of_from_fixed() {
+        let q = Quantizer::new(5, -4.0, 4.0);
+        for frac in [0u32, 4, 12, 20] {
+            for sum in [i64::MIN, -(1 << 40), -129, -1, 0, 1, 77, 1 << 40, i64::MAX] {
+                assert_eq!(q.encode_fixed(sum, frac), q.encode(from_fixed(sum, frac)));
+            }
+        }
+    }
+
+    #[test]
+    fn prop_encode_fixed_monotone_in_sum() {
+        // the property RequantPlan's bisection relies on
+        prop::check("encode-fixed-monotone", 200, |g| {
+            let bits = g.usize_in(1, 12) as u32;
+            let lo = g.f64_in(-50.0, 0.0);
+            let hi = lo + g.f64_in(0.01, 100.0);
+            let frac = g.usize_in(0, 24) as u32;
+            let q = Quantizer::new(bits, lo, hi);
+            let a = g.i64_in(-(1 << 40), 1 << 40);
+            let b = g.i64_in(-(1 << 40), 1 << 40);
+            let (a, b) = if a <= b { (a, b) } else { (b, a) };
+            if q.encode_fixed(a, frac) > q.encode_fixed(b, frac) {
+                return Err(format!("not monotone: {a} -> {}, {b} -> {}",
+                    q.encode_fixed(a, frac), q.encode_fixed(b, frac)));
             }
             Ok(())
         });

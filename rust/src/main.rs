@@ -300,10 +300,22 @@ fn run(args: &[String]) -> Result<()> {
             println!("served          : {done} requests in {wall:.3} s");
             println!("throughput      : {:.0} req/s", done as f64 / wall);
             println!(
+                "ops throughput  : {:.3e} fused ops/s ({:.0} samples/s, {} ops/sample)",
+                stats.throughput_ops, stats.throughput_rps, net.n_luts()
+            );
+            println!(
                 "latency p50/p99 : {:.1} / {:.1} us",
                 stats.latency_p50_us, stats.latency_p99_us
             );
             println!("mean batch      : {:.1} (batches: {})", stats.mean_batch, stats.batches);
+            // only the compiled engine owns feature-major scratch planes;
+            // the interpreter reports nothing here
+            if backend == Backend::Compiled {
+                println!(
+                    "exec scratch    : {} B max/executor (feature-major planes, grow-only)",
+                    stats.scratch_bytes
+                );
+            }
             println!("rejected (bp)   : {} (dropped mid-swap: {})", stats.rejected, stats.dropped);
             svc.shutdown();
             Ok(())

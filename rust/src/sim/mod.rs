@@ -6,9 +6,11 @@
 //! * [`eval`] / [`eval_batch`] — functional, bit-exact, the debugging
 //!   reference and the equivalence oracle against the Python integer
 //!   oracle. The serving hot path does NOT run this interpreter anymore:
-//!   it runs the compiled batch-major program of [`crate::engine`], which
-//!   is asserted bit-identical to [`eval`] (property tests here and in
-//!   `engine`, plus a per-batch debug cross-check in the coordinator).
+//!   it runs the compiled feature-major, integer-requant program of
+//!   [`crate::engine`] (whose `RequantPlan`s are proven bit-exact against
+//!   this module's float `encode(from_fixed(..))` path), asserted
+//!   bit-identical to [`eval`] by property tests here and in `engine`,
+//!   plus a per-batch debug cross-check in the coordinator.
 //! * [`CycleSim`] — cycle-accurate pipeline model (LUT stage, one register
 //!   per adder stage, requant register), II = 1: a new sample can enter
 //!   every cycle and results emerge after `netlist.latency_cycles()`.

@@ -78,12 +78,15 @@ fn compiled_engine_bit_exact_on_all_artifacts() {
             } else {
                 oracle
             };
-            assert_eq!(
-                engine::run_batch(&prog, inputs),
-                sim::eval_batch(&net, inputs),
-                "{} (n_add {n_add})",
-                exp.name
-            );
+            let want = sim::eval_batch(&net, inputs);
+            assert_eq!(engine::run_batch(&prog, inputs), want, "{} (n_add {n_add})", exp.name);
+            // the zero-alloc flat path (the coordinator's hot path) agrees
+            // sample for sample on the narrowed-arena program
+            let mut ex = engine::Executor::with_capacity(&prog, inputs.len());
+            let mut flat = Vec::new();
+            ex.run_batch_into(&prog, inputs, &mut flat);
+            let want_flat: Vec<i64> = want.iter().flatten().copied().collect();
+            assert_eq!(flat, want_flat, "{} flat outputs (n_add {n_add})", exp.name);
         }
     }
 }
