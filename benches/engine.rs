@@ -16,6 +16,7 @@ mod common;
 
 use kanele::engine::{self, RequantPlan};
 use kanele::fixed::Quantizer;
+use kanele::json::{obj, Value};
 use kanele::netlist::Netlist;
 use kanele::{data, lut, sim};
 
@@ -195,6 +196,8 @@ fn main() {
         assert_eq!(bex.run_batch(&base_prog, probe), oracle, "baseline diverges from sim");
     }
 
+    let mut rows: Vec<Value> = Vec::new();
+
     // -- 1. executor A/B across batch sizes ---------------------------------
     println!("-- transposed integer executor vs PR-2 sample-major baseline --");
     for batch in [1usize, 16, 64, 256] {
@@ -221,6 +224,15 @@ fn main() {
             samples_per_s,
             ex.scratch_bytes()
         );
+        rows.push(obj(vec![
+            ("section", "executor_ab".into()),
+            ("batch", (batch as i64).into()),
+            ("baseline_ns", r_base.median_ns.into()),
+            ("new_ns", r_new.median_ns.into()),
+            ("speedup", (r_base.median_ns / r_new.median_ns).into()),
+            ("fused_ops_per_s", (samples_per_s * prog.n_ops() as f64).into()),
+            ("scratch_bytes", (ex.scratch_bytes() as i64).into()),
+        ]));
     }
 
     // -- 2. requant plan vs float oracle ------------------------------------
@@ -244,6 +256,13 @@ fn main() {
         std::hint::black_box(acc);
     });
     println!("      integer plan is {:.2}x the float oracle", r_float.median_ns / r_plan.median_ns);
+    rows.push(obj(vec![
+        ("section", "requant".into()),
+        ("kind", plan.kind_name().into()),
+        ("float_ns", r_float.median_ns.into()),
+        ("plan_ns", r_plan.median_ns.into()),
+        ("speedup", (r_float.median_ns / r_plan.median_ns).into()),
+    ]));
 
     // -- 3. flat outputs vs per-sample Vec<Vec<i64>> -------------------------
     println!("-- run_batch_into (zero-alloc) vs run_batch (nested vecs) --");
@@ -262,4 +281,23 @@ fn main() {
         }
     });
     println!("      flat outputs are {:.2}x nested vecs", r_nested.median_ns / r_flat.median_ns);
+    rows.push(obj(vec![
+        ("section", "flat_outputs".into()),
+        ("nested_ns", r_nested.median_ns.into()),
+        ("flat_ns", r_flat.median_ns.into()),
+        ("speedup", (r_nested.median_ns / r_flat.median_ns).into()),
+    ]));
+
+    // machine-readable trajectory: stdout grids rot in logs, this does not
+    let doc = obj(vec![
+        ("bench", "engine".into()),
+        ("quick", quick.into()),
+        ("model", ck.name.as_str().into()),
+        ("n_ops", (prog.n_ops() as i64).into()),
+        ("table_bytes", (prog.table_bytes() as i64).into()),
+        ("rows", Value::Array(rows)),
+    ]);
+    std::fs::write("BENCH_engine.json", kanele::json::to_string(&doc))
+        .expect("write BENCH_engine.json");
+    println!("wrote BENCH_engine.json");
 }

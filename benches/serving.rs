@@ -1,9 +1,19 @@
 //! Coordinator serving bench: the interpreted-vs-compiled backend
-//! comparison plus throughput/latency across worker counts and batching
-//! policies (the L3 hot path + the batching-policy ablation that
-//! DESIGN.md calls out).
+//! comparison, throughput/latency across worker counts and batching
+//! policies, the shards x workers scaling grid, and the headline A/B —
+//! the sharded admission + work-stealing executor pool against the PR-3
+//! single-dispatcher topology frozen in-bench as `mod baseline`.
 //!
 //!     cargo bench --bench serving
+//!     KANELE_BENCH_QUICK=1 cargo bench --bench serving   # CI smoke mode
+//!
+//! Acceptance bar (ISSUE 4): with 4+ executors under a heavy-tailed
+//! synthetic load (every Nth executed batch is stretched by a fixed delay),
+//! the sharded/stealing plane reaches >= 1.3x the frozen baseline's
+//! throughput, with bit-exact responses (asserted against `sim::eval`
+//! before any timing) and `shards=1, steal=off` matching the baseline
+//! within noise. Results also land in `BENCH_serving.json` so the perf
+//! trajectory is recorded instead of lost in logs.
 //!
 //! Runs on the real jet-tagging checkpoint when `make artifacts-all` has
 //! produced it, and on a synthetic twin with the same dims/bits otherwise
@@ -13,22 +23,191 @@
 mod common;
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use kanele::coordinator::{Backend, Service, ServiceCfg, SubmitError};
+use kanele::json::{obj, Value};
 use kanele::netlist::Netlist;
 use kanele::{data, engine, lut, sim};
 
+/// The PR-3 serving plane, frozen as the A/B baseline: ONE bounded
+/// admission channel drained by ONE dispatcher thread, a bounded work
+/// channel (depth = workers) behind a shared `Mutex<Receiver>`, N
+/// executors on the compiled engine. Mirrors `rust/src/coordinator` as of
+/// PR 3 so future serving-plane changes keep an honest comparison point;
+/// the same heavy-tail instrumentation (every Nth executed batch sleeps)
+/// is reproduced so both topologies run the identical synthetic load.
+mod baseline {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+    use std::sync::{Arc, Mutex};
+    use std::time::{Duration, Instant};
+
+    use kanele::coordinator::batcher::{collect, Batch, Policy, Timestamped};
+    use kanele::engine;
+    use kanele::netlist::Netlist;
+
+    pub struct Pending {
+        codes: Vec<u32>,
+        submitted: Instant,
+        reply: SyncSender<Vec<i64>>,
+    }
+
+    impl Timestamped for Pending {
+        fn submitted(&self) -> Instant {
+            self.submitted
+        }
+    }
+
+    #[derive(Clone, Copy)]
+    pub struct Cfg {
+        pub workers: usize,
+        pub max_batch: usize,
+        pub max_wait: Duration,
+        pub queue_depth: usize,
+        pub exec_delay: Duration,
+        pub exec_delay_every: usize,
+    }
+
+    pub struct Service {
+        tx: Option<SyncSender<Pending>>,
+        threads: Vec<std::thread::JoinHandle<()>>,
+        completed: Arc<AtomicU64>,
+    }
+
+    pub fn start(net: &Arc<Netlist>, cfg: Cfg) -> Service {
+        let prog = Arc::new(engine::compile(net));
+        let (tx, rx) = sync_channel::<Pending>(cfg.queue_depth);
+        // handoff depth = workers, exactly the PR-3 pipeline
+        let (work_tx, work_rx) = sync_channel::<Batch<Pending>>(cfg.workers);
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let completed = Arc::new(AtomicU64::new(0));
+        let exec_seq = Arc::new(AtomicU64::new(0));
+        let mut threads = Vec::with_capacity(cfg.workers + 1);
+        for _ in 0..cfg.workers {
+            let work_rx = Arc::clone(&work_rx);
+            let prog = Arc::clone(&prog);
+            let completed = Arc::clone(&completed);
+            let exec_seq = Arc::clone(&exec_seq);
+            threads.push(std::thread::spawn(move || {
+                let mut exec = engine::Executor::with_capacity(&prog, cfg.max_batch);
+                let mut flat: Vec<i64> = Vec::new();
+                loop {
+                    let batch = match work_rx.lock().unwrap().recv() {
+                        Ok(b) => b,
+                        Err(_) => return, // dispatcher hung up, queue drained
+                    };
+                    let rows: Vec<&[u32]> =
+                        batch.items.iter().map(|p| p.codes.as_slice()).collect();
+                    exec.run_batch_into(&prog, &rows, &mut flat);
+                    if !cfg.exec_delay.is_zero() {
+                        let hit = cfg.exec_delay_every <= 1
+                            || exec_seq.fetch_add(1, Ordering::Relaxed)
+                                % cfg.exec_delay_every as u64
+                                == 0;
+                        if hit {
+                            std::thread::sleep(cfg.exec_delay);
+                        }
+                    }
+                    let d_out = prog.d_out();
+                    completed.fetch_add(batch.items.len() as u64, Ordering::Relaxed);
+                    for (i, p) in batch.items.into_iter().enumerate() {
+                        let _ = p.reply.send(flat[i * d_out..(i + 1) * d_out].to_vec());
+                    }
+                }
+            }));
+        }
+        let policy = Policy { max_batch: cfg.max_batch, max_wait: cfg.max_wait };
+        threads.push(std::thread::spawn(move || {
+            while let Some(batch) = collect(&rx, &policy) {
+                if work_tx.send(batch).is_err() {
+                    return;
+                }
+            }
+        }));
+        Service { tx: Some(tx), threads, completed }
+    }
+
+    impl Service {
+        /// PR-3 `try_send` admission: `Ok(receiver)` or the codes handed
+        /// back on backpressure.
+        pub fn submit(&self, codes: Vec<u32>) -> Result<Receiver<Vec<i64>>, Vec<u32>> {
+            let (reply, rx) = sync_channel(1);
+            let p = Pending { codes, submitted: Instant::now(), reply };
+            match self.tx.as_ref().unwrap().try_send(p) {
+                Ok(()) => Ok(rx),
+                Err(TrySendError::Full(p)) | Err(TrySendError::Disconnected(p)) => Err(p.codes),
+            }
+        }
+
+        pub fn completed(&self) -> u64 {
+            self.completed.load(Ordering::Relaxed)
+        }
+
+        pub fn shutdown(mut self) {
+            self.tx.take();
+            for t in self.threads.drain(..) {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+/// Closed-loop multi-client driver: `clients` threads split the stream,
+/// each submitting with an unbounded in-flight window that drains fully on
+/// backpressure; returns wall seconds for the whole stream. `submit` hands
+/// the codes back on backpressure so the retry loop never clones.
+fn drive<R, F>(stream: &[Vec<u32>], clients: usize, submit: F) -> f64
+where
+    R: Send,
+    F: Fn(Vec<u32>) -> Result<std::sync::mpsc::Receiver<R>, Vec<u32>> + Sync,
+{
+    let submit = &submit;
+    let chunk = stream.len().max(1).div_ceil(clients);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for slice in stream.chunks(chunk) {
+            s.spawn(move || {
+                let mut pending = Vec::with_capacity(1024);
+                for codes in slice {
+                    let mut codes = codes.clone();
+                    loop {
+                        match submit(codes) {
+                            Ok(rx) => {
+                                pending.push(rx);
+                                break;
+                            }
+                            Err(back) => {
+                                codes = back;
+                                for rx in pending.drain(..) {
+                                    let _ = rx.recv();
+                                }
+                            }
+                        }
+                    }
+                }
+                for rx in pending {
+                    let _ = rx.recv();
+                }
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
 fn main() {
-    println!("=== serving bench: interpreted vs compiled + coordinator grid ===");
+    let quick = std::env::var("KANELE_BENCH_QUICK").is_ok();
+    println!("=== serving bench: backends, coordinator grid, sharded A/B ===");
     let ck = common::checkpoint_or_synthetic("jsc_openml");
     let tables = lut::from_checkpoint(&ck);
     let net = Arc::new(Netlist::build(&ck, &tables, 2));
-    let stream = data::random_code_stream(&ck, 20_000, 11);
+    let n_stream = if quick { 2_000 } else { 20_000 };
+    let stream = data::random_code_stream(&ck, n_stream, 11);
+    let mut rows: Vec<Value> = Vec::new();
 
     // -- 1. direct backend comparison (no threads, no batcher) -------------
-    // chunked execution of the same 20k-request stream through both
-    // executors; the acceptance bar is >= 2x at batch 64
+    // chunked execution of the same request stream through both executors;
+    // the acceptance bar is >= 2x at batch 64
     let prog = engine::compile(&net);
     println!(
         "netlist {}: {} L-LUTs -> {} fused ops, {} packed table words",
@@ -37,7 +216,8 @@ fn main() {
         prog.n_ops(),
         prog.table_words()
     );
-    for batch in [1usize, 16, 64, 256] {
+    let direct_batches: &[usize] = if quick { &[64] } else { &[1, 16, 64, 256] };
+    for &batch in direct_batches {
         let r_interp = common::bench(&format!("interpreted eval_batch (batch {batch})"), || {
             for chunk in stream.chunks(batch) {
                 std::hint::black_box(sim::eval_batch(&net, chunk));
@@ -55,23 +235,31 @@ fn main() {
         });
         common::report_throughput(&r_comp, stream.len());
         let samples_per_s = stream.len() as f64 / (r_comp.median_ns / 1e9);
+        let speedup = r_interp.median_ns / r_comp.median_ns;
         println!(
-            "      batch {batch:>3}: compiled is {:.2}x interpreted | {:.3e} fused ops/s ({:.0} samples/s)",
-            r_interp.median_ns / r_comp.median_ns,
+            "      batch {batch:>3}: compiled is {speedup:.2}x interpreted | {:.3e} fused ops/s ({samples_per_s:.0} samples/s)",
             samples_per_s * prog.n_ops() as f64,
-            samples_per_s
         );
+        rows.push(obj(vec![
+            ("section", "direct".into()),
+            ("batch", (batch as i64).into()),
+            ("interpreted_ns", r_interp.median_ns.into()),
+            ("compiled_ns", r_comp.median_ns.into()),
+            ("speedup", speedup.into()),
+        ]));
     }
 
-    // -- 2. end-to-end coordinator grid -------------------------------------
+    // -- 2. end-to-end coordinator grid (single shard: worker scaling) ------
     // backend x batching-policy x workers through the dispatcher/executor
-    // pipeline; workers is the innermost loop so each row reports its
-    // throughput scaling against the same config at workers = 1 (the
-    // pipelined coordinator's whole point is that this scales)
+    // plane; workers is the innermost loop so each row reports its
+    // throughput scaling against the same config at workers = 1
+    let grid_policies: &[(usize, u64)] =
+        if quick { &[(64, 100)] } else { &[(1, 0), (16, 50), (64, 100), (256, 200)] };
+    let grid_workers: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
     for backend in [Backend::Interpreted, Backend::Compiled] {
-        for (batch, wait_us) in [(1usize, 0u64), (16, 50), (64, 100), (256, 200)] {
+        for &(batch, wait_us) in grid_policies {
             let mut base_rps = None;
-            for workers in [1usize, 2, 4] {
+            for &workers in grid_workers {
                 let svc = Service::start(
                     Arc::clone(&net),
                     ServiceCfg {
@@ -83,28 +271,12 @@ fn main() {
                         ..Default::default()
                     },
                 );
-                let t = std::time::Instant::now();
-                let mut pending = Vec::with_capacity(4096);
-                for codes in &stream {
-                    loop {
-                        match svc.submit(codes.clone()) {
-                            Ok(rx) => {
-                                pending.push(rx);
-                                break;
-                            }
-                            Err(SubmitError::Backpressure) => {
-                                for rx in pending.drain(..) {
-                                    let _ = rx.recv();
-                                }
-                            }
-                            Err(e) => panic!("serving bench submit failed: {e}"),
-                        }
-                    }
-                }
-                for rx in pending.drain(..) {
-                    let _ = rx.recv();
-                }
-                let wall = t.elapsed().as_secs_f64();
+                let wall = drive(&stream, 1, |codes| {
+                    svc.try_submit(codes).map_err(|(e, back)| match e {
+                        SubmitError::Backpressure => back.expect("codes back"),
+                        e => panic!("serving bench submit failed: {e}"),
+                    })
+                });
                 let rps = stream.len() as f64 / wall;
                 let scaling = rps / *base_rps.get_or_insert(rps);
                 let st = svc.stats();
@@ -117,8 +289,219 @@ fn main() {
                     st.mean_batch,
                     st.batches
                 );
+                rows.push(obj(vec![
+                    ("section", "grid".into()),
+                    ("backend", format!("{backend:?}").as_str().into()),
+                    ("batch", (batch as i64).into()),
+                    ("wait_us", (wait_us as i64).into()),
+                    ("workers", (workers as i64).into()),
+                    ("rps", rps.into()),
+                    ("scaling_vs_1_worker", scaling.into()),
+                    ("p50_us", st.latency_p50_us.into()),
+                    ("p99_us", st.latency_p99_us.into()),
+                    ("mean_batch", st.mean_batch.into()),
+                ]));
                 svc.shutdown();
             }
         }
     }
+
+    // -- 3. shards x workers grid (compiled, stealing on) -------------------
+    // the tentpole's scaling surface: multiple admission shards feeding the
+    // work-stealing executor pool, multi-client closed loop
+    let shard_grid: &[(usize, usize)] = if quick {
+        &[(1, 2), (2, 2)]
+    } else {
+        &[(1, 2), (2, 2), (1, 4), (2, 4), (4, 4)]
+    };
+    for &(shards, workers) in shard_grid {
+        let svc = Service::start(
+            Arc::clone(&net),
+            ServiceCfg {
+                workers,
+                shards,
+                steal: true,
+                max_batch: 64,
+                max_wait: Duration::from_micros(100),
+                queue_depth: 1 << 14,
+                ..Default::default()
+            },
+        );
+        let clients = 2 * workers;
+        let wall = drive(&stream, clients, |codes| {
+            svc.try_submit(codes).map_err(|(e, back)| match e {
+                SubmitError::Backpressure => back.expect("codes back"),
+                e => panic!("serving bench submit failed: {e}"),
+            })
+        });
+        let rps = stream.len() as f64 / wall;
+        let st = svc.stats();
+        println!(
+            "shards {shards} x workers {workers} ({clients} clients) -> {rps:>9.0} req/s | {:.3e} ops/s | {} local pops, {} steals | mean batch {:.1}",
+            st.throughput_ops, st.local_pops, st.steals, st.mean_batch
+        );
+        rows.push(obj(vec![
+            ("section", "shard_grid".into()),
+            ("shards", (shards as i64).into()),
+            ("workers", (workers as i64).into()),
+            ("clients", (clients as i64).into()),
+            ("rps", rps.into()),
+            ("local_pops", (st.local_pops as i64).into()),
+            ("steals", (st.steals as i64).into()),
+            ("mean_batch", st.mean_batch.into()),
+        ]));
+        svc.shutdown();
+    }
+
+    // -- 4. A/B gate: sharded/stealing plane vs frozen PR-3 baseline --------
+    // heavy-tailed synthetic load: every TAIL_EVERY-th executed batch is
+    // stretched by TAIL_US, on both topologies, same stream, same clients.
+    // Acceptance: >= 1.3x with 4+ executors; shards=1+steal=off ~ 1.0x.
+    let workers = 4usize;
+    let shards = if quick { 2 } else { 4 };
+    let clients = 8usize;
+    let (max_batch, max_wait) = (16usize, Duration::from_micros(50));
+    let tail_us: u64 = std::env::var("KANELE_BENCH_TAIL_US")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500);
+    let tail_every: usize = std::env::var("KANELE_BENCH_TAIL_EVERY")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let exec_delay = Duration::from_micros(tail_us);
+    println!(
+        "-- sharded plane vs frozen PR-3 baseline: {workers} executors, {clients} clients, tail {tail_us} us every {tail_every} batches --"
+    );
+
+    // bit-exact gate before any timing: both topologies vs sim::eval
+    {
+        let probe = &stream[..stream.len().min(128)];
+        let oracle = sim::eval_batch(&net, probe);
+        let base = baseline::start(
+            &net,
+            baseline::Cfg {
+                workers,
+                max_batch,
+                max_wait,
+                queue_depth: 1 << 14,
+                exec_delay: Duration::ZERO,
+                exec_delay_every: 0,
+            },
+        );
+        let rxs: Vec<_> = probe.iter().map(|c| base.submit(c.clone()).expect("probe")).collect();
+        for (rx, want) in rxs.into_iter().zip(&oracle) {
+            assert_eq!(&rx.recv().unwrap(), want, "baseline diverges from sim");
+        }
+        base.shutdown();
+        let svc = Service::start(
+            Arc::clone(&net),
+            ServiceCfg { workers, shards, steal: true, max_batch, max_wait, ..Default::default() },
+        );
+        let rxs: Vec<_> = probe
+            .iter()
+            .enumerate()
+            .map(|(i, c)| svc.submit_to(i % shards, c.clone()).expect("probe"))
+            .collect();
+        for (rx, want) in rxs.into_iter().zip(&oracle) {
+            assert_eq!(&rx.recv().unwrap().sums, want, "sharded plane diverges from sim");
+        }
+        svc.shutdown();
+        println!("   bit-exactness gate: baseline == sharded == sim on {} probes", probe.len());
+    }
+
+    let reps = if quick { 1 } else { 2 };
+    let run_baseline = || {
+        let svc = baseline::start(
+            &net,
+            baseline::Cfg {
+                workers,
+                max_batch,
+                max_wait,
+                queue_depth: 1 << 14,
+                exec_delay,
+                exec_delay_every: tail_every,
+            },
+        );
+        let wall = drive(&stream, clients, |codes| svc.submit(codes));
+        assert_eq!(svc.completed(), stream.len() as u64);
+        svc.shutdown();
+        stream.len() as f64 / wall
+    };
+    let run_sharded = |shards: usize, steal: bool| {
+        let svc = Service::start(
+            Arc::clone(&net),
+            ServiceCfg {
+                workers,
+                shards,
+                steal,
+                max_batch,
+                max_wait,
+                queue_depth: 1 << 14,
+                exec_delay,
+                exec_delay_every: tail_every,
+                ..Default::default()
+            },
+        );
+        let wall = drive(&stream, clients, |codes| {
+            svc.try_submit(codes).map_err(|(e, back)| match e {
+                SubmitError::Backpressure => back.expect("codes back"),
+                e => panic!("serving bench submit failed: {e}"),
+            })
+        });
+        let st = svc.stats();
+        assert_eq!(st.completed, stream.len() as u64);
+        svc.shutdown();
+        (stream.len() as f64 / wall, st.steals)
+    };
+    // best-of-reps: single full-stream passes are noisy on shared runners
+    let rps_base = (0..reps).map(|_| run_baseline()).fold(f64::MIN, f64::max);
+    let (mut rps_sharded, mut steals_sharded) = (f64::MIN, 0);
+    for _ in 0..reps {
+        let (r, s) = run_sharded(shards, true);
+        if r > rps_sharded {
+            (rps_sharded, steals_sharded) = (r, s);
+        }
+    }
+    let (rps_nosteal, _) = run_sharded(shards, false);
+    let (rps_eq, _) = run_sharded(1, false);
+    let ratio = rps_sharded / rps_base;
+    let ratio_nosteal = rps_nosteal / rps_base;
+    let ratio_eq = rps_eq / rps_base;
+    println!("   frozen PR-3 baseline        : {rps_base:>9.0} req/s (1.00x)");
+    println!(
+        "   shards={shards} steal=on  ({steals_sharded:>5} steals): {rps_sharded:>9.0} req/s ({ratio:.2}x) {}",
+        if ratio >= 1.3 { "PASS >= 1.3x" } else { "MISS < 1.3x (record + investigate)" }
+    );
+    println!("   shards={shards} steal=off            : {rps_nosteal:>9.0} req/s ({ratio_nosteal:.2}x)");
+    println!("   shards=1 steal=off (equivalence) : {rps_eq:>9.0} req/s ({ratio_eq:.2}x, expect ~1.0x)");
+    rows.push(obj(vec![
+        ("section", "heavy_tail_ab".into()),
+        ("workers", (workers as i64).into()),
+        ("clients", (clients as i64).into()),
+        ("tail_us", (tail_us as i64).into()),
+        ("tail_every", (tail_every as i64).into()),
+        ("baseline_rps", rps_base.into()),
+        ("sharded_shards", (shards as i64).into()),
+        ("sharded_rps", rps_sharded.into()),
+        ("sharded_steals", (steals_sharded as i64).into()),
+        ("ratio_vs_baseline", ratio.into()),
+        ("nosteal_rps", rps_nosteal.into()),
+        ("nosteal_ratio", ratio_nosteal.into()),
+        ("equivalence_rps", rps_eq.into()),
+        ("equivalence_ratio", ratio_eq.into()),
+        ("gate_1_3x", (ratio >= 1.3).into()),
+    ]));
+
+    // machine-readable trajectory: stdout grids rot in logs, this does not
+    let doc = obj(vec![
+        ("bench", "serving".into()),
+        ("quick", quick.into()),
+        ("model", ck.name.as_str().into()),
+        ("n_requests", (stream.len() as i64).into()),
+        ("rows", Value::Array(rows)),
+    ]);
+    std::fs::write("BENCH_serving.json", kanele::json::to_string(&doc))
+        .expect("write BENCH_serving.json");
+    println!("wrote BENCH_serving.json");
 }

@@ -2,12 +2,15 @@
 //!
 //! [`Policy::decide`] is the single source of dispatch decisions (fill to
 //! `max_batch`, flush once the *oldest request* has waited `max_wait`);
-//! [`collect`] is the loop the coordinator's dispatcher thread runs to turn
-//! a request channel into [`Batch`]es, consulting `decide` before every
-//! wait. Both are thread-free and unit-testable: `collect` only needs a
-//! channel of [`Timestamped`] items, so the policy/dispatcher equivalence
-//! is asserted directly in tests instead of being an emergent property of
-//! the worker pool.
+//! [`collect_with`] is the loop each of the coordinator's per-shard
+//! dispatcher threads runs to turn its admission channel into [`Batch`]es,
+//! consulting `decide` before every wait and recording per-shard policy
+//! state into a [`CollectStats`] (how many batches, how many dispatched
+//! full vs flushed on timeout — the observable a shard's batching health
+//! is judged by). Both are thread-free and unit-testable: `collect_with`
+//! only needs a channel of [`Timestamped`] items, so the policy/dispatcher
+//! equivalence is asserted directly in tests instead of being an emergent
+//! property of the worker pool.
 //!
 //! Age is always measured from each request's *submission* time, never
 //! from when collection started: a request that queued behind a busy
@@ -101,15 +104,57 @@ impl<T: Timestamped> Batch<T> {
     }
 }
 
+/// Why [`collect_with`] dispatched a batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    /// Filled to `max_batch`.
+    Full,
+    /// Oldest request exhausted its `max_wait` budget.
+    Timeout,
+    /// Admission disconnected (shutdown) with a partial batch in hand.
+    Disconnect,
+}
+
+/// Per-shard collection state: each dispatcher owns one and publishes it
+/// into its shard's service statistics, so a shard whose batches always
+/// flush on timeout (underfed) is distinguishable from one dispatching
+/// full (saturated).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CollectStats {
+    pub batches: u64,
+    pub items: u64,
+    pub flush_full: u64,
+    pub flush_timeout: u64,
+    pub flush_disconnect: u64,
+}
+
+impl CollectStats {
+    fn record<T>(&mut self, reason: FlushReason, batch: Batch<T>) -> Batch<T> {
+        self.batches += 1;
+        self.items += batch.len() as u64;
+        match reason {
+            FlushReason::Full => self.flush_full += 1,
+            FlushReason::Timeout => self.flush_timeout += 1,
+            FlushReason::Disconnect => self.flush_disconnect += 1,
+        }
+        batch
+    }
+}
+
 /// Collect the next batch from `rx`, consulting [`Policy::decide`] before
-/// every wait. Returns `None` once the channel is disconnected and fully
-/// drained (service shutdown); a partial batch in hand at disconnection is
-/// still dispatched so admitted requests always complete.
+/// every wait and recording the dispatch into `stats`. Returns `None` once
+/// the channel is disconnected and fully drained (service shutdown); a
+/// partial batch in hand at disconnection is still dispatched so admitted
+/// requests always complete.
 ///
 /// A backlog is drained greedily first: requests already queued fill the
 /// batch to `max_batch` without any waiting, so sustained load produces
 /// full batches regardless of how old the queue head is.
-pub fn collect<T: Timestamped>(rx: &Receiver<T>, policy: &Policy) -> Option<Batch<T>> {
+pub fn collect_with<T: Timestamped>(
+    rx: &Receiver<T>,
+    policy: &Policy,
+    stats: &mut CollectStats,
+) -> Option<Batch<T>> {
     let first = rx.recv().ok()?;
     let mut oldest = first.submitted();
     let mut items = vec![first];
@@ -122,22 +167,40 @@ pub fn collect<T: Timestamped>(rx: &Receiver<T>, policy: &Policy) -> Option<Batc
                     items.push(t);
                 }
                 Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => return Some(Batch { items, oldest }),
+                Err(TryRecvError::Disconnected) => {
+                    return Some(stats.record(FlushReason::Disconnect, Batch { items, oldest }))
+                }
             }
         }
         match policy.decide(items.len(), oldest.elapsed()) {
-            Decision::Dispatch => return Some(Batch { items, oldest }),
+            Decision::Dispatch => {
+                let reason = if items.len() >= policy.max_batch {
+                    FlushReason::Full
+                } else {
+                    FlushReason::Timeout
+                };
+                return Some(stats.record(reason, Batch { items, oldest }));
+            }
             Decision::Wait(d) => match rx.recv_timeout(d) {
                 Ok(t) => {
                     oldest = oldest.min(t.submitted());
                     items.push(t);
                 }
-                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
-                    return Some(Batch { items, oldest })
+                Err(RecvTimeoutError::Timeout) => {
+                    return Some(stats.record(FlushReason::Timeout, Batch { items, oldest }))
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Some(stats.record(FlushReason::Disconnect, Batch { items, oldest }))
                 }
             },
         }
     }
+}
+
+/// [`collect_with`] without the per-shard bookkeeping (tests, simulations,
+/// embedders that track their own).
+pub fn collect<T: Timestamped>(rx: &Receiver<T>, policy: &Policy) -> Option<Batch<T>> {
+    collect_with(rx, policy, &mut CollectStats::default())
 }
 
 #[cfg(test)]
@@ -247,10 +310,14 @@ mod tests {
         drop(tx);
         // would otherwise wait 5 s: disconnection flushes what was admitted
         let t = Instant::now();
-        let b = collect(&rx, &p).expect("partial batch");
+        let mut cs = CollectStats::default();
+        let b = collect_with(&rx, &p, &mut cs).expect("partial batch");
         assert_eq!(b.len(), 2);
         assert!(t.elapsed() < Duration::from_secs(1));
-        assert!(collect(&rx, &p).is_none());
+        assert!(collect_with(&rx, &p, &mut cs).is_none());
+        assert_eq!(cs.batches, 1);
+        assert_eq!(cs.items, 2);
+        assert_eq!(cs.flush_disconnect, 1, "shutdown flush recorded as such: {cs:?}");
     }
 
     #[test]
@@ -274,7 +341,8 @@ mod tests {
             // tx drops here: channel already drained, collect returns None
         });
         let mut lens = Vec::new();
-        while let Some(b) = collect(&rx, &p) {
+        let mut cs = CollectStats::default();
+        while let Some(b) = collect_with(&rx, &p, &mut cs) {
             let age_at_dispatch = b.oldest.elapsed();
             assert_eq!(
                 p.decide(b.len(), age_at_dispatch),
@@ -286,5 +354,11 @@ mod tests {
         }
         producer.join().unwrap();
         assert_eq!(lens, vec![4, 4, 1]);
+        // per-shard policy state: two full dispatches, one timeout flush
+        assert_eq!(cs.batches, 3);
+        assert_eq!(cs.items, 9);
+        assert_eq!(cs.flush_full, 2, "{cs:?}");
+        assert_eq!(cs.flush_timeout, 1, "{cs:?}");
+        assert_eq!(cs.flush_disconnect, 0, "{cs:?}");
     }
 }

@@ -1,28 +1,40 @@
-//! L3 coordinator: a dispatcher/executor serving pipeline over the netlist.
+//! L3 coordinator: a sharded dispatcher/executor serving plane over the
+//! netlist.
 //!
 //! The paper's deployment story is a streaming accelerator core (II = 1)
-//! fed by a host; this module is that host-side system, structured as a
-//! two-stage pipeline so batch *formation* never serializes behind batch
-//! *execution*:
+//! fed by a host; this module is that host-side system. PR 2 split batch
+//! *formation* from batch *execution* (one dispatcher, one bounded work
+//! channel, N executors); this revision shards the whole plane so no
+//! single admission channel, dispatcher thread, or handoff queue owns the
+//! hot path:
 //!
 //! ```text
-//! clients --submit--> [admission queue] --> dispatcher --> [work queue] --> executors 0..N-1
-//!                      bounded,              owns the        bounded         run batches,
-//!                      backpressure          receiver,       handoff         reply to clients
-//!                                            forms batches
+//!            shard 0: [admission q0] -> dispatcher 0 -> [deque 0] ---\
+//! clients ==>shard 1: [admission q1] -> dispatcher 1 -> [deque 1] ----+==> executors 0..W-1
+//!   submit:    ...        ...             ...              ...      /     pop home deque,
+//!   client-affine     bounded,        owns its rx,     bounded,           steal oldest from
+//!   round-robin,      backpressure    batcher::collect per-shard          victims when idle
+//!   spill to next
+//!   shard when full
 //! ```
 //!
-//! A single **dispatcher** thread owns the admission receiver outright, so
-//! no thread ever holds a lock across a batch-collection wait. It forms
-//! batches with [`batcher::collect`], which consults
-//! [`batcher::Policy::decide`] for every dispatch decision — fill to
-//! `max_batch`, or flush once the *oldest request* (measured from its
-//! submission, not from when collection started) has waited `max_wait`.
-//! Formed [`batcher::Batch`]es travel over a bounded work channel to the
-//! **executor** pool: while one batch executes, the dispatcher is already
-//! forming the next, and N executors run N batches concurrently. Tokio is
-//! not available offline; std threads + channels are the right tool for
-//! these CPU-bound microsecond batches anyway.
+//! **Admission** is S bounded channels. [`Service::submit`] picks a shard
+//! by client-affine round-robin (each submitting thread gets a sticky seed,
+//! so one client's requests stay FIFO on one shard) and spills to the next
+//! shard only under local backpressure, so total capacity stays
+//! work-conserving. **Formation** is one dispatcher thread per shard, each
+//! the sole owner of its receiver, forming batches with
+//! [`batcher::collect_with`] — every dispatch decision still comes from
+//! [`batcher::Policy::decide`], and `max_wait` is still measured from each
+//! request's *submission* (a request that aged in the queue flushes
+//! immediately, on whichever shard it landed). **Execution** is a
+//! work-stealing pool ([`steal::WorkPool`]): each dispatcher pushes formed
+//! [`batcher::Batch`]es onto its shard's bounded deque, executors pop their
+//! home deque and steal the *oldest* batch from a victim shard when idle,
+//! so a heavy-tailed batch cost on one shard is absorbed by the whole pool
+//! instead of convoying behind one queue. With `shards = 1` the plane
+//! degenerates to exactly the PR-2/3 pipeline (one admission queue, one
+//! dispatcher, one shared deque).
 //!
 //! Executors run on a [`Backend`]: the default is the compiled flat
 //! program of [`crate::engine`] (batch-major, hot-swap aware via
@@ -30,16 +42,23 @@
 //! the netlist-walking interpreter remains selectable for debugging and
 //! A/B benchmarking.
 //!
-//! Shutdown is graceful: [`Service::shutdown`] disconnects admission, the
-//! dispatcher drains and dispatches what was already admitted, executors
-//! finish and exit, and any later `submit*` call fails fast with
+//! Statistics are kept per shard ([`ShardStats`]: admitted, batches formed,
+//! full-vs-timeout flushes) plus service-wide counters; [`Service::stats`]
+//! aggregates them into one [`ServiceStats`] snapshot whose totals are
+//! consistent with the per-shard breakdown it carries.
+//!
+//! Shutdown is graceful across shards: [`Service::shutdown`] disconnects
+//! every admission channel, each dispatcher drains and dispatches what was
+//! already admitted and closes its producer handle on the pool, executors
+//! drain the deques and exit, and any later `submit*` call fails fast with
 //! [`SubmitError::Stopped`] instead of spinning.
 
 pub mod batcher;
+pub mod steal;
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -51,6 +70,7 @@ use crate::sim;
 use crate::util::Reservoir;
 
 use batcher::{Batch, Policy, Timestamped};
+use steal::WorkPool;
 
 /// Retained latency samples: quantiles stay approximately correct under
 /// sustained load at O(1) memory (the previous unbounded summary retained
@@ -90,7 +110,7 @@ impl Timestamped for Pending {
 /// request spins forever.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum SubmitError {
-    /// Admission queue full; retrying later can succeed.
+    /// Admission queues full (every shard tried); retrying later can succeed.
     Backpressure,
     /// Service shut down; no retry will ever succeed.
     Stopped,
@@ -101,7 +121,7 @@ pub enum SubmitError {
 impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            SubmitError::Backpressure => write!(f, "admission queue full (backpressure)"),
+            SubmitError::Backpressure => write!(f, "admission queues full (backpressure)"),
             SubmitError::Stopped => write!(f, "service stopped"),
             SubmitError::Invalid(msg) => write!(f, "invalid request: {msg}"),
         }
@@ -135,34 +155,77 @@ impl Backend {
 /// Service configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ServiceCfg {
-    /// Executor threads; batch formation always uses one extra dispatcher
-    /// thread (none of either is spawned when `workers == 0`).
+    /// Executor threads; batch formation uses one extra dispatcher thread
+    /// *per shard* (none of either is spawned when `workers == 0`).
     pub workers: usize,
+    /// Admission shards, each with its own bounded queue and dispatcher.
+    /// Clamped to `[1, workers]` at start (with stealing off, every shard
+    /// needs at least one home executor or its batches would strand).
+    pub shards: usize,
+    /// Idle executors steal the oldest queued batch from other shards'
+    /// deques. With one shard this is moot (all executors share the one
+    /// deque); with several it is what keeps heavy-tailed batch costs from
+    /// convoying behind a single shard.
+    pub steal: bool,
     pub max_batch: usize,
     pub max_wait: Duration,
-    /// Bounded admission queue (backpressure).
+    /// Bounded admission capacity, **total across shards** (each shard's
+    /// queue gets `queue_depth / shards`, at least 1).
     pub queue_depth: usize,
     pub backend: Backend,
     /// Artificial per-batch execution delay. Zero in production; test and
     /// bench instrumentation that stretches execution so pipeline overlap
-    /// is observable on microsecond workloads.
+    /// and steal rebalancing are observable on microsecond workloads.
     pub exec_delay: Duration,
+    /// Restrict `exec_delay` to batches formed by one shard (deterministic
+    /// heavy-tail: one slow shard, the rest fast). `None` delays all.
+    pub exec_delay_shard: Option<usize>,
+    /// Apply `exec_delay` to every Nth executed batch only (service-wide
+    /// execution sequence); `0`/`1` delay every batch. Synthetic
+    /// heavy-tailed load for benches.
+    pub exec_delay_every: usize,
 }
 
 impl Default for ServiceCfg {
     fn default() -> Self {
         ServiceCfg {
             workers: 4,
+            shards: 1,
+            steal: true,
             max_batch: 64,
             max_wait: Duration::from_micros(200),
             queue_depth: 4096,
             backend: Backend::Compiled,
             exec_delay: Duration::ZERO,
+            exec_delay_shard: None,
+            exec_delay_every: 0,
         }
     }
 }
 
-/// Aggregated service statistics.
+/// One admission shard's statistics. The flush counters partition
+/// `batches` (`flush_full + flush_timeout + flush_disconnect == batches`)
+/// in a quiescent snapshot; a snapshot taken while the shard's dispatcher
+/// is mid-publish can be transiently off by the in-flight batch (the five
+/// counters are separate relaxed stores, not one atomic struct).
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    /// Requests admitted into this shard's queue.
+    pub admitted: u64,
+    /// Batches formed by this shard's dispatcher.
+    pub batches: u64,
+    pub mean_batch: f64,
+    /// Batches dispatched because they filled to `max_batch`.
+    pub flush_full: u64,
+    /// Batches flushed because the oldest request aged out `max_wait`.
+    pub flush_timeout: u64,
+    /// Partial batches flushed by shutdown disconnecting admission.
+    pub flush_disconnect: u64,
+}
+
+/// Aggregated service statistics. Totals (`batches`, `mean_batch`, ...)
+/// are the aggregation of the `per_shard` breakdown carried alongside, so
+/// one snapshot is internally consistent.
 #[derive(Clone, Debug, Default)]
 pub struct ServiceStats {
     pub completed: u64,
@@ -171,7 +234,7 @@ pub struct ServiceStats {
     /// the model snapshot (admission raced a `replace_model`). The client
     /// observes a closed reply channel.
     pub dropped: u64,
-    /// Batches formed by the dispatcher (counted at formation, so under
+    /// Batches formed by the dispatchers (counted at formation, so under
     /// load this runs ahead of execution — the pipeline is visible here).
     pub batches: u64,
     pub mean_batch: f64,
@@ -186,6 +249,36 @@ pub struct ServiceStats {
     pub throughput_ops: f64,
     /// Largest executor scratch footprint observed (bytes).
     pub scratch_bytes: u64,
+    /// Batches executors popped from their own shard's deque.
+    pub local_pops: u64,
+    /// Batches idle executors stole from another shard's deque.
+    pub steals: u64,
+    /// Per-admission-shard breakdown; `len() == cfg.shards`.
+    pub per_shard: Vec<ShardStats>,
+}
+
+/// Per-shard shared counters. `admitted` is written by submitters
+/// (fetch_add); everything else is single-writer — the shard's dispatcher
+/// publishes its `CollectStats` running totals with plain stores.
+#[derive(Default)]
+struct ShardShared {
+    admitted: AtomicU64,
+    batches: AtomicU64,
+    batched: AtomicU64,
+    flush_full: AtomicU64,
+    flush_timeout: AtomicU64,
+    flush_disconnect: AtomicU64,
+}
+
+impl ShardShared {
+    /// Publish the dispatcher's running totals (sole writer: stores).
+    fn publish(&self, cs: &batcher::CollectStats) {
+        self.batches.store(cs.batches, Ordering::Relaxed);
+        self.batched.store(cs.items, Ordering::Relaxed);
+        self.flush_full.store(cs.flush_full, Ordering::Relaxed);
+        self.flush_timeout.store(cs.flush_timeout, Ordering::Relaxed);
+        self.flush_disconnect.store(cs.flush_disconnect, Ordering::Relaxed);
+    }
 }
 
 struct Shared {
@@ -194,9 +287,6 @@ struct Shared {
     completed: AtomicU64,
     rejected: AtomicU64,
     dropped: AtomicU64,
-    batches: AtomicU64,
-    /// Total requests across all formed batches (mean batch = this / batches).
-    batched: AtomicU64,
     /// Fused LUT ops executed (valid samples x ops-per-sample), counted at
     /// execution: the backend-independent work unit that makes perf numbers
     /// comparable across PRs.
@@ -204,24 +294,103 @@ struct Shared {
     /// Largest executor scratch footprint observed, bytes (feature-major
     /// planes grow to the biggest batch seen and never shrink).
     scratch: AtomicU64,
+    /// Service-wide executed-batch sequence (only advanced when
+    /// `exec_delay_every` instrumentation is armed).
+    exec_seq: AtomicU64,
+    shards: Vec<ShardShared>,
+}
+
+/// Condvar wakeup for `submit_blocking`'s backpressure waits: dispatchers
+/// bump the generation whenever they drain requests out of an admission
+/// queue, so blocked submitters park instead of sleep-spinning. A sibling
+/// of the eventcount gate inside [`steal::WorkPool`] (same
+/// generation+condvar+defensive-poll shape, different condition), kept
+/// separate because the conditions and ownership differ. `bump` is on the
+/// dispatcher's per-batch path, so it skips the lock entirely while no
+/// submitter is parked; the one race that allows (a waiter registering
+/// concurrently with the skipped bump) costs at most one poll interval —
+/// submitters re-check admission on every wake either way.
+struct DrainGate {
+    gen: Mutex<u64>,
+    cond: Condvar,
+    /// Submitters parked (or about to re-check); bumps skip the lock at 0.
+    waiters: AtomicUsize,
+}
+
+impl DrainGate {
+    const POLL: Duration = Duration::from_millis(1);
+
+    fn new() -> DrainGate {
+        DrainGate { gen: Mutex::new(0), cond: Condvar::new(), waiters: AtomicUsize::new(0) }
+    }
+
+    fn generation(&self) -> u64 {
+        *self.gen.lock().unwrap()
+    }
+
+    fn bump(&self) {
+        if self.waiters.load(Ordering::SeqCst) == 0 {
+            return; // nobody parked: keep the dispatch path lock-free
+        }
+        *self.gen.lock().unwrap() += 1;
+        self.cond.notify_all();
+    }
+
+    /// Block until the generation moves past `seen` (or the safety poll
+    /// expires). Callers read `seen` *before* their failed admission
+    /// attempt, so a drain that lands in between either already moved the
+    /// generation or at worst costs one poll interval.
+    fn wait_past(&self, seen: u64) {
+        let mut g = self.gen.lock().unwrap();
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        while *g == seen {
+            let (g2, timeout) = self.cond.wait_timeout(g, Self::POLL).unwrap();
+            g = g2;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Sticky client-affine shard seed: each submitting thread takes the next
+/// value of a process-wide round-robin counter on first use, so one
+/// client's requests keep landing on one shard (per-client FIFO order, warm
+/// dispatcher) while distinct clients spread across shards.
+fn affine_seed() -> usize {
+    use std::cell::Cell;
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SEED: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    SEED.with(|c| {
+        if c.get() == usize::MAX {
+            c.set(NEXT.fetch_add(1, Ordering::Relaxed));
+        }
+        c.get()
+    })
 }
 
 /// Batched inference service over a netlist.
 pub struct Service {
-    /// Admission sender; taken (→ `None`) by [`Service::shutdown`], which
-    /// disconnects the dispatcher. RwLock so concurrent submitters share a
-    /// read lock on the hot path.
-    tx: RwLock<Option<SyncSender<Pending>>>,
-    /// With zero workers there is no dispatcher to own the admission
-    /// receiver; parked here so the queue stays connected and backpressure
-    /// is observable without anything draining it.
-    rx_parked: Mutex<Option<Receiver<Pending>>>,
+    /// Per-shard admission senders; taken (→ `None`) by
+    /// [`Service::shutdown`], which disconnects every dispatcher at once.
+    /// RwLock so concurrent submitters share a read lock on the hot path.
+    txs: RwLock<Option<Vec<SyncSender<Pending>>>>,
+    /// With zero workers there are no dispatchers to own the admission
+    /// receivers; parked here so the queues stay connected and backpressure
+    /// is observable without anything draining them.
+    rx_parked: Mutex<Vec<Receiver<Pending>>>,
+    /// Dispatcher → executor handoff; `None` when `workers == 0`.
+    pool: Option<Arc<WorkPool<Batch<Pending>>>>,
+    drain: Arc<DrainGate>,
     /// Hot-swappable model handle (paper §6: online LUT updates).
     cell: Arc<NetlistCell>,
     shared: Arc<Shared>,
     next_id: AtomicU64,
     started: Instant,
-    /// Dispatcher + executors; drained on shutdown.
+    /// Dispatchers + executors; drained on shutdown.
     threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
     cfg: ServiceCfg,
 }
@@ -234,21 +403,37 @@ impl Service {
     /// Start over a swappable cell: edge tables (or the whole model) can be
     /// replaced while serving; in-flight batches finish on their snapshot.
     pub fn start_swappable(cell: Arc<NetlistCell>, cfg: ServiceCfg) -> Service {
-        let (tx, rx) = sync_channel::<Pending>(cfg.queue_depth);
+        let mut cfg = cfg;
+        cfg.shards = cfg.shards.max(1);
+        if cfg.workers > 0 {
+            // with stealing off every shard needs a home executor; with it
+            // on, more dispatchers than executors is pure overhead
+            cfg.shards = cfg.shards.min(cfg.workers);
+        }
+        let per_shard_depth = (cfg.queue_depth / cfg.shards).max(1);
+        let mut txs = Vec::with_capacity(cfg.shards);
+        let mut rxs = Vec::with_capacity(cfg.shards);
+        for _ in 0..cfg.shards {
+            let (tx, rx) = sync_channel::<Pending>(per_shard_depth);
+            txs.push(tx);
+            rxs.push(rx);
+        }
         let shared = Arc::new(Shared {
             latencies: Mutex::new(Reservoir::new(LATENCY_RESERVOIR)),
             completed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
-            batched: AtomicU64::new(0),
             fused_ops: AtomicU64::new(0),
             scratch: AtomicU64::new(0),
+            exec_seq: AtomicU64::new(0),
+            shards: (0..cfg.shards).map(|_| ShardShared::default()).collect(),
         });
-        let mut threads = Vec::with_capacity(cfg.workers + 1);
-        let mut rx_parked = None;
+        let drain = Arc::new(DrainGate::new());
+        let mut threads = Vec::with_capacity(cfg.workers + cfg.shards);
+        let mut rx_parked = Vec::new();
+        let mut pool = None;
         if cfg.workers == 0 {
-            rx_parked = Some(rx);
+            rx_parked = rxs;
         } else {
             // backend resources: the compiled path shares one program cache
             // (compiled once here, recompiled lazily after hot-swaps); the
@@ -259,33 +444,44 @@ impl Service {
                 }
                 Backend::Interpreted => WorkerBackend::Interpreted(Arc::clone(&cell)),
             };
-            // handoff depth = workers: every executor can be running one
-            // batch with another staged before the dispatcher blocks
-            let (work_tx, work_rx) = sync_channel::<Batch<Pending>>(cfg.workers);
-            let work_rx = Arc::new(Mutex::new(work_rx));
+            // per-shard deque depth ~ executors per shard (rounded up, so
+            // the total staged budget is never below the old single work
+            // channel of depth `workers`): every executor can be running
+            // one batch with another staged before a dispatcher blocks
+            let deque_cap = cfg.workers.div_ceil(cfg.shards);
+            let p: Arc<WorkPool<Batch<Pending>>> =
+                Arc::new(WorkPool::new(cfg.shards, deque_cap, cfg.steal, cfg.shards, cfg.workers));
             for w in 0..cfg.workers {
-                let work_rx = Arc::clone(&work_rx);
+                let pool = Arc::clone(&p);
+                let home = w % cfg.shards;
                 let backend = exec_backend.clone();
                 let shared = Arc::clone(&shared);
                 threads.push(
                     std::thread::Builder::new()
                         .name(format!("kanele-exec-{w}"))
-                        .spawn(move || executor_loop(work_rx, backend, shared, cfg))
+                        .spawn(move || executor_loop(pool, home, backend, shared, cfg))
                         .expect("spawn executor"),
                 );
             }
             let policy = Policy { max_batch: cfg.max_batch, max_wait: cfg.max_wait };
-            let shared_d = Arc::clone(&shared);
-            threads.push(
-                std::thread::Builder::new()
-                    .name("kanele-dispatch".into())
-                    .spawn(move || dispatcher_loop(rx, work_tx, policy, shared_d))
-                    .expect("spawn dispatcher"),
-            );
+            for (s, rx) in rxs.into_iter().enumerate() {
+                let pool = Arc::clone(&p);
+                let shared = Arc::clone(&shared);
+                let drain = Arc::clone(&drain);
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("kanele-dispatch-{s}"))
+                        .spawn(move || dispatcher_loop(s, rx, pool, policy, shared, drain))
+                        .expect("spawn dispatcher"),
+                );
+            }
+            pool = Some(p);
         }
         Service {
-            tx: RwLock::new(Some(tx)),
+            txs: RwLock::new(Some(txs)),
             rx_parked: Mutex::new(rx_parked),
+            pool,
+            drain,
             cell,
             shared,
             next_id: AtomicU64::new(0),
@@ -319,44 +515,103 @@ impl Service {
         Ok(())
     }
 
-    /// Submit a request; the returned receiver yields the response. Fails
-    /// fast with a typed [`SubmitError`]: wrong width and shutdown are
-    /// terminal, a full admission queue is retryable backpressure.
-    pub fn submit(&self, codes: Vec<u32>) -> Result<Receiver<Response>, SubmitError> {
+    /// Admission core: try the start shard, then (unpinned) spill through
+    /// the remaining shards before declaring backpressure. On failure the
+    /// request's codes are handed back where recoverable, so retry loops
+    /// never clone the payload.
+    fn submit_shard(
+        &self,
+        pin: Option<usize>,
+        codes: Vec<u32>,
+    ) -> Result<Receiver<Response>, (SubmitError, Option<Vec<u32>>)> {
         // validated on every call: a concurrent replace_model can change
         // the expected width between retries
-        self.check_width(&codes)?;
+        if let Err(e) = self.check_width(&codes) {
+            return Err((e, Some(codes)));
+        }
+        let guard = self.txs.read().unwrap();
+        let Some(txs) = guard.as_ref() else {
+            return Err((SubmitError::Stopped, Some(codes)));
+        };
+        let n = txs.len();
+        let (start, tries) = match pin {
+            Some(s) => (s % n, 1),
+            None => (affine_seed() % n, n),
+        };
         let (reply_tx, reply_rx) = sync_channel(1);
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             codes,
             submitted: Instant::now(),
         };
-        let tx = self.tx.read().unwrap();
-        let Some(tx) = tx.as_ref() else {
-            return Err(SubmitError::Stopped);
-        };
-        match tx.try_send(Pending { req, reply: reply_tx }) {
-            Ok(()) => Ok(reply_rx),
-            Err(TrySendError::Full(_)) => {
-                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(SubmitError::Backpressure)
+        let mut pending = Pending { req, reply: reply_tx };
+        for i in 0..tries {
+            let s = (start + i) % n;
+            match txs[s].try_send(pending) {
+                Ok(()) => {
+                    self.shared.shards[s].admitted.fetch_add(1, Ordering::Relaxed);
+                    return Ok(reply_rx);
+                }
+                Err(TrySendError::Full(p)) => pending = p,
+                // a dispatcher died (panic); indistinguishable from stopped
+                Err(TrySendError::Disconnected(p)) => {
+                    return Err((SubmitError::Stopped, Some(p.req.codes)))
+                }
             }
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Stopped),
         }
+        self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+        Err((SubmitError::Backpressure, Some(pending.req.codes)))
+    }
+
+    /// Submit a request; the returned receiver yields the response. Fails
+    /// fast with a typed [`SubmitError`]: wrong width and shutdown are
+    /// terminal, full admission queues are retryable backpressure.
+    pub fn submit(&self, codes: Vec<u32>) -> Result<Receiver<Response>, SubmitError> {
+        self.try_submit(codes).map_err(|(e, _)| e)
+    }
+
+    /// [`Service::submit`] that hands the codes back on recoverable
+    /// failures, so closed-loop clients retry without re-cloning the
+    /// payload.
+    pub fn try_submit(
+        &self,
+        codes: Vec<u32>,
+    ) -> Result<Receiver<Response>, (SubmitError, Option<Vec<u32>>)> {
+        self.submit_shard(None, codes)
+    }
+
+    /// Submit pinned to one admission shard — no affine spill. For tests,
+    /// benches and clients doing their own placement; `shard` is taken
+    /// modulo the shard count.
+    pub fn submit_to(
+        &self,
+        shard: usize,
+        codes: Vec<u32>,
+    ) -> Result<Receiver<Response>, SubmitError> {
+        self.submit_shard(Some(shard), codes).map_err(|(e, _)| e)
     }
 
     /// Submit with blocking retry (used by the closed-loop example). Only
-    /// backpressure retries; malformed requests and a stopped service
-    /// return the error immediately instead of spinning forever.
+    /// backpressure retries — parked on the drain gate until a dispatcher
+    /// frees admission slots, not sleep-spinning — and the request codes
+    /// are moved through each attempt, never cloned. Malformed requests and
+    /// a stopped service return the error immediately.
     pub fn submit_blocking(&self, codes: Vec<u32>) -> Result<Response> {
+        let mut codes = codes;
         loop {
-            match self.submit(codes.clone()) {
+            // read the generation BEFORE attempting: a drain landing
+            // between the failed try and the wait shows as a moved
+            // generation, so the wait returns immediately (no lost wakeup)
+            let seen = self.drain.generation();
+            match self.try_submit(codes) {
                 Ok(rx) => {
                     return rx.recv().context("request dropped (model swap or shutdown mid-flight)")
                 }
-                Err(SubmitError::Backpressure) => std::thread::sleep(Duration::from_micros(20)),
-                Err(e) => return Err(e.into()),
+                Err((SubmitError::Backpressure, reclaimed)) => {
+                    codes = reclaimed.expect("backpressure hands the codes back");
+                    self.drain.wait_past(seen);
+                }
+                Err((e, _)) => return Err(e.into()),
             }
         }
     }
@@ -365,9 +620,30 @@ impl Service {
         let qs = self.shared.latencies.lock().unwrap().quantiles(&[0.5, 0.99]);
         let (p50, p99) = (qs[0], qs[1]);
         let completed = self.shared.completed.load(Ordering::Relaxed);
-        let batches = self.shared.batches.load(Ordering::Relaxed);
-        let batched = self.shared.batched.load(Ordering::Relaxed);
         let fused_ops = self.shared.fused_ops.load(Ordering::Relaxed);
+        let mut per_shard = Vec::with_capacity(self.shared.shards.len());
+        let (mut batches, mut batched) = (0u64, 0u64);
+        for ss in &self.shared.shards {
+            let b = ss.batches.load(Ordering::Relaxed);
+            let n = ss.batched.load(Ordering::Relaxed);
+            per_shard.push(ShardStats {
+                admitted: ss.admitted.load(Ordering::Relaxed),
+                batches: b,
+                mean_batch: if b == 0 { 0.0 } else { n as f64 / b as f64 },
+                flush_full: ss.flush_full.load(Ordering::Relaxed),
+                flush_timeout: ss.flush_timeout.load(Ordering::Relaxed),
+                flush_disconnect: ss.flush_disconnect.load(Ordering::Relaxed),
+            });
+            batches += b;
+            batched += n;
+        }
+        let (local_pops, steals) = match &self.pool {
+            Some(p) => {
+                let ps = p.stats();
+                (ps.local, ps.stolen)
+            }
+            None => (0, 0),
+        };
         let elapsed = self.started.elapsed().as_secs_f64();
         ServiceStats {
             completed,
@@ -381,24 +657,29 @@ impl Service {
             fused_ops,
             throughput_ops: fused_ops as f64 / elapsed,
             scratch_bytes: self.shared.scratch.load(Ordering::Relaxed),
+            local_pops,
+            steals,
+            per_shard,
         }
     }
 
+    /// Effective configuration (shards clamped, see [`ServiceCfg::shards`]).
     pub fn cfg(&self) -> ServiceCfg {
         self.cfg
     }
 
-    /// Stop the pipeline and join its threads. Graceful: everything already
-    /// admitted is dispatched and executed first. Idempotent, and callable
-    /// through a shared reference (e.g. an `Arc<Service>` while other
-    /// clients still hold clones — their next `submit*` fails fast with
-    /// [`SubmitError::Stopped`]).
+    /// Stop the plane and join its threads. Graceful: everything already
+    /// admitted on any shard is dispatched and executed first. Idempotent,
+    /// and callable through a shared reference (e.g. an `Arc<Service>`
+    /// while other clients still hold clones — their next `submit*` fails
+    /// fast with [`SubmitError::Stopped`]).
     pub fn shutdown(&self) {
-        // disconnect admission: the dispatcher drains the queue, forwards
-        // the final partial batch, then hangs up the work channel, which
-        // winds down the executors
-        self.tx.write().unwrap().take();
-        self.rx_parked.lock().unwrap().take();
+        // disconnect all admission shards at once: each dispatcher drains
+        // its queue, forwards the final partial batch, and closes its
+        // producer handle on the work pool; once the last closes, executors
+        // drain the deques and wind down
+        self.txs.write().unwrap().take();
+        self.rx_parked.lock().unwrap().clear();
         let threads: Vec<_> = self.threads.lock().unwrap().drain(..).collect();
         for t in threads {
             let _ = t.join();
@@ -419,36 +700,53 @@ enum WorkerBackend {
     Interpreted(Arc<NetlistCell>),
 }
 
-/// Shared handoff end of the dispatcher → executor work channel.
-type WorkQueue = Arc<Mutex<Receiver<Batch<Pending>>>>;
-
-/// Pipeline stage 1 — sole owner of the admission receiver. Every dispatch
-/// decision comes from [`batcher::Policy::decide`] via
-/// [`batcher::collect`]; formed batches are handed downstream over the
-/// bounded work channel. Exits when admission is disconnected and drained.
+/// Pipeline stage 1, one per shard — sole owner of its admission receiver.
+/// Every dispatch decision comes from [`batcher::Policy::decide`] via
+/// [`batcher::collect_with`]; formed batches go onto this shard's deque in
+/// the work-stealing pool. Exits when admission is disconnected and
+/// drained, closing its producer handle so the pool can wind down.
 fn dispatcher_loop(
+    shard: usize,
     rx: Receiver<Pending>,
-    work_tx: SyncSender<Batch<Pending>>,
+    pool: Arc<WorkPool<Batch<Pending>>>,
     policy: Policy,
     shared: Arc<Shared>,
+    drain: Arc<DrainGate>,
 ) {
-    while let Some(batch) = batcher::collect(&rx, &policy) {
-        shared.batches.fetch_add(1, Ordering::Relaxed);
-        shared.batched.fetch_add(batch.len() as u64, Ordering::Relaxed);
-        if work_tx.send(batch).is_err() {
-            return; // executors gone; nothing left to feed
+    let mut cs = batcher::CollectStats::default();
+    while let Some(batch) = batcher::collect_with(&rx, &policy, &mut cs) {
+        shared.shards[shard].publish(&cs);
+        // admission slots just freed: wake submitters parked on backpressure
+        // (before push, which may itself block on a full deque)
+        drain.bump();
+        if !pool.push(shard, batch) {
+            break; // every executor died (panic); nothing left to feed
         }
     }
-    // dropping work_tx here lets executors finish queued batches and exit
+    pool.close_producer();
 }
 
-/// Pipeline stage 2 — pull formed batches off the work queue and run them.
-/// An *idle* executor does hold the work-receiver lock while blocked in
-/// `recv`, but releases it the moment a batch arrives (before executing),
-/// so batch *formation* never waits on executors, executions overlap
-/// freely, and only executors with nothing to do queue on the mutex —
-/// unlike the old design, no lock is held across a batch-collection wait.
-fn executor_loop(work_rx: WorkQueue, backend: WorkerBackend, shared: Arc<Shared>, cfg: ServiceCfg) {
+/// Pipeline stage 2 — pop formed batches (home shard first, stealing the
+/// oldest from victims when idle) and run them. Only executors with
+/// nothing local to do ever touch another shard's deque, so executions
+/// overlap freely and no lock is held across a batch-collection wait.
+fn executor_loop(
+    pool: Arc<WorkPool<Batch<Pending>>>,
+    home: usize,
+    backend: WorkerBackend,
+    shared: Arc<Shared>,
+    cfg: ServiceCfg,
+) {
+    // RAII consumer registration: runs on normal wind-down AND on panic
+    // unwind, so once the last executor is gone dispatchers fail their
+    // push instead of blocking forever on a deque nothing will drain
+    struct ConsumerGuard<'a>(&'a WorkPool<Batch<Pending>>);
+    impl Drop for ConsumerGuard<'_> {
+        fn drop(&mut self) {
+            self.0.close_consumer();
+        }
+    }
+    let _consumer = ConsumerGuard(&pool);
     // per-executor scratch, reused across batches and hot-swaps; sized so
     // the compiled hot path never allocates planes after startup. `flat` is
     // the caller-owned output plane of `run_batch_into`: one flat buffer
@@ -460,18 +758,18 @@ fn executor_loop(work_rx: WorkQueue, backend: WorkerBackend, shared: Arc<Shared>
         WorkerBackend::Interpreted(_) => Executor::new(),
     };
     let mut flat: Vec<i64> = Vec::new();
-    loop {
-        let batch = match work_rx.lock().unwrap().recv() {
-            Ok(b) => b,
-            Err(_) => return, // dispatcher hung up and the queue is drained
-        };
-        execute_batch(batch, &backend, &mut exec, &mut flat, &shared, &cfg);
+    while let Some((src_shard, batch)) = pool.pop(home) {
+        execute_batch(batch, src_shard, &backend, &mut exec, &mut flat, &shared, &cfg);
     }
+    // pool drained and every dispatcher closed: graceful exit
 }
 
-/// Run one batch on the backend and complete its requests.
+/// Run one batch on the backend and complete its requests. `src_shard` is
+/// the admission shard whose dispatcher formed the batch (it may differ
+/// from the executor's home shard — that's a steal).
 fn execute_batch(
     batch: Batch<Pending>,
+    src_shard: usize,
     backend: &WorkerBackend,
     exec: &mut Executor,
     flat: &mut Vec<i64>,
@@ -544,7 +842,15 @@ fn execute_batch(
         }
     };
     if !cfg.exec_delay.is_zero() {
-        std::thread::sleep(cfg.exec_delay);
+        let shard_hit = match cfg.exec_delay_shard {
+            Some(s) => s == src_shard,
+            None => true,
+        };
+        let every_hit = cfg.exec_delay_every <= 1
+            || shared.exec_seq.fetch_add(1, Ordering::Relaxed) % cfg.exec_delay_every as u64 == 0;
+        if shard_hit && every_hit {
+            std::thread::sleep(cfg.exec_delay);
+        }
     }
     let mut dropped = 0u64;
     let mut done: Vec<(Pending, Vec<i64>, Duration)> = Vec::with_capacity(items.len());
@@ -710,6 +1016,55 @@ mod tests {
     }
 
     #[test]
+    fn affine_submit_spills_to_other_shards() {
+        // 2 parked shards of depth 2 each: one client fills BOTH through
+        // the spill path before seeing backpressure — capacity stays
+        // work-conserving even though the client is affine to one shard
+        let ck = synthetic(&[2, 2], &[3, 6], 7);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Arc::new(Netlist::build(&ck, &tables, 2));
+        let svc = Service::start(
+            net,
+            ServiceCfg { workers: 0, shards: 2, queue_depth: 4, ..Default::default() },
+        );
+        assert_eq!(svc.cfg().shards, 2, "workers == 0 leaves shards unclamped");
+        let mut oks = 0;
+        let mut errs = 0;
+        let mut rxs = Vec::new();
+        for _ in 0..10 {
+            match svc.submit(vec![0, 1]) {
+                Ok(rx) => {
+                    oks += 1;
+                    rxs.push(rx);
+                }
+                Err(e) => {
+                    assert_eq!(e, SubmitError::Backpressure);
+                    errs += 1;
+                }
+            }
+        }
+        assert_eq!(oks, 4, "both shards' capacity admits before backpressure");
+        assert_eq!(errs, 6);
+        let st = svc.stats();
+        assert_eq!(st.rejected, 6);
+        assert_eq!(st.per_shard.len(), 2);
+        assert_eq!(st.per_shard.iter().map(|s| s.admitted).sum::<u64>(), 4);
+        assert!(st.per_shard.iter().all(|s| s.admitted == 2), "{:?}", st.per_shard);
+        // pinned submission sees only its shard's (full) queue
+        assert_eq!(svc.submit_to(0, vec![0, 1]).unwrap_err(), SubmitError::Backpressure);
+    }
+
+    #[test]
+    fn shards_clamped_to_workers() {
+        let (_, svc) = service(ServiceCfg { workers: 2, shards: 8, ..Default::default() });
+        assert_eq!(svc.cfg().shards, 2);
+        // still serves correctly after clamping
+        let resp = svc.submit_blocking(vec![1, 2, 3, 0]).unwrap();
+        assert!(!resp.sums.is_empty());
+        svc.shutdown();
+    }
+
+    #[test]
     fn hot_swap_while_serving() {
         // paper §6: LUT updates during operation; in-flight batches keep
         // their snapshot, later requests see the new table
@@ -769,6 +1124,39 @@ mod tests {
     }
 
     #[test]
+    fn submit_blocking_parks_through_sustained_backpressure() {
+        // tiny admission queue + concurrent blocking clients: every request
+        // completes bit-exactly with the condvar-parked retry path (the old
+        // sleep-spin is gone; liveness must not depend on it)
+        let (net, svc) = service(ServiceCfg {
+            workers: 1,
+            max_batch: 4,
+            max_wait: Duration::from_micros(20),
+            queue_depth: 2,
+            ..Default::default()
+        });
+        let svc = Arc::new(svc);
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let svc = Arc::clone(&svc);
+            let net = Arc::clone(&net);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                for _ in 0..50 {
+                    let codes: Vec<u32> = (0..4).map(|_| rng.below(16) as u32).collect();
+                    let want = sim::eval(&net, &codes);
+                    assert_eq!(svc.submit_blocking(codes).unwrap().sums, want);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(svc.stats().completed, 200);
+        svc.shutdown();
+    }
+
+    #[test]
     fn batches_form_while_others_execute() {
         // pipelining witness: with both executors asleep inside a batch,
         // the dispatcher must keep forming batches (under the old
@@ -813,6 +1201,145 @@ mod tests {
         assert!(resp.latency >= Duration::from_millis(30), "flushed early: {:?}", resp.latency);
         assert!(t.elapsed() < Duration::from_secs(2), "waited far past max_wait");
         svc.shutdown();
+    }
+
+    #[test]
+    fn sharded_plane_bit_exact_with_consistent_stats() {
+        // 3 shards, 4 executors, stealing on: responses stay bit-exact and
+        // the aggregated snapshot equals its per-shard breakdown
+        let (net, svc) = service(ServiceCfg {
+            workers: 4,
+            shards: 3,
+            steal: true,
+            max_batch: 8,
+            max_wait: Duration::from_micros(100),
+            ..Default::default()
+        });
+        let mut rng = Rng::new(9);
+        let mut pending = Vec::new();
+        for i in 0..300 {
+            let codes: Vec<u32> = (0..4).map(|_| rng.below(16) as u32).collect();
+            let want = sim::eval(&net, &codes);
+            // pin round-robin so every shard provably sees traffic
+            pending.push((svc.submit_to(i % 3, codes).unwrap(), want));
+        }
+        for (rx, want) in pending {
+            assert_eq!(rx.recv().unwrap().sums, want);
+        }
+        svc.shutdown();
+        let st = svc.stats();
+        assert_eq!(st.completed, 300);
+        assert_eq!(st.per_shard.len(), 3);
+        assert!(st.per_shard.iter().all(|s| s.admitted > 0 && s.batches > 0), "{:?}", st.per_shard);
+        assert_eq!(st.per_shard.iter().map(|s| s.admitted).sum::<u64>(), 300);
+        assert_eq!(st.batches, st.per_shard.iter().map(|s| s.batches).sum::<u64>());
+        for s in &st.per_shard {
+            assert_eq!(s.flush_full + s.flush_timeout + s.flush_disconnect, s.batches, "{s:?}");
+        }
+        // after a full drain, every formed batch was popped exactly once
+        assert_eq!(st.local_pops + st.steals, st.batches);
+        assert_eq!(st.fused_ops, 300 * net.n_luts() as u64);
+    }
+
+    #[test]
+    fn work_stealing_rebalances_a_heavy_tailed_shard() {
+        // deterministic heavy tail: every batch is slow (25 ms) and ALL of
+        // them land on shard 0; with stealing the home-1 executor must pull
+        // roughly half the work, with stealing off the single home-0
+        // executor serializes it. Both wall clock and p99 must show it.
+        let run = |steal: bool| {
+            let (net, svc) = service(ServiceCfg {
+                workers: 2,
+                shards: 2,
+                steal,
+                max_batch: 1, // one request = one batch = one 25 ms unit
+                max_wait: Duration::from_micros(10),
+                exec_delay: Duration::from_millis(25),
+                exec_delay_shard: Some(0),
+                ..Default::default()
+            });
+            let codes = vec![1u32, 2, 3, 0];
+            let want = sim::eval(&net, &codes);
+            let t0 = Instant::now();
+            let rxs: Vec<_> =
+                (0..8).map(|_| svc.submit_to(0, codes.clone()).unwrap()).collect();
+            for rx in rxs {
+                assert_eq!(rx.recv().unwrap().sums, want);
+            }
+            let wall = t0.elapsed();
+            svc.shutdown();
+            let st = svc.stats();
+            assert_eq!(st.completed, 8);
+            assert_eq!(st.per_shard[0].admitted, 8);
+            assert_eq!(st.per_shard[1].admitted, 0);
+            (wall, st)
+        };
+        let (wall_steal, st_steal) = run(true);
+        let (wall_serial, st_serial) = run(false);
+        assert!(st_steal.steals >= 1, "idle executor never stole: {st_steal:?}");
+        assert_eq!(st_serial.steals, 0, "steal=off must not steal: {st_serial:?}");
+        // 8 x 25 ms serial vs ~2x parallel: demand a conservative 25% win so
+        // loaded CI runners still pass while a broken steal path cannot
+        assert!(
+            wall_steal.as_secs_f64() < 0.75 * wall_serial.as_secs_f64(),
+            "stealing did not rebalance the hot shard: steal {wall_steal:?} vs serial {wall_serial:?}"
+        );
+        assert!(
+            st_steal.latency_p99_us < 0.75 * st_serial.latency_p99_us,
+            "p99 with stealing ({:.0} us) should beat no-steal ({:.0} us)",
+            st_steal.latency_p99_us,
+            st_serial.latency_p99_us
+        );
+    }
+
+    #[test]
+    fn single_shard_no_steal_keeps_pipeline_semantics() {
+        // shards=1, steal=off is the PR-2/3 pipeline: submission-relative
+        // max_wait, graceful shutdown drain, and typed submit errors all
+        // hold on the degenerate configuration
+        let cfg = ServiceCfg {
+            workers: 2,
+            shards: 1,
+            steal: false,
+            max_batch: 4,
+            max_wait: Duration::from_millis(40),
+            exec_delay: Duration::from_millis(10),
+            ..Default::default()
+        };
+        // (a) lone request flushes on the submission-relative budget
+        let (_, svc) = service(cfg);
+        let t = Instant::now();
+        let resp = svc.submit_blocking(vec![1, 2, 3, 0]).unwrap();
+        assert!(resp.latency >= Duration::from_millis(30), "flushed early: {:?}", resp.latency);
+        assert!(t.elapsed() < Duration::from_secs(2));
+        svc.shutdown();
+        // (b) shutdown drains everything already admitted
+        let (net, svc) = service(cfg);
+        let codes = vec![1u32, 2, 3, 0];
+        let want = sim::eval(&net, &codes);
+        let rxs: Vec<_> = (0..12).map(|_| svc.submit(codes.clone()).unwrap()).collect();
+        svc.shutdown(); // immediately: admitted requests must still complete
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap().sums, want, "admitted request lost in shutdown drain");
+        }
+        let st = svc.stats();
+        assert_eq!(st.completed, 12);
+        // the flush reasons partition the batch count even when shutdown
+        // flushed a partial batch via the disconnect path
+        let s = &st.per_shard[0];
+        assert_eq!(s.flush_full + s.flush_timeout + s.flush_disconnect, s.batches, "{s:?}");
+        assert_eq!(s.batches, st.batches);
+        // (c) typed errors after shutdown, fail-fast
+        assert_eq!(svc.submit(codes.clone()).unwrap_err(), SubmitError::Stopped);
+        assert!(matches!(
+            svc.submit(vec![1, 2]).unwrap_err(),
+            SubmitError::Invalid(_) | SubmitError::Stopped
+        ));
+        let t = Instant::now();
+        assert!(svc.submit_blocking(codes).is_err());
+        assert!(t.elapsed() < Duration::from_secs(1));
+        // (d) no steals can occur with one shard and stealing off
+        assert_eq!(svc.stats().steals, 0);
     }
 
     #[test]

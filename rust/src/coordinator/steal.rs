@@ -1,0 +1,454 @@
+//! Work-stealing run-queue pool between the per-shard dispatchers and the
+//! executor pool.
+//!
+//! PR 2/3's single bounded work channel was the serving plane's last
+//! single-owner handoff: every executor popped from one `Mutex<Receiver>`,
+//! and one heavy-tailed batch could not be rebalanced once the FIFO had
+//! assigned it. This pool gives each admission shard its **own bounded
+//! deque**: the shard's dispatcher pushes formed batches locally, each
+//! executor pops from its *home* deque first, and — when stealing is
+//! enabled — an idle executor scans the other shards and steals their
+//! oldest queued item, so heavy-tailed batch costs spread across the whole
+//! executor pool instead of convoying behind one shard.
+//!
+//! The implementation is deliberately mutex-sharded rather than a lock-free
+//! Chase-Lev deque: no new dependencies (the registry is offline), and the
+//! items are *formed batches* (microseconds to milliseconds of work each),
+//! so a short per-shard critical section is far below the noise floor while
+//! staying obviously correct. Both owner and thief pop from the **front**
+//! (oldest first): for a serving queue, LIFO stealing would invert
+//! latencies, and request-age-relative `max_wait` semantics want the oldest
+//! batch executed first regardless of which executor runs it.
+//!
+//! Blocking uses an eventcount-lite gate: a generation counter + condvar
+//! guarded by one mutex that is only touched by *idle* poppers, *blocked*
+//! pushers, and the push/pop that wakes them (fast paths check the atomic
+//! sleeper counts and skip the gate entirely). A defensive wait timeout
+//! bounds any missed-wakeup bug to one poll interval; correctness does not
+//! rely on it (see the ordering argument on [`WorkPool::push`]).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Counters for the pool's pop paths. `pushed == local + stolen` once the
+/// pool has been fully drained.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Items pushed across all shards.
+    pub pushed: u64,
+    /// Pops served from the popper's home shard.
+    pub local: u64,
+    /// Pops served by stealing from another shard.
+    pub stolen: u64,
+}
+
+struct Gate {
+    /// Bumped on every event a waiter could be waiting for (item pushed,
+    /// space freed, producer closed); waiters sleep on "seq unchanged".
+    seq: u64,
+    /// Open producers; at zero, poppers that find nothing return `None`.
+    producers: usize,
+}
+
+/// Mutex-sharded, bounded, work-stealing run queues (see module docs).
+pub struct WorkPool<T> {
+    queues: Vec<Mutex<VecDeque<T>>>,
+    gate: Mutex<Gate>,
+    cond: Condvar,
+    /// Per-shard queue bound (backpressure towards the dispatcher).
+    cap: usize,
+    steal: bool,
+    /// Poppers idle (or about to re-check) on the gate; pushers skip the
+    /// gate lock entirely while this is zero.
+    sleepers: AtomicUsize,
+    /// Pushers blocked on a full shard; poppers skip the wakeup while zero.
+    full_waiters: AtomicUsize,
+    /// Live consumers. Purely a fail-safe: when it hits zero (every
+    /// executor died — panics included, via the coordinator's RAII guard),
+    /// `push` fails instead of blocking forever on a full deque, matching
+    /// the old work channel whose `send` errored once its receivers were
+    /// gone.
+    consumers: AtomicUsize,
+    pushed: AtomicU64,
+    local: AtomicU64,
+    stolen: AtomicU64,
+}
+
+impl<T> WorkPool<T> {
+    /// Defensive re-check interval for gate waits; correctness never
+    /// depends on it (lost wakeups are excluded by the seq protocol), it
+    /// only bounds the damage of a future regression.
+    const POLL: Duration = Duration::from_millis(1);
+
+    /// `shards` bounded deques of capacity `cap` each, fed by `producers`
+    /// producers and drained by `consumers` consumers. With `steal` off, a
+    /// popper only ever sees its home shard, so every shard must have at
+    /// least one home popper or its items strand (the coordinator
+    /// guarantees this by clamping shards to the executor count).
+    pub fn new(
+        shards: usize,
+        cap: usize,
+        steal: bool,
+        producers: usize,
+        consumers: usize,
+    ) -> WorkPool<T> {
+        assert!(shards > 0 && cap > 0 && producers > 0 && consumers > 0);
+        WorkPool {
+            queues: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
+            gate: Mutex::new(Gate { seq: 0, producers }),
+            cond: Condvar::new(),
+            cap,
+            steal,
+            sleepers: AtomicUsize::new(0),
+            full_waiters: AtomicUsize::new(0),
+            consumers: AtomicUsize::new(consumers),
+            pushed: AtomicU64::new(0),
+            local: AtomicU64::new(0),
+            stolen: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            pushed: self.pushed.load(Ordering::Relaxed),
+            local: self.local.load(Ordering::Relaxed),
+            stolen: self.stolen.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Bump the gate generation and wake every waiter (work- and
+    /// space-waiters share the condvar; both re-check their condition).
+    fn bump(&self) {
+        let mut g = self.gate.lock().unwrap();
+        g.seq += 1;
+        self.cond.notify_all();
+    }
+
+    /// One pop attempt: home shard first, then (with stealing) the victims
+    /// in round-robin order from `home`. Front pops everywhere — oldest
+    /// batch first, whoever runs it.
+    fn try_pop(&self, home: usize) -> Option<(usize, T)> {
+        if let Some(t) = self.queues[home].lock().unwrap().pop_front() {
+            self.local.fetch_add(1, Ordering::Relaxed);
+            return Some((home, t));
+        }
+        if self.steal {
+            let n = self.queues.len();
+            for i in 1..n {
+                let victim = (home + i) % n;
+                if let Some(t) = self.queues[victim].lock().unwrap().pop_front() {
+                    self.stolen.fetch_add(1, Ordering::Relaxed);
+                    return Some((victim, t));
+                }
+            }
+        }
+        None
+    }
+
+    /// Push `item` onto `shard`'s deque, blocking while the shard is at
+    /// capacity (bounded handoff = backpressure into the admission queue,
+    /// exactly like the old bounded work channel). Returns `false` —
+    /// dropping the item — once every consumer has closed (executor pool
+    /// died), so a producer can never block forever on a deque nothing
+    /// will drain; the old work channel's erroring `send` behaved the same.
+    ///
+    /// No lost wakeups: a popper registers in `sleepers` *before* its final
+    /// re-scan, and this push enqueues *before* loading `sleepers` (both
+    /// SeqCst, and the queue mutex orders enqueue vs scan) — so either the
+    /// popper's re-scan observes the item, or this push observes the
+    /// sleeper and bumps the gate. Symmetrically for full pushers vs pops.
+    #[must_use]
+    pub fn push(&self, shard: usize, item: T) -> bool {
+        let mut item = item;
+        loop {
+            if self.consumers.load(Ordering::SeqCst) == 0 {
+                return false;
+            }
+            {
+                let mut q = self.queues[shard].lock().unwrap();
+                if q.len() < self.cap {
+                    q.push_back(item);
+                    self.pushed.fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+            }
+            // shard full: wait for a pop. Register, then re-check under the
+            // gate so a concurrent pop either sees us or we see its space.
+            let mut g = self.gate.lock().unwrap();
+            self.full_waiters.fetch_add(1, Ordering::SeqCst);
+            let full = self.queues[shard].lock().unwrap().len() >= self.cap;
+            if !full {
+                self.full_waiters.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+            let seen = g.seq;
+            while g.seq == seen {
+                let (g2, timeout) = self.cond.wait_timeout(g, Self::POLL).unwrap();
+                g = g2;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            self.full_waiters.fetch_sub(1, Ordering::SeqCst);
+        }
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            self.bump();
+        }
+        true
+    }
+
+    /// Pop the next item for a popper whose home shard is `home`; returns
+    /// the *source* shard alongside the item (a `(victim, item)` result is
+    /// a steal). Blocks while the visible shards are empty; returns `None`
+    /// once every producer has closed and the visible shards are drained.
+    pub fn pop(&self, home: usize) -> Option<(usize, T)> {
+        loop {
+            if let Some(r) = self.try_pop(home) {
+                if self.full_waiters.load(Ordering::SeqCst) > 0 {
+                    self.bump();
+                }
+                return Some(r);
+            }
+            let mut g = self.gate.lock().unwrap();
+            self.sleepers.fetch_add(1, Ordering::SeqCst);
+            // re-scan with the registration visible: any push that missed
+            // our sleeper flag happened before it, so this scan sees it
+            if let Some(r) = self.try_pop(home) {
+                self.sleepers.fetch_sub(1, Ordering::SeqCst);
+                g.seq += 1; // a slot just freed; wake space-waiters inline
+                self.cond.notify_all();
+                return Some(r);
+            }
+            if g.producers == 0 {
+                self.sleepers.fetch_sub(1, Ordering::SeqCst);
+                return None;
+            }
+            let seen = g.seq;
+            while g.seq == seen {
+                let (g2, timeout) = self.cond.wait_timeout(g, Self::POLL).unwrap();
+                g = g2;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            self.sleepers.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// A producer will push no more. When the last one closes, blocked
+    /// poppers drain what is queued and then return `None`.
+    pub fn close_producer(&self) {
+        let mut g = self.gate.lock().unwrap();
+        assert!(g.producers > 0, "close_producer called more times than producers");
+        g.producers -= 1;
+        g.seq += 1;
+        self.cond.notify_all();
+    }
+
+    /// A consumer will pop no more (normal wind-down or panic unwind; the
+    /// coordinator calls this from an RAII guard). When the last one
+    /// closes, blocked pushers wake and fail instead of waiting forever.
+    pub fn close_consumer(&self) {
+        let left = self.consumers.fetch_sub(1, Ordering::SeqCst);
+        assert!(left > 0, "close_consumer called more times than consumers");
+        if left == 1 {
+            self.bump();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    #[test]
+    fn fifo_order_single_shard() {
+        let pool: WorkPool<u32> = WorkPool::new(1, 16, true, 1, 1);
+        for i in 0..10 {
+            assert!(pool.push(0, i));
+        }
+        for i in 0..10 {
+            assert_eq!(pool.pop(0), Some((0, i)));
+        }
+        let st = pool.stats();
+        assert_eq!(st, PoolStats { pushed: 10, local: 10, stolen: 0 });
+        pool.close_producer();
+        assert_eq!(pool.pop(0), None);
+    }
+
+    #[test]
+    fn drain_after_close_then_none() {
+        let pool: WorkPool<u32> = WorkPool::new(2, 8, true, 1, 1);
+        assert!(pool.push(0, 1));
+        assert!(pool.push(1, 2));
+        pool.close_producer();
+        // both items still come out (shutdown drains admitted work) ...
+        let mut got: Vec<u32> = (0..2).map(|_| pool.pop(0).unwrap().1).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2]);
+        // ... and only then does the pool report exhaustion
+        assert_eq!(pool.pop(0), None);
+        assert_eq!(pool.pop(1), None);
+    }
+
+    #[test]
+    fn steal_disabled_isolates_shards() {
+        let pool: WorkPool<u32> = WorkPool::new(2, 8, false, 1, 2);
+        assert!(pool.push(0, 7));
+        pool.close_producer();
+        // home-1 popper never looks at shard 0
+        assert_eq!(pool.pop(1), None);
+        assert_eq!(pool.pop(0), Some((0, 7)));
+        assert_eq!(pool.stats().stolen, 0);
+    }
+
+    #[test]
+    fn idle_popper_steals_from_victim() {
+        let pool: WorkPool<u32> = WorkPool::new(2, 8, true, 1, 2);
+        assert!(pool.push(0, 1));
+        assert!(pool.push(0, 2));
+        // home-1 popper finds its shard empty and steals the OLDEST from 0
+        assert_eq!(pool.pop(1), Some((0, 1)));
+        assert_eq!(pool.pop(0), Some((0, 2)));
+        let st = pool.stats();
+        assert_eq!(st.stolen, 1);
+        assert_eq!(st.local, 1);
+        pool.close_producer();
+    }
+
+    #[test]
+    fn bounded_push_blocks_until_popped() {
+        // cap 1: a producer pushing 64 items can only make progress as fast
+        // as the consumer pops — liveness under sustained fullness
+        let pool: Arc<WorkPool<u32>> = Arc::new(WorkPool::new(1, 1, true, 1, 1));
+        let p = Arc::clone(&pool);
+        let producer = std::thread::spawn(move || {
+            for i in 0..64 {
+                assert!(p.push(0, i));
+            }
+            p.close_producer();
+        });
+        let mut got = Vec::new();
+        while let Some((_, v)) = pool.pop(0) {
+            got.push(v);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..64).collect::<Vec<_>>());
+        assert_eq!(pool.stats().pushed, 64);
+    }
+
+    #[test]
+    fn push_fails_once_all_consumers_close() {
+        // executor-pool death fail-safe: a producer facing a full deque
+        // with no consumers left must fail, not block forever
+        let pool: Arc<WorkPool<u32>> = Arc::new(WorkPool::new(1, 1, true, 1, 1));
+        assert!(pool.push(0, 1)); // fills the deque
+        let p = Arc::clone(&pool);
+        let blocked = std::thread::spawn(move || p.push(0, 2));
+        std::thread::sleep(Duration::from_millis(20)); // let it block on full
+        pool.close_consumer();
+        assert!(!blocked.join().unwrap(), "push must fail after the last consumer closes");
+        // and new pushes fail immediately
+        assert!(!pool.push(0, 3));
+    }
+
+    #[test]
+    fn close_wakes_blocked_popper() {
+        let pool: Arc<WorkPool<u32>> = Arc::new(WorkPool::new(1, 4, true, 1, 1));
+        let p = Arc::clone(&pool);
+        let popper = std::thread::spawn(move || p.pop(0));
+        std::thread::sleep(Duration::from_millis(20));
+        pool.close_producer();
+        assert_eq!(popper.join().unwrap(), None);
+    }
+
+    #[test]
+    fn two_workers_split_one_hot_shard() {
+        // everything lands on shard 0; a home-1 worker must steal roughly
+        // half of it so the wall clock is ~half the serial cost
+        const ITEM_MS: u64 = 10;
+        const ITEMS: u64 = 8;
+        let pool: Arc<WorkPool<u64>> = Arc::new(WorkPool::new(2, 8, true, 1, 2));
+        let t0 = Instant::now();
+        let workers: Vec<_> = (0..2)
+            .map(|home| {
+                let p = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    let mut n = 0u64;
+                    while let Some((_, ms)) = p.pop(home) {
+                        std::thread::sleep(Duration::from_millis(ms));
+                        n += 1;
+                    }
+                    n
+                })
+            })
+            .collect();
+        for _ in 0..ITEMS {
+            assert!(pool.push(0, ITEM_MS));
+        }
+        pool.close_producer();
+        let done: u64 = workers.into_iter().map(|w| w.join().unwrap()).sum();
+        let wall = t0.elapsed();
+        assert_eq!(done, ITEMS);
+        let st = pool.stats();
+        assert!(st.stolen >= 1, "idle worker never stole: {st:?}");
+        assert_eq!(st.local + st.stolen, ITEMS);
+        // serial cost is 80 ms; two workers with stealing should land well
+        // under it even on a loaded CI box
+        assert!(
+            wall < Duration::from_millis(ITEM_MS * ITEMS - ITEM_MS),
+            "stealing failed to parallelize the hot shard ({wall:?})"
+        );
+    }
+
+    #[test]
+    fn multi_producer_multi_consumer_drains_exactly() {
+        let pool: Arc<WorkPool<u64>> = Arc::new(WorkPool::new(4, 2, true, 4, 3));
+        let producers: Vec<_> = (0..4u64)
+            .map(|s| {
+                let p = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        assert!(p.push(s as usize, s * 1000 + i));
+                    }
+                    p.close_producer();
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|home| {
+                let p = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some((_, v)) = p.pop(home) {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        let mut want: Vec<u64> =
+            (0..4u64).flat_map(|s| (0..100).map(move |i| s * 1000 + i)).collect();
+        want.sort_unstable();
+        assert_eq!(all, want, "every pushed item popped exactly once");
+        let st = pool.stats();
+        assert_eq!(st.pushed, 400);
+        assert_eq!(st.local + st.stolen, 400);
+    }
+}

@@ -10,7 +10,7 @@ mod value;
 mod write;
 
 pub use parse::{parse, ParseError};
-pub use value::Value;
+pub use value::{obj, Value};
 pub use write::to_string;
 
 /// Parse a JSON file from disk.

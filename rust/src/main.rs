@@ -36,13 +36,17 @@ COMMANDS:
       vectors, plus L-LUT regeneration vs exported tables.
   eval <name> [--n-add N]
       run the netlist on the exported test set; print the task metric.
-  serve <name> [--requests N] [--workers W] [--batch B] [--wait-us U]
-        [--queue-depth Q] [--backend compiled|interpreted]
-      batched inference service benchmark through the dispatcher/executor
-      pipeline: one dispatcher forms batches (fill to --batch or flush
-      --wait-us after the oldest request's submission) while W executors
-      run them concurrently (default backend: the compiled batch-major
-      engine; `interpreted` selects the netlist simulator).
+  serve <name> [--requests N] [--workers W] [--shards S] [--steal on|off]
+        [--batch B] [--wait-us U] [--queue-depth Q]
+        [--backend compiled|interpreted]
+      batched inference service benchmark through the sharded
+      dispatcher/executor plane: S admission shards (client-affine
+      round-robin, each with its own dispatcher forming batches — fill to
+      --batch or flush --wait-us after the oldest request's submission)
+      feed a work-stealing pool of W executors (idle executors steal the
+      oldest queued batch from other shards unless --steal off). Default
+      backend: the compiled batch-major engine; `interpreted` selects the
+      netlist simulator.
   table2|table3|table4|table5|fig6|table7|report-all [--n-add N]
       regenerate the paper's tables/figures (report-all renders everything
       and saves to artifacts/reports/).
@@ -240,6 +244,12 @@ fn run(args: &[String]) -> Result<()> {
             let name = rest.first().context("serve <name>")?;
             let n_requests = flags.get_usize("--requests", 100_000)?;
             let workers = flags.get_usize("--workers", 2)?;
+            let shards = flags.get_usize("--shards", 1)?;
+            let steal = match flags.get("--steal") {
+                Some("on") | None => true,
+                Some("off") => false,
+                Some(s) => bail!("bad --steal {s:?} (on|off)"),
+            };
             let batch = flags.get_usize("--batch", 64)?;
             let wait_us = flags.get_usize("--wait-us", 100)?;
             let queue_depth = flags.get_usize("--queue-depth", 1 << 14)?;
@@ -261,6 +271,8 @@ fn run(args: &[String]) -> Result<()> {
                 Arc::clone(&net),
                 ServiceCfg {
                     workers,
+                    shards,
+                    steal,
                     max_batch: batch,
                     max_wait: Duration::from_micros(wait_us as u64),
                     queue_depth,
@@ -268,8 +280,12 @@ fn run(args: &[String]) -> Result<()> {
                     ..Default::default()
                 },
             );
+            let shards = svc.cfg().shards; // effective (clamped to workers)
             println!("backend         : {backend:?}");
-            println!("pipeline        : 1 dispatcher + {workers} executors (queue depth {queue_depth})");
+            println!(
+                "plane           : {shards} admission shard(s) + {workers} executors (steal {}, queue depth {queue_depth} total)",
+                if steal { "on" } else { "off" }
+            );
             let t0 = Instant::now();
             let mut receivers = Vec::with_capacity(1024);
             let mut done = 0usize;
@@ -308,6 +324,18 @@ fn run(args: &[String]) -> Result<()> {
                 stats.latency_p50_us, stats.latency_p99_us
             );
             println!("mean batch      : {:.1} (batches: {})", stats.mean_batch, stats.batches);
+            for (i, s) in stats.per_shard.iter().enumerate() {
+                println!(
+                    "  shard {i}       : {} admitted, {} batches (mean {:.1}; {} full / {} timeout)",
+                    s.admitted, s.batches, s.mean_batch, s.flush_full, s.flush_timeout
+                );
+            }
+            println!(
+                "executor pops   : {} local, {} stolen ({:.1}% steals)",
+                stats.local_pops,
+                stats.steals,
+                100.0 * stats.steals as f64 / (stats.local_pops + stats.steals).max(1) as f64
+            );
             // only the compiled engine owns feature-major scratch planes;
             // the interpreter reports nothing here
             if backend == Backend::Compiled {
