@@ -371,6 +371,40 @@ pub mod testutil {
             test_vectors: TestVectors::default(),
         }
     }
+
+    /// Rewrite a checkpoint the way KANELE's prune-aware training leaves
+    /// real ones: `const_pct`% of active edges collapse to constant tables
+    /// (pruned-to-constant splines) and `dup_pct`% duplicate the first
+    /// surviving table of their input column — same input + same content,
+    /// so both the engine optimizer's table hash-consing and its CSE can
+    /// fire. Deterministic for a given `seed`. Shared by the optimizer's
+    /// unit/property tests and `benches/engine.rs`'s A/B section so the
+    /// acceptance bars (>= 30% constant, >= 20% duplicate) are stated
+    /// against one construction.
+    pub fn prunify(ck: &mut Checkpoint, const_pct: usize, dup_pct: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        for layer in &mut ck.layers {
+            let mut canon: Vec<Option<Vec<i64>>> = vec![None; layer.d_in];
+            for q in 0..layer.d_out {
+                for p in 0..layer.d_in {
+                    let idx = q * layer.d_in + p;
+                    let Some(t) = layer.table[idx].clone() else { continue };
+                    let roll = rng.below(100) as usize;
+                    if roll < const_pct {
+                        let v = rng.range_i64(-3000, 3000);
+                        layer.table[idx] = Some(vec![v; t.len()]);
+                    } else if roll < const_pct + dup_pct {
+                        match &canon[p] {
+                            Some(c) => layer.table[idx] = Some(c.clone()),
+                            None => canon[p] = Some(t),
+                        }
+                    } else if canon[p].is_none() {
+                        canon[p] = Some(t);
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -63,7 +63,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::engine::{Executor, ProgramCell};
+use crate::engine::{Executor, OptLevel, OptReport, ProgramCell};
 use crate::netlist::hotswap::NetlistCell;
 use crate::netlist::Netlist;
 use crate::sim;
@@ -173,6 +173,12 @@ pub struct ServiceCfg {
     /// queue gets `queue_depth / shards`, at least 1).
     pub queue_depth: usize,
     pub backend: Backend,
+    /// Pass-pipeline level the compiled backend lowers programs at
+    /// (including recompiles after hot-swaps). [`OptLevel::Full`] — fold
+    /// pruned-constant edges, eliminate dead inputs, hash-cons/CSE tables —
+    /// is the production default; [`OptLevel::None`] keeps the 1:1 lowering
+    /// for A/B runs. Ignored by the interpreted backend.
+    pub opt: OptLevel,
     /// Artificial per-batch execution delay. Zero in production; test and
     /// bench instrumentation that stretches execution so pipeline overlap
     /// and steal rebalancing are observable on microsecond workloads.
@@ -196,6 +202,7 @@ impl Default for ServiceCfg {
             max_wait: Duration::from_micros(200),
             queue_depth: 4096,
             backend: Backend::Compiled,
+            opt: OptLevel::default(),
             exec_delay: Duration::ZERO,
             exec_delay_shard: None,
             exec_delay_every: 0,
@@ -242,13 +249,23 @@ pub struct ServiceStats {
     pub latency_p99_us: f64,
     /// Samples per second over the service lifetime.
     pub throughput_rps: f64,
-    /// Fused LUT ops executed (samples x ops-per-sample).
+    /// Fused LUT ops executed (samples x ops-per-sample). Counts work
+    /// actually run: the interpreter walks every netlist L-LUT, while the
+    /// compiled backend runs the *optimized* op stream (`opt.ops_after`) —
+    /// so a pruned model legitimately reports fewer ops per sample on the
+    /// compiled backend than interpreted or than pre-optimizer PRs.
     pub fused_ops: u64,
-    /// Fused LUT ops per second over the service lifetime — the single
-    /// comparable perf number across backends, batch sizes and PRs.
+    /// Fused LUT ops per second over the service lifetime. Comparable
+    /// across batch sizes and worker counts at a fixed backend + opt
+    /// level; across backends/levels compare `throughput_rps` (the
+    /// optimizer removes ops, it does not slow them down).
     pub throughput_ops: f64,
     /// Largest executor scratch footprint observed (bytes).
     pub scratch_bytes: u64,
+    /// What the compiled backend's pass pipeline did to the *current*
+    /// program snapshot (ops/table/lane before-after). `None` for the
+    /// interpreted backend or a worker-less service.
+    pub opt: Option<OptReport>,
     /// Batches executors popped from their own shard's deque.
     pub local_pops: u64,
     /// Batches idle executors stole from another shard's deque.
@@ -288,8 +305,9 @@ struct Shared {
     rejected: AtomicU64,
     dropped: AtomicU64,
     /// Fused LUT ops executed (valid samples x ops-per-sample), counted at
-    /// execution: the backend-independent work unit that makes perf numbers
-    /// comparable across PRs.
+    /// execution. Per-sample ops are the backend's own: netlist L-LUTs for
+    /// the interpreter, the optimized op stream for the compiled engine
+    /// (see [`ServiceStats::fused_ops`]).
     fused_ops: AtomicU64,
     /// Largest executor scratch footprint observed, bytes (feature-major
     /// planes grow to the biggest batch seen and never shrink).
@@ -387,6 +405,10 @@ pub struct Service {
     drain: Arc<DrainGate>,
     /// Hot-swappable model handle (paper §6: online LUT updates).
     cell: Arc<NetlistCell>,
+    /// Compiled-program cache shared with the executors (None for the
+    /// interpreted backend or `workers == 0`); read by [`Service::stats`]
+    /// to surface the current program's [`OptReport`].
+    programs: Option<Arc<ProgramCell>>,
     shared: Arc<Shared>,
     next_id: AtomicU64,
     started: Instant,
@@ -432,15 +454,19 @@ impl Service {
         let mut threads = Vec::with_capacity(cfg.workers + cfg.shards);
         let mut rx_parked = Vec::new();
         let mut pool = None;
+        let mut programs = None;
         if cfg.workers == 0 {
             rx_parked = rxs;
         } else {
             // backend resources: the compiled path shares one program cache
-            // (compiled once here, recompiled lazily after hot-swaps); the
+            // (lowered through the cfg.opt pass pipeline once here,
+            // recompiled lazily at the same level after hot-swaps); the
             // interpreted path never pays for compilation
             let exec_backend = match cfg.backend {
                 Backend::Compiled => {
-                    WorkerBackend::Compiled(Arc::new(ProgramCell::new(Arc::clone(&cell))))
+                    let pc = Arc::new(ProgramCell::with_level(Arc::clone(&cell), cfg.opt));
+                    programs = Some(Arc::clone(&pc));
+                    WorkerBackend::Compiled(pc)
                 }
                 Backend::Interpreted => WorkerBackend::Interpreted(Arc::clone(&cell)),
             };
@@ -483,6 +509,7 @@ impl Service {
             pool,
             drain,
             cell,
+            programs,
             shared,
             next_id: AtomicU64::new(0),
             started: Instant::now(),
@@ -657,6 +684,13 @@ impl Service {
             fused_ops,
             throughput_ops: fused_ops as f64 / elapsed,
             scratch_bytes: self.shared.scratch.load(Ordering::Relaxed),
+            // the CURRENT snapshot's report (a hot-swap recompile updates
+            // it); loading here may pay the first post-swap recompile,
+            // which stats consumers can afford
+            opt: self
+                .programs
+                .as_ref()
+                .and_then(|p| p.load().1.opt_report().cloned()),
             local_pops,
             steals,
             per_shard,
@@ -914,8 +948,23 @@ mod tests {
             for (rx, w) in pending.into_iter().zip(want) {
                 assert_eq!(rx.recv().unwrap().sums, w, "{backend:?}");
             }
-            // both backends count the same backend-independent work unit
-            assert_eq!(svc.stats().fused_ops, 100 * net.n_luts() as u64, "{backend:?}");
+            // fused_ops counts work actually executed: the interpreter
+            // walks every netlist L-LUT, the compiled backend runs the
+            // optimized op stream (surfaced in stats.opt)
+            let st = svc.stats();
+            let ops_per_sample = match backend {
+                Backend::Compiled => {
+                    let opt = st.opt.as_ref().expect("compiled backend surfaces its report");
+                    assert_eq!(opt.ops_before, net.n_luts());
+                    assert!(opt.ops_after <= opt.ops_before);
+                    opt.ops_after
+                }
+                Backend::Interpreted => {
+                    assert!(st.opt.is_none(), "interpreter has no compiled program");
+                    net.n_luts()
+                }
+            };
+            assert_eq!(st.fused_ops, 100 * ops_per_sample as u64, "{backend:?}");
             svc.shutdown();
         }
     }
@@ -938,8 +987,10 @@ mod tests {
         let stats = svc.stats();
         assert_eq!(stats.completed, 200);
         assert!(stats.batches >= 1);
-        // ops accounting: every completed sample ran the whole program once
-        assert_eq!(stats.fused_ops, 200 * net.n_luts() as u64);
+        // ops accounting: every completed sample ran the whole (optimized)
+        // program once
+        let ops_per_sample = stats.opt.as_ref().expect("compiled default").ops_after;
+        assert_eq!(stats.fused_ops, 200 * ops_per_sample as u64);
         assert!(stats.throughput_ops > 0.0);
         // the compiled backend publishes its feature-major scratch footprint
         assert!(stats.scratch_bytes > 0);
@@ -1238,7 +1289,9 @@ mod tests {
         }
         // after a full drain, every formed batch was popped exactly once
         assert_eq!(st.local_pops + st.steals, st.batches);
-        assert_eq!(st.fused_ops, 300 * net.n_luts() as u64);
+        let ops_per_sample = st.opt.as_ref().expect("compiled default").ops_after;
+        assert_eq!(st.fused_ops, 300 * ops_per_sample as u64);
+        assert!(ops_per_sample <= net.n_luts());
     }
 
     #[test]
@@ -1340,6 +1393,58 @@ mod tests {
         assert!(t.elapsed() < Duration::from_secs(1));
         // (d) no steals can occur with one shard and stealing off
         assert_eq!(svc.stats().steals, 0);
+    }
+
+    #[test]
+    fn optimized_serving_is_bit_exact_and_reports() {
+        // a heavily pruned model (constant + duplicate tables) served at
+        // both pass levels: responses stay bit-exact with sim on the
+        // ORIGINAL netlist, and the Full level reports its reductions
+        let mut ck = synthetic(&[6, 5, 3], &[4, 4, 6], 404);
+        let n_codes = 1usize << ck.bits[0];
+        let l = &mut ck.layers[0];
+        let dup: Vec<i64> = (0..n_codes as i64).map(|i| i * 37 - 100).collect();
+        for q in 0..l.d_out {
+            // one constant and one duplicate column per neuron row
+            l.mask[q * l.d_in] = true;
+            l.table[q * l.d_in] = Some(vec![500 + q as i64; n_codes]);
+            l.mask[q * l.d_in + 1] = true;
+            l.table[q * l.d_in + 1] = Some(dup.clone());
+        }
+        let tables = lut::from_checkpoint(&ck);
+        let net = Arc::new(Netlist::build(&ck, &tables, 2));
+        for level in [OptLevel::Full, OptLevel::None] {
+            let svc = Service::start(
+                Arc::clone(&net),
+                ServiceCfg { workers: 2, opt: level, ..Default::default() },
+            );
+            let mut rng = Rng::new(7);
+            let mut pending = Vec::new();
+            for _ in 0..120 {
+                let codes: Vec<u32> = (0..6).map(|_| rng.below(16) as u32).collect();
+                let want = sim::eval(&net, &codes);
+                pending.push((svc.submit(codes).unwrap(), want));
+            }
+            for (rx, want) in pending {
+                assert_eq!(rx.recv().unwrap().sums, want, "{level:?}");
+            }
+            let st = svc.stats();
+            let opt = st.opt.as_ref().expect("compiled backend surfaces its report");
+            assert_eq!(opt.level, level);
+            match level {
+                OptLevel::Full => {
+                    assert!(opt.folded_edges >= 5, "{opt:?}");
+                    assert!(opt.ops_after < opt.ops_before, "{opt:?}");
+                    assert!(opt.table_bytes_after < opt.table_bytes_before, "{opt:?}");
+                }
+                OptLevel::None => {
+                    assert_eq!(opt.ops_after, opt.ops_before);
+                    assert_eq!(opt.ops_before, net.n_luts());
+                }
+            }
+            assert_eq!(st.fused_ops, 120 * opt.ops_after as u64, "{level:?}");
+            svc.shutdown();
+        }
     }
 
     #[test]

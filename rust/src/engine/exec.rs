@@ -27,6 +27,13 @@
 //! analysis proved safe: i32 planes and tables where no partial sum can
 //! overflow, i64 otherwise ([`super::program::Lane`]).
 //!
+//! **Optimized programs.** Programs lowered at
+//! [`super::optim::OptLevel::Full`] additionally carry CSE fanout lists
+//! (one gather feeding several accumulators — see [`FanOut`]) and an
+//! optional input map (dead external features are accepted in the request
+//! row but never packed into the plane). Both are handled here; 1:1
+//! programs pay one cursor compare per op and an identity pack.
+//!
 //! **Scratch growth.** Planes are grown (never shrunk) to
 //! `batch x max_width` on demand: the first batch of a new largest size
 //! allocates, every later batch of any smaller size reuses the same
@@ -34,7 +41,7 @@
 //! current footprint is observable via [`Executor::scratch_bytes`] (the
 //! `kanele serve` stats line reports the max across executors).
 
-use super::program::{CompiledProgram, Lane, LutOp};
+use super::program::{CompiledProgram, FanOut, Lane, LutOp};
 
 /// Reusable batch executor: owns the feature-major scratch planes.
 ///
@@ -77,8 +84,16 @@ impl LaneWord for i32 {
 /// Every op reads `codes[input*n..][..n]` and writes `sums[neuron*n..][..n]`
 /// — two contiguous runs; the table gather stays in cache (tables are
 /// `2^bits` entries).
+///
+/// `fanouts` is the layer's CSE fanout slice, sorted by op index: an op
+/// with fanout entries gathers its code run **once** and feeds the value
+/// to its own accumulator plus every extra destination — k adds per read
+/// instead of k reads (a within-neuron duplicate simply adds twice). The
+/// 1:1 lowering has no fanouts, so the hot loop's only extra cost is one
+/// cursor compare per op.
 fn run_layer<T: LaneWord>(
     ops: &[LutOp],
+    fanouts: &[FanOut],
     tables: &[T],
     biases: &[i64],
     codes: &[u32],
@@ -88,16 +103,39 @@ fn run_layer<T: LaneWord>(
     for (q, &bias) in biases.iter().enumerate() {
         sums[q * n..(q + 1) * n].fill(T::from_i64(bias));
     }
-    for op in ops {
+    let mut fi = 0usize;
+    for (i, op) in ops.iter().enumerate() {
         let off = op.table_off as usize;
         let mask = op.addr_mask as usize;
         let table = &tables[off..off + mask + 1];
-        let src = &codes[op.input as usize * n..op.input as usize * n + n];
-        let dst = &mut sums[op.neuron as usize * n..op.neuron as usize * n + n];
-        for (acc, &code) in dst.iter_mut().zip(src) {
-            *acc += table[code as usize & mask];
+        let src_off = op.input as usize * n;
+        let start = fi;
+        while fi < fanouts.len() && fanouts[fi].op as usize == i {
+            fi += 1;
+        }
+        if start == fi {
+            // hot path: single destination, two contiguous runs
+            let src = &codes[src_off..src_off + n];
+            let dst = &mut sums[op.neuron as usize * n..op.neuron as usize * n + n];
+            for (acc, &code) in dst.iter_mut().zip(src) {
+                *acc += table[code as usize & mask];
+            }
+        } else {
+            // CSE fanout: one contiguous read of the code run, each
+            // gathered value feeding the op's own accumulator plus the
+            // extra destinations
+            let extra = &fanouts[start..fi];
+            let own = op.neuron as usize * n;
+            for (s, &code) in codes[src_off..src_off + n].iter().enumerate() {
+                let v = table[code as usize & mask];
+                sums[own + s] += v;
+                for f in extra {
+                    sums[f.neuron as usize * n + s] += v;
+                }
+            }
         }
     }
+    debug_assert_eq!(fi, fanouts.len(), "fanout entries must map onto layer ops in order");
 }
 
 impl Executor {
@@ -168,27 +206,56 @@ impl Executor {
         }
 
         // pack: transpose request rows into the feature-major code plane
-        // (the only strided writes of the whole batch)
+        // (the only strided writes of the whole batch). Optimized programs
+        // may carry an input map: dead external features stay in the
+        // request width but get no plane slot.
         let d0 = prog.d_in();
-        for (s, row) in batch.iter().enumerate() {
-            let row = row.as_ref();
-            assert_eq!(row.len(), d0, "batch row width != program d_in");
-            for (f, &code) in row.iter().enumerate() {
-                self.codes[f * n + s] = code;
+        match prog.input_map() {
+            None => {
+                for (s, row) in batch.iter().enumerate() {
+                    let row = row.as_ref();
+                    assert_eq!(row.len(), d0, "batch row width != program d_in");
+                    for (f, &code) in row.iter().enumerate() {
+                        self.codes[f * n + s] = code;
+                    }
+                }
+            }
+            Some(map) => {
+                for (s, row) in batch.iter().enumerate() {
+                    let row = row.as_ref();
+                    assert_eq!(row.len(), d0, "batch row width != program d_in");
+                    for (i, &f) in map.iter().enumerate() {
+                        self.codes[i * n + s] = row[f as usize];
+                    }
+                }
             }
         }
 
         let ops = prog.ops();
+        let fanouts = prog.fanouts();
         for plan in prog.layers() {
             let biases = &prog.biases()[plan.bias_off..plan.bias_off + plan.d_out];
             let layer_ops = &ops[plan.ops.clone()];
+            let layer_fan = &fanouts[plan.fanout.clone()];
             match plan.lane {
-                Lane::I32 => {
-                    run_layer(layer_ops, prog.tables32(), biases, &self.codes, &mut self.sums32, n)
-                }
-                Lane::I64 => {
-                    run_layer(layer_ops, prog.tables64(), biases, &self.codes, &mut self.sums64, n)
-                }
+                Lane::I32 => run_layer(
+                    layer_ops,
+                    layer_fan,
+                    prog.tables32(),
+                    biases,
+                    &self.codes,
+                    &mut self.sums32,
+                    n,
+                ),
+                Lane::I64 => run_layer(
+                    layer_ops,
+                    layer_fan,
+                    prog.tables64(),
+                    biases,
+                    &self.codes,
+                    &mut self.sums64,
+                    n,
+                ),
             }
             // requant boundary: integer flip of the sum plane back into the
             // code plane — same feature-major layout on both sides, so this
@@ -451,6 +518,59 @@ mod tests {
         let got = run_batch(&prog, &batch);
         assert_eq!(got, sim::eval_batch(&net, &batch));
         assert_eq!(got[0][0], big);
+    }
+
+    #[test]
+    fn optimized_program_reuses_executor_across_levels_and_sizes() {
+        // one executor serves a 1:1 program and an optimized one (fanouts +
+        // input map) interleaved, across batch sizes — the scratch planes
+        // and cursor logic must not leak state between programs
+        use crate::engine::OptLevel;
+        let t: Vec<i64> = (0..8).map(|i| i * 123 - 400).collect();
+        let neurons = vec![
+            NeuronNet {
+                luts: vec![
+                    LutInst { input: 0, table: t.clone(), out_width: 12 },
+                    LutInst { input: 2, table: t.clone(), out_width: 12 },
+                ],
+                bias: 9,
+                depth: adder_depth(2, 2),
+                sum_width: 14,
+            },
+            NeuronNet {
+                luts: vec![LutInst { input: 0, table: t.clone(), out_width: 12 }],
+                bias: -2,
+                depth: 0,
+                sum_width: 13,
+            },
+        ];
+        let net = Netlist {
+            name: "opt-exec".into(),
+            layers: vec![LayerNet {
+                d_in: 3, // input 1 is dead
+                d_out: 2,
+                in_bits: 3,
+                out_bits: 8,
+                neurons,
+                requant: None,
+                depth: 1,
+            }],
+            n_add: 2,
+            frac_bits: 12,
+            domain: (-4.0, 4.0),
+        };
+        let p_none = CompiledProgram::compile_opt(&net, OptLevel::None);
+        let p_full = CompiledProgram::compile_opt(&net, OptLevel::Full);
+        assert!(!p_full.fanouts().is_empty(), "duplicate (input, table) must CSE");
+        assert!(p_full.input_map().is_some(), "dead input 1 must be compacted");
+        let mut ex = Executor::new();
+        let mut rng = Rng::new(4);
+        for &nb in &[1usize, 9, 64, 2] {
+            let batch = random_batch(&mut rng, nb, 3, 3);
+            let want = sim::eval_batch(&net, &batch);
+            assert_eq!(ex.run_batch(&p_none, &batch), want);
+            assert_eq!(ex.run_batch(&p_full, &batch), want);
+        }
     }
 
     #[test]

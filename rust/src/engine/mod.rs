@@ -5,8 +5,33 @@
 //! substitute for *correctness* is [`crate::sim`], which walks the
 //! `Netlist` object graph (`layers -> neurons -> luts`) per sample. That
 //! pointer chase is the wrong shape for the serving hot path, so this
-//! module splits execution into **compile once, run batches** — and the
-//! compiled hot path is, like the hardware, integer-only:
+//! module splits execution into **compile once (through an optimizing
+//! pass pipeline), run batches** — and the compiled hot path is, like the
+//! hardware, integer-only:
+//!
+//! ```text
+//!            ┌────────────── optim (OptLevel::Full, the default) ──────────────┐
+//! Netlist ─▶ │ 1 fold constant edges  ─▶ biases     (sum unchanged term-wise)  │
+//!            │ 2 eliminate dead code  (Netlist::dead_inputs is the oracle:     │
+//!            │   unread producers deleted, external features → input_map)      │
+//!            │ 3 hash-cons tables     (one arena slot per content, per Lane)   │
+//!            │ 4 CSE duplicate lookups (one op + FanOut list per (input,table))│
+//!            │ 5 re-run lane analysis  on the optimized op order (folding      │
+//!            │   tightens ranges, so layers can narrow to the i32 lane)        │
+//!            └──────────────────────────────────────────────────────────┬─────┘
+//!                 OptLevel::None: the 1:1 lowering, byte-identical       │
+//!                 to `CompiledProgram::compile` (the A/B baseline)       ▼
+//!                                                          CompiledProgram (+ OptReport)
+//! ```
+//!
+//! Invariants each pass preserves (tested in [`optim`]):
+//! **functional** — `optimized(net) == sim::eval(net)` bit for bit, for
+//! every input (folding moves exact terms, DCE deletes unobservable work,
+//! sharing never changes a gathered value, and the lane analysis re-proves
+//! no-overflow in the *new* op order); **interface** — `d_in()`/`d_out()`
+//! keep the checkpoint's request/response widths even when internal planes
+//! shrink; **reporting** — `table_bytes()` prices unique content and
+//! [`OptReport`] carries the before/after geometry.
 //!
 //! * [`CompiledProgram`] ([`program`]) — the netlist lowered to flat
 //!   arrays: packed table arenas **narrowed to i32 where a per-layer range
@@ -15,36 +40,48 @@
 //!   plans** ([`RequantPlan`]: fixed-point multiply/shift or threshold
 //!   table, bit-exact with the float `Quantizer::encode_fixed` oracle by
 //!   construction), and the scratch geometry, all fixed at compile time.
+//! * [`optim`] — the pass pipeline above ([`OptLevel`], [`OptReport`]),
+//!   run by default everywhere a program is built for serving.
 //! * [`Executor`] ([`exec`]) — **feature-major** batch execution: scratch
 //!   planes are transposed (`plane[feature * n + sample]`) so each op
 //!   reads and writes contiguous runs of `n` words, and each op is applied
 //!   to all N samples before the next op — sequential arena scans instead
 //!   of the per-sample random walk, with no floats and no allocation on
 //!   the steady-state path ([`Executor::run_batch_into`] fills a
-//!   caller-owned flat plane). Bit-exact with [`crate::sim::eval`]
-//!   (in-lane accumulation is order-exact by the range analysis, requant
-//!   plans are proven equal to the float path).
-//! * [`ProgramCell`] ([`swap`]) — hot-swap support: recompile on netlist
-//!   change + atomic program publication, preserving the netlist cell's
-//!   batch-consistent snapshot semantics.
+//!   caller-owned flat plane). CSE'd ops gather once and feed k
+//!   accumulators ([`program::FanOut`]). Bit-exact with
+//!   [`crate::sim::eval`] (in-lane accumulation is order-exact by the
+//!   range analysis, requant plans are proven equal to the float path).
+//! * [`ProgramCell`] ([`swap`]) — hot-swap support: recompile (at the
+//!   cell's [`OptLevel`]) on netlist change + atomic program publication,
+//!   preserving the netlist cell's batch-consistent snapshot semantics.
 //!
 //! Division of labor: `sim` stays the debugging / cycle-accuracy oracle
 //! (and the cross-check that gates every batch in debug builds); `engine`
 //! is what the [`crate::coordinator`] workers run in production.
 
 pub mod exec;
+pub mod optim;
 pub mod program;
 pub mod swap;
 
 pub use exec::{run_batch, Executor};
-pub use program::{CompiledProgram, Lane, LayerPlan, LutOp, RequantPlan, PLAN_MAX_BITS};
+pub use optim::{OptLevel, OptReport};
+pub use program::{CompiledProgram, FanOut, Lane, LayerPlan, LutOp, RequantPlan, PLAN_MAX_BITS};
 pub use swap::ProgramCell;
 
 use crate::netlist::Netlist;
 
-/// Lower a netlist into its flat feature-major program.
+/// Lower a netlist into its flat feature-major program through the default
+/// optimizing pipeline ([`OptLevel::Full`]).
 pub fn compile(net: &Netlist) -> CompiledProgram {
-    CompiledProgram::compile(net)
+    CompiledProgram::compile_opt(net, OptLevel::default())
+}
+
+/// Lower a netlist at an explicit [`OptLevel`] ([`OptLevel::None`] is the
+/// 1:1 lowering — the A/B baseline).
+pub fn compile_with(net: &Netlist, level: OptLevel) -> CompiledProgram {
+    CompiledProgram::compile_opt(net, level)
 }
 
 #[cfg(test)]
@@ -162,6 +199,14 @@ mod tests {
             if compiled != interpreted {
                 return Err(format!(
                     "engine != eval_batch for dims {dims:?} bits {bits:?} seed {seed}"
+                ));
+            }
+            // the default (optimized) lowering and the 1:1 baseline are one
+            // function too
+            let unopt = run_batch(&compile_with(&net, OptLevel::None), &inputs);
+            if unopt != interpreted {
+                return Err(format!(
+                    "OptLevel::None != eval_batch for dims {dims:?} bits {bits:?} seed {seed}"
                 ));
             }
             let mut cyc = sim::CycleSim::new(&net);

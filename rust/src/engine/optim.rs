@@ -1,0 +1,1114 @@
+//! Optimizing pass pipeline between [`Netlist`] and the executable
+//! [`CompiledProgram`].
+//!
+//! KANELE's training co-optimizes quantization with *pruning*, so real
+//! checkpoints arrive full of edges whose truth table collapsed to a single
+//! constant, duplicate spline tables, and inputs nothing reads — and the
+//! 1:1 lowering of [`CompiledProgram::compile`] pays table bandwidth and
+//! fused-op work for all of them on every batch. This module removes that
+//! work at compile time, keeping the program bit-exact with [`crate::sim`]
+//! on the *original* netlist:
+//!
+//! 1. **Constant folding** ([`crate::netlist::opt::optimize`] on a working
+//!    clone) — an edge whose table is one repeated value contributes
+//!    `table[code] == v` for every code, so the edge is deleted and `v`
+//!    folded into the destination neuron's bias operand. The sum is
+//!    unchanged term for term, so this is exact across requant clamp rails
+//!    and for any accumulator width.
+//! 2. **Dead-code elimination** ([`Netlist::dead_inputs`] is the entry
+//!    point) — an input read by no surviving LUT needs neither a plane slot
+//!    nor, for interior layers, its producer neuron. One backward sweep
+//!    deletes unused producers (never output-layer neurons), renumbers the
+//!    consumer layer's input indices, and shrinks the requant/feature
+//!    planes; dead *external* features are compacted out of the code plane
+//!    via [`CompiledProgram::input_map`] while the program's public
+//!    `d_in()` keeps the checkpoint's request width.
+//! 3. **Table hash-consing** — identical table *contents* are interned once
+//!    (hash + exact compare) and materialized at most once per arena
+//!    ([`Lane`]), so `table_bytes()` prices unique content, not edge count.
+//! 4. **Common-subexpression elimination** — two lookups in one layer with
+//!    the same `(input, table)` pair read the same value, so one [`LutOp`]
+//!    is emitted and every additional consumer becomes a
+//!    [`FanOut`] entry on the layer: the executor gathers the code run once
+//!    and feeds k accumulators (within-neuron duplicates fan out to the
+//!    same accumulator twice, which is exactly the duplicated sum).
+//! 5. **Lane re-analysis + arena compaction** — the prefix-interval range
+//!    analysis reruns over the *optimized* op order (folding tightens
+//!    ranges, e.g. opposite-sign constants cancel into a small bias), so
+//!    layers that previously needed the i64 lane can narrow to i32.
+//!
+//! Every pass preserves the functional invariant `optimized(net) ==
+//! sim::eval(net)` bit for bit; [`OptLevel::None`] keeps the untouched 1:1
+//! lowering for A/B comparison. An [`OptReport`] with before/after op,
+//! table and lane statistics rides on the program and is surfaced through
+//! [`crate::coordinator::ServiceStats`] and the `kanele compile` / `kanele
+//! serve` CLI.
+
+use std::collections::HashMap;
+
+use crate::netlist::{opt as netopt, Netlist};
+
+use super::program::{
+    analyze_lane, lane_bytes, CompiledProgram, FanOut, Lane, LayerPlan, LutOp, RequantPlan,
+};
+
+/// How much optimization runs between the netlist and the executable
+/// program. [`OptLevel::Full`] is the serving default; [`OptLevel::None`]
+/// preserves the 1:1 lowering byte for byte (the A/B baseline).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OptLevel {
+    /// 1:1 lowering — one `LutOp` per netlist L-LUT, one arena slot per
+    /// edge. Byte-identical to [`CompiledProgram::compile`].
+    None,
+    /// Fold constants, eliminate dead inputs/producers, hash-cons tables,
+    /// CSE duplicate lookups, re-run the lane analysis.
+    #[default]
+    Full,
+}
+
+impl OptLevel {
+    pub fn parse(s: &str) -> Option<OptLevel> {
+        match s {
+            "none" | "off" => Some(OptLevel::None),
+            "full" | "on" => Some(OptLevel::Full),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptLevel::None => "none",
+            OptLevel::Full => "full",
+        }
+    }
+}
+
+/// What the pass pipeline did to one program: before/after geometry plus
+/// per-pass counters. Attached to the [`CompiledProgram`] it describes and
+/// surfaced through `ServiceStats` and the CLI.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OptReport {
+    pub level: OptLevel,
+    /// Fused ops of the 1:1 lowering (== netlist L-LUT instances).
+    pub ops_before: usize,
+    /// Fused ops actually emitted after folding + DCE + CSE.
+    pub ops_after: usize,
+    /// Constant-table edges folded into destination biases.
+    pub folded_edges: usize,
+    /// External input features compacted out of the code plane.
+    pub dead_inputs: usize,
+    /// Interior producer neurons deleted (their outputs fed nothing).
+    pub dead_neurons: usize,
+    /// Lookups served through a [`FanOut`] instead of their own op.
+    pub cse_fanouts: usize,
+    /// Table references surviving folding + DCE (before sharing).
+    pub tables_total: usize,
+    /// Unique arena slots after hash-consing (per [`Lane`]).
+    pub tables_unique: usize,
+    /// Packed arena bytes of the 1:1 lowering (lane-analyzed per layer).
+    pub table_bytes_before: usize,
+    /// Packed arena bytes of the optimized program.
+    pub table_bytes_after: usize,
+    /// Layers the range analysis narrowed to i32, before optimization.
+    pub i32_layers_before: usize,
+    /// ... and after. Folding usually tightens (cancelling constants can
+    /// narrow a layer); in principle moving a large folded constant to the
+    /// bias — the *front* of the prefix-sum order — can also cost a layer
+    /// the narrow lane near the i32 rails. Either way the chosen lane is
+    /// proven safe for the order actually executed.
+    pub i32_layers_after: usize,
+    pub layers: usize,
+}
+
+impl OptReport {
+    /// Fused-op reduction as a fraction of the 1:1 lowering (0.0 when the
+    /// pipeline found nothing, or at [`OptLevel::None`]).
+    pub fn op_reduction(&self) -> f64 {
+        if self.ops_before == 0 {
+            0.0
+        } else {
+            1.0 - self.ops_after as f64 / self.ops_before as f64
+        }
+    }
+
+    /// Table-byte reduction as a fraction of the 1:1 arenas.
+    pub fn byte_reduction(&self) -> f64 {
+        if self.table_bytes_before == 0 {
+            0.0
+        } else {
+            1.0 - self.table_bytes_after as f64 / self.table_bytes_before as f64
+        }
+    }
+
+    /// One-line summary for `kanele compile` / `kanele serve` / benches.
+    pub fn summary(&self) -> String {
+        format!(
+            "level {}: ops {} -> {} (-{:.1}%), tables {} refs -> {} unique, bytes {} -> {} (-{:.1}%), folded {}, dead inputs {}, dead neurons {}, cse {}, i32 lanes {}/{} -> {}/{}",
+            self.level.name(),
+            self.ops_before,
+            self.ops_after,
+            100.0 * self.op_reduction(),
+            self.tables_total,
+            self.tables_unique,
+            self.table_bytes_before,
+            self.table_bytes_after,
+            100.0 * self.byte_reduction(),
+            self.folded_edges,
+            self.dead_inputs,
+            self.dead_neurons,
+            self.cse_fanouts,
+            self.i32_layers_before,
+            self.layers,
+            self.i32_layers_after,
+            self.layers,
+        )
+    }
+}
+
+/// Lower `net` at the requested level. `Full` runs the pass pipeline on a
+/// working clone (the source netlist — e.g. a hot-swap cell's snapshot —
+/// is never mutated); `None` is the legacy lowering plus an identity
+/// report.
+pub(super) fn compile_with(net: &Netlist, level: OptLevel) -> CompiledProgram {
+    match level {
+        OptLevel::None => {
+            let mut prog = CompiledProgram::compile(net);
+            prog.opt = Some(identity_report(&prog));
+            prog
+        }
+        OptLevel::Full => compile_full(net),
+    }
+}
+
+/// The report of a program the pipeline never touched: before == after.
+fn identity_report(prog: &CompiledProgram) -> OptReport {
+    let i32_layers = prog.layers().iter().filter(|l| l.lane == Lane::I32).count();
+    OptReport {
+        level: OptLevel::None,
+        ops_before: prog.n_ops(),
+        ops_after: prog.n_ops(),
+        tables_total: prog.n_ops(),
+        tables_unique: prog.n_ops(),
+        table_bytes_before: prog.table_bytes(),
+        table_bytes_after: prog.table_bytes(),
+        i32_layers_before: i32_layers,
+        i32_layers_after: i32_layers,
+        layers: prog.layers().len(),
+        ..OptReport::default()
+    }
+}
+
+/// One CSE group: every surviving lookup of a layer that reads the same
+/// input through the same table content. The first destination gets the
+/// [`LutOp`]; the rest become [`FanOut`] entries.
+struct Group {
+    input: u32,
+    /// Intern id into the table pool (content identity).
+    table: u32,
+    /// Accumulator targets in occurrence order; a neuron appearing twice
+    /// receives the gathered value twice (within-neuron duplicate).
+    dsts: Vec<u32>,
+}
+
+fn compile_full(net: &Netlist) -> CompiledProgram {
+    // "before" geometry: what the 1:1 lowering would have cost, priced with
+    // the same per-layer lane analysis it would have run
+    let ops_before = net.n_luts();
+    let mut table_bytes_before = 0usize;
+    let mut i32_layers_before = 0usize;
+    for layer in &net.layers {
+        let lane = analyze_lane(layer);
+        let words: usize =
+            layer.neurons.iter().flat_map(|n| &n.luts).map(|l| l.table.len()).sum();
+        table_bytes_before += words * lane_bytes(lane);
+        if lane == Lane::I32 {
+            i32_layers_before += 1;
+        }
+    }
+
+    // passes 1 + 2 rewrite a working clone
+    let mut work = net.clone();
+    let folded_edges = netopt::optimize(&mut work).constant_tables_folded;
+    let (dead_inputs, dead_neurons, input_map) = eliminate_dead(&mut work);
+
+    // passes 3 + 4 + 5 happen at lowering: intern table contents, group
+    // same-(input, table) lookups, re-analyze lanes in the op order the
+    // executor will actually run, and materialize each content at most once
+    // per arena
+    let mut pool: Vec<Vec<i64>> = Vec::new();
+    let mut intern: HashMap<Vec<i64>, u32> = HashMap::new();
+    let mut tables32: Vec<i32> = Vec::new();
+    let mut tables64: Vec<i64> = Vec::new();
+    let mut slot32: HashMap<u32, u32> = HashMap::new();
+    let mut slot64: HashMap<u32, u32> = HashMap::new();
+    let mut ops: Vec<LutOp> = Vec::new();
+    let mut fanouts: Vec<FanOut> = Vec::new();
+    let mut biases: Vec<i64> = Vec::new();
+    let mut layers: Vec<LayerPlan> = Vec::with_capacity(work.layers.len());
+    let mut max_width = 1usize;
+    let (mut tables_total, mut cse_fanouts) = (0usize, 0usize);
+
+    for layer in &work.layers {
+        let ops_start = ops.len();
+        let fan_start = fanouts.len();
+        let bias_off = biases.len();
+        let mut groups: Vec<Group> = Vec::new();
+        let mut by_key: HashMap<(u32, u32), usize> = HashMap::new();
+        for (q, neuron) in layer.neurons.iter().enumerate() {
+            biases.push(neuron.bias);
+            for lut in &neuron.luts {
+                debug_assert!(lut.table.len().is_power_of_two());
+                debug_assert!(lut.input < layer.d_in);
+                tables_total += 1;
+                let id = match intern.get(lut.table.as_slice()) {
+                    Some(&id) => id,
+                    None => {
+                        let id = pool.len() as u32;
+                        pool.push(lut.table.clone());
+                        intern.insert(lut.table.clone(), id);
+                        id
+                    }
+                };
+                let key = (lut.input as u32, id);
+                match by_key.get(&key) {
+                    Some(&g) => groups[g].dsts.push(q as u32),
+                    None => {
+                        by_key.insert(key, groups.len());
+                        groups.push(Group {
+                            input: lut.input as u32,
+                            table: id,
+                            dsts: vec![q as u32],
+                        });
+                    }
+                }
+            }
+        }
+        cse_fanouts += groups.iter().map(|g| g.dsts.len() - 1).sum::<usize>();
+        let lane = analyze_lane_groups(&biases[bias_off..], &groups, &pool);
+        for g in &groups {
+            let t = &pool[g.table as usize];
+            let off = match lane {
+                Lane::I32 => *slot32.entry(g.table).or_insert_with(|| {
+                    let off = tables32.len() as u32;
+                    // lossless: the group analysis proved every entry fits
+                    tables32.extend(t.iter().map(|&v| v as i32));
+                    off
+                }),
+                Lane::I64 => *slot64.entry(g.table).or_insert_with(|| {
+                    let off = tables64.len() as u32;
+                    tables64.extend_from_slice(t);
+                    off
+                }),
+            };
+            let op_local = (ops.len() - ops_start) as u32;
+            ops.push(LutOp {
+                table_off: off,
+                addr_mask: (t.len() - 1) as u32,
+                input: g.input,
+                neuron: g.dsts[0],
+            });
+            for &q in &g.dsts[1..] {
+                fanouts.push(FanOut { op: op_local, neuron: q });
+            }
+        }
+        max_width = max_width.max(layer.d_in).max(layer.d_out);
+        layers.push(LayerPlan {
+            d_in: layer.d_in,
+            d_out: layer.d_out,
+            ops: ops_start..ops.len(),
+            bias_off,
+            lane,
+            fanout: fan_start..fanouts.len(),
+            requant: layer.requant.map(|q| RequantPlan::build(q, work.frac_bits)),
+        });
+    }
+    assert!(
+        tables64.len() <= u32::MAX as usize && tables32.len() <= u32::MAX as usize,
+        "table arena exceeds u32 addressing"
+    );
+
+    let report = OptReport {
+        level: OptLevel::Full,
+        ops_before,
+        ops_after: ops.len(),
+        folded_edges,
+        dead_inputs,
+        dead_neurons,
+        cse_fanouts,
+        tables_total,
+        tables_unique: slot32.len() + slot64.len(),
+        table_bytes_before,
+        table_bytes_after: tables32.len() * std::mem::size_of::<i32>()
+            + tables64.len() * std::mem::size_of::<i64>(),
+        i32_layers_before,
+        i32_layers_after: layers.iter().filter(|l| l.lane == Lane::I32).count(),
+        layers: layers.len(),
+    };
+    CompiledProgram {
+        name: work.name.clone(),
+        frac_bits: work.frac_bits,
+        tables64,
+        tables32,
+        ops,
+        biases,
+        // the public request width stays the checkpoint's: dead external
+        // features are accepted and ignored (compacted out by `input_map`)
+        d_in: net.input_width(),
+        d_out: work.layers.last().map(|l| l.d_out).unwrap_or(0),
+        max_width,
+        uses_i32: layers.iter().any(|l| l.lane == Lane::I32),
+        uses_i64: layers.iter().any(|l| l.lane == Lane::I64),
+        layers,
+        fanouts,
+        input_map,
+        opt: Some(report),
+    }
+}
+
+/// Dead-code elimination on the working clone. [`Netlist::dead_inputs`] is
+/// the oracle: for every interior layer (back to front, so deadness
+/// cascades in one sweep) an unread input's producer neuron in the previous
+/// layer is deleted — ops, bias and plane slot — and the consumer layer's
+/// input indices are renumbered. Output-layer neurons are never deleted
+/// (they are the program's result). Dead inputs of layer 0 are *external*
+/// features: they stay in the request width but are compacted out of the
+/// feature plane by the returned `input_map` (live external index per
+/// internal plane slot).
+///
+/// Returns `(dead external inputs, deleted interior neurons, input_map)`.
+fn eliminate_dead(net: &mut Netlist) -> (usize, usize, Option<Vec<u32>>) {
+    if net.layers.is_empty() {
+        return (0, 0, None);
+    }
+    let mut dead_neurons = 0usize;
+    for l in (1..net.layers.len()).rev() {
+        let dead = net.dead_inputs(l);
+        if dead.is_empty() {
+            continue;
+        }
+        let (is_dead, remap, live) = dead_mask(net.layers[l].d_in, &dead);
+        // delete the producers nothing reads
+        let prev = &mut net.layers[l - 1];
+        let mut q = 0usize;
+        prev.neurons.retain(|_| {
+            let keep = !is_dead[q];
+            q += 1;
+            keep
+        });
+        prev.d_out = prev.neurons.len();
+        prev.depth = prev.neurons.iter().map(|n| n.depth).max().unwrap_or(0);
+        dead_neurons += dead.len();
+        // renumber the consumer layer's reads
+        renumber_inputs(&mut net.layers[l], live.len(), &remap);
+    }
+    let dead0 = net.dead_inputs(0);
+    if dead0.is_empty() {
+        return (0, dead_neurons, None);
+    }
+    let (_, remap, live) = dead_mask(net.layers[0].d_in, &dead0);
+    renumber_inputs(&mut net.layers[0], live.len(), &remap);
+    (dead0.len(), dead_neurons, Some(live))
+}
+
+/// Dense renumbering of a layer interface with `dead` input indices
+/// removed: the `is_dead` mask, an old→new `remap` (dead slots keep
+/// `u32::MAX`, which would trap on use), and the surviving old indices in
+/// order. Shared by the interior and external halves of [`eliminate_dead`]
+/// so the two renumberings cannot drift apart.
+fn dead_mask(d_in: usize, dead: &[usize]) -> (Vec<bool>, Vec<u32>, Vec<u32>) {
+    let mut is_dead = vec![false; d_in];
+    for &p in dead {
+        is_dead[p] = true;
+    }
+    let mut remap = vec![u32::MAX; d_in];
+    let mut live = Vec::with_capacity(d_in - dead.len());
+    for (p, &gone) in is_dead.iter().enumerate() {
+        if !gone {
+            remap[p] = live.len() as u32;
+            live.push(p as u32);
+        }
+    }
+    (is_dead, remap, live)
+}
+
+/// Point a layer's LUT reads at the renumbered (compacted) inputs.
+fn renumber_inputs(layer: &mut crate::netlist::LayerNet, new_d_in: usize, remap: &[u32]) {
+    layer.d_in = new_d_in;
+    for n in &mut layer.neurons {
+        for lut in &mut n.luts {
+            lut.input = remap[lut.input] as usize;
+        }
+    }
+}
+
+/// The prefix-interval lane analysis of [`analyze_lane`], rerun over the
+/// *optimized* op order: groups execute front to back, each feeding every
+/// destination (fanout included) at its position in the stream, so the
+/// interval walked here is exactly the partial-sum sequence the executor
+/// produces. Sound for the same reason as the 1:1 analysis — the reachable
+/// accumulator after k contributions lies in `[bias + Σ min, bias + Σ max]`
+/// over the first k contributions in this exact order.
+fn analyze_lane_groups(biases: &[i64], groups: &[Group], pool: &[Vec<i64>]) -> Lane {
+    const LO: i64 = i32::MIN as i64;
+    const HI: i64 = i32::MAX as i64;
+    if biases.iter().any(|&b| b < LO || b > HI) {
+        return Lane::I64;
+    }
+    let mut lo = biases.to_vec();
+    let mut hi = biases.to_vec();
+    for g in groups {
+        let t = &pool[g.table as usize];
+        let (tlo, thi) =
+            t.iter().fold((i64::MAX, i64::MIN), |(a, b), &v| (a.min(v), b.max(v)));
+        if tlo > thi {
+            continue; // empty table: contributes nothing
+        }
+        if tlo < LO || thi > HI {
+            return Lane::I64;
+        }
+        for &q in &g.dsts {
+            let q = q as usize;
+            lo[q] = lo[q].saturating_add(tlo);
+            hi[q] = hi[q].saturating_add(thi);
+            if lo[q] < LO || hi[q] > HI {
+                return Lane::I64;
+            }
+        }
+    }
+    Lane::I32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::{prunify, synthetic};
+    use crate::checkpoint::Checkpoint;
+    use crate::engine::{self, Executor};
+    use crate::fixed::Quantizer;
+    use crate::lut;
+    use crate::netlist::{adder_depth, LayerNet, LutInst, NeuronNet};
+    use crate::sim;
+    use crate::util::{prop, Rng};
+
+    fn net_of(ck: &Checkpoint) -> Netlist {
+        let tables = lut::from_checkpoint(ck);
+        Netlist::build(ck, &tables, 2)
+    }
+
+    fn random_batch(rng: &mut Rng, n: usize, d: usize, bits: u32) -> Vec<Vec<u32>> {
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.below(1 << bits) as u32).collect())
+            .collect()
+    }
+
+    /// Optimized and unoptimized lowerings of the same netlist must agree
+    /// with the interpreter bit for bit on `batch`; returns the Full report.
+    fn assert_bit_exact(net: &Netlist, batch: &[Vec<u32>]) -> OptReport {
+        let p_none = compile_with(net, OptLevel::None);
+        let p_full = compile_with(net, OptLevel::Full);
+        let want = sim::eval_batch(net, batch);
+        assert_eq!(engine::run_batch(&p_none, batch), want, "OptLevel::None != sim");
+        assert_eq!(engine::run_batch(&p_full, batch), want, "OptLevel::Full != sim");
+        // the reused-executor flat path agrees too (fanout + input_map run
+        // through the same run_layer, but cover both entry points)
+        let mut ex = Executor::new();
+        let mut flat = Vec::new();
+        ex.run_batch_into(&p_full, batch, &mut flat);
+        let want_flat: Vec<i64> = want.iter().flatten().copied().collect();
+        assert_eq!(flat, want_flat, "flat outputs diverge on the optimized program");
+        p_full.opt_report().unwrap().clone()
+    }
+
+    // -- acceptance: the paper-shaped pruned net -------------------------
+
+    #[test]
+    fn pruned_synthetic_hits_the_reduction_bars() {
+        // >= 30% constant edges and >= 20% duplicate tables must yield
+        // >= 25% fused-op reduction and >= 30% table-byte reduction
+        let mut ck = synthetic(&[32, 16, 16, 5], &[6, 5, 5, 6], 0xACCE55);
+        prunify(&mut ck, 40, 30, 7);
+        let net = net_of(&ck);
+        let mut rng = Rng::new(3);
+        let report = assert_bit_exact(&net, &random_batch(&mut rng, 96, 32, 6));
+        assert!(
+            report.folded_edges as f64 >= 0.30 * report.ops_before as f64,
+            "construction should fold >= 30% of edges: {report:?}"
+        );
+        assert!(
+            (report.tables_total - report.tables_unique) as f64
+                >= 0.20 * report.tables_total as f64,
+            "construction should dedup >= 20% of surviving tables: {report:?}"
+        );
+        assert!(
+            report.op_reduction() >= 0.25,
+            "op reduction {:.3} < 0.25: {report:?}",
+            report.op_reduction()
+        );
+        assert!(
+            report.byte_reduction() >= 0.30,
+            "byte reduction {:.3} < 0.30: {report:?}",
+            report.byte_reduction()
+        );
+        assert_eq!(report.level, OptLevel::Full);
+    }
+
+    // -- property: optimized == unoptimized == sim ------------------------
+
+    #[test]
+    fn prop_optimized_equals_unoptimized_equals_sim() {
+        // random shapes, random pruning mixes (including 0%), random
+        // streams: the three executions are one function
+        prop::check("optimized-equals-sim", 30, |g| {
+            let n_layers = g.usize_in(1, 3);
+            let mut dims = vec![g.usize_in(1, 6)];
+            let mut bits = vec![g.usize_in(2, 5) as u32];
+            for _ in 0..n_layers {
+                dims.push(g.usize_in(1, 6));
+                bits.push(g.usize_in(2, 6) as u32);
+            }
+            let seed = g.rng().next_u64();
+            let mut ck = synthetic(&dims, &bits, seed);
+            let const_pct = g.usize_in(0, 60);
+            let dup_pct = g.usize_in(0, 40);
+            prunify(&mut ck, const_pct, dup_pct, seed ^ 0xD1CE);
+            let net = net_of(&ck);
+            let p_none = compile_with(&net, OptLevel::None);
+            let p_full = compile_with(&net, OptLevel::Full);
+            let n = g.usize_in(1, 24);
+            let batch: Vec<Vec<u32>> = (0..n)
+                .map(|_| {
+                    (0..dims[0]).map(|_| g.rng().below(1u64 << bits[0]) as u32).collect()
+                })
+                .collect();
+            let want = sim::eval_batch(&net, &batch);
+            if engine::run_batch(&p_none, &batch) != want {
+                return Err(format!("None != sim (dims {dims:?} seed {seed})"));
+            }
+            if engine::run_batch(&p_full, &batch) != want {
+                return Err(format!(
+                    "Full != sim (dims {dims:?} seed {seed}, const {const_pct}% dup {dup_pct}%, report {:?})",
+                    p_full.opt_report()
+                ));
+            }
+            let r = p_full.opt_report().unwrap();
+            if r.ops_after > r.ops_before {
+                return Err(format!("optimizer grew the program: {r:?}"));
+            }
+            if r.table_bytes_after > r.table_bytes_before {
+                return Err(format!("optimizer grew the arenas: {r:?}"));
+            }
+            // lane widening is only possible near the i32 rails (a large
+            // folded bias moves to the FRONT of the prefix order); this
+            // generator's tables and constants are < 2^13, so any widening
+            // here would be an analysis bug, not the known edge case
+            if r.i32_layers_after < r.i32_layers_before {
+                return Err(format!("optimizer widened a lane on small tables: {r:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    // -- targeted: bias folding across clamp rails ------------------------
+
+    /// Two-layer netlist with constant edges of magnitude `c` on the first
+    /// layer (plus one varying edge) feeding a requantizer: the folded bias
+    /// pushes sums across the clamp rails, where an off-by-one in folding
+    /// would flip codes.
+    fn clamp_rail_net(c: i64) -> Netlist {
+        let varying: Vec<i64> = (0..8).map(|i| (i * 577) % 2000 - 1000).collect();
+        let l0 = vec![
+            NeuronNet {
+                luts: vec![
+                    LutInst { input: 0, table: vec![c; 8], out_width: 48 },
+                    LutInst { input: 1, table: varying.clone(), out_width: 12 },
+                ],
+                bias: 0,
+                depth: adder_depth(2, 2),
+                sum_width: 50,
+            },
+            NeuronNet {
+                luts: vec![
+                    LutInst { input: 0, table: vec![-c; 8], out_width: 48 },
+                    LutInst { input: 1, table: vec![c; 8], out_width: 48 },
+                    LutInst { input: 0, table: varying.clone(), out_width: 12 },
+                ],
+                bias: 0,
+                depth: adder_depth(3, 2),
+                sum_width: 50,
+            },
+        ];
+        let l1 = vec![NeuronNet {
+            luts: vec![
+                LutInst { input: 0, table: varying.clone(), out_width: 12 },
+                LutInst { input: 1, table: varying, out_width: 12 },
+            ],
+            bias: 0,
+            depth: adder_depth(2, 2),
+            sum_width: 14,
+        }];
+        Netlist {
+            name: "clamp-rails".into(),
+            layers: vec![
+                LayerNet {
+                    d_in: 2,
+                    d_out: 2,
+                    in_bits: 3,
+                    out_bits: 3,
+                    neurons: l0,
+                    requant: Some(Quantizer::new(3, -4.0, 4.0)),
+                    depth: 2,
+                },
+                LayerNet {
+                    d_in: 2,
+                    d_out: 1,
+                    in_bits: 3,
+                    out_bits: 8,
+                    neurons: l1,
+                    requant: None,
+                    depth: 1,
+                },
+            ],
+            n_add: 2,
+            frac_bits: 12,
+            domain: (-4.0, 4.0),
+        }
+    }
+
+    #[test]
+    fn bias_folding_exact_across_clamp_rails() {
+        // c = 2^40 slams neuron 0 of layer 0 into the hi rail and leaves
+        // neuron 1 (whose two constants cancel) on the varying edge alone:
+        // every (code0, code1) combination must match sim exactly
+        let net = clamp_rail_net(1 << 40);
+        let batch: Vec<Vec<u32>> =
+            (0..64).map(|i| vec![(i % 8) as u32, (i / 8) as u32]).collect();
+        let report = assert_bit_exact(&net, &batch);
+        assert_eq!(report.folded_edges, 3, "{report:?}");
+        // moderate constants too (rails approached from inside the domain)
+        let net = clamp_rail_net(10_000);
+        assert_bit_exact(&net, &batch);
+    }
+
+    #[test]
+    fn folding_cancelling_constants_narrows_the_lane() {
+        // before folding, |2^40| entries force the wide lane; the two
+        // constants cancel into bias 0, so the optimized layer must narrow
+        let net = clamp_rail_net(1 << 40);
+        let p_none = compile_with(&net, OptLevel::None);
+        let p_full = compile_with(&net, OptLevel::Full);
+        assert_eq!(p_none.layers()[0].lane, Lane::I64);
+        // neuron 0 keeps a folded bias of 2^40, which still needs i64 —
+        // so check the report on a net where everything cancels instead
+        assert_eq!(p_full.layers()[0].lane, Lane::I64, "bias 2^40 still needs the wide lane");
+        let mut cancelling = clamp_rail_net(1 << 40);
+        // make neuron 0's constant cancel too (add an opposite edge)
+        cancelling.layers[0].neurons[0].luts.push(LutInst {
+            input: 1,
+            table: vec![-(1i64 << 40); 8],
+            out_width: 48,
+        });
+        let batch: Vec<Vec<u32>> =
+            (0..64).map(|i| vec![(i % 8) as u32, (i / 8) as u32]).collect();
+        let report = assert_bit_exact(&cancelling, &batch);
+        let p = compile_with(&cancelling, OptLevel::Full);
+        assert_eq!(p.layers()[0].lane, Lane::I32, "cancelled constants must narrow");
+        assert!(report.i32_layers_after > report.i32_layers_before, "{report:?}");
+        assert!(p.tables64().is_empty());
+    }
+
+    // -- targeted: hash-consing across lanes ------------------------------
+
+    #[test]
+    fn dedup_is_per_lane_and_shared_across_layers() {
+        // the same table content appears 3x in a wide layer (accumulator
+        // overflow forces i64) and 2x in a narrow layer: one slot per arena
+        let t: Vec<i64> = (0..8).map(|i| 1_000_000_000 + i).collect(); // fits i32
+        let wide = vec![NeuronNet {
+            luts: (0..3)
+                .map(|p| LutInst { input: p % 2, table: t.clone(), out_width: 31 })
+                .collect(),
+            bias: 0,
+            depth: adder_depth(3, 2),
+            sum_width: 33,
+        }];
+        let narrow = vec![
+            NeuronNet {
+                luts: vec![LutInst { input: 0, table: t.clone(), out_width: 31 }],
+                bias: 0,
+                depth: 0,
+                sum_width: 31,
+            },
+        ];
+        let net = Netlist {
+            name: "cross-lane-dedup".into(),
+            layers: vec![
+                LayerNet {
+                    d_in: 2,
+                    d_out: 1,
+                    in_bits: 3,
+                    out_bits: 3,
+                    neurons: wide,
+                    requant: Some(Quantizer::new(3, -4.0, 4.0)),
+                    depth: 2,
+                },
+                LayerNet {
+                    d_in: 1,
+                    d_out: 1,
+                    in_bits: 3,
+                    out_bits: 8,
+                    neurons: narrow,
+                    requant: None,
+                    depth: 0,
+                },
+            ],
+            n_add: 2,
+            frac_bits: 12,
+            domain: (-4.0, 4.0),
+        };
+        let batch: Vec<Vec<u32>> = (0..16).map(|i| vec![(i % 8) as u32, (i / 2) as u32]).collect();
+        let report = assert_bit_exact(&net, &batch);
+        let p = compile_with(&net, OptLevel::Full);
+        assert_eq!(p.layers()[0].lane, Lane::I64, "3 x 1e9 overflows i32");
+        assert_eq!(p.layers()[1].lane, Lane::I32);
+        // one materialization per lane, not per reference
+        assert_eq!(p.tables64().len(), t.len(), "wide arena must hold one copy");
+        assert_eq!(p.tables32().len(), t.len(), "narrow arena must hold one copy");
+        assert_eq!(report.tables_total, 4);
+        assert_eq!(report.tables_unique, 2, "one slot per lane: {report:?}");
+    }
+
+    // -- targeted: CSE fanout -------------------------------------------
+
+    #[test]
+    fn cse_fanout_ordering_and_within_neuron_duplicates() {
+        // layer reading input 0 through the same table from three neurons,
+        // twice within neuron 0: one op + three fanouts, in op order
+        let t: Vec<i64> = (0..8).map(|i| i * 321 - 900).collect();
+        let u: Vec<i64> = (0..8).map(|i| 40 - i * 17).collect();
+        let neurons = vec![
+            NeuronNet {
+                luts: vec![
+                    LutInst { input: 0, table: t.clone(), out_width: 12 },
+                    LutInst { input: 0, table: t.clone(), out_width: 12 },
+                ],
+                bias: 5,
+                depth: adder_depth(2, 2),
+                sum_width: 14,
+            },
+            NeuronNet {
+                luts: vec![
+                    LutInst { input: 0, table: t.clone(), out_width: 12 },
+                    LutInst { input: 1, table: u.clone(), out_width: 12 },
+                ],
+                bias: -3,
+                depth: adder_depth(2, 2),
+                sum_width: 14,
+            },
+            NeuronNet {
+                luts: vec![LutInst { input: 0, table: t.clone(), out_width: 12 }],
+                bias: 0,
+                depth: 0,
+                sum_width: 13,
+            },
+        ];
+        let net = Netlist {
+            name: "cse-fanout".into(),
+            layers: vec![LayerNet {
+                d_in: 2,
+                d_out: 3,
+                in_bits: 3,
+                out_bits: 8,
+                neurons,
+                requant: None,
+                depth: 1,
+            }],
+            n_add: 2,
+            frac_bits: 12,
+            domain: (-4.0, 4.0),
+        };
+        let batch: Vec<Vec<u32>> = (0..64).map(|i| vec![(i % 8) as u32, (i / 8) as u32]).collect();
+        let report = assert_bit_exact(&net, &batch);
+        let p = compile_with(&net, OptLevel::Full);
+        assert_eq!(p.n_ops(), 2, "5 lookups share 2 (input, table) pairs");
+        assert_eq!(report.cse_fanouts, 3);
+        assert_eq!(report.tables_unique, 2);
+        // fanout entries are sorted by op and in-range, the executor's
+        // cursor contract; neuron 0 appears as the shared op's own target
+        // AND a fanout (within-neuron duplicate = the value added twice)
+        let fans = p.fanouts();
+        assert_eq!(fans.len(), 3);
+        assert!(fans.windows(2).all(|w| w[0].op <= w[1].op), "{fans:?}");
+        let plan = &p.layers()[0];
+        assert_eq!(plan.fanout, 0..3);
+        let shared = &p.ops()[plan.ops.clone()][fans[0].op as usize];
+        assert_eq!(shared.neuron, 0, "first occurrence owns the op");
+        assert_eq!(fans.iter().map(|f| f.neuron).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    // -- targeted: dead inputs end to end ---------------------------------
+
+    #[test]
+    fn dead_external_inputs_are_compacted_not_rejected() {
+        // input 1 of 3 feeds nothing: requests keep width 3, the plane
+        // packs 2, the map names the live features
+        let t: Vec<i64> = (0..8).map(|i| i * 100 - 350).collect();
+        let neurons = vec![NeuronNet {
+            luts: vec![
+                LutInst { input: 0, table: t.clone(), out_width: 12 },
+                LutInst { input: 2, table: t.clone(), out_width: 12 },
+            ],
+            bias: 0,
+            depth: adder_depth(2, 2),
+            sum_width: 14,
+        }];
+        let net = Netlist {
+            name: "dead-external".into(),
+            layers: vec![LayerNet {
+                d_in: 3,
+                d_out: 1,
+                in_bits: 3,
+                out_bits: 8,
+                neurons,
+                requant: None,
+                depth: 1,
+            }],
+            n_add: 2,
+            frac_bits: 12,
+            domain: (-4.0, 4.0),
+        };
+        let batch: Vec<Vec<u32>> =
+            (0..32).map(|i| vec![(i % 8) as u32, 7 - (i % 8) as u32, (i / 4) as u32]).collect();
+        let report = assert_bit_exact(&net, &batch);
+        let p = compile_with(&net, OptLevel::Full);
+        assert_eq!(p.d_in(), 3, "request width must stay the checkpoint's");
+        assert_eq!(p.input_map(), Some(&[0u32, 2][..]));
+        assert_eq!(p.layers()[0].d_in, 2, "plane width shrinks to live inputs");
+        assert_eq!(report.dead_inputs, 1);
+        // the dead feature's value genuinely does not matter
+        let a = engine::run_batch(&p, &[vec![3u32, 0, 5]]);
+        let b = engine::run_batch(&p, &[vec![3u32, 7, 5]]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dead_interior_producer_is_deleted_and_cascades() {
+        // layer 1 neuron 1 is read by a constant edge only: folding kills
+        // the edge, the sweep deletes the producer, and the producer's own
+        // exclusive input column in layer 0 dies with it
+        let t: Vec<i64> = (0..8).map(|i| i * 55 - 200).collect();
+        let l0 = vec![
+            NeuronNet {
+                luts: vec![LutInst { input: 0, table: t.clone(), out_width: 12 }],
+                bias: 0,
+                depth: 0,
+                sum_width: 13,
+            },
+            NeuronNet {
+                luts: vec![LutInst { input: 1, table: t.clone(), out_width: 12 }],
+                bias: 0,
+                depth: 0,
+                sum_width: 13,
+            },
+        ];
+        let l1 = vec![NeuronNet {
+            luts: vec![
+                LutInst { input: 0, table: t.clone(), out_width: 12 },
+                LutInst { input: 1, table: vec![77; 8], out_width: 8 }, // constant
+            ],
+            bias: 0,
+            depth: adder_depth(2, 2),
+            sum_width: 14,
+        }];
+        let net = Netlist {
+            name: "dead-cascade".into(),
+            layers: vec![
+                LayerNet {
+                    d_in: 2,
+                    d_out: 2,
+                    in_bits: 3,
+                    out_bits: 3,
+                    neurons: l0,
+                    requant: Some(Quantizer::new(3, -4.0, 4.0)),
+                    depth: 0,
+                },
+                LayerNet {
+                    d_in: 2,
+                    d_out: 1,
+                    in_bits: 3,
+                    out_bits: 8,
+                    neurons: l1,
+                    requant: None,
+                    depth: 1,
+                },
+            ],
+            n_add: 2,
+            frac_bits: 12,
+            domain: (-4.0, 4.0),
+        };
+        let batch: Vec<Vec<u32>> = (0..64).map(|i| vec![(i % 8) as u32, (i / 8) as u32]).collect();
+        let report = assert_bit_exact(&net, &batch);
+        assert_eq!(report.folded_edges, 1);
+        assert_eq!(report.dead_neurons, 1, "layer-0 neuron 1 fed only the folded edge");
+        assert_eq!(report.dead_inputs, 1, "external input 1 fed only the dead producer");
+        let p = compile_with(&net, OptLevel::Full);
+        assert_eq!(p.layers()[0].d_out, 1);
+        assert_eq!(p.layers()[1].d_in, 1);
+        assert_eq!(p.input_map(), Some(&[0u32][..]));
+        assert_eq!(p.n_ops(), 2);
+    }
+
+    #[test]
+    fn fully_folded_layer_keeps_bias_only_outputs() {
+        // every edge of the output layer is constant: the program runs on
+        // biases alone and still matches sim
+        let l0 = vec![NeuronNet {
+            luts: vec![LutInst {
+                input: 0,
+                table: (0..8).map(|i| i * 9 - 31).collect(),
+                out_width: 8,
+            }],
+            bias: 0,
+            depth: 0,
+            sum_width: 9,
+        }];
+        let l1 = vec![
+            NeuronNet {
+                luts: vec![LutInst { input: 0, table: vec![123; 8], out_width: 8 }],
+                bias: 0,
+                depth: 0,
+                sum_width: 9,
+            },
+            NeuronNet {
+                luts: vec![LutInst { input: 0, table: vec![-45; 8], out_width: 7 }],
+                bias: 0,
+                depth: 0,
+                sum_width: 7,
+            },
+        ];
+        let net = Netlist {
+            name: "bias-only".into(),
+            layers: vec![
+                LayerNet {
+                    d_in: 1,
+                    d_out: 1,
+                    in_bits: 3,
+                    out_bits: 3,
+                    neurons: l0,
+                    requant: Some(Quantizer::new(3, -4.0, 4.0)),
+                    depth: 0,
+                },
+                LayerNet {
+                    d_in: 1,
+                    d_out: 2,
+                    in_bits: 3,
+                    out_bits: 8,
+                    neurons: l1,
+                    requant: None,
+                    depth: 0,
+                },
+            ],
+            n_add: 2,
+            frac_bits: 12,
+            domain: (-4.0, 4.0),
+        };
+        let batch: Vec<Vec<u32>> = (0..8).map(|i| vec![i as u32]).collect();
+        let report = assert_bit_exact(&net, &batch);
+        assert_eq!(report.folded_edges, 2);
+        let p = compile_with(&net, OptLevel::Full);
+        assert_eq!(engine::run_batch(&p, &batch), sim::eval_batch(&net, &batch));
+        assert_eq!(p.ops().len(), 0, "nothing left to look up");
+    }
+
+    // -- report plumbing --------------------------------------------------
+
+    #[test]
+    fn none_level_report_is_identity() {
+        let ck = synthetic(&[4, 3, 2], &[4, 5, 6], 11);
+        let net = net_of(&ck);
+        let p = compile_with(&net, OptLevel::None);
+        let r = p.opt_report().unwrap();
+        assert_eq!(r.level, OptLevel::None);
+        assert_eq!(r.ops_before, r.ops_after);
+        assert_eq!(r.ops_before, net.n_luts());
+        assert_eq!(r.table_bytes_before, r.table_bytes_after);
+        assert_eq!(r.op_reduction(), 0.0);
+        assert_eq!(r.byte_reduction(), 0.0);
+        assert!(!r.summary().is_empty());
+    }
+
+    #[test]
+    fn optimize_is_idempotent_on_clean_nets() {
+        // a net with nothing to optimize compiles to the same geometry at
+        // both levels (CSE/dedup may still fire on accidental duplicates,
+        // so assert on a handcrafted all-distinct net)
+        let t = |s: i64| -> Vec<i64> { (0..8).map(|i| i * 31 + s).collect() };
+        let neurons = vec![
+            NeuronNet {
+                luts: vec![
+                    LutInst { input: 0, table: t(1), out_width: 12 },
+                    LutInst { input: 1, table: t(2), out_width: 12 },
+                ],
+                bias: 0,
+                depth: adder_depth(2, 2),
+                sum_width: 14,
+            },
+            NeuronNet {
+                luts: vec![LutInst { input: 1, table: t(3), out_width: 12 }],
+                bias: 0,
+                depth: 0,
+                sum_width: 13,
+            },
+        ];
+        let net = Netlist {
+            name: "clean".into(),
+            layers: vec![LayerNet {
+                d_in: 2,
+                d_out: 2,
+                in_bits: 3,
+                out_bits: 8,
+                neurons,
+                requant: None,
+                depth: 1,
+            }],
+            n_add: 2,
+            frac_bits: 12,
+            domain: (-4.0, 4.0),
+        };
+        let p_none = compile_with(&net, OptLevel::None);
+        let p_full = compile_with(&net, OptLevel::Full);
+        assert_eq!(p_full.n_ops(), p_none.n_ops());
+        assert_eq!(p_full.table_bytes(), p_none.table_bytes());
+        assert!(p_full.fanouts().is_empty());
+        assert!(p_full.input_map().is_none());
+        let r = p_full.opt_report().unwrap();
+        assert_eq!(r.folded_edges + r.dead_inputs + r.dead_neurons + r.cse_fanouts, 0);
+    }
+
+    #[test]
+    fn eliminate_dead_uses_dead_inputs_oracle() {
+        // the pass's result agrees with Netlist::dead_inputs before/after:
+        // afterwards no layer reports any dead input
+        let mut ck = synthetic(&[6, 5, 4, 2], &[3, 4, 4, 6], 77);
+        prunify(&mut ck, 50, 0, 5);
+        let net = net_of(&ck);
+        let mut work = net.clone();
+        netopt::optimize(&mut work);
+        let before: usize = (0..work.layers.len()).map(|l| work.dead_inputs(l).len()).sum();
+        let (dead_ext, dead_neurons, map) = eliminate_dead(&mut work);
+        for l in 0..work.layers.len() {
+            assert!(work.dead_inputs(l).is_empty(), "layer {l} still has dead inputs");
+        }
+        // interface consistency after renumbering
+        for w in work.layers.windows(2) {
+            assert_eq!(w[0].d_out, w[1].d_in);
+        }
+        if let Some(map) = &map {
+            assert_eq!(map.len(), work.layers[0].d_in);
+            assert!(map.windows(2).all(|w| w[0] < w[1]), "map must stay sorted");
+        }
+        assert!(
+            dead_ext + dead_neurons >= before.min(1),
+            "a net with dead inputs must report elimination work"
+        );
+    }
+}

@@ -36,8 +36,10 @@ use std::ops::Range;
 use crate::fixed::Quantizer;
 use crate::netlist::{LayerNet, Netlist};
 
+use super::optim::{self, OptLevel, OptReport};
+
 /// One fused LUT-gather + accumulate op with fully resolved indices.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LutOp {
     /// Start of this op's truth table in its layer's packed arena
     /// (i32 or i64 arena according to [`LayerPlan::lane`]).
@@ -61,6 +63,25 @@ pub enum Lane {
     I64,
 }
 
+/// Extra accumulate target of a CSE-shared op: after op `op` (an index
+/// *within its layer's op slice*) gathers `table[code]`, the same value is
+/// also added into `neuron`'s accumulator. Produced only by the optimizer
+/// ([`super::optim`]); the 1:1 lowering emits none. Entries of a layer are
+/// sorted by `op`, the executor's cursor contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FanOut {
+    pub op: u32,
+    pub neuron: u32,
+}
+
+/// Bytes per packed table entry in the given lane's arena.
+pub(super) fn lane_bytes(lane: Lane) -> usize {
+    match lane {
+        Lane::I32 => std::mem::size_of::<i32>(),
+        Lane::I64 => std::mem::size_of::<i64>(),
+    }
+}
+
 /// Execution plan for one layer: an op-stream slice, the lane, plus the
 /// inter-layer requantization plan (None for the output layer).
 #[derive(Clone, Debug)]
@@ -73,6 +94,9 @@ pub struct LayerPlan {
     pub bias_off: usize,
     /// Which arena/scratch lane this layer's tables and sums use.
     pub lane: Lane,
+    /// This layer's slice of [`CompiledProgram::fanouts`] (CSE-shared
+    /// lookups feeding several accumulators; empty for 1:1 lowerings).
+    pub fanout: Range<usize>,
     pub requant: Option<RequantPlan>,
 }
 
@@ -83,28 +107,49 @@ pub struct LayerPlan {
 pub struct CompiledProgram {
     pub name: String,
     pub frac_bits: u32,
-    /// i64 truth tables of wide-lane layers, packed back to back in op order.
-    tables64: Vec<i64>,
+    /// i64 truth tables of wide-lane layers, packed back to back in op order
+    /// (hash-consed programs share slots, so offsets may repeat).
+    pub(super) tables64: Vec<i64>,
     /// i32 truth tables of narrow-lane layers, packed back to back in op order.
-    tables32: Vec<i32>,
+    pub(super) tables32: Vec<i32>,
     /// The fused op stream, grouped by layer.
-    ops: Vec<LutOp>,
+    pub(super) ops: Vec<LutOp>,
     /// Per-neuron constant operands (folded biases), grouped by layer.
-    biases: Vec<i64>,
-    layers: Vec<LayerPlan>,
-    d_in: usize,
-    d_out: usize,
+    pub(super) biases: Vec<i64>,
+    pub(super) layers: Vec<LayerPlan>,
+    pub(super) d_in: usize,
+    pub(super) d_out: usize,
     /// Widest layer interface — the per-feature scratch plane count planned
     /// at compile time (see [`super::exec::Executor`]).
-    max_width: usize,
+    pub(super) max_width: usize,
     /// Whether any layer runs in the narrow / wide lane (precomputed so the
     /// per-batch scratch sizing never rescans the layer list).
-    uses_i32: bool,
-    uses_i64: bool,
+    pub(super) uses_i32: bool,
+    pub(super) uses_i64: bool,
+    /// CSE fanout entries, grouped by layer (see [`FanOut`]); empty for 1:1
+    /// lowerings.
+    pub(super) fanouts: Vec<FanOut>,
+    /// When the optimizer eliminated dead *external* inputs: the live
+    /// external feature index for each internal plane slot. `None` means
+    /// the identity packing (every request feature has a slot).
+    pub(super) input_map: Option<Vec<u32>>,
+    /// What the pass pipeline did (None for plain [`CompiledProgram::compile`]).
+    pub(super) opt: Option<OptReport>,
 }
 
 impl CompiledProgram {
-    /// Lower a netlist into the flat feature-major program.
+    /// Lower a netlist at the given [`OptLevel`]. [`OptLevel::Full`] runs
+    /// the pass pipeline of [`super::optim`] (fold constants, eliminate
+    /// dead inputs, hash-cons tables, CSE duplicate lookups, re-run the
+    /// lane analysis); [`OptLevel::None`] is [`CompiledProgram::compile`]
+    /// plus an identity [`OptReport`]. Both are bit-exact with
+    /// [`crate::sim::eval`] on the source netlist.
+    pub fn compile_opt(net: &Netlist, level: OptLevel) -> CompiledProgram {
+        optim::compile_with(net, level)
+    }
+
+    /// Lower a netlist into the flat feature-major program, 1:1 — one op
+    /// and one arena slot per netlist L-LUT (no optimization passes).
     pub fn compile(net: &Netlist) -> CompiledProgram {
         let mut tables64 = Vec::new();
         let mut tables32 = Vec::new();
@@ -149,6 +194,7 @@ impl CompiledProgram {
                 ops: ops_start..ops.len(),
                 bias_off,
                 lane,
+                fanout: 0..0,
                 requant: layer.requant.map(|q| RequantPlan::build(q, net.frac_bits)),
             });
         }
@@ -169,6 +215,9 @@ impl CompiledProgram {
             uses_i32: layers.iter().any(|l| l.lane == Lane::I32),
             uses_i64: layers.iter().any(|l| l.lane == Lane::I64),
             layers,
+            fanouts: Vec::new(),
+            input_map: None,
+            opt: None,
         }
     }
 
@@ -187,12 +236,15 @@ impl CompiledProgram {
         self.max_width
     }
 
-    /// Total fused ops (== L-LUT instances of the source netlist).
+    /// Total fused ops: one per netlist L-LUT for 1:1 lowerings, fewer
+    /// after the optimizer folds/CSEs (see [`OptReport::ops_before`]).
     pub fn n_ops(&self) -> usize {
         self.ops.len()
     }
 
-    /// Total packed table entries across both arenas.
+    /// Total packed table entries across both arenas. Hash-consed programs
+    /// count each unique content once — this is resident footprint, not
+    /// reference count.
     pub fn table_words(&self) -> usize {
         self.tables64.len() + self.tables32.len()
     }
@@ -235,6 +287,23 @@ impl CompiledProgram {
     pub fn biases(&self) -> &[i64] {
         &self.biases
     }
+
+    /// CSE fanout entries (see [`FanOut`]); empty unless the optimizer ran.
+    pub fn fanouts(&self) -> &[FanOut] {
+        &self.fanouts
+    }
+
+    /// Live external feature per internal plane slot, when the optimizer
+    /// compacted dead inputs out of the code plane; `None` = identity.
+    pub fn input_map(&self) -> Option<&[u32]> {
+        self.input_map.as_deref()
+    }
+
+    /// What the pass pipeline did to this program (`None` when it was
+    /// lowered by plain [`CompiledProgram::compile`]).
+    pub fn opt_report(&self) -> Option<&OptReport> {
+        self.opt.as_ref()
+    }
 }
 
 /// Exact interval analysis over one layer, in the executor's op order:
@@ -246,7 +315,7 @@ impl CompiledProgram {
 /// is sound. Saturating adds keep pathological i64-scale tables from
 /// wrapping the analysis itself (saturation can only widen the interval,
 /// which conservatively selects the wide lane).
-fn analyze_lane(layer: &LayerNet) -> Lane {
+pub(super) fn analyze_lane(layer: &LayerNet) -> Lane {
     const LO: i64 = i32::MIN as i64;
     const HI: i64 = i32::MAX as i64;
     for neuron in &layer.neurons {
@@ -533,6 +602,41 @@ mod tests {
         let net = Netlist::build(&ck, &tables, 2);
         let prog = CompiledProgram::compile(&net);
         (net, prog)
+    }
+
+    #[test]
+    fn opt_none_is_byte_identical_to_compile() {
+        // the A/B baseline contract: OptLevel::None must preserve the 1:1
+        // lowering exactly — same arenas, ops, biases, plans — differing
+        // only in carrying an identity report
+        for seed in [11u64, 31, 77] {
+            let ck = synthetic(&[6, 5, 4, 2], &[3, 4, 4, 6], seed);
+            let tables = lut::from_checkpoint(&ck);
+            let net = Netlist::build(&ck, &tables, 2);
+            let plain = CompiledProgram::compile(&net);
+            let none = CompiledProgram::compile_opt(&net, OptLevel::None);
+            assert_eq!(plain.tables32(), none.tables32());
+            assert_eq!(plain.tables64(), none.tables64());
+            assert_eq!(plain.ops(), none.ops());
+            assert_eq!(plain.biases(), none.biases());
+            assert_eq!(plain.d_in(), none.d_in());
+            assert_eq!(plain.d_out(), none.d_out());
+            assert_eq!(plain.max_width(), none.max_width());
+            assert!(none.fanouts().is_empty() && plain.fanouts().is_empty());
+            assert!(none.input_map().is_none() && plain.input_map().is_none());
+            assert_eq!(plain.layers().len(), none.layers().len());
+            for (a, b) in plain.layers().iter().zip(none.layers()) {
+                assert_eq!(a.d_in, b.d_in);
+                assert_eq!(a.d_out, b.d_out);
+                assert_eq!(a.ops, b.ops);
+                assert_eq!(a.bias_off, b.bias_off);
+                assert_eq!(a.lane, b.lane);
+                assert_eq!(a.fanout, b.fanout);
+                assert_eq!(a.requant.is_some(), b.requant.is_some());
+            }
+            assert!(plain.opt_report().is_none());
+            assert_eq!(none.opt_report().unwrap().level, OptLevel::None);
+        }
     }
 
     #[test]

@@ -16,11 +16,16 @@ use std::sync::{Arc, RwLock};
 use crate::netlist::hotswap::NetlistCell;
 use crate::netlist::Netlist;
 
+use super::optim::OptLevel;
 use super::program::CompiledProgram;
 
 /// Swappable compiled-program handle, derived from a [`NetlistCell`].
 pub struct ProgramCell {
     source: Arc<NetlistCell>,
+    /// Pass-pipeline level every (re)compile runs at — fixed at
+    /// construction so a hot-swap can never silently change the lowering
+    /// an A/B measurement depends on.
+    level: OptLevel,
     /// The netlist snapshot the cached program was compiled from, plus the
     /// program itself. Pointer equality against `source.load()` detects
     /// staleness exactly (every swap publishes a fresh `Arc`). RwLock so
@@ -30,11 +35,23 @@ pub struct ProgramCell {
 }
 
 impl ProgramCell {
-    /// Wrap a netlist cell, compiling its current snapshot eagerly.
+    /// Wrap a netlist cell, compiling its current snapshot eagerly at the
+    /// default (optimizing) level.
     pub fn new(source: Arc<NetlistCell>) -> ProgramCell {
+        Self::with_level(source, OptLevel::default())
+    }
+
+    /// Wrap a netlist cell at an explicit [`OptLevel`] (recompiles after
+    /// hot-swaps stay at this level).
+    pub fn with_level(source: Arc<NetlistCell>, level: OptLevel) -> ProgramCell {
         let net = source.load();
-        let prog = Arc::new(CompiledProgram::compile(&net));
-        ProgramCell { source, cached: RwLock::new((net, prog)) }
+        let prog = Arc::new(CompiledProgram::compile_opt(&net, level));
+        ProgramCell { source, level, cached: RwLock::new((net, prog)) }
+    }
+
+    /// The pass-pipeline level this cell compiles at.
+    pub fn level(&self) -> OptLevel {
+        self.level
     }
 
     /// The underlying swappable netlist handle.
@@ -61,7 +78,8 @@ impl ProgramCell {
         // never regress the cache to an older snapshot.
         let net = self.source.load();
         if !Arc::ptr_eq(&cached.0, &net) {
-            *cached = (Arc::clone(&net), Arc::new(CompiledProgram::compile(&net)));
+            *cached =
+                (Arc::clone(&net), Arc::new(CompiledProgram::compile_opt(&net, self.level)));
         }
         (Arc::clone(&cached.0), Arc::clone(&cached.1))
     }
@@ -112,6 +130,37 @@ mod tests {
         assert_eq!(engine::run_batch(&after, &codes), want);
         // old program still reflects the old tables (snapshot semantics)
         assert_ne!(engine::run_batch(&before, &codes), want);
+    }
+
+    #[test]
+    fn recompile_after_swap_keeps_the_cell_level() {
+        use crate::engine::OptLevel;
+        let (bits, nc) = cell(8);
+        let full = ProgramCell::new(Arc::clone(&nc));
+        let none = ProgramCell::with_level(Arc::clone(&nc), OptLevel::None);
+        assert_eq!(full.level(), OptLevel::Full);
+        assert_eq!(none.level(), OptLevel::None);
+        assert_eq!(full.load().1.opt_report().unwrap().level, OptLevel::Full);
+        assert_eq!(none.load().1.opt_report().unwrap().level, OptLevel::None);
+        // a hot-swap to a CONSTANT table: the Full cell folds it away, the
+        // None cell keeps it — and both still match the swapped netlist
+        let (q, p) = nc.load().layers[0]
+            .neurons
+            .iter()
+            .enumerate()
+            .find_map(|(q, n)| n.luts.first().map(|l| (q, l.input)))
+            .expect("at least one active edge");
+        nc.swap_edge(0, q, p, vec![31_415; 1usize << bits]).unwrap();
+        let (net_f, pf) = full.load();
+        let (_, pn) = none.load();
+        assert_eq!(pf.opt_report().unwrap().level, OptLevel::Full);
+        assert!(pf.opt_report().unwrap().folded_edges >= 1, "constant swap must fold");
+        assert_eq!(pn.opt_report().unwrap().folded_edges, 0);
+        assert!(pf.n_ops() < pn.n_ops());
+        let codes = vec![vec![0u32, 1, 2], vec![2, 0, 1]];
+        let want = sim::eval_batch(&net_f, &codes);
+        assert_eq!(engine::run_batch(&pf, &codes), want);
+        assert_eq!(engine::run_batch(&pn, &codes), want);
     }
 
     #[test]

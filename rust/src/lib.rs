@@ -15,11 +15,13 @@
 //!    substrate substitute), and [`synth`] estimates P-LUT/FF/Fmax/power the
 //!    way Vivado out-of-context synthesis would.
 //! 5. [`engine`] **compiles** the netlist into a flat feature-major program
-//!    (packed table arenas narrowed to i32 where range analysis allows,
-//!    fused op stream, integer requant plans) and executes request batches
-//!    as contiguous integer-only table scans into caller-owned flat
-//!    outputs — bit-exact with [`sim`], several times faster,
-//!    hot-swappable.
+//!    through an optimizing pass pipeline (constant-folding pruned edges
+//!    into biases, dead-input elimination, table hash-consing, CSE — see
+//!    [`engine::optim`]; packed table arenas narrowed to i32 where range
+//!    analysis allows, fused op stream, integer requant plans) and executes
+//!    request batches as contiguous integer-only table scans into
+//!    caller-owned flat outputs — bit-exact with [`sim`], several times
+//!    faster, hot-swappable.
 //! 6. [`runtime`] cross-checks everything against the AOT-compiled XLA
 //!    artifact via PJRT (behind the `xla` feature), and [`coordinator`]
 //!    serves batched inference on the compiled engine by default.

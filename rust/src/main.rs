@@ -14,7 +14,7 @@ use anyhow::{bail, Context, Result};
 use kanele::checkpoint::{Checkpoint, TestSet};
 use kanele::config;
 use kanele::coordinator::{Backend, Service, ServiceCfg, SubmitError};
-use kanele::engine;
+use kanele::engine::{self, OptLevel};
 use kanele::netlist::Netlist;
 use kanele::report;
 use kanele::sim;
@@ -29,8 +29,9 @@ USAGE: kanele <command> [args]
 
 COMMANDS:
   compile <name|path> [--n-add N] [--device D] [--vhdl DIR]
-      checkpoint -> L-LUTs -> netlist; print synthesis report; optionally
-      emit the VHDL bundle.
+      checkpoint -> L-LUTs -> netlist; print synthesis report plus the
+      serving engine's optimizer report (constant folding, dead-input
+      elimination, table dedup/CSE); optionally emit the VHDL bundle.
   verify <name|path> [--n-add N]
       bit-exact equivalence: netlist sim vs the checkpoint's Python oracle
       vectors, plus L-LUT regeneration vs exported tables.
@@ -38,15 +39,16 @@ COMMANDS:
       run the netlist on the exported test set; print the task metric.
   serve <name> [--requests N] [--workers W] [--shards S] [--steal on|off]
         [--batch B] [--wait-us U] [--queue-depth Q]
-        [--backend compiled|interpreted]
+        [--backend compiled|interpreted] [--opt full|none]
       batched inference service benchmark through the sharded
       dispatcher/executor plane: S admission shards (client-affine
       round-robin, each with its own dispatcher forming batches — fill to
       --batch or flush --wait-us after the oldest request's submission)
       feed a work-stealing pool of W executors (idle executors steal the
       oldest queued batch from other shards unless --steal off). Default
-      backend: the compiled batch-major engine; `interpreted` selects the
-      netlist simulator.
+      backend: the compiled batch-major engine lowered through the full
+      optimizer pipeline (--opt none keeps the 1:1 lowering for A/B);
+      `interpreted` selects the netlist simulator.
   table2|table3|table4|table5|fig6|table7|report-all [--n-add N]
       regenerate the paper's tables/figures (report-all renders everything
       and saves to artifacts/reports/).
@@ -151,6 +153,18 @@ fn run(args: &[String]) -> Result<()> {
                 r.dyn_power_w, r.energy_per_inf_uj
             );
             println!("fits device    : {}", r.fits);
+            // the serving engine's view of the same netlist: what the
+            // compile-time pass pipeline folds, dedups and CSEs away
+            let prog = engine::compile(&net);
+            if let Some(opt) = prog.opt_report() {
+                println!("engine opt     : {}", opt.summary());
+            }
+            println!(
+                "engine program : {} fused ops, {} unique table words, {} B arenas",
+                prog.n_ops(),
+                prog.table_words(),
+                prog.table_bytes()
+            );
             if let Some(dir) = flags.get("--vhdl") {
                 let oracle_in = &ck.test_vectors.input_codes;
                 let oracle_out = &ck.test_vectors.output_sums;
@@ -258,6 +272,11 @@ fn run(args: &[String]) -> Result<()> {
                     .with_context(|| format!("bad --backend {s:?} (compiled|interpreted)"))?,
                 None => Backend::Compiled,
             };
+            let opt = match flags.get("--opt") {
+                Some(s) => OptLevel::parse(s)
+                    .with_context(|| format!("bad --opt {s:?} (full|none)"))?,
+                None => OptLevel::default(),
+            };
             let ck = load_checkpoint(name)?;
             let tables = lut::from_checkpoint(&ck);
             let net = Arc::new(Netlist::build(&ck, &tables, 2));
@@ -277,6 +296,7 @@ fn run(args: &[String]) -> Result<()> {
                     max_wait: Duration::from_micros(wait_us as u64),
                     queue_depth,
                     backend,
+                    opt,
                     ..Default::default()
                 },
             );
@@ -315,9 +335,14 @@ fn run(args: &[String]) -> Result<()> {
             let stats = svc.stats();
             println!("served          : {done} requests in {wall:.3} s");
             println!("throughput      : {:.0} req/s", done as f64 / wall);
+            if let Some(opt) = &stats.opt {
+                println!("optimizer       : {}", opt.summary());
+            }
             println!(
                 "ops throughput  : {:.3e} fused ops/s ({:.0} samples/s, {} ops/sample)",
-                stats.throughput_ops, stats.throughput_rps, net.n_luts()
+                stats.throughput_ops,
+                stats.throughput_rps,
+                stats.opt.as_ref().map(|o| o.ops_after).unwrap_or_else(|| net.n_luts())
             );
             println!(
                 "latency p50/p99 : {:.1} / {:.1} us",

@@ -184,7 +184,12 @@ impl Netlist {
             .sum()
     }
 
-    /// Dead-input detection: inputs of layer l read by no LUT (feed nothing).
+    /// Dead-input detection: inputs of layer `l` read by no LUT (feed
+    /// nothing). For `l == 0` these are external features; for interior
+    /// layers they are unread producer neurons of layer `l - 1`. This is
+    /// the entry point of the engine's dead-code-elimination pass
+    /// ([`crate::engine::optim`]) and of the register-saving count in
+    /// [`opt::optimize`].
     pub fn dead_inputs(&self, l: usize) -> Vec<usize> {
         let layer = &self.layers[l];
         let mut used = vec![false; layer.d_in];
@@ -268,6 +273,73 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn dead_inputs_on_fresh_synthetic() {
+        // a fully connected column is never dead; a fully pruned column is
+        let mut ck = synthetic(&[4, 3, 2], &[4, 5, 6], 123);
+        // prune every edge reading input 2 of layer 0
+        let l = &mut ck.layers[0];
+        for q in 0..l.d_out {
+            l.mask[q * l.d_in + 2] = false;
+            l.table[q * l.d_in + 2] = None;
+        }
+        // and make input 0 fully connected
+        let n_codes = 1usize << ck.bits[0];
+        for q in 0..l.d_out {
+            l.mask[q * l.d_in] = true;
+            l.table[q * l.d_in] = Some(vec![q as i64 + 1; n_codes]);
+        }
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, 2);
+        let dead = net.dead_inputs(0);
+        assert!(dead.contains(&2), "{dead:?}");
+        assert!(!dead.contains(&0), "{dead:?}");
+        // every reported index really has no reader
+        for &p in &dead {
+            for n in &net.layers[0].neurons {
+                assert!(n.luts.iter().all(|l| l.input != p));
+            }
+        }
+        // ... and every unreported index has at least one
+        for p in 0..net.layers[0].d_in {
+            if !dead.contains(&p) {
+                assert!(net.layers[0]
+                    .neurons
+                    .iter()
+                    .any(|n| n.luts.iter().any(|l| l.input == p)));
+            }
+        }
+    }
+
+    #[test]
+    fn dead_inputs_interior_layer_and_bounds() {
+        let mut ck = synthetic(&[3, 4, 2], &[3, 4, 6], 321);
+        // prune layer 1's reads of its input 1 (= layer-0 neuron 1)
+        let l = &mut ck.layers[1];
+        for q in 0..l.d_out {
+            l.mask[q * l.d_in + 1] = false;
+            l.table[q * l.d_in + 1] = None;
+        }
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, 2);
+        assert!(net.dead_inputs(1).contains(&1));
+        // a layer with every edge alive reports nothing
+        let mut full = synthetic(&[2, 2], &[3, 6], 5);
+        let n_codes = 1usize << full.bits[0];
+        let l = &mut full.layers[0];
+        for i in 0..l.mask.len() {
+            l.mask[i] = true;
+            l.table[i] = Some(vec![i as i64; n_codes]);
+        }
+        let tables = lut::from_checkpoint(&full);
+        let net = Netlist::build(&full, &tables, 2);
+        assert!(net.dead_inputs(0).is_empty());
+        // results are sorted and in-range (callers build remap tables)
+        let dead = net.dead_inputs(0);
+        assert!(dead.windows(2).all(|w| w[0] < w[1]));
+        assert!(dead.iter().all(|&p| p < net.layers[0].d_in));
     }
 
     #[test]

@@ -68,8 +68,14 @@ fn compiled_engine_bit_exact_on_all_artifacts() {
         let tables = lut::from_checkpoint(&ck);
         for n_add in [2usize, 4] {
             let net = Netlist::build(&ck, &tables, n_add);
+            // the default lowering runs the optimizer; the 1:1 baseline
+            // keeps one op per L-LUT — both must match sim bit for bit
             let prog = engine::compile(&net);
-            assert_eq!(prog.n_ops(), net.n_luts(), "{}", exp.name);
+            let prog_none = engine::compile_with(&net, engine::OptLevel::None);
+            assert_eq!(prog_none.n_ops(), net.n_luts(), "{}", exp.name);
+            assert!(prog.n_ops() <= net.n_luts(), "{}", exp.name);
+            let opt = prog.opt_report().expect("default lowering reports");
+            assert_eq!(opt.ops_before, net.n_luts(), "{}", exp.name);
             let oracle = &ck.test_vectors.input_codes;
             let stream;
             let inputs: &[Vec<u32>] = if oracle.is_empty() {
@@ -80,6 +86,12 @@ fn compiled_engine_bit_exact_on_all_artifacts() {
             };
             let want = sim::eval_batch(&net, inputs);
             assert_eq!(engine::run_batch(&prog, inputs), want, "{} (n_add {n_add})", exp.name);
+            assert_eq!(
+                engine::run_batch(&prog_none, inputs),
+                want,
+                "{} OptLevel::None (n_add {n_add})",
+                exp.name
+            );
             // the zero-alloc flat path (the coordinator's hot path) agrees
             // sample for sample on the narrowed-arena program
             let mut ex = engine::Executor::with_capacity(&prog, inputs.len());
@@ -368,6 +380,56 @@ fn synthetic_flow_with_extreme_shapes() {
         engine::run_batch(&engine::compile(&net2), &inputs),
         sim::eval_batch(&net2, &inputs)
     );
+}
+
+#[test]
+fn optimizer_pipeline_end_to_end_on_pruned_checkpoint() {
+    // a checkpoint shaped like pruning-aware training left it (constant
+    // columns, duplicate tables, a dead input) through the whole flow:
+    // compile at both levels, serve the optimized default, stay bit-exact
+    let mut ck = testutil::synthetic(&[5, 4, 3], &[4, 4, 6], 2026);
+    let n_codes = 1usize << ck.bits[0];
+    {
+        let l = &mut ck.layers[0];
+        let dup: Vec<i64> = (0..n_codes as i64).map(|i| i * 53 - 311).collect();
+        for q in 0..l.d_out {
+            l.mask[q * l.d_in] = true;
+            l.table[q * l.d_in] = Some(vec![64 * (q as i64 + 1); n_codes]); // constants
+            l.mask[q * l.d_in + 1] = true;
+            l.table[q * l.d_in + 1] = Some(dup.clone()); // shared content
+            l.mask[q * l.d_in + 2] = false; // input 2 feeds nothing
+            l.table[q * l.d_in + 2] = None;
+        }
+    }
+    let tables = lut::from_checkpoint(&ck);
+    let net = Arc::new(Netlist::build(&ck, &tables, 2));
+    let prog = engine::compile(&net);
+    let prog_none = engine::compile_with(&net, engine::OptLevel::None);
+    let opt = prog.opt_report().unwrap();
+    assert!(opt.folded_edges >= 4, "{opt:?}");
+    assert!(opt.dead_inputs >= 1, "{opt:?}");
+    assert!(opt.cse_fanouts >= 3, "{opt:?}");
+    assert!(prog.n_ops() < prog_none.n_ops());
+    assert!(prog.table_bytes() < prog_none.table_bytes());
+    let stream = data::random_code_stream(&ck, 512, 21);
+    let want = sim::eval_batch(&net, &stream);
+    assert_eq!(engine::run_batch(&prog, &stream), want);
+    assert_eq!(engine::run_batch(&prog_none, &stream), want);
+    // and through the serving plane (optimized default backend)
+    let svc = Service::start(
+        Arc::clone(&net),
+        ServiceCfg { workers: 2, max_batch: 16, ..Default::default() },
+    );
+    let mut pending = Vec::new();
+    for codes in stream.iter().take(200) {
+        pending.push((codes.clone(), svc.submit(codes.clone()).unwrap()));
+    }
+    for (codes, rx) in pending {
+        assert_eq!(rx.recv().unwrap().sums, sim::eval(&net, &codes));
+    }
+    let st = svc.stats();
+    assert_eq!(st.opt.as_ref().map(|o| o.ops_after), Some(prog.n_ops()));
+    svc.shutdown();
 }
 
 #[test]
