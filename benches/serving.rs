@@ -1,8 +1,10 @@
 //! Coordinator serving bench: the interpreted-vs-compiled backend
 //! comparison, throughput/latency across worker counts and batching
-//! policies, the shards x workers scaling grid, and the headline A/B —
+//! policies, the shards x workers scaling grid, the headline A/B —
 //! the sharded admission + work-stealing executor pool against the PR-3
-//! single-dispatcher topology frozen in-bench as `mod baseline`.
+//! single-dispatcher topology frozen in-bench as `mod baseline` — and the
+//! wire: loopback TCP loadgen sweeps plus a CheetahLite control loop whose
+//! policy is evaluated over the network under a per-step deadline.
 //!
 //!     cargo bench --bench serving
 //!     KANELE_BENCH_QUICK=1 cargo bench --bench serving   # CI smoke mode
@@ -25,10 +27,13 @@ mod common;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use kanele::checkpoint::testutil;
 use kanele::coordinator::{Backend, Service, ServiceCfg, SubmitError};
 use kanele::json::{obj, Value};
+use kanele::net::{self, Client, LoadGenCfg, NetCfg, NetServer};
 use kanele::netlist::Netlist;
-use kanele::{data, engine, lut, sim};
+use kanele::util::Summary;
+use kanele::{data, engine, lut, rl, sim};
 
 /// The PR-3 serving plane, frozen as the A/B baseline: ONE bounded
 /// admission channel drained by ONE dispatcher thread, a bounded work
@@ -492,6 +497,170 @@ fn main() {
         ("equivalence_ratio", ratio_eq.into()),
         ("gate_1_3x", (ratio >= 1.3).into()),
     ]));
+
+    // -- 5. the wire: loopback TCP front end + over-the-wire control loop ---
+    // same serving plane, now behind `net::NetServer` on 127.0.0.1. The
+    // bit-exact gate runs first (wire responses vs sim::eval), then loadgen
+    // sweeps closed-loop wire throughput/latency, then a CheetahLite control
+    // loop runs its policy remotely with a per-step deadline.
+    println!("-- wire loopback: framed TCP front end over the sharded plane --");
+    {
+        let svc = Arc::new(Service::start(
+            Arc::clone(&net),
+            ServiceCfg {
+                workers: 2,
+                shards: 2,
+                steal: true,
+                max_batch: 64,
+                max_wait: Duration::from_micros(100),
+                queue_depth: 1 << 14,
+                ..Default::default()
+            },
+        ));
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let levels = ck.quantizer(0).levels();
+        let mut server = NetServer::start(
+            Arc::clone(&svc),
+            listener,
+            NetCfg { levels, ..NetCfg::default() },
+        )
+        .expect("start wire server");
+        let addr = server.local_addr().to_string();
+
+        // bit-exact gate before any timing: wire == sim on a probe slice
+        {
+            let probe = &stream[..stream.len().min(128)];
+            let oracle = sim::eval_batch(&net, probe);
+            let mut client = Client::connect(&addr).expect("connect probe client");
+            for (codes, want) in probe.iter().zip(&oracle) {
+                let (sums, _) = client.infer(codes.clone()).expect("probe infer");
+                assert_eq!(&sums, want, "wire response diverges from sim");
+            }
+            let rows = client
+                .infer_batch(probe.to_vec())
+                .expect("probe infer_batch");
+            assert_eq!(rows, oracle, "wire batch diverges from sim");
+            println!("   bit-exactness gate: wire == sim on {} probes (+1 batch frame)", probe.len());
+        }
+
+        let wire_requests: u64 = if quick { 1_000 } else { 10_000 };
+        let wire_cfgs: &[(usize, u64, usize)] =
+            if quick { &[(2, 0, 0)] } else { &[(1, 0, 0), (4, 0, 0), (4, 8, 32)] };
+        for &(conns, tail_every, tail_batch) in wire_cfgs {
+            let r = net::loadgen(
+                &addr,
+                LoadGenCfg {
+                    connections: conns,
+                    requests: wire_requests,
+                    rate_rps: 0.0,
+                    tail_every,
+                    tail_batch,
+                    seed: 13,
+                },
+            )
+            .expect("loadgen");
+            assert!(r.completed > 0, "wire loadgen completed nothing");
+            assert_eq!(r.errors, 0, "wire loadgen hit terminal errors");
+            println!(
+                "   {conns} conns (tail every {tail_every} -> {tail_batch}): {:>8.0} samples/s | wire p50/p90/p99 {:>7.1} / {:>7.1} / {:>8.1} us | {} bp retries",
+                r.rps, r.p50_us, r.p90_us, r.p99_us, r.backpressure_retries
+            );
+            rows.push(obj(vec![
+                ("section", "wire_loopback".into()),
+                ("connections", (conns as i64).into()),
+                ("requests", (wire_requests as i64).into()),
+                ("tail_every", (tail_every as i64).into()),
+                ("tail_batch", (tail_batch as i64).into()),
+                ("completed", (r.completed as i64).into()),
+                ("rps", r.rps.into()),
+                ("p50_us", r.p50_us.into()),
+                ("p90_us", r.p90_us.into()),
+                ("p99_us", r.p99_us.into()),
+                ("backpressure_retries", (r.backpressure_retries as i64).into()),
+            ]));
+        }
+        server.shutdown();
+        svc.shutdown();
+    }
+
+    // CheetahLite with its policy net served over TCP: encode observations
+    // locally, evaluate remotely, decode actions — the §5.7 control loop
+    // with the network in the loop, under a per-step latency deadline
+    {
+        let pol_ck = testutil::synthetic(&[rl::OBS_DIM, 10, rl::ACT_DIM], &[6, 6, 6], 0xCA7);
+        let pol_tables = lut::from_checkpoint(&pol_ck);
+        let pol_net = Arc::new(Netlist::build(&pol_ck, &pol_tables, 2));
+        let svc = Arc::new(Service::start(
+            Arc::clone(&pol_net),
+            ServiceCfg {
+                workers: 2,
+                // a control loop is one client: single shard, tiny batch
+                // window so each step flushes immediately
+                shards: 1,
+                max_batch: 1,
+                max_wait: Duration::from_micros(0),
+                queue_depth: 256,
+                ..Default::default()
+            },
+        ));
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let mut server = NetServer::start(
+            Arc::clone(&svc),
+            listener,
+            NetCfg { levels: pol_ck.quantizer(0).levels(), ..NetCfg::default() },
+        )
+        .expect("start policy server");
+        let mut client = Client::connect(server.local_addr()).expect("connect control loop");
+
+        let local = rl::NetlistPolicy { ck: &pol_ck, net: &pol_net };
+        let steps = if quick { 200 } else { 1_000 };
+        let deadline_us = 2_000.0;
+        let mut env = rl::CheetahLite::new(5);
+        let mut obs = env.reset();
+        let mut lat = Summary::new();
+        let mut hits = 0usize;
+        let mut reward = 0.0;
+        for step in 0..steps {
+            let t0 = Instant::now();
+            let codes = rl::encode_obs(&pol_ck, &obs);
+            let (sums, _) = client.infer(codes).expect("control-loop infer");
+            let act = rl::decode_action(&pol_ck, &sums);
+            let us = t0.elapsed().as_secs_f64() * 1e6;
+            lat.push(us);
+            if us <= deadline_us {
+                hits += 1;
+            }
+            // the wire policy must be the local policy, bit for bit
+            if step < 32 {
+                assert_eq!(act, local.act(&obs), "wire policy diverges from local");
+            }
+            let (o, r, done) = env.step(&act);
+            obs = o;
+            reward += r;
+            if done {
+                obs = env.reset();
+            }
+        }
+        let hit_rate = hits as f64 / steps as f64;
+        println!(
+            "   cheetah over the wire: {steps} steps, deadline {deadline_us:.0} us -> {:.1}% hit | step p50/p99 {:.1} / {:.1} us | reward {reward:.1}",
+            100.0 * hit_rate,
+            lat.quantile(0.5),
+            lat.quantile(0.99)
+        );
+        rows.push(obj(vec![
+            ("section", "wire_control_loop".into()),
+            ("steps", (steps as i64).into()),
+            ("deadline_us", deadline_us.into()),
+            ("hit_rate", hit_rate.into()),
+            ("p50_us", lat.quantile(0.5).into()),
+            ("p99_us", lat.quantile(0.99).into()),
+            ("reward", reward.into()),
+        ]));
+        drop(client);
+        server.shutdown();
+        svc.shutdown();
+    }
 
     // machine-readable trajectory: stdout grids rot in logs, this does not
     let doc = obj(vec![

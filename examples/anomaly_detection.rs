@@ -3,17 +3,25 @@
 //! exported test windows gives the AUC; the synthesis estimator prices the
 //! design on the paper's xc7a100t next to the hls4ml MLPerf-Tiny baseline.
 //!
+//! Since PR 6 the windows stream through the network front end: the example
+//! starts `net::NetServer` on a loopback port and plays the test set as a
+//! continuous pipelined wire client — the same deployment shape as a sensor
+//! feeding a remote scoring box — with backpressure frames retried and
+//! responses matched by id, not arrival order.
+//!
 //!     cd python && python -m compile.trainer toyadmos
 //!     cargo run --release --example anomaly_detection
 
+use std::net::TcpListener;
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use kanele::baselines::published;
 use kanele::checkpoint::{Checkpoint, TestSet};
-use kanele::coordinator::{Service, ServiceCfg, SubmitError};
+use kanele::coordinator::{Service, ServiceCfg};
 use kanele::fixed::from_fixed;
+use kanele::net::{Client, ErrorKind, NetCfg, NetServer, WireRequest, WireResponse};
 use kanele::netlist::Netlist;
 use kanele::synth;
 use kanele::util::stats::auc;
@@ -34,8 +42,10 @@ fn main() -> Result<()> {
     let net = Netlist::build(&ck, &tables, 2);
     let q_in = ck.quantizer(0);
 
-    // serve every window through the coordinator and score reconstruction
-    let svc = Service::start(
+    // serve every window through the wire and score reconstruction: the
+    // coordinator runs behind a loopback TCP front end and this process
+    // plays the streaming client
+    let svc = Arc::new(Service::start(
         Arc::new(net.clone()),
         ServiceCfg {
             workers: 2,
@@ -44,53 +54,84 @@ fn main() -> Result<()> {
             queue_depth: 8192,
             ..Default::default()
         },
-    );
-    // pipelined submission with a bounded in-flight window: deep enough
-    // that the dispatcher forms real batches (a blocking round-trip per
-    // window would serialize the run into batches of one), shallow enough
-    // that the reported latencies measure the service, not this example's
-    // own unbounded queue residency
-    const IN_FLIGHT: usize = 1024;
-    let mut rxs = std::collections::VecDeque::with_capacity(IN_FLIGHT);
-    let mut resps = Vec::with_capacity(ts.input_codes.len());
-    for codes in &ts.input_codes {
-        loop {
-            match svc.submit(codes.clone()) {
-                Ok(rx) => {
-                    rxs.push_back(rx);
-                    break;
-                }
-                Err(SubmitError::Backpressure) => std::thread::sleep(Duration::from_micros(50)),
-                Err(e) => return Err(e.into()),
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let mut server = NetServer::start(
+        Arc::clone(&svc),
+        listener,
+        NetCfg { levels: q_in.levels(), ..NetCfg::default() },
+    )?;
+    let mut client = Client::connect(server.local_addr())?;
+    println!("streaming over loopback TCP ({})", server.local_addr());
+
+    // pipelined wire window: deep enough that the dispatcher forms real
+    // batches (a blocking round-trip per window would serialize the run
+    // into batches of one), shallow enough that reported latencies measure
+    // the service, not this client's own queue residency. The frame id is
+    // the window index, so responses are matched by id even though the
+    // stream interleaves error frames ahead of completions.
+    const IN_FLIGHT: usize = 256;
+    let n = ts.input_codes.len();
+    let mut sums: Vec<Option<Vec<i64>>> = vec![None; n];
+    let mut send_idx = 0usize;
+    let mut in_flight = 0usize;
+    let mut done = 0usize;
+    while done < n {
+        while send_idx < n && in_flight < IN_FLIGHT {
+            let req =
+                WireRequest::Infer { id: send_idx as u64, codes: ts.input_codes[send_idx].clone() };
+            client.send(&req).map_err(|e| anyhow::anyhow!("wire send: {e}"))?;
+            send_idx += 1;
+            in_flight += 1;
+        }
+        match client.recv_response().map_err(|e| anyhow::anyhow!("wire recv: {e}"))? {
+            WireResponse::Sums { id, sums: s, .. } => {
+                sums[id as usize] = Some(s);
+                in_flight -= 1;
+                done += 1;
             }
-        }
-        while rxs.len() >= IN_FLIGHT {
-            resps.push(rxs.pop_front().unwrap().recv()?);
+            WireResponse::Error { id, kind: ErrorKind::Backpressure, .. } => {
+                // retryable: give the plane a moment, resend that window
+                std::thread::sleep(Duration::from_micros(50));
+                let req =
+                    WireRequest::Infer { id, codes: ts.input_codes[id as usize].clone() };
+                client.send(&req).map_err(|e| anyhow::anyhow!("wire resend: {e}"))?;
+            }
+            WireResponse::Error { id, kind, msg } => {
+                bail!("window {id} failed over the wire [{kind}]: {msg}")
+            }
+            other => bail!("unexpected response frame: {other:?}"),
         }
     }
-    while let Some(rx) = rxs.pop_front() {
-        resps.push(rx.recv()?);
-    }
-    let mut scores = Vec::with_capacity(ts.input_codes.len());
+    let mut scores = Vec::with_capacity(n);
     let mut labels = Vec::with_capacity(ts.labels.len());
-    for (resp, (codes, &label)) in resps.iter().zip(ts.input_codes.iter().zip(&ts.labels)) {
+    for (resp, (codes, &label)) in sums.iter().zip(ts.input_codes.iter().zip(&ts.labels)) {
+        let resp = resp.as_ref().expect("every window completed");
         let mut err = 0.0;
-        for (s, &c) in resp.sums.iter().zip(codes) {
+        for (s, &c) in resp.iter().zip(codes) {
             let rec = from_fixed(*s, ck.frac_bits);
             let d = rec - q_in.decode(c);
             err += d * d;
         }
-        scores.push(err / resp.sums.len() as f64);
+        scores.push(err / resp.len() as f64);
         labels.push(label != 0);
     }
     let stats = svc.stats();
+    let wire = server.stats();
+    drop(client);
+    server.shutdown();
     svc.shutdown();
 
     let a = auc(&scores, &labels);
     println!("AUC (bit-exact netlist reconstruction error): {a:.3} (paper: 0.83)");
     println!(
-        "serving: {:.0} req/s through the coordinator (p99 {:.0} us, mean batch {:.1})",
-        stats.throughput_rps, stats.latency_p99_us, stats.mean_batch
+        "serving: {:.0} req/s over the wire (p50/p90/p99 {:.0}/{:.0}/{:.0} us, mean batch {:.1}, {} frames out)",
+        stats.throughput_rps,
+        stats.latency_p50_us,
+        stats.latency_p90_us,
+        stats.latency_p99_us,
+        stats.mean_batch,
+        wire.frames_out
     );
 
     // threshold sweep (deployment calibration)

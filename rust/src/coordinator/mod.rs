@@ -246,6 +246,7 @@ pub struct ServiceStats {
     pub batches: u64,
     pub mean_batch: f64,
     pub latency_p50_us: f64,
+    pub latency_p90_us: f64,
     pub latency_p99_us: f64,
     /// Samples per second over the service lifetime.
     pub throughput_rps: f64,
@@ -644,8 +645,7 @@ impl Service {
     }
 
     pub fn stats(&self) -> ServiceStats {
-        let qs = self.shared.latencies.lock().unwrap().quantiles(&[0.5, 0.99]);
-        let (p50, p99) = (qs[0], qs[1]);
+        let [p50, p90, p99] = self.shared.latencies.lock().unwrap().p50_p90_p99();
         let completed = self.shared.completed.load(Ordering::Relaxed);
         let fused_ops = self.shared.fused_ops.load(Ordering::Relaxed);
         let mut per_shard = Vec::with_capacity(self.shared.shards.len());
@@ -679,6 +679,7 @@ impl Service {
             batches,
             mean_batch: if batches == 0 { 0.0 } else { batched as f64 / batches as f64 },
             latency_p50_us: p50 * 1e6,
+            latency_p90_us: p90 * 1e6,
             latency_p99_us: p99 * 1e6,
             throughput_rps: completed as f64 / elapsed,
             fused_ops,
@@ -700,6 +701,22 @@ impl Service {
     /// Effective configuration (shards clamped, see [`ServiceCfg::shards`]).
     pub fn cfg(&self) -> ServiceCfg {
         self.cfg
+    }
+
+    /// Whether [`Service::shutdown`] has begun (admission disconnected).
+    /// Front ends (e.g. [`crate::net`]) poll this to stop accepting new
+    /// wire work while the plane drains — any `submit*` after this returns
+    /// `true` fails fast with [`SubmitError::Stopped`].
+    pub fn is_stopped(&self) -> bool {
+        self.txs.read().unwrap().is_none()
+    }
+
+    /// Input width of the current model snapshot. Wire front ends advertise
+    /// this in `stats` frames so remote clients can size requests without
+    /// holding the checkpoint; it moves when [`Service::replace_model`]
+    /// installs a different-width model.
+    pub fn input_width(&self) -> usize {
+        self.cell.input_width()
     }
 
     /// Stop the plane and join its threads. Graceful: everything already
@@ -1160,8 +1177,10 @@ mod tests {
         // regression: the old catch-all retry loop treated "service
         // stopped" as backpressure and spun forever
         let (_, svc) = service(ServiceCfg::default());
+        assert!(!svc.is_stopped());
         svc.submit_blocking(vec![1, 2, 3, 0]).unwrap();
         svc.shutdown();
+        assert!(svc.is_stopped());
         assert_eq!(svc.submit(vec![1, 2, 3, 0]).unwrap_err(), SubmitError::Stopped);
         let t = Instant::now();
         assert!(svc.submit_blocking(vec![1, 2, 3, 0]).is_err());
@@ -1480,7 +1499,8 @@ mod tests {
         let st = svc.stats();
         assert_eq!(st.completed, 2 * LATENCY_RESERVOIR as u64);
         assert!(st.latency_p50_us.is_finite() && st.latency_p50_us > 0.0);
-        assert!(st.latency_p99_us >= st.latency_p50_us);
+        assert!(st.latency_p90_us >= st.latency_p50_us);
+        assert!(st.latency_p99_us >= st.latency_p90_us);
         svc.shutdown();
     }
 }

@@ -9,7 +9,7 @@ mod parse;
 mod value;
 mod write;
 
-pub use parse::{parse, ParseError};
+pub use parse::{parse, ParseError, MAX_DEPTH};
 pub use value::{obj, Value};
 pub use write::to_string;
 
@@ -75,6 +75,46 @@ mod tests {
     fn rejects_trailing() {
         assert!(parse("1 2").is_err());
         assert!(parse("{} x").is_err());
+    }
+
+    #[test]
+    fn nesting_bomb_rejected_not_stack_overflow() {
+        // untrusted wire input: a deep container chain must come back as a
+        // typed ParseError, not recurse the parser off the stack (an abort)
+        for doc in [
+            "[".repeat(100_000),
+            "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1),
+            "{\"a\":".repeat(100_000) + "1" + &"}".repeat(100_000),
+        ] {
+            let err = parse(&doc).unwrap_err();
+            assert!(err.to_string().contains("nesting"), "{err}");
+        }
+        // documents at or under the limit still parse
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn fuzz_random_bytes_never_panic() {
+        // the wire path feeds raw frame payloads straight into parse():
+        // any byte soup must produce Ok or a typed error, never a panic
+        prop::check("json-fuzz-bytes", 500, |g| {
+            let n = g.usize_in(0, 512);
+            let bytes: Vec<u8> = (0..n).map(|_| g.usize_in(0, 255) as u8).collect();
+            let text = String::from_utf8_lossy(&bytes);
+            let _ = parse(&text);
+            Ok(())
+        });
+        // structured-ish soup: JSON punctuation biased so the parser's
+        // container/str/number paths are actually reached
+        prop::check("json-fuzz-punct", 500, |g| {
+            const ALPHABET: &[u8] = b"{}[]\",:0123456789.eE+-truefalsn \\u";
+            let n = g.usize_in(0, 256);
+            let text: String =
+                (0..n).map(|_| ALPHABET[g.usize_in(0, ALPHABET.len() - 1)] as char).collect();
+            let _ = parse(&text);
+            Ok(())
+        });
     }
 
     #[test]

@@ -25,6 +25,10 @@
 //! 6. [`runtime`] cross-checks everything against the AOT-compiled XLA
 //!    artifact via PJRT (behind the `xla` feature), and [`coordinator`]
 //!    serves batched inference on the compiled engine by default.
+//! 7. [`net`] puts the serving plane on a socket: a framed TCP front end
+//!    (`kanele serve --listen`), a blocking client, and a closed-loop load
+//!    generator (`kanele loadgen`) — wire sessions map onto admission
+//!    shards with typed backpressure, never hangs.
 //!
 //! Choosing an executor: [`sim::eval`] for debugging and oracle
 //! equivalence, [`sim::CycleSim`] when cycle/latency behaviour matters,
@@ -43,6 +47,7 @@ pub mod engine;
 pub mod fixed;
 pub mod json;
 pub mod lut;
+pub mod net;
 pub mod netlist;
 pub mod report;
 pub mod rl;

@@ -11,10 +11,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use kanele::checkpoint::{Checkpoint, TestSet};
+use kanele::checkpoint::{testutil, Checkpoint, TestSet};
 use kanele::config;
 use kanele::coordinator::{Backend, Service, ServiceCfg, SubmitError};
 use kanele::engine::{self, OptLevel};
+use kanele::net::{self, LoadGenCfg, NetCfg, NetServer};
 use kanele::netlist::Netlist;
 use kanele::report;
 use kanele::sim;
@@ -40,15 +41,30 @@ COMMANDS:
   serve <name> [--requests N] [--workers W] [--shards S] [--steal on|off]
         [--batch B] [--wait-us U] [--queue-depth Q]
         [--backend compiled|interpreted] [--opt full|none]
-      batched inference service benchmark through the sharded
-      dispatcher/executor plane: S admission shards (client-affine
-      round-robin, each with its own dispatcher forming batches — fill to
-      --batch or flush --wait-us after the oldest request's submission)
-      feed a work-stealing pool of W executors (idle executors steal the
-      oldest queued batch from other shards unless --steal off). Default
-      backend: the compiled batch-major engine lowered through the full
-      optimizer pipeline (--opt none keeps the 1:1 lowering for A/B);
-      `interpreted` selects the netlist simulator.
+        [--listen ADDR] [--duration-s N]
+      batched inference service through the sharded dispatcher/executor
+      plane: S admission shards (client-affine round-robin, each with its
+      own dispatcher forming batches — fill to --batch or flush --wait-us
+      after the oldest request's submission) feed a work-stealing pool of
+      W executors (idle executors steal the oldest queued batch from other
+      shards unless --steal off). Default backend: the compiled batch-major
+      engine lowered through the full optimizer pipeline (--opt none keeps
+      the 1:1 lowering for A/B); `interpreted` selects the netlist
+      simulator. Without --listen this self-drives a --requests benchmark;
+      with --listen ADDR it runs the framed TCP front end (port 0 picks a
+      free port; prints `listening on <addr>`) until a client sends the
+      `shutdown` op or --duration-s elapses. Falls back to a synthetic
+      checkpoint twin when the artifact is missing and <name> is a known
+      experiment.
+  loadgen <addr> [--connections N] [--requests N] [--rate R]
+          [--tail-every K] [--tail-batch B] [--seed S] [--shutdown]
+      closed-loop load generator against a running `serve --listen` server:
+      N connections split --requests total single-sample inferences (--rate
+      is a per-connection target in req/s, 0 = max; every K-th request is
+      an infer_batch of B rows for heavy-tail runs). Learns the request
+      shape from the server's stats op, retries backpressure frames, and
+      reports completed/rps plus wire-latency p50/p90/p99. --shutdown sends
+      the server a shutdown op at the end.
   table2|table3|table4|table5|fig6|table7|report-all [--n-add N]
       regenerate the paper's tables/figures (report-all renders everything
       and saves to artifacts/reports/).
@@ -86,6 +102,25 @@ impl<'a> Flags<'a> {
             None => Ok(default),
         }
     }
+
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("bad {key}: {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("bad {key}: {v}")),
+            None => Ok(default),
+        }
+    }
+
+    /// Presence flag with no value (`--shutdown`).
+    fn has(&self, key: &str) -> bool {
+        self.args.iter().any(|a| a == key)
+    }
 }
 
 fn load_checkpoint(name_or_path: &str) -> Result<Checkpoint> {
@@ -98,6 +133,24 @@ fn load_checkpoint(name_or_path: &str) -> Result<Checkpoint> {
         );
     }
     Checkpoint::load(&path)
+}
+
+/// [`load_checkpoint`], but a known experiment whose artifact has not been
+/// trained falls back to a synthetic twin with the experiment's dims/bits —
+/// the same quickstart path the benches use, so `kanele serve --listen`
+/// works in artifact-less environments (CI, fresh clones).
+fn load_checkpoint_or_synthetic(name_or_path: &str) -> Result<Checkpoint> {
+    let p = PathBuf::from(name_or_path);
+    if !p.exists() && !config::ckpt_path(name_or_path).exists() {
+        if let Some(exp) = config::experiment(name_or_path) {
+            eprintln!(
+                "note: no checkpoint artifact for {name_or_path}; serving a synthetic twin (dims {:?}, bits {:?})",
+                exp.dims, exp.bits
+            );
+            return Ok(testutil::synthetic(exp.dims, exp.bits, 0xB5EED));
+        }
+    }
+    load_checkpoint(name_or_path)
 }
 
 fn run(args: &[String]) -> Result<()> {
@@ -277,16 +330,15 @@ fn run(args: &[String]) -> Result<()> {
                     .with_context(|| format!("bad --opt {s:?} (full|none)"))?,
                 None => OptLevel::default(),
             };
-            let ck = load_checkpoint(name)?;
+            let listen = flags.get("--listen").map(String::from);
+            let ck = if listen.is_some() {
+                load_checkpoint_or_synthetic(name)?
+            } else {
+                load_checkpoint(name)?
+            };
             let tables = lut::from_checkpoint(&ck);
             let net = Arc::new(Netlist::build(&ck, &tables, 2));
-            let ts_path = config::testset_path(&ck.name);
-            let stream = if ts_path.exists() {
-                data::replay_stream(&TestSet::load(&ts_path)?, n_requests)
-            } else {
-                data::random_code_stream(&ck, n_requests, 7)
-            };
-            let svc = Service::start(
+            let svc = Arc::new(Service::start(
                 Arc::clone(&net),
                 ServiceCfg {
                     workers,
@@ -299,13 +351,64 @@ fn run(args: &[String]) -> Result<()> {
                     opt,
                     ..Default::default()
                 },
-            );
+            ));
             let shards = svc.cfg().shards; // effective (clamped to workers)
             println!("backend         : {backend:?}");
             println!(
                 "plane           : {shards} admission shard(s) + {workers} executors (steal {}, queue depth {queue_depth} total)",
                 if steal { "on" } else { "off" }
             );
+            if let Some(addr) = listen {
+                // network front end: serve the wire until a client asks for
+                // shutdown or the duration budget elapses
+                let duration_s = flags.get_u64("--duration-s", 0)?;
+                let levels = ck.quantizer(0).levels();
+                let listener = std::net::TcpListener::bind(&addr)
+                    .with_context(|| format!("binding {addr}"))?;
+                let mut server = NetServer::start(
+                    Arc::clone(&svc),
+                    listener,
+                    NetCfg { levels, ..NetCfg::default() },
+                )?;
+                println!("listening on {}", server.local_addr());
+                let t0 = Instant::now();
+                loop {
+                    std::thread::sleep(Duration::from_millis(100));
+                    if server.shutdown_requested() {
+                        println!("serve: shutdown requested by client");
+                        break;
+                    }
+                    if duration_s > 0 && t0.elapsed().as_secs() >= duration_s {
+                        println!("serve: duration budget elapsed");
+                        break;
+                    }
+                }
+                server.shutdown();
+                let ns = server.stats();
+                let stats = svc.stats();
+                println!(
+                    "wire            : {} conns, {} frames in / {} out, {} parse errors, {} completions",
+                    ns.accepted, ns.frames_in, ns.frames_out, ns.parse_errors, ns.wire_completed
+                );
+                println!(
+                    "served          : {} samples ({:.0} samples/s; rejected {}, dropped {})",
+                    stats.completed, stats.throughput_rps, stats.rejected, stats.dropped
+                );
+                println!(
+                    "latency p50/p90/p99 : {:.1} / {:.1} / {:.1} us",
+                    stats.latency_p50_us, stats.latency_p90_us, stats.latency_p99_us
+                );
+                println!("mean batch      : {:.1} (batches: {})", stats.mean_batch, stats.batches);
+                svc.shutdown();
+                println!("serve: clean shutdown");
+                return Ok(());
+            }
+            let ts_path = config::testset_path(&ck.name);
+            let stream = if ts_path.exists() {
+                data::replay_stream(&TestSet::load(&ts_path)?, n_requests)
+            } else {
+                data::random_code_stream(&ck, n_requests, 7)
+            };
             let t0 = Instant::now();
             let mut receivers = Vec::with_capacity(1024);
             let mut done = 0usize;
@@ -371,6 +474,47 @@ fn run(args: &[String]) -> Result<()> {
             }
             println!("rejected (bp)   : {} (dropped mid-swap: {})", stats.rejected, stats.dropped);
             svc.shutdown();
+            Ok(())
+        }
+        "loadgen" => {
+            let addr = rest.first().context("loadgen <addr>")?;
+            let cfg = LoadGenCfg {
+                connections: flags.get_usize("--connections", 4)?,
+                requests: flags.get_u64("--requests", 10_000)?,
+                rate_rps: flags.get_f64("--rate", 0.0)?,
+                tail_every: flags.get_u64("--tail-every", 0)?,
+                tail_batch: flags.get_usize("--tail-batch", 32)?,
+                seed: flags.get_u64("--seed", 7)?,
+            };
+            println!(
+                "loadgen         : {} conns x {} reqs @ {} (tail: every {} -> batch {})",
+                cfg.connections,
+                cfg.requests,
+                if cfg.rate_rps > 0.0 { format!("{} req/s", cfg.rate_rps) } else { "max rate".into() },
+                cfg.tail_every,
+                cfg.tail_batch
+            );
+            let r = net::loadgen(addr, cfg)?;
+            println!(
+                "completed       : {} samples in {:.3} s ({:.0} samples/s)",
+                r.completed, r.wall_s, r.rps
+            );
+            println!(
+                "retries/errors  : {} backpressure, {} dropped, {} terminal",
+                r.backpressure_retries, r.dropped, r.errors
+            );
+            println!(
+                "wire latency    : mean {:.1} us, p50/p90/p99 {:.1} / {:.1} / {:.1} us",
+                r.mean_us, r.p50_us, r.p90_us, r.p99_us
+            );
+            if flags.has("--shutdown") {
+                let mut c = net::Client::connect(addr).context("connecting for shutdown")?;
+                c.shutdown_server().map_err(|e| anyhow::anyhow!("shutdown op failed: {e}"))?;
+                println!("loadgen         : server shutdown requested");
+            }
+            if r.completed == 0 {
+                bail!("no requests completed");
+            }
             Ok(())
         }
         "table2" => {

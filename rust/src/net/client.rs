@@ -1,0 +1,324 @@
+//! Blocking wire client + closed-loop load generator.
+//!
+//! [`Client`] is the minimal correct counterpart to the server: one
+//! blocking socket, `send`/`recv_response` split for pipelining, and
+//! typed conveniences (`infer`, `infer_batch`, `stats`, ...) that map
+//! error frames onto [`NetError::Remote`]. [`loadgen`] drives N such
+//! clients from N threads — closed loop with optional rate pacing and a
+//! heavy-tail knob (every k-th request is a batch) — and reports
+//! p50/p90/p99 wire latency from a [`Reservoir`], the same estimator the
+//! serving plane uses internally.
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::json::Value;
+use crate::util::stats::Reservoir;
+use crate::util::Rng;
+
+use super::frame::{read_frame, write_frame, FrameError, MAX_FRAME};
+use super::proto::{ErrorKind, ProtoError, WireRequest, WireResponse};
+
+/// Client-side failure. `Remote` is the server saying no (typed error
+/// frame); the rest are transport or codec faults.
+#[derive(Debug)]
+pub enum NetError {
+    /// The server answered with an error frame.
+    Remote { kind: ErrorKind, msg: String },
+    Frame(FrameError),
+    Proto(ProtoError),
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Remote { kind, msg } => write!(f, "server error [{kind}]: {msg}"),
+            NetError::Frame(e) => write!(f, "{e}"),
+            NetError::Proto(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl From<FrameError> for NetError {
+    fn from(e: FrameError) -> Self {
+        NetError::Frame(e)
+    }
+}
+
+impl From<ProtoError> for NetError {
+    fn from(e: ProtoError) -> Self {
+        NetError::Proto(e)
+    }
+}
+
+/// Blocking connection to a `kanele serve` front end.
+pub struct Client {
+    pub(crate) stream: TcpStream,
+    max_frame: usize,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client { stream, max_frame: MAX_FRAME, next_id: 1 })
+    }
+
+    /// Bound how long `recv_response` may block — tests use this so a
+    /// protocol bug shows as a failed assertion, not a hung run.
+    pub fn set_read_timeout(&mut self, t: Option<Duration>) -> std::io::Result<()> {
+        self.stream.set_read_timeout(t)
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Write one request frame. Pairs with [`Client::recv_response`] for
+    /// pipelined use; the conveniences below are strict request/response.
+    pub fn send(&mut self, req: &WireRequest) -> Result<(), NetError> {
+        write_frame(&mut self.stream, req.encode().as_bytes(), self.max_frame)?;
+        Ok(())
+    }
+
+    /// Read one response frame. Error frames come back as
+    /// `Ok(WireResponse::Error { .. })` — pipelining callers match on id
+    /// and decide; the conveniences turn them into [`NetError::Remote`].
+    pub fn recv_response(&mut self) -> Result<WireResponse, NetError> {
+        let payload = read_frame(&mut self.stream, self.max_frame)?;
+        Ok(WireResponse::decode(&String::from_utf8_lossy(&payload))?)
+    }
+
+    fn call(&mut self, req: WireRequest) -> Result<WireResponse, NetError> {
+        let want = req.id();
+        self.send(&req)?;
+        let resp = self.recv_response()?;
+        if resp.id() != want {
+            return Err(NetError::Proto(ProtoError(format!(
+                "response id {} does not match request id {want}",
+                resp.id()
+            ))));
+        }
+        if let WireResponse::Error { kind, msg, .. } = resp {
+            return Err(NetError::Remote { kind, msg });
+        }
+        Ok(resp)
+    }
+
+    /// One sample; returns the output sums and the server-side latency in
+    /// microseconds (queue + batch + execute, as the serving plane saw it).
+    pub fn infer(&mut self, codes: Vec<u32>) -> Result<(Vec<i64>, f64), NetError> {
+        let id = self.fresh_id();
+        match self.call(WireRequest::Infer { id, codes })? {
+            WireResponse::Sums { sums, latency_us, .. } => Ok((sums, latency_us)),
+            other => Err(NetError::Proto(ProtoError(format!("expected sums, got {other:?}")))),
+        }
+    }
+
+    /// Several samples in one frame; rows come back in request order.
+    pub fn infer_batch(&mut self, batch: Vec<Vec<u32>>) -> Result<Vec<Vec<i64>>, NetError> {
+        let id = self.fresh_id();
+        match self.call(WireRequest::InferBatch { id, batch })? {
+            WireResponse::Batch { batch, .. } => Ok(batch),
+            other => Err(NetError::Proto(ProtoError(format!("expected batch, got {other:?}")))),
+        }
+    }
+
+    /// Serving-plane + wire stats snapshot as a JSON object.
+    pub fn stats(&mut self) -> Result<Value, NetError> {
+        let id = self.fresh_id();
+        match self.call(WireRequest::Stats { id })? {
+            WireResponse::Stats { stats, .. } => Ok(stats),
+            other => Err(NetError::Proto(ProtoError(format!("expected stats, got {other:?}")))),
+        }
+    }
+
+    /// Hot-swap one edge's truth table on the serving model.
+    pub fn swap(&mut self, layer: usize, q: usize, p: usize, table: Vec<i64>) -> Result<(), NetError> {
+        let id = self.fresh_id();
+        self.call(WireRequest::Swap { id, layer, q, p, table })?;
+        Ok(())
+    }
+
+    /// Ask the server process to begin shutting down (acked before the
+    /// server drains).
+    pub fn shutdown_server(&mut self) -> Result<(), NetError> {
+        let id = self.fresh_id();
+        self.call(WireRequest::Shutdown { id })?;
+        Ok(())
+    }
+}
+
+/// Load-generator shape: `connections` closed loops, `requests` total.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadGenCfg {
+    pub connections: usize,
+    /// Total single-sample requests across all connections (split evenly;
+    /// the remainder goes to the first connections).
+    pub requests: u64,
+    /// Per-connection target rate in requests/s; `0.0` = as fast as the
+    /// closed loop allows.
+    pub rate_rps: f64,
+    /// Every `tail_every`-th request becomes an `infer_batch` of
+    /// `tail_batch` rows — the wire version of the benches' heavy-tail
+    /// workload. `0` disables batches.
+    pub tail_every: u64,
+    pub tail_batch: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadGenCfg {
+    fn default() -> Self {
+        LoadGenCfg {
+            connections: 4,
+            requests: 10_000,
+            rate_rps: 0.0,
+            tail_every: 0,
+            tail_batch: 32,
+            seed: 7,
+        }
+    }
+}
+
+/// What [`loadgen`] measured. Latencies are wall-clock round trips seen by
+/// the client (includes the wire), in microseconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadGenReport {
+    /// Samples with successful responses (batch rows count individually).
+    pub completed: u64,
+    /// Backpressure error frames absorbed by retrying.
+    pub backpressure_retries: u64,
+    /// `dropped` error frames (request lost to a swap/shutdown race).
+    pub dropped: u64,
+    /// Connections that ended early on a terminal error.
+    pub errors: u64,
+    pub wall_s: f64,
+    /// Completed samples per second over the whole run.
+    pub rps: f64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+}
+
+/// Run a closed-loop load test against a running server. Each connection
+/// first issues a `stats` op to learn the model's input width and level
+/// count, so the generator needs no local checkpoint. Backpressure frames
+/// are retried (and counted); terminal errors end that connection.
+pub fn loadgen(addr: &str, cfg: LoadGenCfg) -> anyhow::Result<LoadGenReport> {
+    let conns = cfg.connections.max(1);
+    let completed = Arc::new(AtomicU64::new(0));
+    let backpressure = Arc::new(AtomicU64::new(0));
+    let dropped = Arc::new(AtomicU64::new(0));
+    let errors = Arc::new(AtomicU64::new(0));
+    let lat = Arc::new(Mutex::new(Reservoir::new(4096)));
+
+    let start = Instant::now();
+    let mut handles = Vec::with_capacity(conns);
+    for c in 0..conns {
+        let quota = cfg.requests / conns as u64 + u64::from((c as u64) < cfg.requests % conns as u64);
+        let addr = addr.to_string();
+        let completed = Arc::clone(&completed);
+        let backpressure = Arc::clone(&backpressure);
+        let dropped = Arc::clone(&dropped);
+        let errors = Arc::clone(&errors);
+        let lat = Arc::clone(&lat);
+        handles.push(std::thread::spawn(move || {
+            let mut client = match Client::connect(&addr) {
+                Ok(c) => c,
+                Err(_) => {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            };
+            // learn the request shape from the server
+            let (width, levels) = match client.stats() {
+                Ok(s) => {
+                    let w = s.get("input_width").and_then(Value::as_i64).unwrap_or(0).max(0);
+                    let l = s.get("levels").and_then(Value::as_i64).unwrap_or(0).max(0);
+                    (w as usize, if l > 0 { l as u64 } else { 64 })
+                }
+                Err(_) => {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            };
+            let mut rng = Rng::new(cfg.seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(c as u64 + 1)));
+            let mut row = |rng: &mut Rng| -> Vec<u32> {
+                (0..width).map(|_| rng.below(levels) as u32).collect()
+            };
+            let t0 = Instant::now();
+            for k in 0..quota {
+                if cfg.rate_rps > 0.0 {
+                    // open-loop pacing against the schedule, closed-loop
+                    // execution: late requests fire immediately
+                    let due = Duration::from_secs_f64(k as f64 / cfg.rate_rps);
+                    let elapsed = t0.elapsed();
+                    if due > elapsed {
+                        std::thread::sleep(due - elapsed);
+                    }
+                }
+                let is_tail = cfg.tail_every > 0 && (k + 1) % cfg.tail_every == 0;
+                loop {
+                    let req_start = Instant::now();
+                    let outcome = if is_tail {
+                        let batch: Vec<Vec<u32>> =
+                            (0..cfg.tail_batch.max(1)).map(|_| row(&mut rng)).collect();
+                        client.infer_batch(batch).map(|rows| rows.len() as u64)
+                    } else {
+                        client.infer(row(&mut rng)).map(|_| 1u64)
+                    };
+                    match outcome {
+                        Ok(n) => {
+                            lat.lock()
+                                .unwrap()
+                                .push(req_start.elapsed().as_secs_f64() * 1e6);
+                            completed.fetch_add(n, Ordering::Relaxed);
+                            break;
+                        }
+                        Err(NetError::Remote { kind: ErrorKind::Backpressure, .. }) => {
+                            backpressure.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                        Err(NetError::Remote { kind: ErrorKind::Dropped, .. }) => {
+                            dropped.fetch_add(1, Ordering::Relaxed);
+                            break;
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                            return;
+                        }
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+
+    let lat = lat.lock().unwrap();
+    let [p50, p90, p99] = lat.p50_p90_p99();
+    let nz = |x: f64| if x.is_finite() { x } else { 0.0 };
+    let completed = completed.load(Ordering::Relaxed);
+    Ok(LoadGenReport {
+        completed,
+        backpressure_retries: backpressure.load(Ordering::Relaxed),
+        dropped: dropped.load(Ordering::Relaxed),
+        errors: errors.load(Ordering::Relaxed),
+        wall_s,
+        rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
+        mean_us: nz(lat.mean()),
+        p50_us: nz(p50),
+        p90_us: nz(p90),
+        p99_us: nz(p99),
+    })
+}

@@ -1,0 +1,171 @@
+//! Network front end: framed TCP serving for the KANELÉ plane.
+//!
+//! Everything in-repo so far drove the serving plane in-process; this
+//! module puts it on a socket. It is dependency-free (std networking, the
+//! in-repo [`crate::json`] codec) and deliberately small: framing, a typed
+//! message model, a server that maps connections onto the sharded
+//! [`crate::coordinator::Service`], and a client + load generator.
+//!
+//! # Frame protocol
+//!
+//! Byte layout, both directions:
+//!
+//! ```text
+//! +----------------+---------------------------+
+//! | len: u32 (BE)  | payload: `len` bytes JSON |
+//! +----------------+---------------------------+
+//! ```
+//!
+//! One JSON object per frame, capped at [`frame::MAX_FRAME`] bytes.
+//! Requests carry `"op"` and a client-chosen `"id"`; responses echo the
+//! id, so clients may pipeline and match out of band:
+//!
+//! | op            | request fields                  | success response            |
+//! |---------------|---------------------------------|-----------------------------|
+//! | `infer`       | `codes: [u32]`                  | `sums: [i64], latency_us`   |
+//! | `infer_batch` | `batch: [[u32]]`                | `batch: [[i64]]`            |
+//! | `stats`       | —                               | `stats: {..}`               |
+//! | `swap`        | `layer, q, p, table: [i64]`     | bare ack                    |
+//! | `shutdown`    | —                               | bare ack                    |
+//!
+//! Failures are `{"id":N,"ok":false,"error":"<kind>","msg":"..."}` with
+//! kind one of `backpressure` / `stopped` / `invalid` (the serving plane's
+//! [`crate::coordinator::SubmitError`] verbatim) or `parse` / `dropped` /
+//! `unsupported` (wire-layer). Error frames are written from the reader
+//! thread, ahead of pending completions — an overloaded server answers
+//! `backpressure` immediately; it never leaves a client hanging.
+//!
+//! # Wire topology
+//!
+//! ```text
+//!  client conns          NetServer                    Service (PR 4/5)
+//!  ───────────           ─────────                    ────────────────
+//!  conn 0 ──TCP──▶ reader ─submit_to(0)──▶ [shard 0 queue]─▶ dispatcher ─┐
+//!         ◀─TCP── writer ◀── completion ◀─ reply rxs                     │ work
+//!  conn 1 ──TCP──▶ reader ─submit_to(1)──▶ [shard 1 queue]─▶ dispatcher ─┤ pool
+//!         ◀─TCP── writer ◀── completion ◀─ reply rxs                     │ (steal)
+//!  conn k ──TCP──▶ reader ─submit_to(k%S)▶ [shard k%S ...]               ┘
+//! ```
+//!
+//! Each connection pins to one admission shard (connection = client, same
+//! affinity the in-process plane assumes), runs a reader thread (frames →
+//! decode → submit) and a completion thread (reply channels → frames), and
+//! bounds its in-flight window with a `sync_channel` between them.
+//! Teardown order is always: reader EOF → completion drains what was
+//! admitted → flush → FIN. [`NetServer::shutdown`] forces exactly that
+//! path on every connection by closing read halves, so in-flight responses
+//! are flushed, never abandoned.
+//!
+//! Entry points: `kanele serve --listen <addr>` wraps [`NetServer`];
+//! `kanele loadgen <addr>` wraps [`client::loadgen`].
+
+pub mod client;
+pub mod frame;
+pub mod proto;
+pub mod server;
+
+pub use client::{loadgen, Client, LoadGenCfg, LoadGenReport, NetError};
+pub use frame::{FrameError, MAX_FRAME};
+pub use proto::{ErrorKind, ProtoError, WireRequest, WireResponse};
+pub use server::{NetCfg, NetServer, NetStats};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil;
+    use crate::coordinator::{Service, ServiceCfg};
+    use crate::lut;
+    use crate::netlist::Netlist;
+    use std::net::TcpListener;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn loopback(workers: usize) -> (Arc<Service>, NetServer) {
+        let ck = testutil::synthetic(&[6, 4, 3], &[4, 4, 4], 99);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Arc::new(Netlist::build(&ck, &tables, 2));
+        let svc = Arc::new(Service::start(
+            net,
+            ServiceCfg { workers, shards: 2, ..ServiceCfg::default() },
+        ));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let server =
+            NetServer::start(Arc::clone(&svc), listener, NetCfg { levels: 16, ..NetCfg::default() })
+                .unwrap();
+        (svc, server)
+    }
+
+    #[test]
+    fn loopback_infer_roundtrip() {
+        let (svc, mut server) = loopback(2);
+        let mut client = Client::connect(server.local_addr()).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+        let codes = vec![1u32, 2, 3, 4, 5, 6];
+        let (wire_sums, latency_us) = client.infer(codes.clone()).unwrap();
+        let direct = svc.submit_blocking(codes).unwrap();
+        assert_eq!(wire_sums, direct.sums);
+        assert!(latency_us >= 0.0);
+
+        // stats advertises the request shape loadgen relies on
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("input_width").and_then(|v| v.as_i64()), Some(6));
+        assert_eq!(stats.get("levels").and_then(|v| v.as_i64()), Some(16));
+
+        drop(client);
+        server.shutdown();
+        let net_stats = server.stats();
+        assert_eq!(net_stats.accepted, 1);
+        assert!(net_stats.wire_completed >= 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn loopback_wrong_width_is_invalid_frame_and_connection_survives() {
+        let (svc, mut server) = loopback(2);
+        let mut client = Client::connect(server.local_addr()).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+        match client.infer(vec![1, 2, 3]) {
+            Err(NetError::Remote { kind: ErrorKind::Invalid, .. }) => {}
+            other => panic!("expected Invalid error frame, got {other:?}"),
+        }
+        // same connection still serves well-formed requests
+        let (sums, _) = client.infer(vec![0; 6]).unwrap();
+        assert_eq!(sums.len(), 3);
+
+        server.shutdown();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn loopback_malformed_json_is_parse_frame() {
+        let (svc, mut server) = loopback(2);
+        let mut client = Client::connect(server.local_addr()).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+        // hand-rolled garbage frame: valid framing, invalid payload
+        let req = WireRequest::Stats { id: 1 };
+        let garbage = "{not json";
+        {
+            use std::io::Write as _;
+            let mut raw = client_stream(&client);
+            raw.write_all(&(garbage.len() as u32).to_be_bytes()).unwrap();
+            raw.write_all(garbage.as_bytes()).unwrap();
+        }
+        match client.recv_response().unwrap() {
+            WireResponse::Error { kind: ErrorKind::Parse, .. } => {}
+            other => panic!("expected Parse error frame, got {other:?}"),
+        }
+        // unaddressable payload closes the connection
+        assert!(client.send(&req).is_err() || client.recv_response().is_err());
+
+        server.shutdown();
+        svc.shutdown();
+    }
+
+    /// Tests poke raw bytes through the client's socket.
+    fn client_stream(c: &Client) -> &std::net::TcpStream {
+        &c.stream
+    }
+}

@@ -1,0 +1,399 @@
+//! Wire message model: typed request/response enums and their JSON codec.
+//!
+//! Every frame payload is one JSON object. Requests carry an `"op"`
+//! discriminant and a client-chosen `"id"` echoed verbatim in the matching
+//! response, so clients may pipeline requests and match replies out of
+//! band. Responses carry `"ok"` — `true` with op-specific fields, `false`
+//! with a machine-readable `"error"` kind and a human `"msg"`.
+//!
+//! Decode is the second trust boundary after the frame codec: every field
+//! is range-checked (codes must fit `u32`, ids must be non-negative) and
+//! failures are typed [`ProtoError`]s, never panics.
+
+use crate::json::{self, obj, Value};
+
+/// Machine-readable error kinds carried in error frames. The first three
+/// mirror [`crate::coordinator::SubmitError`] one-to-one; the rest are
+/// wire-layer conditions the serving plane never sees.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Admission queues full — retry later (maps `SubmitError::Backpressure`).
+    Backpressure,
+    /// Service shut down — no retry will succeed (maps `SubmitError::Stopped`).
+    Stopped,
+    /// Malformed request at the serving plane, e.g. wrong input width
+    /// (maps `SubmitError::Invalid`).
+    Invalid,
+    /// The frame payload was not a well-formed request.
+    Parse,
+    /// Admitted but the reply channel closed (model swap or shutdown
+    /// landed mid-flight); the request may or may not have executed.
+    Dropped,
+    /// Recognized JSON, unrecognized `"op"`.
+    Unsupported,
+}
+
+impl ErrorKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorKind::Backpressure => "backpressure",
+            ErrorKind::Stopped => "stopped",
+            ErrorKind::Invalid => "invalid",
+            ErrorKind::Parse => "parse",
+            ErrorKind::Dropped => "dropped",
+            ErrorKind::Unsupported => "unsupported",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ErrorKind> {
+        Some(match s {
+            "backpressure" => ErrorKind::Backpressure,
+            "stopped" => ErrorKind::Stopped,
+            "invalid" => ErrorKind::Invalid,
+            "parse" => ErrorKind::Parse,
+            "dropped" => ErrorKind::Dropped,
+            "unsupported" => ErrorKind::Unsupported,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for ErrorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Decode failure: the payload parsed as JSON but is not a valid message
+/// (or did not parse at all). Carries a human-readable reason.
+#[derive(Debug)]
+pub struct ProtoError(pub String);
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "protocol error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+fn perr(msg: impl Into<String>) -> ProtoError {
+    ProtoError(msg.into())
+}
+
+/// Client→server messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireRequest {
+    /// One sample: `{"op":"infer","id":N,"codes":[...]}`.
+    Infer { id: u64, codes: Vec<u32> },
+    /// Several samples in one frame: `{"op":"infer_batch","id":N,"batch":[[...],...]}`.
+    /// One response frame carries all rows.
+    InferBatch { id: u64, batch: Vec<Vec<u32>> },
+    /// Serving-plane + wire counters snapshot: `{"op":"stats","id":N}`.
+    Stats { id: u64 },
+    /// Hot-swap one edge's truth table:
+    /// `{"op":"swap","id":N,"layer":L,"q":Q,"p":P,"table":[...]}`.
+    Swap { id: u64, layer: usize, q: usize, p: usize, table: Vec<i64> },
+    /// Ask the server process to begin shutdown: `{"op":"shutdown","id":N}`.
+    Shutdown { id: u64 },
+}
+
+/// Server→client messages. `id` always echoes the request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireResponse {
+    /// `{"id":N,"ok":true,"sums":[...],"latency_us":F}`.
+    Sums { id: u64, sums: Vec<i64>, latency_us: f64 },
+    /// `{"id":N,"ok":true,"batch":[[...],...]}` — rows in request order.
+    Batch { id: u64, batch: Vec<Vec<i64>> },
+    /// `{"id":N,"ok":true,"stats":{...}}` — see [`crate::net::server`]
+    /// for the field set.
+    Stats { id: u64, stats: Value },
+    /// `{"id":N,"ok":true}` — ack for `swap` / `shutdown`.
+    Ok { id: u64 },
+    /// `{"id":N,"ok":false,"error":"<kind>","msg":"..."}`.
+    Error { id: u64, kind: ErrorKind, msg: String },
+}
+
+impl WireResponse {
+    pub fn id(&self) -> u64 {
+        match self {
+            WireResponse::Sums { id, .. }
+            | WireResponse::Batch { id, .. }
+            | WireResponse::Stats { id, .. }
+            | WireResponse::Ok { id }
+            | WireResponse::Error { id, .. } => *id,
+        }
+    }
+}
+
+/// Best-effort id extraction from a payload that failed full decode, so
+/// error frames for malformed-but-parseable requests (unknown op, bad
+/// codes) still echo the client's id. Unparseable payloads yield `None`
+/// and the server falls back to id 0.
+pub fn peek_id(payload: &str) -> Option<u64> {
+    let v = json::parse(payload).ok()?;
+    get_id(&v).ok()
+}
+
+fn get_id(v: &Value) -> Result<u64, ProtoError> {
+    match v.get("id").and_then(Value::as_i64) {
+        Some(id) if id >= 0 => Ok(id as u64),
+        Some(_) => Err(perr("\"id\" must be non-negative")),
+        None => Err(perr("missing integer \"id\"")),
+    }
+}
+
+/// Decode a JSON array of non-negative integers into LUT input codes.
+/// Codes are *structurally* validated here (integer, fits u32); semantic
+/// range checks against the quantizer's level count belong to the model.
+fn get_codes(v: &Value, what: &str) -> Result<Vec<u32>, ProtoError> {
+    let arr = v.as_array().ok_or_else(|| perr(format!("{what} must be an array")))?;
+    arr.iter()
+        .map(|x| match x.as_i64() {
+            Some(c) if (0..=u32::MAX as i64).contains(&c) => Ok(c as u32),
+            _ => Err(perr(format!("{what} entries must be integers in [0, 2^32)"))),
+        })
+        .collect()
+}
+
+fn codes_value(codes: &[u32]) -> Value {
+    Value::Array(codes.iter().map(|&c| Value::Int(c as i64)).collect())
+}
+
+fn sums_value(sums: &[i64]) -> Value {
+    Value::Array(sums.iter().map(|&s| Value::Int(s)).collect())
+}
+
+impl WireRequest {
+    pub fn id(&self) -> u64 {
+        match self {
+            WireRequest::Infer { id, .. }
+            | WireRequest::InferBatch { id, .. }
+            | WireRequest::Stats { id }
+            | WireRequest::Swap { id, .. }
+            | WireRequest::Shutdown { id } => *id,
+        }
+    }
+
+    pub fn encode(&self) -> String {
+        let v = match self {
+            WireRequest::Infer { id, codes } => obj(vec![
+                ("op", Value::Str("infer".into())),
+                ("id", Value::Int(*id as i64)),
+                ("codes", codes_value(codes)),
+            ]),
+            WireRequest::InferBatch { id, batch } => obj(vec![
+                ("op", Value::Str("infer_batch".into())),
+                ("id", Value::Int(*id as i64)),
+                ("batch", Value::Array(batch.iter().map(|row| codes_value(row)).collect())),
+            ]),
+            WireRequest::Stats { id } => obj(vec![
+                ("op", Value::Str("stats".into())),
+                ("id", Value::Int(*id as i64)),
+            ]),
+            WireRequest::Swap { id, layer, q, p, table } => obj(vec![
+                ("op", Value::Str("swap".into())),
+                ("id", Value::Int(*id as i64)),
+                ("layer", Value::Int(*layer as i64)),
+                ("q", Value::Int(*q as i64)),
+                ("p", Value::Int(*p as i64)),
+                ("table", sums_value(table)),
+            ]),
+            WireRequest::Shutdown { id } => obj(vec![
+                ("op", Value::Str("shutdown".into())),
+                ("id", Value::Int(*id as i64)),
+            ]),
+        };
+        json::to_string(&v)
+    }
+
+    /// Decode a frame payload. Unknown ops are distinguished from malformed
+    /// JSON so the server can answer `Unsupported` with the request's id
+    /// instead of tearing the connection down.
+    pub fn decode(payload: &str) -> Result<WireRequest, ProtoError> {
+        let v = json::parse(payload).map_err(|e| perr(e.to_string()))?;
+        let id = get_id(&v)?;
+        let op = v.get("op").and_then(Value::as_str).ok_or_else(|| perr("missing \"op\""))?;
+        match op {
+            "infer" => {
+                let codes = get_codes(v.req("codes").map_err(|e| perr(e.to_string()))?, "codes")?;
+                Ok(WireRequest::Infer { id, codes })
+            }
+            "infer_batch" => {
+                let rows = v.req_array("batch").map_err(|e| perr(e.to_string()))?;
+                let batch = rows
+                    .iter()
+                    .map(|row| get_codes(row, "batch rows"))
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok(WireRequest::InferBatch { id, batch })
+            }
+            "stats" => Ok(WireRequest::Stats { id }),
+            "swap" => {
+                let dim = |k: &str| -> Result<usize, ProtoError> {
+                    match v.get(k).and_then(Value::as_i64) {
+                        Some(x) if x >= 0 => Ok(x as usize),
+                        _ => Err(perr(format!("\"{k}\" must be a non-negative integer"))),
+                    }
+                };
+                let table = v
+                    .req_array("table")
+                    .map_err(|e| perr(e.to_string()))?
+                    .iter()
+                    .map(|x| x.as_i64().ok_or_else(|| perr("table entries must be integers")))
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok(WireRequest::Swap { id, layer: dim("layer")?, q: dim("q")?, p: dim("p")?, table })
+            }
+            "shutdown" => Ok(WireRequest::Shutdown { id }),
+            other => Err(perr(format!("unsupported op {other:?}"))),
+        }
+    }
+}
+
+impl WireResponse {
+    pub fn encode(&self) -> String {
+        let v = match self {
+            WireResponse::Sums { id, sums, latency_us } => obj(vec![
+                ("id", Value::Int(*id as i64)),
+                ("ok", Value::Bool(true)),
+                ("sums", sums_value(sums)),
+                ("latency_us", Value::Float(*latency_us)),
+            ]),
+            WireResponse::Batch { id, batch } => obj(vec![
+                ("id", Value::Int(*id as i64)),
+                ("ok", Value::Bool(true)),
+                ("batch", Value::Array(batch.iter().map(|row| sums_value(row)).collect())),
+            ]),
+            WireResponse::Stats { id, stats } => obj(vec![
+                ("id", Value::Int(*id as i64)),
+                ("ok", Value::Bool(true)),
+                ("stats", stats.clone()),
+            ]),
+            WireResponse::Ok { id } => {
+                obj(vec![("id", Value::Int(*id as i64)), ("ok", Value::Bool(true))])
+            }
+            WireResponse::Error { id, kind, msg } => obj(vec![
+                ("id", Value::Int(*id as i64)),
+                ("ok", Value::Bool(false)),
+                ("error", Value::Str(kind.as_str().into())),
+                ("msg", Value::Str(msg.clone())),
+            ]),
+        };
+        json::to_string(&v)
+    }
+
+    pub fn decode(payload: &str) -> Result<WireResponse, ProtoError> {
+        let v = json::parse(payload).map_err(|e| perr(e.to_string()))?;
+        let id = get_id(&v)?;
+        let ok = v.get("ok").and_then(Value::as_bool).ok_or_else(|| perr("missing \"ok\""))?;
+        if !ok {
+            let kind_s =
+                v.get("error").and_then(Value::as_str).ok_or_else(|| perr("missing \"error\""))?;
+            let kind = ErrorKind::parse(kind_s)
+                .ok_or_else(|| perr(format!("unknown error kind {kind_s:?}")))?;
+            let msg = v.get("msg").and_then(Value::as_str).unwrap_or("").to_string();
+            return Ok(WireResponse::Error { id, kind, msg });
+        }
+        if let Some(sums) = v.get("sums") {
+            let sums = sums
+                .to_i64_vec()
+                .map_err(|e| perr(format!("bad sums: {e}")))?;
+            let latency_us = v.get("latency_us").and_then(Value::as_f64).unwrap_or(0.0);
+            return Ok(WireResponse::Sums { id, sums, latency_us });
+        }
+        if let Some(batch) = v.get("batch") {
+            let rows = batch.as_array().ok_or_else(|| perr("batch must be an array"))?;
+            let batch = rows
+                .iter()
+                .map(|row| row.to_i64_vec().map_err(|e| perr(format!("bad batch row: {e}"))))
+                .collect::<Result<Vec<_>, _>>()?;
+            return Ok(WireResponse::Batch { id, batch });
+        }
+        if let Some(stats) = v.get("stats") {
+            return Ok(WireResponse::Stats { id, stats: stats.clone() });
+        }
+        Ok(WireResponse::Ok { id })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: WireRequest) {
+        let wire = req.encode();
+        assert_eq!(WireRequest::decode(&wire).unwrap(), req, "{wire}");
+    }
+
+    fn roundtrip_resp(resp: WireResponse) {
+        let wire = resp.encode();
+        assert_eq!(WireResponse::decode(&wire).unwrap(), resp, "{wire}");
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_req(WireRequest::Infer { id: 0, codes: vec![] });
+        roundtrip_req(WireRequest::Infer { id: 7, codes: vec![0, 1, u32::MAX] });
+        roundtrip_req(WireRequest::InferBatch {
+            id: 8,
+            batch: vec![vec![1, 2, 3], vec![4, 5, 6]],
+        });
+        roundtrip_req(WireRequest::Stats { id: 9 });
+        roundtrip_req(WireRequest::Swap {
+            id: 10,
+            layer: 1,
+            q: 2,
+            p: 3,
+            table: vec![-5, 0, 5, i64::MAX],
+        });
+        roundtrip_req(WireRequest::Shutdown { id: u64::MAX / 2 });
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        roundtrip_resp(WireResponse::Sums { id: 1, sums: vec![-3, 0, 9], latency_us: 12.5 });
+        roundtrip_resp(WireResponse::Batch { id: 2, batch: vec![vec![1], vec![-2, 3]] });
+        roundtrip_resp(WireResponse::Ok { id: 3 });
+        for kind in [
+            ErrorKind::Backpressure,
+            ErrorKind::Stopped,
+            ErrorKind::Invalid,
+            ErrorKind::Parse,
+            ErrorKind::Dropped,
+            ErrorKind::Unsupported,
+        ] {
+            roundtrip_resp(WireResponse::Error { id: 4, kind, msg: "why".into() });
+        }
+        let stats = obj(vec![("completed", Value::Int(41))]);
+        roundtrip_resp(WireResponse::Stats { id: 5, stats });
+    }
+
+    #[test]
+    fn decode_rejects_malformed() {
+        for bad in [
+            "",                                           // not JSON
+            "42",                                         // not an object
+            "{\"op\":\"infer\"}",                         // missing id
+            "{\"op\":\"infer\",\"id\":-1,\"codes\":[]}",  // negative id
+            "{\"op\":\"infer\",\"id\":1}",                // missing codes
+            "{\"op\":\"infer\",\"id\":1,\"codes\":[-1]}", // negative code
+            "{\"op\":\"infer\",\"id\":1,\"codes\":[4294967296]}", // > u32
+            "{\"op\":\"infer\",\"id\":1,\"codes\":[1.5]}", // fractional code
+            "{\"op\":\"launch\",\"id\":1}",               // unknown op
+            "{\"id\":1}",                                 // no op
+            "{\"op\":\"swap\",\"id\":1,\"layer\":-2,\"q\":0,\"p\":0,\"table\":[]}",
+        ] {
+            assert!(WireRequest::decode(bad).is_err(), "should reject {bad:?}");
+        }
+        assert!(WireResponse::decode("{\"id\":1,\"ok\":false,\"error\":\"martian\"}").is_err());
+        assert!(WireResponse::decode("{\"id\":1}").is_err());
+    }
+
+    #[test]
+    fn unknown_op_error_still_names_the_op() {
+        // the server wants to answer Unsupported with the request id, so
+        // the decode error for a recognized-JSON/unknown-op frame must be
+        // distinguishable by message content
+        let err = WireRequest::decode("{\"op\":\"warp\",\"id\":3}").unwrap_err();
+        assert!(err.to_string().contains("unsupported op"), "{err}");
+    }
+}

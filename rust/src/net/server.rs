@@ -1,0 +1,497 @@
+//! Framed TCP front end over the serving plane.
+//!
+//! [`NetServer`] owns an accept loop plus two threads per connection and
+//! maps wire sessions onto [`Service`]:
+//!
+//! - **Shard affinity**: each connection is pinned to one admission shard
+//!   (`conn_id % shards`) via [`Service::submit_to`] — a TCP session is a
+//!   client in the serving plane's sense, so its requests share a queue
+//!   and batch together, same as the in-process benches.
+//! - **Backpressure is a frame, never a hang**: [`SubmitError`]s are
+//!   written to the socket *immediately from the reader thread*, bypassing
+//!   the in-order completion queue. A client that overruns admission gets
+//!   its `backpressure` error while earlier responses are still pending.
+//! - **Bounded in-flight window**: the reader blocks once `in_flight`
+//!   accepted requests await completion, so one connection cannot buffer
+//!   unbounded replies server-side; TCP pushback does the rest.
+//! - **Disconnect safety**: reply channels are rendezvous-free
+//!   (`sync_channel(1)` server-side) and the completion thread keeps
+//!   draining them after a write fails, so a vanished client never stalls
+//!   an executor or leaks a pending reply.
+//! - **Graceful drain**: [`NetServer::shutdown`] closes the read half of
+//!   every connection; readers see EOF, completion threads flush what was
+//!   already admitted, then FIN. The server never shuts the [`Service`]
+//!   down — the caller owns that ordering.
+
+use std::io::{BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::{Response, Service, SubmitError};
+use crate::json::{obj, Value};
+
+use super::frame::{read_frame, write_frame, FrameError, MAX_FRAME};
+use super::proto::{peek_id, ErrorKind, WireRequest, WireResponse};
+
+/// Front-end knobs, all per-connection except `levels`.
+#[derive(Clone, Copy, Debug)]
+pub struct NetCfg {
+    /// Frame-size cap in both directions (default [`MAX_FRAME`]).
+    pub max_frame: usize,
+    /// Requests a connection may have awaiting completion before its
+    /// reader blocks (the wire-side analogue of the benches' in-flight
+    /// window). Counted in frames: a batch frame occupies one slot.
+    pub in_flight: usize,
+    /// Quantizer level count advertised in `stats` frames so remote load
+    /// generators can synthesize in-range codes; `0` when unknown.
+    pub levels: u64,
+}
+
+impl Default for NetCfg {
+    fn default() -> Self {
+        NetCfg { max_frame: MAX_FRAME, in_flight: 64, levels: 0 }
+    }
+}
+
+/// Wire-layer counters, shared across all connections.
+#[derive(Default)]
+pub struct NetCounters {
+    pub accepted: AtomicU64,
+    pub frames_in: AtomicU64,
+    pub frames_out: AtomicU64,
+    pub parse_errors: AtomicU64,
+    /// Response frames carrying successful results.
+    pub wire_completed: AtomicU64,
+}
+
+/// Point-in-time copy of [`NetCounters`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetStats {
+    pub accepted: u64,
+    pub frames_in: u64,
+    pub frames_out: u64,
+    pub parse_errors: u64,
+    pub wire_completed: u64,
+}
+
+/// What the reader hands the completion thread. The channel is bounded at
+/// `in_flight`, which is what bounds per-connection server memory.
+enum Out {
+    /// Pending replies to collect and write, in admission order.
+    Reply { id: u64, rxs: Vec<Receiver<Response>>, batch: bool },
+    /// Replies to drain without writing (a batch that partially failed
+    /// admission — the client already got an error frame for the whole
+    /// batch, but the admitted rows still execute and must be received).
+    Discard(Vec<Receiver<Response>>),
+}
+
+struct Conn {
+    /// Kept only so [`NetServer::shutdown`] can close the read half.
+    stream: TcpStream,
+    reader: JoinHandle<()>,
+    completion: JoinHandle<()>,
+}
+
+/// The running front end. Dropping it shuts it down (the wrapped
+/// [`Service`] is untouched either way).
+pub struct NetServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    shutdown_requested: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<Conn>>>,
+    counters: Arc<NetCounters>,
+}
+
+impl NetServer {
+    /// Start serving `svc` on `listener`. The listener may be bound to
+    /// port 0; [`NetServer::local_addr`] reports the resolved address.
+    pub fn start(svc: Arc<Service>, listener: TcpListener, cfg: NetCfg) -> std::io::Result<NetServer> {
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let shutdown_requested = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<Conn>>> = Arc::new(Mutex::new(Vec::new()));
+        let counters = Arc::new(NetCounters::default());
+
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let shutdown_requested = Arc::clone(&shutdown_requested);
+            let conns = Arc::clone(&conns);
+            let counters = Arc::clone(&counters);
+            std::thread::spawn(move || {
+                let mut conn_id: u64 = 0;
+                loop {
+                    if stop.load(Ordering::Acquire) || svc.is_stopped() {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            counters.accepted.fetch_add(1, Ordering::Relaxed);
+                            let shard = conn_id as usize % svc.cfg().shards.max(1);
+                            conn_id += 1;
+                            // a setup error means the peer vanished between
+                            // accept and thread spawn; just move on
+                            if let Ok(conn) = spawn_conn(
+                                Arc::clone(&svc),
+                                stream,
+                                shard,
+                                cfg,
+                                Arc::clone(&counters),
+                                Arc::clone(&shutdown_requested),
+                            ) {
+                                conns.lock().unwrap().push(conn);
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(2)),
+                    }
+                }
+            })
+        };
+
+        Ok(NetServer { local_addr, stop, shutdown_requested, accept: Some(accept), conns, counters })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Whether some client sent a `shutdown` op. The embedding process
+    /// (e.g. `kanele serve`) polls this and decides when to actually stop.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown_requested.load(Ordering::Acquire)
+    }
+
+    /// Wire counters snapshot.
+    pub fn stats(&self) -> NetStats {
+        NetStats {
+            accepted: self.counters.accepted.load(Ordering::Relaxed),
+            frames_in: self.counters.frames_in.load(Ordering::Relaxed),
+            frames_out: self.counters.frames_out.load(Ordering::Relaxed),
+            parse_errors: self.counters.parse_errors.load(Ordering::Relaxed),
+            wire_completed: self.counters.wire_completed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Graceful drain: stop accepting, close every connection's read half
+    /// (no new requests), let completion threads flush everything already
+    /// admitted, FIN, and join. Idempotent. Does not stop the [`Service`].
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for c in &conns {
+            // EOF the reader; already-closed sockets are fine
+            let _ = c.stream.shutdown(Shutdown::Read);
+        }
+        for c in conns {
+            let _ = c.reader.join();
+            let _ = c.completion.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Serialize + frame + flush one response under the writer lock. Returns
+/// `false` once the socket is dead so callers stop writing (but keep
+/// draining).
+fn write_response(
+    writer: &Mutex<BufWriter<TcpStream>>,
+    counters: &NetCounters,
+    max_frame: usize,
+    resp: &WireResponse,
+) -> bool {
+    let payload = resp.encode();
+    let mut w = writer.lock().unwrap();
+    let ok = write_frame(&mut *w, payload.as_bytes(), max_frame).is_ok() && w.flush().is_ok();
+    if ok {
+        counters.frames_out.fetch_add(1, Ordering::Relaxed);
+        if !matches!(resp, WireResponse::Error { .. }) {
+            counters.wire_completed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    ok
+}
+
+fn submit_error(id: u64, e: SubmitError) -> WireResponse {
+    let kind = match e {
+        SubmitError::Backpressure => ErrorKind::Backpressure,
+        SubmitError::Stopped => ErrorKind::Stopped,
+        SubmitError::Invalid(_) => ErrorKind::Invalid,
+    };
+    WireResponse::Error { id, kind, msg: e.to_string() }
+}
+
+/// The `stats` frame body: serving-plane snapshot + model/topology facts a
+/// remote client needs to drive load, + wire counters. All floats are
+/// NaN-guarded — `json::write_f64` turns NaN into `null`, which strict
+/// clients would reject.
+fn stats_value(svc: &Service, counters: &NetCounters, levels: u64) -> Value {
+    let s = svc.stats();
+    let nz = |x: f64| if x.is_finite() { x } else { 0.0 };
+    obj(vec![
+        ("completed", Value::Int(s.completed as i64)),
+        ("rejected", Value::Int(s.rejected as i64)),
+        ("dropped", Value::Int(s.dropped as i64)),
+        ("batches", Value::Int(s.batches as i64)),
+        ("mean_batch", Value::Float(nz(s.mean_batch))),
+        ("latency_p50_us", Value::Float(nz(s.latency_p50_us))),
+        ("latency_p90_us", Value::Float(nz(s.latency_p90_us))),
+        ("latency_p99_us", Value::Float(nz(s.latency_p99_us))),
+        ("throughput_rps", Value::Float(nz(s.throughput_rps))),
+        ("fused_ops", Value::Int(s.fused_ops as i64)),
+        ("input_width", Value::Int(svc.input_width() as i64)),
+        ("levels", Value::Int(levels as i64)),
+        ("shards", Value::Int(svc.cfg().shards as i64)),
+        ("workers", Value::Int(svc.cfg().workers as i64)),
+        ("net_accepted", Value::Int(counters.accepted.load(Ordering::Relaxed) as i64)),
+        ("net_frames_in", Value::Int(counters.frames_in.load(Ordering::Relaxed) as i64)),
+        ("net_frames_out", Value::Int(counters.frames_out.load(Ordering::Relaxed) as i64)),
+        ("net_parse_errors", Value::Int(counters.parse_errors.load(Ordering::Relaxed) as i64)),
+    ])
+}
+
+fn spawn_conn(
+    svc: Arc<Service>,
+    stream: TcpStream,
+    shard: usize,
+    cfg: NetCfg,
+    counters: Arc<NetCounters>,
+    shutdown_requested: Arc<AtomicBool>,
+) -> std::io::Result<Conn> {
+    // accepted sockets may inherit the listener's nonblocking flag on some
+    // platforms; the per-connection threads want plain blocking reads
+    stream.set_nonblocking(false)?;
+    let _ = stream.set_nodelay(true);
+    let mut rstream = stream.try_clone()?;
+    let writer = Arc::new(Mutex::new(BufWriter::new(stream.try_clone()?)));
+    let (tx, rx): (SyncSender<Out>, Receiver<Out>) = sync_channel(cfg.in_flight.max(1));
+
+    let reader = {
+        let svc = Arc::clone(&svc);
+        let writer = Arc::clone(&writer);
+        let counters = Arc::clone(&counters);
+        std::thread::spawn(move || {
+            loop {
+                let payload = match read_frame(&mut rstream, cfg.max_frame) {
+                    Ok(p) => p,
+                    Err(FrameError::Oversized { len, max }) => {
+                        counters.parse_errors.fetch_add(1, Ordering::Relaxed);
+                        let resp = WireResponse::Error {
+                            id: 0,
+                            kind: ErrorKind::Parse,
+                            msg: format!("frame of {len} bytes exceeds the {max}-byte cap"),
+                        };
+                        write_response(&writer, &counters, cfg.max_frame, &resp);
+                        break;
+                    }
+                    // Closed (clean), Truncated, Io: teardown either way
+                    Err(_) => break,
+                };
+                counters.frames_in.fetch_add(1, Ordering::Relaxed);
+                let text = String::from_utf8_lossy(&payload);
+                let req = match WireRequest::decode(&text) {
+                    Ok(req) => req,
+                    Err(e) => {
+                        counters.parse_errors.fetch_add(1, Ordering::Relaxed);
+                        match peek_id(&text) {
+                            // addressable: answer and keep the connection —
+                            // the frame boundary is intact
+                            Some(id) => {
+                                let kind = if e.0.contains("unsupported op") {
+                                    ErrorKind::Unsupported
+                                } else {
+                                    ErrorKind::Parse
+                                };
+                                let resp =
+                                    WireResponse::Error { id, kind, msg: e.to_string() };
+                                if !write_response(&writer, &counters, cfg.max_frame, &resp) {
+                                    break;
+                                }
+                                continue;
+                            }
+                            // not even an id to echo: report and hang up
+                            None => {
+                                let resp = WireResponse::Error {
+                                    id: 0,
+                                    kind: ErrorKind::Parse,
+                                    msg: e.to_string(),
+                                };
+                                write_response(&writer, &counters, cfg.max_frame, &resp);
+                                break;
+                            }
+                        }
+                    }
+                };
+                match req {
+                    WireRequest::Infer { id, codes } => match svc.submit_to(shard, codes) {
+                        Ok(rx) => {
+                            if tx.send(Out::Reply { id, rxs: vec![rx], batch: false }).is_err() {
+                                break;
+                            }
+                        }
+                        // error frames bypass the completion queue: written
+                        // here, immediately — backpressure must be visible
+                        // even while earlier responses are still pending
+                        Err(e) => {
+                            let resp = submit_error(id, e);
+                            if !write_response(&writer, &counters, cfg.max_frame, &resp) {
+                                break;
+                            }
+                        }
+                    },
+                    WireRequest::InferBatch { id, batch } => {
+                        let mut rxs = Vec::with_capacity(batch.len());
+                        let mut failed = None;
+                        for row in batch {
+                            match svc.submit_to(shard, row) {
+                                Ok(rx) => rxs.push(rx),
+                                Err(e) => {
+                                    failed = Some(e);
+                                    break;
+                                }
+                            }
+                        }
+                        let out = match failed {
+                            None => Out::Reply { id, rxs, batch: true },
+                            Some(e) => {
+                                // whole batch fails atomically from the
+                                // client's view; admitted rows still run
+                                // and their replies must be drained
+                                if !write_response(
+                                    &writer,
+                                    &counters,
+                                    cfg.max_frame,
+                                    &submit_error(id, e),
+                                ) {
+                                    break;
+                                }
+                                Out::Discard(rxs)
+                            }
+                        };
+                        if tx.send(out).is_err() {
+                            break;
+                        }
+                    }
+                    WireRequest::Stats { id } => {
+                        let resp = WireResponse::Stats {
+                            id,
+                            stats: stats_value(&svc, &counters, cfg.levels),
+                        };
+                        if !write_response(&writer, &counters, cfg.max_frame, &resp) {
+                            break;
+                        }
+                    }
+                    WireRequest::Swap { id, layer, q, p, table } => {
+                        let resp = match svc.swap_edge(layer, q, p, table) {
+                            Ok(()) => WireResponse::Ok { id },
+                            Err(e) => WireResponse::Error {
+                                id,
+                                kind: ErrorKind::Invalid,
+                                msg: e.to_string(),
+                            },
+                        };
+                        if !write_response(&writer, &counters, cfg.max_frame, &resp) {
+                            break;
+                        }
+                    }
+                    WireRequest::Shutdown { id } => {
+                        shutdown_requested.store(true, Ordering::Release);
+                        if !write_response(
+                            &writer,
+                            &counters,
+                            cfg.max_frame,
+                            &WireResponse::Ok { id },
+                        ) {
+                            break;
+                        }
+                    }
+                }
+            }
+            // dropping tx lets the completion thread drain and FIN
+        })
+    };
+
+    let completion = {
+        let counters = Arc::clone(&counters);
+        std::thread::spawn(move || {
+            let mut alive = true;
+            for out in rx {
+                match out {
+                    Out::Reply { id, rxs, batch } => {
+                        let resp = if batch {
+                            let mut rows = Vec::with_capacity(rxs.len());
+                            let mut dropped = false;
+                            for r in rxs {
+                                match r.recv() {
+                                    Ok(resp) => rows.push(resp.sums),
+                                    Err(_) => dropped = true,
+                                }
+                            }
+                            if dropped {
+                                WireResponse::Error {
+                                    id,
+                                    kind: ErrorKind::Dropped,
+                                    msg: "reply dropped (model swap or shutdown mid-flight)"
+                                        .to_string(),
+                                }
+                            } else {
+                                WireResponse::Batch { id, batch: rows }
+                            }
+                        } else {
+                            let r = rxs.into_iter().next().expect("non-batch reply has one rx");
+                            match r.recv() {
+                                Ok(resp) => WireResponse::Sums {
+                                    id,
+                                    sums: resp.sums,
+                                    latency_us: resp.latency.as_secs_f64() * 1e6,
+                                },
+                                Err(_) => WireResponse::Error {
+                                    id,
+                                    kind: ErrorKind::Dropped,
+                                    msg: "reply dropped (model swap or shutdown mid-flight)"
+                                        .to_string(),
+                                },
+                            }
+                        };
+                        // a dead socket stops writes, not draining: every
+                        // queued reply is still received so executors'
+                        // results are consumed and the thread terminates
+                        if alive {
+                            alive = write_response(&writer, &counters, cfg.max_frame, &resp);
+                        }
+                    }
+                    Out::Discard(rxs) => {
+                        for r in rxs {
+                            let _ = r.recv();
+                        }
+                    }
+                }
+            }
+            // reader gone, queue drained: flush and half-close (FIN) so the
+            // client sees EOF after the last in-flight response
+            if alive {
+                let mut w = writer.lock().unwrap();
+                let _ = w.flush();
+                let _ = w.get_ref().shutdown(Shutdown::Write);
+            }
+        })
+    };
+
+    Ok(Conn { stream, reader, completion })
+}

@@ -110,6 +110,29 @@ impl CheetahLite {
     }
 }
 
+/// Observation -> input codes, per the exported checkpoint's contract
+/// (preproc, then the layer-0 quantizer). Split out of [`NetlistPolicy`]
+/// so remote controllers can encode locally and evaluate over the wire —
+/// codes are the wire currency of `kanele serve`, and encode/eval/decode
+/// composed through any transport stays bit-exact with the in-process
+/// policy.
+pub fn encode_obs(ck: &Checkpoint, obs: &[f32; OBS_DIM]) -> Vec<u32> {
+    let q = ck.quantizer(0);
+    let raw: Vec<f64> = obs.iter().map(|&v| v as f64).collect();
+    let pre = ck.preproc.apply(&raw);
+    pre.iter().map(|&v| q.encode(v)).collect()
+}
+
+/// Netlist output sums -> actions in [-1, 1] (fixed-point decode + tanh),
+/// the inverse half of the policy contract. See [`encode_obs`].
+pub fn decode_action(ck: &Checkpoint, sums: &[i64]) -> [f64; ACT_DIM] {
+    let mut a = [0f64; ACT_DIM];
+    for i in 0..ACT_DIM {
+        a[i] = from_fixed(sums[i], ck.frac_bits).tanh();
+    }
+    a
+}
+
 /// Hardware-in-the-loop policy: observation -> input codes -> netlist sums
 /// -> tanh(action). Mirrors the exported checkpoint's contract exactly.
 pub struct NetlistPolicy<'a> {
@@ -119,16 +142,9 @@ pub struct NetlistPolicy<'a> {
 
 impl<'a> NetlistPolicy<'a> {
     pub fn act(&self, obs: &[f32; OBS_DIM]) -> [f64; ACT_DIM] {
-        let q = self.ck.quantizer(0);
-        let raw: Vec<f64> = obs.iter().map(|&v| v as f64).collect();
-        let pre = self.ck.preproc.apply(&raw);
-        let codes: Vec<u32> = pre.iter().map(|&v| q.encode(v)).collect();
+        let codes = encode_obs(self.ck, obs);
         let sums = sim::eval(self.net, &codes);
-        let mut a = [0f64; ACT_DIM];
-        for i in 0..ACT_DIM {
-            a[i] = from_fixed(sums[i], self.ck.frac_bits).tanh();
-        }
-        a
+        decode_action(self.ck, &sums)
     }
 }
 

@@ -162,6 +162,14 @@ impl Reservoir {
         self.quantiles(&[q])[0]
     }
 
+    /// The serving-plane quantile set — p50/p90/p99 from one sort. The
+    /// coordinator's stats snapshot, `kanele serve`'s final report and the
+    /// loadgen client all print exactly these three.
+    pub fn p50_p90_p99(&self) -> [f64; 3] {
+        let q = self.quantiles(&[0.5, 0.9, 0.99]);
+        [q[0], q[1], q[2]]
+    }
+
     /// Several quantiles from one sort of the retained samples — cheaper
     /// than repeated [`Reservoir::quantile`] calls for stats scrapes.
     pub fn quantiles(&self, qs: &[f64]) -> Vec<f64> {
@@ -254,6 +262,12 @@ mod tests {
         for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
             assert_eq!(r.quantile(q), s.quantile(q));
         }
+        // the p50/p90/p99 helper is the same three quantiles in one call
+        let [p50, p90, p99] = r.p50_p90_p99();
+        assert_eq!(p50, s.quantile(0.5));
+        assert_eq!(p90, s.quantile(0.9));
+        assert_eq!(p99, s.quantile(0.99));
+        assert!(p50 <= p90 && p90 <= p99);
     }
 
     #[test]

@@ -7,9 +7,10 @@ use std::time::Duration;
 
 use kanele::checkpoint::{testutil, Checkpoint, TestSet};
 use kanele::coordinator::{Backend, Service, ServiceCfg, SubmitError};
+use kanele::net::{Client, ErrorKind, NetCfg, NetError, NetServer, WireRequest, WireResponse};
 use kanele::netlist::Netlist;
 use kanele::util::Rng;
-use kanele::{config, data, engine, lut, report, sim, synth, vhdl};
+use kanele::{config, data, engine, lut, report, rl, sim, synth, vhdl};
 
 fn artifact_ckpt(name: &str) -> Option<Checkpoint> {
     let p = config::ckpt_path(name);
@@ -468,4 +469,271 @@ fn testset_loader_rejects_garbage() {
     std::fs::write(&p, r#"{"format": "wrong"}"#).unwrap();
     assert!(TestSet::load(&p).is_err());
     std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Wire serving (PR 6): the framed TCP front end over the sharded plane.
+// ---------------------------------------------------------------------------
+
+/// Synthetic model + running service + wire server on a loopback port.
+fn wire_fixture(cfg: ServiceCfg, seed: u64) -> (Arc<Netlist>, Arc<Service>, NetServer) {
+    let ck = testutil::synthetic(&[5, 4, 3], &[4, 4, 4], seed);
+    let tables = lut::from_checkpoint(&ck);
+    let net = Arc::new(Netlist::build(&ck, &tables, 2));
+    let svc = Arc::new(Service::start(Arc::clone(&net), cfg));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        listener,
+        NetCfg { levels: 16, ..NetCfg::default() },
+    )
+    .unwrap();
+    (net, svc, server)
+}
+
+fn wire_client(server: &NetServer) -> Client {
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    // every wire test is guarded: a protocol bug must fail an assertion,
+    // never hang the suite
+    c.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    c
+}
+
+#[test]
+fn wire_loopback_bit_exact_and_lifecycle() {
+    let (net, svc, mut server) = wire_fixture(
+        ServiceCfg {
+            workers: 2,
+            shards: 2,
+            steal: true,
+            max_batch: 16,
+            max_wait: Duration::from_micros(50),
+            queue_depth: 4096,
+            ..Default::default()
+        },
+        2061,
+    );
+    let mut client = wire_client(&server);
+    let mut rng = Rng::new(9);
+
+    // single inferences: wire == direct submit_blocking == sim oracle
+    for _ in 0..64 {
+        let codes: Vec<u32> = (0..5).map(|_| rng.below(16) as u32).collect();
+        let (wire_sums, latency_us) = client.infer(codes.clone()).unwrap();
+        assert_eq!(wire_sums, sim::eval(&net, &codes));
+        assert_eq!(wire_sums, svc.submit_blocking(codes).unwrap().sums);
+        assert!(latency_us >= 0.0);
+    }
+
+    // one batch frame: rows come back in order, bit-exact
+    let batch: Vec<Vec<u32>> =
+        (0..32).map(|_| (0..5).map(|_| rng.below(16) as u32).collect()).collect();
+    let rows = client.infer_batch(batch.clone()).unwrap();
+    assert_eq!(rows, sim::eval_batch(&net, &batch));
+
+    // malformed width: typed Invalid error frame, connection survives
+    match client.infer(vec![1, 2]) {
+        Err(NetError::Remote { kind: ErrorKind::Invalid, .. }) => {}
+        other => panic!("expected Invalid error frame, got {other:?}"),
+    }
+    let (sums, _) = client.infer(vec![0; 5]).unwrap();
+    assert_eq!(sums.len(), 3);
+
+    // stats frame carries the request shape and live counters
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("input_width").and_then(|v| v.as_i64()), Some(5));
+    assert_eq!(stats.get("levels").and_then(|v| v.as_i64()), Some(16));
+    assert_eq!(stats.get("shards").and_then(|v| v.as_i64()), Some(2));
+    assert!(stats.get("completed").and_then(|v| v.as_i64()).unwrap() >= 64 + 32);
+
+    drop(client);
+    server.shutdown();
+    let ns = server.stats();
+    assert_eq!(ns.accepted, 1);
+    assert_eq!(ns.parse_errors, 0);
+    assert!(ns.frames_out >= ns.wire_completed);
+    svc.shutdown();
+}
+
+#[test]
+fn wire_backpressure_is_typed_not_a_hang() {
+    // workers = 0 parks admission: nothing drains, so a tiny queue fills
+    // after exactly queue_depth requests and the next one MUST come back
+    // as an immediate backpressure error frame — while the earlier
+    // requests are still pending. This is the "clients observe
+    // backpressure, never hangs" acceptance criterion on the wire.
+    let (_net, svc, mut server) = wire_fixture(
+        ServiceCfg { workers: 0, shards: 1, queue_depth: 2, ..Default::default() },
+        2062,
+    );
+    let mut client = wire_client(&server);
+
+    for id in 1..=2u64 {
+        client.send(&WireRequest::Infer { id, codes: vec![0; 5] }).unwrap();
+    }
+    client.send(&WireRequest::Infer { id: 3, codes: vec![0; 5] }).unwrap();
+    // the ONLY frame that can arrive now is the typed rejection of id 3 —
+    // ids 1 and 2 are parked in admission with no executor to drain them
+    match client.recv_response().unwrap() {
+        WireResponse::Error { id: 3, kind: ErrorKind::Backpressure, .. } => {}
+        other => panic!("expected backpressure error frame for id 3, got {other:?}"),
+    }
+
+    // shutting the service down drops the parked requests' reply senders:
+    // the wire surfaces them as typed `dropped` error frames, not silence
+    svc.shutdown();
+    let mut dropped = std::collections::BTreeSet::new();
+    for _ in 0..2 {
+        match client.recv_response().unwrap() {
+            WireResponse::Error { id, kind: ErrorKind::Dropped, .. } => {
+                dropped.insert(id);
+            }
+            other => panic!("expected dropped error frames, got {other:?}"),
+        }
+    }
+    assert_eq!(dropped.into_iter().collect::<Vec<_>>(), vec![1, 2]);
+    server.shutdown();
+}
+
+#[test]
+fn wire_client_disconnect_mid_request_no_stall() {
+    // a client that vanishes with requests in flight must not wedge the
+    // plane: its responses are drained server-side and a new connection
+    // is served normally
+    let (net, svc, mut server) = wire_fixture(
+        ServiceCfg {
+            workers: 1,
+            shards: 1,
+            max_batch: 4,
+            max_wait: Duration::from_micros(50),
+            queue_depth: 4096,
+            // stretch execution so the disconnect provably lands while
+            // requests are still in flight
+            exec_delay: Duration::from_millis(20),
+            ..Default::default()
+        },
+        2063,
+    );
+    {
+        let mut doomed = wire_client(&server);
+        for id in 1..=5u64 {
+            doomed.send(&WireRequest::Infer { id, codes: vec![1; 5] }).unwrap();
+        }
+        // dropped here: connection closes with all five un-replied
+    }
+    let mut client = wire_client(&server);
+    let codes = vec![2u32; 5];
+    let (sums, _) = client.infer(codes.clone()).unwrap();
+    assert_eq!(sums, sim::eval(&net, &codes));
+    drop(client);
+    server.shutdown();
+    svc.shutdown();
+}
+
+#[test]
+fn wire_server_shutdown_drains_in_flight() {
+    // graceful drain: shutdown with responses still in flight flushes
+    // every admitted request's response before the FIN — the client reads
+    // all of them, then a clean EOF
+    let (net, svc, mut server) = wire_fixture(
+        ServiceCfg {
+            workers: 1,
+            shards: 1,
+            max_batch: 4,
+            max_wait: Duration::from_micros(50),
+            queue_depth: 4096,
+            exec_delay: Duration::from_millis(30),
+            ..Default::default()
+        },
+        2064,
+    );
+    let mut client = wire_client(&server);
+    let mut want = std::collections::BTreeMap::new();
+    let mut rng = Rng::new(4);
+    for id in 1..=8u64 {
+        let codes: Vec<u32> = (0..5).map(|_| rng.below(16) as u32).collect();
+        want.insert(id, sim::eval(&net, &codes));
+        client.send(&WireRequest::Infer { id, codes }).unwrap();
+    }
+    // let the reader admit everything (exec_delay keeps the batches
+    // themselves in flight well past this), then drain concurrently with
+    // the client still reading
+    std::thread::sleep(Duration::from_millis(20));
+    let reader = std::thread::spawn(move || {
+        let mut got = std::collections::BTreeMap::new();
+        for _ in 0..8 {
+            match client.recv_response().unwrap() {
+                WireResponse::Sums { id, sums, .. } => {
+                    got.insert(id, sums);
+                }
+                other => panic!("expected sums during drain, got {other:?}"),
+            }
+        }
+        // after the last in-flight response: clean EOF, not an error
+        match client.recv_response() {
+            Err(NetError::Frame(kanele::net::FrameError::Closed)) => {}
+            other => panic!("expected clean EOF after drain, got {other:?}"),
+        }
+        got
+    });
+    server.shutdown();
+    let got = reader.join().unwrap();
+    assert_eq!(got, want);
+    svc.shutdown();
+}
+
+#[test]
+fn wire_cheetah_control_loop_with_slo() {
+    // the §5.7 control loop with the network in it: encode observations
+    // locally, evaluate the policy net over TCP, decode actions — bit-exact
+    // with the in-process policy, and per-step round trips comfortably
+    // inside a generous soft deadline
+    let pol_ck = testutil::synthetic(&[rl::OBS_DIM, 8, rl::ACT_DIM], &[5, 5, 5], 0xCA7);
+    let tables = lut::from_checkpoint(&pol_ck);
+    let pol_net = Arc::new(Netlist::build(&pol_ck, &tables, 2));
+    let svc = Arc::new(Service::start(
+        Arc::clone(&pol_net),
+        ServiceCfg {
+            workers: 1,
+            shards: 1,
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_depth: 64,
+            ..Default::default()
+        },
+    ));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let mut server = NetServer::start(
+        Arc::clone(&svc),
+        listener,
+        NetCfg { levels: pol_ck.quantizer(0).levels(), ..NetCfg::default() },
+    )
+    .unwrap();
+    let mut client = wire_client(&server);
+
+    let local = rl::NetlistPolicy { ck: &pol_ck, net: &pol_net };
+    let mut env = rl::CheetahLite::new(17);
+    let mut obs = env.reset();
+    let deadline = Duration::from_millis(50);
+    let mut hits = 0usize;
+    let steps = 100usize;
+    for _ in 0..steps {
+        let t0 = std::time::Instant::now();
+        let codes = rl::encode_obs(&pol_ck, &obs);
+        let (sums, _) = client.infer(codes).unwrap();
+        let act = rl::decode_action(&pol_ck, &sums);
+        if t0.elapsed() <= deadline {
+            hits += 1;
+        }
+        assert_eq!(act, local.act(&obs), "wire policy diverges from local policy");
+        obs = env.step(&act).0;
+    }
+    // loopback round trips are tens of microseconds; 90% under a 50 ms
+    // soft deadline is a deliberately loose bar that still catches hangs,
+    // lost frames and pathological queueing
+    assert!(hits * 10 >= steps * 9, "only {hits}/{steps} steps met the deadline");
+
+    drop(client);
+    server.shutdown();
+    svc.shutdown();
 }
