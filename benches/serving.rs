@@ -28,11 +28,12 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use kanele::checkpoint::testutil;
-use kanele::coordinator::{Backend, Service, ServiceCfg, SubmitError};
+use kanele::coordinator::{Backend, ModelId, ModelRegistry, Service, ServiceCfg, SubmitError};
 use kanele::json::{obj, Value};
 use kanele::net::{self, Client, LoadGenCfg, NetCfg, NetServer};
+use kanele::netlist::hotswap::NetlistCell;
 use kanele::netlist::Netlist;
-use kanele::util::Summary;
+use kanele::util::{Rng, Summary};
 use kanele::{data, engine, lut, rl, sim};
 
 /// The PR-3 serving plane, frozen as the A/B baseline: ONE bounded
@@ -122,7 +123,8 @@ mod baseline {
                 }
             }));
         }
-        let policy = Policy { max_batch: cfg.max_batch, max_wait: cfg.max_wait };
+        let policy =
+            Policy { max_batch: cfg.max_batch, max_wait: cfg.max_wait, ..Default::default() };
         threads.push(std::thread::spawn(move || {
             while let Some(batch) = collect(&rx, &policy) {
                 if work_tx.send(batch).is_err() {
@@ -556,6 +558,7 @@ fn main() {
                     tail_every,
                     tail_batch,
                     seed: 13,
+                    ..Default::default()
                 },
             )
             .expect("loadgen");
@@ -659,6 +662,304 @@ fn main() {
         ]));
         drop(client);
         server.shutdown();
+        svc.shutdown();
+    }
+
+    // -- 6. multi-tenant registry: arena sharing, Zipf routing, fairness, canary
+    // N fine-tuned variants of the same checkpoint behind one registry:
+    // tenant t0 is the base netlist, every other tenant differs by one
+    // hot-swapped edge table, so cross-tenant interning shares all but that
+    // table. Gates: per-tenant bit-exactness vs sim (hard), interned arena
+    // strictly smaller than N flat arenas (hard), exact deterministic
+    // canary counts (hard), and the DRR fairness bar — light-tenant p99
+    // under a saturating heavy neighbor <= 1.5x its isolated p99
+    // (report-only PASS/MISS; recorded in the JSON either way).
+    println!("-- multi-tenant registry: shared arena, Zipf routing, DRR fairness, canary --");
+    {
+        let n_tenants = if quick { 8 } else { 24 };
+        let variant_cell = |i: usize| -> Arc<NetlistCell> {
+            let cell = Arc::new(NetlistCell::new(Arc::clone(&net)));
+            if i > 0 {
+                let p = net.layers[0].neurons[0].luts[0].input;
+                let n_codes = 1usize << net.layers[0].in_bits;
+                cell.swap_edge(0, 0, p, vec![i as i64 * 17 + 1; n_codes]).expect("variant swap");
+            }
+            cell
+        };
+        let reg = Arc::new(ModelRegistry::new(engine::OptLevel::default()));
+        let mut tenant_nets: Vec<Arc<Netlist>> = Vec::with_capacity(n_tenants);
+        let mut ids: Vec<ModelId> = Vec::with_capacity(n_tenants);
+        for i in 0..n_tenants {
+            let cell = variant_cell(i);
+            tenant_nets.push(cell.load());
+            ids.push(reg.load_cell(&format!("t{i}"), cell, 0).expect("load tenant"));
+        }
+
+        // arena gate: the interned arena must be strictly smaller than N
+        // independently materialized ones, with real cross-tenant sharing
+        let arena = reg.reintern();
+        assert!(
+            arena.bytes_interned < arena.bytes_flat,
+            "interned arena ({} B) not smaller than flat ({} B)",
+            arena.bytes_interned,
+            arena.bytes_flat
+        );
+        assert!(arena.bytes_shared > 0, "no cross-tenant table sharing");
+        println!(
+            "   arena: {} programs, {} unique tables | {} B interned ({} B shared) vs {} B flat ({:.1}x smaller)",
+            arena.programs,
+            arena.unique_tables,
+            arena.bytes_interned,
+            arena.bytes_shared,
+            arena.bytes_flat,
+            arena.bytes_flat as f64 / arena.bytes_interned.max(1) as f64
+        );
+        rows.push(obj(vec![
+            ("section", "multi_tenant".into()),
+            ("kind", "arena".into()),
+            ("tenants", (n_tenants as i64).into()),
+            ("programs", (arena.programs as i64).into()),
+            ("unique_tables", (arena.unique_tables as i64).into()),
+            ("bytes_flat", (arena.bytes_flat as i64).into()),
+            ("bytes_interned", (arena.bytes_interned as i64).into()),
+            ("bytes_shared", (arena.bytes_shared as i64).into()),
+            ("gate_interned_lt_flat", true.into()),
+        ]));
+
+        let svc = Arc::new(Service::start_registry(
+            Arc::clone(&reg),
+            ServiceCfg {
+                workers: 4,
+                shards: 2,
+                steal: true,
+                max_batch: 32,
+                max_wait: Duration::from_micros(100),
+                queue_depth: 1 << 14,
+                ..Default::default()
+            },
+        ));
+
+        // bit-exact gate before any timing: every tenant vs its own sim
+        let n_probes = 4usize;
+        for (i, tnet) in tenant_nets.iter().enumerate() {
+            for codes in stream.iter().take(n_probes) {
+                let got = svc.submit_blocking_model(ids[i], codes.clone()).expect("probe");
+                assert_eq!(got.sums, sim::eval(tnet, codes), "tenant t{i} diverges from sim");
+            }
+        }
+        println!("   bit-exactness gate: {n_tenants} tenants x {n_probes} probes == per-tenant sim");
+
+        // Zipf-skewed closed loop: tenant i draws with weight ~ 1/(i+1)
+        let zipf_requests: usize = if quick { 4_000 } else { 40_000 };
+        let weights: Vec<u64> =
+            (0..n_tenants).map(|i| (1_000.0 / (i + 1) as f64).ceil() as u64).collect();
+        let total_w: u64 = weights.iter().sum();
+        let mut rng = Rng::new(0x21BF);
+        let picks: Vec<usize> = (0..zipf_requests)
+            .map(|_| {
+                let mut x = rng.below(total_w);
+                let mut t = 0usize;
+                for (i, w) in weights.iter().enumerate() {
+                    if x < *w {
+                        t = i;
+                        break;
+                    }
+                    x -= *w;
+                }
+                t
+            })
+            .collect();
+        let clients = 8usize;
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for (c, chunk) in picks.chunks(zipf_requests.div_ceil(clients)).enumerate() {
+                let svc = &svc;
+                let ids = &ids;
+                let stream = &stream;
+                s.spawn(move || {
+                    let mut pending = Vec::with_capacity(1024);
+                    for (k, &t) in chunk.iter().enumerate() {
+                        let mut codes = stream[(c * 31 + k) % stream.len()].clone();
+                        loop {
+                            match svc.try_submit_model(ids[t], codes) {
+                                Ok(rx) => {
+                                    pending.push(rx);
+                                    break;
+                                }
+                                Err((SubmitError::Backpressure, back)) => {
+                                    codes = back.expect("codes back");
+                                    for rx in pending.drain(..) {
+                                        let _ = rx.recv();
+                                    }
+                                }
+                                Err((e, _)) => panic!("zipf submit failed: {e}"),
+                            }
+                        }
+                    }
+                    for rx in pending {
+                        let _ = rx.recv();
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let rps = zipf_requests as f64 / wall;
+        let st = svc.stats();
+        assert_eq!(st.completed, (zipf_requests + n_tenants * n_probes) as u64);
+        let per: u64 = st.per_tenant.iter().map(|t| t.completed).sum();
+        assert_eq!(per, st.completed, "per-tenant completions do not sum to the total");
+        let heavy = st.per_tenant.iter().find(|t| t.name == "t0").expect("t0 stats");
+        let heavy_share = heavy.completed as f64 / st.completed as f64;
+        println!(
+            "   zipf {zipf_requests} reqs over {n_tenants} tenants: {rps:>9.0} req/s | t0 share {heavy_share:.2} | mean batch {:.1} ({} batches)",
+            st.mean_batch, st.batches
+        );
+        rows.push(obj(vec![
+            ("section", "multi_tenant".into()),
+            ("kind", "zipf".into()),
+            ("tenants", (n_tenants as i64).into()),
+            ("requests", (zipf_requests as i64).into()),
+            ("rps", rps.into()),
+            ("heavy_share", heavy_share.into()),
+            ("mean_batch", st.mean_batch.into()),
+        ]));
+        svc.shutdown();
+
+        // fairness: the light tenant's p99 with a saturating heavy
+        // neighbor vs alone — same plane shape, same artificial per-batch
+        // execution cost, fresh service per phase so reservoirs are clean
+        let fresh_pair = || {
+            let reg = Arc::new(ModelRegistry::new(engine::OptLevel::default()));
+            let heavy = reg.load_cell("heavy", variant_cell(1), 0).expect("heavy tenant");
+            let light = reg.load_cell("light", variant_cell(2), 0).expect("light tenant");
+            let svc = Arc::new(Service::start_registry(
+                reg,
+                ServiceCfg {
+                    workers: 2,
+                    shards: 1,
+                    max_batch: 32,
+                    max_wait: Duration::from_micros(100),
+                    queue_depth: 1 << 12,
+                    exec_delay: Duration::from_micros(100),
+                    exec_delay_every: 0,
+                    ..Default::default()
+                },
+            ));
+            (svc, heavy, light)
+        };
+        let n_light = if quick { 200 } else { 1_000 };
+        let light_row = stream[0].clone();
+        let light_p99 = |svc: &Arc<Service>, light: ModelId| -> f64 {
+            for _ in 0..n_light {
+                svc.submit_blocking_model(light, light_row.clone()).expect("light request");
+            }
+            let st = svc.stats();
+            st.per_tenant
+                .iter()
+                .find(|t| t.name == "light")
+                .expect("light stats")
+                .latency_p99_us
+        };
+        let (svc_a, _, light_a) = fresh_pair();
+        let p99_isolated = light_p99(&svc_a, light_a);
+        svc_a.shutdown();
+        let (svc_b, heavy_b, light_b) = fresh_pair();
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        let p99_contended = std::thread::scope(|s| {
+            for c in 0..2usize {
+                let svc = &svc_b;
+                let stop = &stop;
+                let row = &stream[(c + 1) % stream.len()];
+                s.spawn(move || {
+                    // deep async window: keeps a heavy backlog queued so
+                    // DRR (not arrival order) decides batch formation
+                    let mut pending = std::collections::VecDeque::with_capacity(64);
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        match svc.try_submit_model(heavy_b, row.clone()) {
+                            Ok(rx) => pending.push_back(rx),
+                            Err((SubmitError::Backpressure, _)) => {
+                                match pending.pop_front() {
+                                    Some(rx) => {
+                                        let _ = rx.recv();
+                                    }
+                                    None => std::thread::sleep(Duration::from_micros(50)),
+                                }
+                            }
+                            Err((SubmitError::Stopped, _)) => break,
+                            Err((e, _)) => panic!("heavy submit failed: {e}"),
+                        }
+                        if pending.len() >= 64 {
+                            if let Some(rx) = pending.pop_front() {
+                                let _ = rx.recv();
+                            }
+                        }
+                    }
+                    for rx in pending {
+                        let _ = rx.recv();
+                    }
+                });
+            }
+            // let the heavy backlog build before measuring
+            std::thread::sleep(Duration::from_millis(20));
+            let p = light_p99(&svc_b, light_b);
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            p
+        });
+        svc_b.shutdown();
+        let fairness_ratio = p99_contended / p99_isolated.max(1e-9);
+        let fairness_pass = fairness_ratio <= 1.5;
+        println!(
+            "   fairness: light p99 isolated {p99_isolated:>8.1} us vs contended {p99_contended:>8.1} us ({fairness_ratio:.2}x) {}",
+            if fairness_pass { "PASS <= 1.5x" } else { "MISS > 1.5x (record + investigate)" }
+        );
+        rows.push(obj(vec![
+            ("section", "multi_tenant".into()),
+            ("kind", "fairness".into()),
+            ("light_requests", (n_light as i64).into()),
+            ("light_p99_isolated_us", p99_isolated.into()),
+            ("light_p99_contended_us", p99_contended.into()),
+            ("ratio", fairness_ratio.into()),
+            ("gate_1_5x", fairness_pass.into()),
+        ]));
+
+        // canary: 25% of one tenant's rows shadowed by a second variant;
+        // the routing counter is global and deterministic, so 400 valid
+        // rows canary exactly 100 — and every response is bit-exact
+        // against one of the two sims
+        let reg = Arc::new(ModelRegistry::new(engine::OptLevel::default()));
+        let cid = reg.load_cell("c", variant_cell(0), 0).expect("canary tenant");
+        let canary_net = variant_cell(3).load();
+        reg.set_canary("c", Arc::clone(&canary_net), 25).expect("set canary");
+        let svc = Arc::new(Service::start_registry(
+            Arc::clone(&reg),
+            ServiceCfg { workers: 2, shards: 1, ..Default::default() },
+        ));
+        let n_rows = 400usize;
+        for k in 0..n_rows {
+            let codes = stream[k % stream.len()].clone();
+            let got = svc.submit_blocking_model(cid, codes.clone()).expect("canary row");
+            let base = sim::eval(&net, &codes);
+            let shadow = sim::eval(&canary_net, &codes);
+            assert!(
+                got.sums == base || got.sums == shadow,
+                "canary response matches neither primary nor canary sim"
+            );
+        }
+        let ts = reg.tenant_stats();
+        let ct = ts.iter().find(|t| t.name == "c").expect("canary stats");
+        assert_eq!(ct.canary_rows, (n_rows / 4) as u64, "canary routing is deterministic");
+        assert!(ct.canary_agree <= ct.canary_rows);
+        println!(
+            "   canary: {} of {n_rows} rows shadowed (exact 25%), live argmax agreement {:.3}",
+            ct.canary_rows, ct.canary_agreement
+        );
+        rows.push(obj(vec![
+            ("section", "multi_tenant".into()),
+            ("kind", "canary".into()),
+            ("rows", (n_rows as i64).into()),
+            ("canary_rows", (ct.canary_rows as i64).into()),
+            ("agreement", ct.canary_agreement.into()),
+        ]));
         svc.shutdown();
     }
 

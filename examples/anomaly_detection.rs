@@ -78,8 +78,11 @@ fn main() -> Result<()> {
     let mut done = 0usize;
     while done < n {
         while send_idx < n && in_flight < IN_FLIGHT {
-            let req =
-                WireRequest::Infer { id: send_idx as u64, codes: ts.input_codes[send_idx].clone() };
+            let req = WireRequest::Infer {
+                id: send_idx as u64,
+                model: None,
+                codes: ts.input_codes[send_idx].clone(),
+            };
             client.send(&req).map_err(|e| anyhow::anyhow!("wire send: {e}"))?;
             send_idx += 1;
             in_flight += 1;
@@ -93,8 +96,11 @@ fn main() -> Result<()> {
             WireResponse::Error { id, kind: ErrorKind::Backpressure, .. } => {
                 // retryable: give the plane a moment, resend that window
                 std::thread::sleep(Duration::from_micros(50));
-                let req =
-                    WireRequest::Infer { id, codes: ts.input_codes[id as usize].clone() };
+                let req = WireRequest::Infer {
+                    id,
+                    model: None,
+                    codes: ts.input_codes[id as usize].clone(),
+                };
                 client.send(&req).map_err(|e| anyhow::anyhow!("wire resend: {e}"))?;
             }
             WireResponse::Error { id, kind, msg } => {

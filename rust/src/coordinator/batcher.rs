@@ -16,7 +16,15 @@
 //! from when collection started: a request that queued behind a busy
 //! service is dispatched as soon as the dispatcher sees it has already
 //! spent its `max_wait` budget, instead of waiting a second full window.
+//!
+//! Multi-tenant dispatchers use [`DrrCollector`] instead of `collect_with`:
+//! items carry a routing key ([`Keyed`]) and are parked in per-key queues
+//! served deficit-round-robin, so one batch never mixes tenants and a
+//! heavy tenant's backlog cannot starve a light one. With a single key the
+//! collector degenerates to `collect_with` exactly (same batch lengths,
+//! same flush reasons, same [`CollectStats`]) — asserted by test.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
@@ -29,11 +37,24 @@ pub enum Decision {
     Dispatch,
 }
 
-/// Dispatch policy: fill to `max_batch` or flush after `max_wait`.
+/// Dispatch policy: fill to `max_batch` or flush after `max_wait`; across
+/// tenants, serve per-key queues deficit-round-robin.
 #[derive(Clone, Copy, Debug)]
 pub struct Policy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Deficit-round-robin quantum: how many items a tenant's queue earns
+    /// per rotation visit in [`DrrCollector`]. `0` (the default) means
+    /// "use `max_batch`" — round-robin of full batches. Smaller values
+    /// interleave tenants at sub-batch granularity under saturation.
+    /// Ignored by the single-queue [`collect_with`].
+    pub drr_quantum: usize,
+}
+
+impl Default for Policy {
+    fn default() -> Self {
+        Policy { max_batch: 64, max_wait: Duration::from_micros(200), drr_quantum: 0 }
+    }
 }
 
 impl Policy {
@@ -59,6 +80,15 @@ impl Policy {
         let fill_time = (self.max_batch as f64 - 1.0) / lambda_rps;
         fill_time.min(self.max_wait.as_secs_f64()) * 0.5 * 1e6
     }
+
+    /// Effective DRR quantum: `drr_quantum` defaulted to `max_batch` and
+    /// clamped into `[1, max_batch]` so every rotation visit makes progress
+    /// and no single visit exceeds one batch.
+    fn quantum(&self) -> usize {
+        let cap = self.max_batch.max(1);
+        let q = if self.drr_quantum == 0 { cap } else { self.drr_quantum };
+        q.clamp(1, cap)
+    }
 }
 
 /// Anything carrying a submission timestamp can be collected into batches.
@@ -70,6 +100,20 @@ pub trait Timestamped {
 impl Timestamped for Instant {
     fn submitted(&self) -> Instant {
         *self
+    }
+}
+
+/// Items carrying a tenant routing key can be collected per key by
+/// [`DrrCollector`]: one batch never mixes keys (executors resolve the
+/// program per batch).
+pub trait Keyed {
+    fn key(&self) -> u32;
+}
+
+/// Bare timestamps are single-tenant (tests and simulations).
+impl Keyed for Instant {
+    fn key(&self) -> u32 {
+        0
     }
 }
 
@@ -203,6 +247,150 @@ pub fn collect<T: Timestamped>(rx: &Receiver<T>, policy: &Policy) -> Option<Batc
     collect_with(rx, policy, &mut CollectStats::default())
 }
 
+/// One tenant's parked items inside a [`DrrCollector`], plus its carried
+/// deficit. Queues are kept non-empty (removed when drained) and live in
+/// rotation order.
+struct KeyQueue<T> {
+    key: u32,
+    items: VecDeque<T>,
+    deficit: usize,
+}
+
+/// Per-tenant deficit-round-robin batch collection — the multi-tenant
+/// dispatcher loop. Admitted items are parked into per-key queues; each
+/// call to [`DrrCollector::next`] dispatches from the first queue in
+/// rotation order that is ready (filled to `max_batch`, or its oldest item
+/// aged past `max_wait`), taking at most `min(max_batch, deficit)` items
+/// where the deficit grows by [`Policy::drr_quantum`] per visit. The
+/// dispatched queue rotates to the back, so a tenant with 25 queued
+/// batches yields the rotation after every dispatch instead of draining
+/// first.
+///
+/// Degeneration contract: with every item on one key, the sequence of
+/// batch lengths, flush reasons and [`CollectStats`] is identical to
+/// [`collect_with`] (asserted by test) — the PR-6 single-tenant pipeline
+/// is this collector with one queue. One behavioral note: the greedy drain
+/// parks the *whole* channel backlog internally (collect_with leaves
+/// anything past `max_batch` in the channel), so under saturation the
+/// effective admission capacity is the bounded channel plus the parked
+/// backlog; [`DrrCollector::backlog`] exposes the parked count.
+pub struct DrrCollector<T> {
+    queues: VecDeque<KeyQueue<T>>,
+    policy: Policy,
+    disconnected: bool,
+}
+
+impl<T: Timestamped + Keyed> DrrCollector<T> {
+    pub fn new(policy: Policy) -> DrrCollector<T> {
+        DrrCollector { queues: VecDeque::new(), policy, disconnected: false }
+    }
+
+    /// Items parked in per-key queues (admitted but not yet dispatched).
+    pub fn backlog(&self) -> usize {
+        self.queues.iter().map(|q| q.items.len()).sum()
+    }
+
+    /// Collect the next single-tenant batch. Returns `None` once admission
+    /// is disconnected and every queue is drained; partial queues at
+    /// disconnection are still flushed (admitted requests always complete).
+    pub fn next(&mut self, rx: &Receiver<T>, stats: &mut CollectStats) -> Option<Batch<T>> {
+        loop {
+            self.drain(rx);
+            if let Some(b) = self.dispatch(stats, false) {
+                return Some(b);
+            }
+            if self.disconnected {
+                return self.dispatch(stats, true);
+            }
+            match self.earliest_oldest() {
+                // nothing parked: block for the first item
+                None => match rx.recv() {
+                    Ok(item) => self.enqueue(item),
+                    Err(_) => self.disconnected = true,
+                },
+                // wait until the earliest queue head exhausts its budget
+                Some(oldest) => {
+                    let wait = self.policy.max_wait.saturating_sub(oldest.elapsed());
+                    match rx.recv_timeout(wait) {
+                        Ok(item) => self.enqueue(item),
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => self.disconnected = true,
+                    }
+                }
+            }
+        }
+    }
+
+    /// Park everything currently admitted (greedy, like `collect_with`'s
+    /// drain — queued requests join batches without waiting).
+    fn drain(&mut self, rx: &Receiver<T>) {
+        loop {
+            match rx.try_recv() {
+                Ok(item) => self.enqueue(item),
+                Err(TryRecvError::Empty) => return,
+                Err(TryRecvError::Disconnected) => {
+                    self.disconnected = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Linear scan over *active* keys (tenants with parked work) — small by
+    /// construction; the registry may hold many tenants but only those with
+    /// a backlog on this shard appear here.
+    fn enqueue(&mut self, item: T) {
+        let key = item.key();
+        match self.queues.iter_mut().find(|q| q.key == key) {
+            Some(q) => q.items.push_back(item),
+            None => {
+                let mut items = VecDeque::new();
+                items.push_back(item);
+                self.queues.push_back(KeyQueue { key, items, deficit: 0 });
+            }
+        }
+    }
+
+    fn earliest_oldest(&self) -> Option<Instant> {
+        self.queues.iter().filter_map(|q| q.items.front().map(Timestamped::submitted)).min()
+    }
+
+    /// Dispatch from the first ready queue in rotation order. `flush`
+    /// overrides readiness (shutdown: everything parked must complete).
+    fn dispatch(&mut self, stats: &mut CollectStats, flush: bool) -> Option<Batch<T>> {
+        let cap = self.policy.max_batch.max(1);
+        let idx = self.queues.iter().position(|q| {
+            flush
+                || q.items.len() >= cap
+                || q.items
+                    .front()
+                    .is_some_and(|t| t.submitted().elapsed() >= self.policy.max_wait)
+        })?;
+        let mut q = self.queues.remove(idx).expect("position is in range");
+        let quantum = self.policy.quantum();
+        // deficit is capped at one batch: a queue skipped while not ready
+        // must not accumulate an unbounded burst allowance
+        q.deficit = (q.deficit + quantum).min(cap);
+        let fill = q.items.len();
+        let take = fill.min(cap).min(q.deficit);
+        q.deficit -= take;
+        let items: Vec<T> = q.items.drain(..take).collect();
+        let reason = if flush {
+            FlushReason::Disconnect
+        } else if fill >= cap {
+            FlushReason::Full
+        } else {
+            FlushReason::Timeout
+        };
+        if q.items.is_empty() {
+            q.deficit = 0; // a drained tenant starts fresh next backlog
+        } else {
+            self.queues.push_back(q);
+        }
+        Some(stats.record(reason, Batch::new(items)))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,21 +398,21 @@ mod tests {
 
     #[test]
     fn dispatches_when_full() {
-        let p = Policy { max_batch: 8, max_wait: Duration::from_micros(100) };
+        let p = Policy { max_batch: 8, max_wait: Duration::from_micros(100), ..Default::default() };
         assert_eq!(p.decide(8, Duration::ZERO), Decision::Dispatch);
         assert_eq!(p.decide(9, Duration::ZERO), Decision::Dispatch);
     }
 
     #[test]
     fn dispatches_on_timeout() {
-        let p = Policy { max_batch: 8, max_wait: Duration::from_micros(100) };
+        let p = Policy { max_batch: 8, max_wait: Duration::from_micros(100), ..Default::default() };
         assert_eq!(p.decide(3, Duration::from_micros(100)), Decision::Dispatch);
         assert_eq!(p.decide(3, Duration::from_micros(150)), Decision::Dispatch);
     }
 
     #[test]
     fn waits_otherwise() {
-        let p = Policy { max_batch: 8, max_wait: Duration::from_micros(100) };
+        let p = Policy { max_batch: 8, max_wait: Duration::from_micros(100), ..Default::default() };
         match p.decide(3, Duration::from_micros(40)) {
             Decision::Wait(d) => assert_eq!(d, Duration::from_micros(60)),
             other => panic!("expected Wait, got {other:?}"),
@@ -239,8 +427,9 @@ mod tests {
     #[test]
     fn expected_latency_monotone_in_batch() {
         let lam = 1e6; // 1M rps
-        let small = Policy { max_batch: 4, max_wait: Duration::from_micros(200) };
-        let big = Policy { max_batch: 256, max_wait: Duration::from_micros(200) };
+        let wait = Duration::from_micros(200);
+        let small = Policy { max_batch: 4, max_wait: wait, ..Default::default() };
+        let big = Policy { max_batch: 256, max_wait: wait, ..Default::default() };
         assert!(small.expected_added_latency_us(lam) <= big.expected_added_latency_us(lam));
     }
 
@@ -261,7 +450,7 @@ mod tests {
         // immediately — the dispatcher must NOT grant it a fresh window
         // (generous margins: correct behavior returns in microseconds, the
         // old bug waits the full 400 ms)
-        let p = Policy { max_batch: 8, max_wait: Duration::from_millis(400) };
+        let p = Policy { max_batch: 8, max_wait: Duration::from_millis(400), ..Default::default() };
         let (tx, rx) = sync_channel::<Instant>(8);
         let submitted = Instant::now();
         std::thread::sleep(Duration::from_millis(450)); // ages in "the queue"
@@ -281,7 +470,7 @@ mod tests {
         // 20 queued requests, max_batch 8: two immediate full batches, then
         // a timeout-flushed remainder of 4 (generous margins for loaded
         // CI runners: immediate means microseconds, the timeout is 400 ms)
-        let p = Policy { max_batch: 8, max_wait: Duration::from_millis(400) };
+        let p = Policy { max_batch: 8, max_wait: Duration::from_millis(400), ..Default::default() };
         let (tx, rx) = sync_channel::<Instant>(32);
         let t = Instant::now();
         for _ in 0..20 {
@@ -303,7 +492,7 @@ mod tests {
 
     #[test]
     fn collect_dispatches_partial_batch_at_disconnect() {
-        let p = Policy { max_batch: 8, max_wait: Duration::from_secs(5) };
+        let p = Policy { max_batch: 8, max_wait: Duration::from_secs(5), ..Default::default() };
         let (tx, rx) = sync_channel::<Instant>(8);
         tx.send(Instant::now()).unwrap();
         tx.send(Instant::now()).unwrap();
@@ -325,7 +514,7 @@ mod tests {
         // scripted arrivals; every batch collect() emits must be one that
         // Policy::decide marks Dispatch at the moment of dispatch — the
         // dispatcher loop adds no decision logic of its own
-        let p = Policy { max_batch: 4, max_wait: Duration::from_millis(200) };
+        let p = Policy { max_batch: 4, max_wait: Duration::from_millis(200), ..Default::default() };
         let (tx, rx) = sync_channel::<Instant>(64);
         let producer = std::thread::spawn(move || {
             for _ in 0..3 {
@@ -360,5 +549,114 @@ mod tests {
         assert_eq!(cs.flush_full, 2, "{cs:?}");
         assert_eq!(cs.flush_timeout, 1, "{cs:?}");
         assert_eq!(cs.flush_disconnect, 0, "{cs:?}");
+    }
+
+    // -- deficit-round-robin collection ----------------------------------
+
+    /// Test item: explicit tenant key + submission time.
+    #[derive(Clone, Copy, Debug)]
+    struct K(u32, Instant);
+    impl Timestamped for K {
+        fn submitted(&self) -> Instant {
+            self.1
+        }
+    }
+    impl Keyed for K {
+        fn key(&self) -> u32 {
+            self.0
+        }
+    }
+
+    #[test]
+    fn drr_single_key_matches_collect_with_exactly() {
+        // the PR-6 degeneration contract: one key => identical batch
+        // lengths, flush reasons, and CollectStats as collect_with, for
+        // backlogs around and across the max_batch boundary
+        let p = Policy { max_batch: 4, max_wait: Duration::from_secs(5), ..Default::default() };
+        let fill = |n: usize| {
+            let (tx, rx) = sync_channel::<Instant>(64);
+            for _ in 0..n {
+                tx.send(Instant::now()).unwrap();
+            }
+            rx // tx drops here: disconnected once drained
+        };
+        for n in [1usize, 3, 4, 8, 9, 13] {
+            let rx = fill(n);
+            let mut cs_a = CollectStats::default();
+            let mut lens_a = Vec::new();
+            while let Some(b) = collect_with(&rx, &p, &mut cs_a) {
+                lens_a.push(b.len());
+            }
+            let rx = fill(n);
+            let mut cs_b = CollectStats::default();
+            let mut drr = DrrCollector::new(p);
+            let mut lens_b = Vec::new();
+            while let Some(b) = drr.next(&rx, &mut cs_b) {
+                lens_b.push(b.len());
+            }
+            assert_eq!(lens_a, lens_b, "n={n}");
+            assert_eq!(cs_a, cs_b, "n={n}");
+            assert_eq!(drr.backlog(), 0, "n={n}");
+        }
+    }
+
+    #[test]
+    fn drr_prevents_heavy_key_starving_light() {
+        // 100 heavy requests queued ahead of 4 light ones: the light
+        // tenant's batch goes out on the second rotation visit, not behind
+        // the heavy tenant's 25 batches — and batches never mix keys
+        let p = Policy { max_batch: 4, max_wait: Duration::from_secs(5), ..Default::default() };
+        let (tx, rx) = sync_channel::<K>(256);
+        let now = Instant::now();
+        for _ in 0..100 {
+            tx.send(K(0, now)).unwrap();
+        }
+        for _ in 0..4 {
+            tx.send(K(1, now)).unwrap();
+        }
+        drop(tx);
+        let mut cs = CollectStats::default();
+        let mut drr = DrrCollector::new(p);
+        let mut order = Vec::new();
+        while let Some(b) = drr.next(&rx, &mut cs) {
+            let key = b.items[0].0;
+            assert!(b.items.iter().all(|k| k.0 == key), "batch mixes tenants");
+            order.push((key, b.len()));
+        }
+        let light_pos = order.iter().position(|&(k, _)| k == 1).expect("light dispatched");
+        assert!(light_pos <= 1, "light tenant starved behind the heavy backlog: {order:?}");
+        let sum =
+            |key: u32| order.iter().filter(|&&(k, _)| k == key).map(|&(_, n)| n).sum::<usize>();
+        assert_eq!(sum(0), 100);
+        assert_eq!(sum(1), 4);
+        assert_eq!(cs.items, 104);
+        assert_eq!(cs.batches, order.len() as u64);
+    }
+
+    #[test]
+    fn drr_custom_quantum_interleaves_below_batch_size() {
+        // quantum 2 under saturation: tenants alternate in 2-item grants
+        // even though both could fill 4-item batches
+        let p = Policy { max_batch: 4, max_wait: Duration::ZERO, drr_quantum: 2 };
+        let (tx, rx) = sync_channel::<K>(64);
+        let now = Instant::now();
+        for _ in 0..8 {
+            tx.send(K(0, now)).unwrap();
+        }
+        for _ in 0..8 {
+            tx.send(K(1, now)).unwrap();
+        }
+        drop(tx);
+        let mut cs = CollectStats::default();
+        let mut drr = DrrCollector::new(p);
+        let mut order = Vec::new();
+        while let Some(b) = drr.next(&rx, &mut cs) {
+            order.push((b.items[0].0, b.len()));
+        }
+        assert_eq!(
+            order,
+            vec![(0, 2), (1, 2), (0, 2), (1, 2), (0, 2), (1, 2), (0, 2), (1, 2)],
+            "quantum-sized grants must alternate tenants"
+        );
     }
 }

@@ -1,40 +1,52 @@
-//! L3 coordinator: a sharded dispatcher/executor serving plane over the
-//! netlist.
+//! L3 coordinator: a multi-tenant, sharded dispatcher/executor serving
+//! plane over a registry of netlists.
 //!
 //! The paper's deployment story is a streaming accelerator core (II = 1)
 //! fed by a host; this module is that host-side system. PR 2 split batch
-//! *formation* from batch *execution* (one dispatcher, one bounded work
-//! channel, N executors); this revision shards the whole plane so no
-//! single admission channel, dispatcher thread, or handoff queue owns the
-//! hot path:
+//! *formation* from batch *execution*, PR 4 sharded the plane; this
+//! revision makes it **multi-tenant**: one coordinator serves N
+//! independently loaded checkpoints ([`ModelRegistry`]) with per-tenant
+//! fairness, quotas, statistics, and live canarying.
 //!
 //! ```text
-//!            shard 0: [admission q0] -> dispatcher 0 -> [deque 0] ---\
-//! clients ==>shard 1: [admission q1] -> dispatcher 1 -> [deque 1] ----+==> executors 0..W-1
-//!   submit:    ...        ...             ...              ...      /     pop home deque,
-//!   client-affine     bounded,        owns its rx,     bounded,           steal oldest from
-//!   round-robin,      backpressure    batcher::collect per-shard          victims when idle
-//!   spill to next
-//!   shard when full
+//!        ModelRegistry   "default"(id 0) | "ft-a"(id 1) | ... | (id N-1)
+//!                        each tenant: NetlistCell -> ProgramCell @ its own
+//!                        OptLevel, in-flight quota, counters, optional
+//!                        Canary (x% of rows -> 2nd checkpoint, live argmax
+//!                        agreement); reintern() shares identical tables
+//!                        across tenants in ONE arena
+//!                           │ resolved ONCE at admission -> Arc<Tenant>
+//!                           ▼   travels with the request
+//!            shard 0: [admission q0] -> DRR dispatcher 0 -> [deque 0] -\
+//! clients ==>shard 1: [admission q1] -> DRR dispatcher 1 -> [deque 1] --+=> executors
+//!   submit_model:        ...          deficit-round-robin      ...     /   pop home deque,
+//!   client-affine     bounded,        over per-tenant       bounded,       steal when idle,
+//!   round-robin,      backpressure    queues; batches are   per-shard      run each BATCH's
+//!   spill when full   + tenant quota  single-tenant                        tenant snapshot
 //! ```
 //!
-//! **Admission** is S bounded channels. [`Service::submit`] picks a shard
-//! by client-affine round-robin (each submitting thread gets a sticky seed,
-//! so one client's requests stay FIFO on one shard) and spills to the next
-//! shard only under local backpressure, so total capacity stays
-//! work-conserving. **Formation** is one dispatcher thread per shard, each
-//! the sole owner of its receiver, forming batches with
-//! [`batcher::collect_with`] — every dispatch decision still comes from
-//! [`batcher::Policy::decide`], and `max_wait` is still measured from each
-//! request's *submission* (a request that aged in the queue flushes
-//! immediately, on whichever shard it landed). **Execution** is a
-//! work-stealing pool ([`steal::WorkPool`]): each dispatcher pushes formed
-//! [`batcher::Batch`]es onto its shard's bounded deque, executors pop their
-//! home deque and steal the *oldest* batch from a victim shard when idle,
-//! so a heavy-tailed batch cost on one shard is absorbed by the whole pool
-//! instead of convoying behind one queue. With `shards = 1` the plane
-//! degenerates to exactly the PR-2/3 pipeline (one admission queue, one
-//! dispatcher, one shared deque).
+//! **Admission** is S bounded channels. [`Service::submit_model`] resolves
+//! the [`ModelId`] to its `Arc<`[`registry::Tenant`]`>` once, enforces the
+//! tenant's in-flight quota, then picks a shard by client-affine
+//! round-robin (each submitting thread gets a sticky seed, so one client's
+//! requests stay FIFO on one shard) and spills to the next shard only
+//! under local backpressure, so total capacity stays work-conserving.
+//! **Formation** is one dispatcher thread per shard, each the sole owner
+//! of its receiver, forming batches with [`batcher::DrrCollector`]:
+//! requests are split into per-tenant queues and served deficit-round-
+//! robin, so a heavy tenant's backlog cannot starve a light tenant's
+//! latency, and every batch is **single-tenant** (executors run one
+//! snapshot per batch). Dispatch conditions are the same as
+//! [`batcher::Policy::decide`] — `max_batch` fill or `max_wait` aged from
+//! each request's *submission* — and with one tenant the collector is
+//! proven batch-for-batch identical to the PR-6 [`batcher::collect_with`]
+//! pipeline. **Execution** is a work-stealing pool ([`steal::WorkPool`]):
+//! dispatchers push formed [`batcher::Batch`]es onto their shard's bounded
+//! deque, executors pop their home deque and steal the *oldest* batch from
+//! a victim when idle. Each batch carries its tenant handle, so executors
+//! never touch the registry: they load the tenant's `(netlist, program)`
+//! snapshot, run the batch (plus the canaried row subset on the canary
+//! program), and complete per-tenant and service-wide counters.
 //!
 //! Executors run on a [`Backend`]: the default is the compiled flat
 //! program of [`crate::engine`] (batch-major, hot-swap aware via
@@ -42,10 +54,14 @@
 //! the netlist-walking interpreter remains selectable for debugging and
 //! A/B benchmarking.
 //!
-//! Statistics are kept per shard ([`ShardStats`]: admitted, batches formed,
-//! full-vs-timeout flushes) plus service-wide counters; [`Service::stats`]
-//! aggregates them into one [`ServiceStats`] snapshot whose totals are
-//! consistent with the per-shard breakdown it carries.
+//! Statistics are kept per shard ([`ShardStats`]), per tenant
+//! ([`TenantStats`]: admitted/completed/batches/latency quantiles/quota
+//! drops/canary agreement, retained after unload) plus service-wide
+//! counters; [`Service::stats`] aggregates them into one [`ServiceStats`]
+//! snapshot whose totals are consistent with both breakdowns it carries
+//! (writers bump tenant counters first, the snapshot reads totals first,
+//! so `sum(per_tenant) >= total` holds even mid-traffic and exactly at
+//! quiescence).
 //!
 //! Shutdown is graceful across shards: [`Service::shutdown`] disconnects
 //! every admission channel, each dispatcher drains and dispatches what was
@@ -54,6 +70,7 @@
 //! [`SubmitError::Stopped`] instead of spinning.
 
 pub mod batcher;
+pub mod registry;
 pub mod steal;
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -61,16 +78,18 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
-use crate::engine::{Executor, OptLevel, OptReport, ProgramCell};
+use crate::engine::{Executor, InternStats, OptLevel, OptReport, ProgramCell};
 use crate::netlist::hotswap::NetlistCell;
 use crate::netlist::Netlist;
 use crate::sim;
 use crate::util::Reservoir;
 
-use batcher::{Batch, Policy, Timestamped};
+use batcher::{Batch, DrrCollector, Policy, Timestamped};
 use steal::WorkPool;
+
+pub use registry::{ModelId, ModelRegistry, TenantStats};
 
 /// Retained latency samples: quantiles stay approximately correct under
 /// sustained load at O(1) memory (the previous unbounded summary retained
@@ -81,6 +100,9 @@ const LATENCY_RESERVOIR: usize = 4096;
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
+    /// Tenant this request routes to ([`ModelId::DEFAULT`] for
+    /// single-tenant services) — also the batcher's fairness key.
+    pub model: ModelId,
     pub codes: Vec<u32>,
     pub submitted: Instant,
 }
@@ -96,12 +118,25 @@ pub struct Response {
 
 struct Pending {
     req: Request,
+    /// Resolved once at admission; executors run the batch on this handle
+    /// without any registry lookup, and an unloaded tenant's snapshot
+    /// stays alive exactly until its in-flight work drains.
+    tenant: Arc<registry::Tenant>,
+    /// RAII quota slot: decrements the tenant's in-flight gauge on every
+    /// exit path (completion, width drop, shutdown discard).
+    _inflight: registry::InflightGuard,
     reply: SyncSender<Response>,
 }
 
 impl Timestamped for Pending {
     fn submitted(&self) -> Instant {
         self.req.submitted
+    }
+}
+
+impl batcher::Keyed for Pending {
+    fn key(&self) -> u32 {
+        self.req.model.raw()
     }
 }
 
@@ -116,6 +151,9 @@ pub enum SubmitError {
     Stopped,
     /// Malformed request (wrong input width); no retry will ever succeed.
     Invalid(String),
+    /// No tenant with that id is loaded (never was, or was unloaded);
+    /// terminal for this request.
+    UnknownModel(String),
 }
 
 impl std::fmt::Display for SubmitError {
@@ -124,6 +162,7 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Backpressure => write!(f, "admission queues full (backpressure)"),
             SubmitError::Stopped => write!(f, "service stopped"),
             SubmitError::Invalid(msg) => write!(f, "invalid request: {msg}"),
+            SubmitError::UnknownModel(m) => write!(f, "unknown model: {m}"),
         }
     }
 }
@@ -241,6 +280,9 @@ pub struct ServiceStats {
     /// the model snapshot (admission raced a `replace_model`). The client
     /// observes a closed reply channel.
     pub dropped: u64,
+    /// Admissions refused by per-tenant in-flight quotas (summed over
+    /// tenants; disjoint from `rejected`, which is queue backpressure).
+    pub quota_drops: u64,
     /// Batches formed by the dispatchers (counted at formation, so under
     /// load this runs ahead of execution — the pipeline is visible here).
     pub batches: u64,
@@ -273,6 +315,16 @@ pub struct ServiceStats {
     pub steals: u64,
     /// Per-admission-shard breakdown; `len() == cfg.shards`.
     pub per_shard: Vec<ShardStats>,
+    /// Per-tenant breakdown: live tenants sorted by id, then unloaded
+    /// (retired) tenants' frozen history. In a quiescent snapshot the sums
+    /// of admitted/completed/dropped/quota_drops/batches over this list
+    /// equal the service totals (mid-traffic, sums run `>=` the totals —
+    /// see [`registry::TenantCounters`]).
+    pub per_tenant: Vec<TenantStats>,
+    /// Cross-tenant arena interning result from the last
+    /// [`ModelRegistry::reintern`] pass (`None` when never interned or
+    /// invalidated by a registry change since).
+    pub arena: Option<InternStats>,
 }
 
 /// Per-shard shared counters. `admitted` is written by submitters
@@ -305,6 +357,7 @@ struct Shared {
     completed: AtomicU64,
     rejected: AtomicU64,
     dropped: AtomicU64,
+    quota_drops: AtomicU64,
     /// Fused LUT ops executed (valid samples x ops-per-sample), counted at
     /// execution. Per-sample ops are the backend's own: netlist L-LUTs for
     /// the interpreter, the optimized op stream for the compiled engine
@@ -404,12 +457,11 @@ pub struct Service {
     /// Dispatcher → executor handoff; `None` when `workers == 0`.
     pool: Option<Arc<WorkPool<Batch<Pending>>>>,
     drain: Arc<DrainGate>,
-    /// Hot-swappable model handle (paper §6: online LUT updates).
-    cell: Arc<NetlistCell>,
-    /// Compiled-program cache shared with the executors (None for the
-    /// interpreted backend or `workers == 0`); read by [`Service::stats`]
-    /// to surface the current program's [`OptReport`].
-    programs: Option<Arc<ProgramCell>>,
+    /// Tenant registry: every loaded checkpoint with its own swappable
+    /// cell, compiled-program cache, quota, counters and optional canary.
+    /// Single-tenant starts wrap their cell in a one-entry registry
+    /// (tenant `"default"`, [`ModelId::DEFAULT`]).
+    registry: Arc<ModelRegistry>,
     shared: Arc<Shared>,
     next_id: AtomicU64,
     started: Instant,
@@ -425,7 +477,18 @@ impl Service {
 
     /// Start over a swappable cell: edge tables (or the whole model) can be
     /// replaced while serving; in-flight batches finish on their snapshot.
+    /// The cell becomes the single tenant `"default"` of a fresh registry,
+    /// compiled at `cfg.opt` — the exact pre-registry plane.
     pub fn start_swappable(cell: Arc<NetlistCell>, cfg: ServiceCfg) -> Service {
+        Self::start_registry(Arc::new(ModelRegistry::single(cell, cfg.opt)), cfg)
+    }
+
+    /// Start over a multi-tenant registry. The first-loaded tenant
+    /// ([`ModelId::DEFAULT`]) is the default route for model-less submits
+    /// and wire frames. Tenants compile at the *registry's* level;
+    /// `cfg.opt` only governs registries built by
+    /// [`Service::start_swappable`].
+    pub fn start_registry(registry: Arc<ModelRegistry>, cfg: ServiceCfg) -> Service {
         let mut cfg = cfg;
         cfg.shards = cfg.shards.max(1);
         if cfg.workers > 0 {
@@ -446,6 +509,7 @@ impl Service {
             completed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
+            quota_drops: AtomicU64::new(0),
             fused_ops: AtomicU64::new(0),
             scratch: AtomicU64::new(0),
             exec_seq: AtomicU64::new(0),
@@ -455,21 +519,17 @@ impl Service {
         let mut threads = Vec::with_capacity(cfg.workers + cfg.shards);
         let mut rx_parked = Vec::new();
         let mut pool = None;
-        let mut programs = None;
         if cfg.workers == 0 {
             rx_parked = rxs;
         } else {
-            // backend resources: the compiled path shares one program cache
-            // (lowered through the cfg.opt pass pipeline once here,
-            // recompiled lazily at the same level after hot-swaps); the
-            // interpreted path never pays for compilation
-            let exec_backend = match cfg.backend {
+            // executors carry no fixed backend handle — every batch brings
+            // its own tenant snapshot. The default tenant's program (when
+            // compiled) only warm-sizes each executor's scratch planes.
+            let warm = match cfg.backend {
                 Backend::Compiled => {
-                    let pc = Arc::new(ProgramCell::with_level(Arc::clone(&cell), cfg.opt));
-                    programs = Some(Arc::clone(&pc));
-                    WorkerBackend::Compiled(pc)
+                    registry.resolve(ModelId::DEFAULT).map(|t| Arc::clone(t.programs()))
                 }
-                Backend::Interpreted => WorkerBackend::Interpreted(Arc::clone(&cell)),
+                Backend::Interpreted => None,
             };
             // per-shard deque depth ~ executors per shard (rounded up, so
             // the total staged budget is never below the old single work
@@ -481,16 +541,17 @@ impl Service {
             for w in 0..cfg.workers {
                 let pool = Arc::clone(&p);
                 let home = w % cfg.shards;
-                let backend = exec_backend.clone();
+                let warm = warm.clone();
                 let shared = Arc::clone(&shared);
                 threads.push(
                     std::thread::Builder::new()
                         .name(format!("kanele-exec-{w}"))
-                        .spawn(move || executor_loop(pool, home, backend, shared, cfg))
+                        .spawn(move || executor_loop(pool, home, warm, shared, cfg))
                         .expect("spawn executor"),
                 );
             }
-            let policy = Policy { max_batch: cfg.max_batch, max_wait: cfg.max_wait };
+            let policy =
+                Policy { max_batch: cfg.max_batch, max_wait: cfg.max_wait, ..Default::default() };
             for (s, rx) in rxs.into_iter().enumerate() {
                 let pool = Arc::clone(&p);
                 let shared = Arc::clone(&shared);
@@ -509,8 +570,7 @@ impl Service {
             rx_parked: Mutex::new(rx_parked),
             pool,
             drain,
-            cell,
-            programs,
+            registry,
             shared,
             next_id: AtomicU64::new(0),
             started: Instant::now(),
@@ -519,44 +579,68 @@ impl Service {
         }
     }
 
-    /// Hot-swap one edge table while serving (paper §6 future work).
+    /// The tenant registry — load/unload/swap checkpoints, canary setup,
+    /// cross-tenant interning, per-tenant resolution for wire front ends.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    fn default_tenant(&self) -> Result<Arc<registry::Tenant>> {
+        self.registry
+            .resolve(ModelId::DEFAULT)
+            .ok_or_else(|| anyhow!("no default tenant loaded"))
+    }
+
+    /// Hot-swap one edge table of the default tenant while serving (paper
+    /// §6 future work). Other tenants: go through [`Service::registry`].
     pub fn swap_edge(&self, layer: usize, q: usize, p: usize, table: Vec<i64>) -> Result<()> {
-        self.cell.swap_edge(layer, q, p, table)
+        self.default_tenant()?.cell().swap_edge(layer, q, p, table)
     }
 
-    /// Replace the whole model while serving.
+    /// Replace the default tenant's whole model while serving.
     pub fn replace_model(&self, net: Arc<Netlist>) {
-        self.cell.replace(net);
-    }
-
-    /// Reject malformed requests at admission: a wrong-width row inside a
-    /// compiled batch would otherwise shift every later sample in the
-    /// batch-major input plane (cross-request corruption).
-    fn check_width(&self, codes: &[u32]) -> Result<(), SubmitError> {
-        let want = self.cell.input_width();
-        if codes.len() != want {
-            return Err(SubmitError::Invalid(format!(
-                "request width {} != model input width {want}",
-                codes.len()
-            )));
+        if let Ok(t) = self.default_tenant() {
+            t.cell().replace(net);
         }
-        Ok(())
     }
 
-    /// Admission core: try the start shard, then (unpinned) spill through
-    /// the remaining shards before declaring backpressure. On failure the
-    /// request's codes are handed back where recoverable, so retry loops
-    /// never clone the payload.
+    /// Admission core: resolve the tenant, validate width against ITS
+    /// snapshot, claim a quota slot, then try the start shard and
+    /// (unpinned) spill through the remaining shards before declaring
+    /// backpressure. On failure the request's codes are handed back where
+    /// recoverable, so retry loops never clone the payload.
     fn submit_shard(
         &self,
         pin: Option<usize>,
+        model: ModelId,
         codes: Vec<u32>,
     ) -> Result<Receiver<Response>, (SubmitError, Option<Vec<u32>>)> {
-        // validated on every call: a concurrent replace_model can change
-        // the expected width between retries
-        if let Err(e) = self.check_width(&codes) {
-            return Err((e, Some(codes)));
+        // resolved + validated on every call: a concurrent unload or
+        // swap can change the tenant set and widths between retries
+        let Some(tenant) = self.registry.resolve(model) else {
+            return Err((SubmitError::UnknownModel(format!("id {model}")), Some(codes)));
+        };
+        // a wrong-width row inside a compiled batch would shift every
+        // later sample in the batch-major input plane: reject here
+        let want = tenant.input_width();
+        if codes.len() != want {
+            return Err((
+                SubmitError::Invalid(format!(
+                    "request width {} != model '{}' input width {want}",
+                    codes.len(),
+                    tenant.name()
+                )),
+                Some(codes),
+            ));
         }
+        // quota before queueing: a tenant at its in-flight cap is refused
+        // without consuming shared admission capacity (tenant counter
+        // first, then service-wide — the stats consistency ordering)
+        let Some(quota_slot) = tenant.try_admit() else {
+            tenant.counters().quota_drops.fetch_add(1, Ordering::Relaxed);
+            self.shared.quota_drops.fetch_add(1, Ordering::Relaxed);
+            return Err((SubmitError::Backpressure, Some(codes)));
+        };
         let guard = self.txs.read().unwrap();
         let Some(txs) = guard.as_ref() else {
             return Err((SubmitError::Stopped, Some(codes)));
@@ -569,14 +653,17 @@ impl Service {
         let (reply_tx, reply_rx) = sync_channel(1);
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            model,
             codes,
             submitted: Instant::now(),
         };
-        let mut pending = Pending { req, reply: reply_tx };
+        let mut pending =
+            Pending { req, tenant: Arc::clone(&tenant), _inflight: quota_slot, reply: reply_tx };
         for i in 0..tries {
             let s = (start + i) % n;
             match txs[s].try_send(pending) {
                 Ok(()) => {
+                    tenant.counters().admitted.fetch_add(1, Ordering::Relaxed);
                     self.shared.shards[s].admitted.fetch_add(1, Ordering::Relaxed);
                     return Ok(reply_rx);
                 }
@@ -587,15 +674,26 @@ impl Service {
                 }
             }
         }
+        tenant.counters().rejected.fetch_add(1, Ordering::Relaxed);
         self.shared.rejected.fetch_add(1, Ordering::Relaxed);
         Err((SubmitError::Backpressure, Some(pending.req.codes)))
     }
 
-    /// Submit a request; the returned receiver yields the response. Fails
-    /// fast with a typed [`SubmitError`]: wrong width and shutdown are
-    /// terminal, full admission queues are retryable backpressure.
+    /// Submit a request to the default tenant; the returned receiver
+    /// yields the response. Fails fast with a typed [`SubmitError`]: wrong
+    /// width, unknown model and shutdown are terminal, full admission
+    /// queues (and full tenant quotas) are retryable backpressure.
     pub fn submit(&self, codes: Vec<u32>) -> Result<Receiver<Response>, SubmitError> {
-        self.try_submit(codes).map_err(|(e, _)| e)
+        self.submit_model(ModelId::DEFAULT, codes)
+    }
+
+    /// [`Service::submit`] routed to an explicit tenant.
+    pub fn submit_model(
+        &self,
+        model: ModelId,
+        codes: Vec<u32>,
+    ) -> Result<Receiver<Response>, SubmitError> {
+        self.submit_shard(None, model, codes).map_err(|(e, _)| e)
     }
 
     /// [`Service::submit`] that hands the codes back on recoverable
@@ -605,7 +703,16 @@ impl Service {
         &self,
         codes: Vec<u32>,
     ) -> Result<Receiver<Response>, (SubmitError, Option<Vec<u32>>)> {
-        self.submit_shard(None, codes)
+        self.submit_shard(None, ModelId::DEFAULT, codes)
+    }
+
+    /// [`Service::try_submit`] routed to an explicit tenant.
+    pub fn try_submit_model(
+        &self,
+        model: ModelId,
+        codes: Vec<u32>,
+    ) -> Result<Receiver<Response>, (SubmitError, Option<Vec<u32>>)> {
+        self.submit_shard(None, model, codes)
     }
 
     /// Submit pinned to one admission shard — no affine spill. For tests,
@@ -616,22 +723,37 @@ impl Service {
         shard: usize,
         codes: Vec<u32>,
     ) -> Result<Receiver<Response>, SubmitError> {
-        self.submit_shard(Some(shard), codes).map_err(|(e, _)| e)
+        self.submit_shard(Some(shard), ModelId::DEFAULT, codes).map_err(|(e, _)| e)
+    }
+
+    /// [`Service::submit_to`] routed to an explicit tenant.
+    pub fn submit_to_model(
+        &self,
+        shard: usize,
+        model: ModelId,
+        codes: Vec<u32>,
+    ) -> Result<Receiver<Response>, SubmitError> {
+        self.submit_shard(Some(shard), model, codes).map_err(|(e, _)| e)
     }
 
     /// Submit with blocking retry (used by the closed-loop example). Only
     /// backpressure retries — parked on the drain gate until a dispatcher
     /// frees admission slots, not sleep-spinning — and the request codes
-    /// are moved through each attempt, never cloned. Malformed requests and
-    /// a stopped service return the error immediately.
+    /// are moved through each attempt, never cloned. Malformed requests,
+    /// unknown models and a stopped service return the error immediately.
     pub fn submit_blocking(&self, codes: Vec<u32>) -> Result<Response> {
+        self.submit_blocking_model(ModelId::DEFAULT, codes)
+    }
+
+    /// [`Service::submit_blocking`] routed to an explicit tenant.
+    pub fn submit_blocking_model(&self, model: ModelId, codes: Vec<u32>) -> Result<Response> {
         let mut codes = codes;
         loop {
             // read the generation BEFORE attempting: a drain landing
             // between the failed try and the wait shows as a moved
             // generation, so the wait returns immediately (no lost wakeup)
             let seen = self.drain.generation();
-            match self.try_submit(codes) {
+            match self.try_submit_model(model, codes) {
                 Ok(rx) => {
                     return rx.recv().context("request dropped (model swap or shutdown mid-flight)")
                 }
@@ -645,8 +767,15 @@ impl Service {
     }
 
     pub fn stats(&self) -> ServiceStats {
+        // read order is the other half of the consistency contract:
+        // service-wide totals FIRST, per-tenant counters last (writers
+        // bump tenant-first), so sum(per_tenant) >= total always holds in
+        // one snapshot and equality holds at quiescence
         let [p50, p90, p99] = self.shared.latencies.lock().unwrap().p50_p90_p99();
         let completed = self.shared.completed.load(Ordering::Relaxed);
+        let rejected = self.shared.rejected.load(Ordering::Relaxed);
+        let dropped = self.shared.dropped.load(Ordering::Relaxed);
+        let quota_drops = self.shared.quota_drops.load(Ordering::Relaxed);
         let fused_ops = self.shared.fused_ops.load(Ordering::Relaxed);
         let mut per_shard = Vec::with_capacity(self.shared.shards.len());
         let (mut batches, mut batched) = (0u64, 0u64);
@@ -671,11 +800,24 @@ impl Service {
             }
             None => (0, 0),
         };
+        let per_tenant = self.registry.tenant_stats();
+        #[cfg(debug_assertions)]
+        {
+            let sum = |f: fn(&TenantStats) -> u64| per_tenant.iter().map(f).sum::<u64>();
+            debug_assert!(sum(|t| t.completed) >= completed, "per-tenant completed undercounts");
+            debug_assert!(sum(|t| t.dropped) >= dropped, "per-tenant dropped undercounts");
+            debug_assert!(sum(|t| t.rejected) >= rejected, "per-tenant rejected undercounts");
+            debug_assert!(
+                sum(|t| t.quota_drops) >= quota_drops,
+                "per-tenant quota_drops undercounts"
+            );
+        }
         let elapsed = self.started.elapsed().as_secs_f64();
         ServiceStats {
             completed,
-            rejected: self.shared.rejected.load(Ordering::Relaxed),
-            dropped: self.shared.dropped.load(Ordering::Relaxed),
+            rejected,
+            dropped,
+            quota_drops,
             batches,
             mean_batch: if batches == 0 { 0.0 } else { batched as f64 / batches as f64 },
             latency_p50_us: p50 * 1e6,
@@ -685,16 +827,23 @@ impl Service {
             fused_ops,
             throughput_ops: fused_ops as f64 / elapsed,
             scratch_bytes: self.shared.scratch.load(Ordering::Relaxed),
-            // the CURRENT snapshot's report (a hot-swap recompile updates
-            // it); loading here may pay the first post-swap recompile,
-            // which stats consumers can afford
-            opt: self
-                .programs
-                .as_ref()
-                .and_then(|p| p.load().1.opt_report().cloned()),
+            // the default tenant's CURRENT snapshot report (a hot-swap
+            // recompile updates it); loading here may pay the first
+            // post-swap recompile, which stats consumers can afford.
+            // None for the interpreted backend or a worker-less service,
+            // matching the pre-registry surface.
+            opt: if self.cfg.workers > 0 && self.cfg.backend == Backend::Compiled {
+                self.registry
+                    .resolve(ModelId::DEFAULT)
+                    .and_then(|t| t.programs().load().1.opt_report().cloned())
+            } else {
+                None
+            },
             local_pops,
             steals,
             per_shard,
+            per_tenant,
+            arena: self.registry.arena_stats(),
         }
     }
 
@@ -711,12 +860,12 @@ impl Service {
         self.txs.read().unwrap().is_none()
     }
 
-    /// Input width of the current model snapshot. Wire front ends advertise
-    /// this in `stats` frames so remote clients can size requests without
-    /// holding the checkpoint; it moves when [`Service::replace_model`]
-    /// installs a different-width model.
+    /// Input width of the default tenant's current snapshot (`0` when no
+    /// default tenant is loaded). Wire front ends advertise this in
+    /// `stats` frames so remote clients can size requests without holding
+    /// the checkpoint; per-tenant widths come from the registry.
     pub fn input_width(&self) -> usize {
-        self.cell.input_width()
+        self.registry.resolve(ModelId::DEFAULT).map(|t| t.input_width()).unwrap_or(0)
     }
 
     /// Stop the plane and join its threads. Graceful: everything already
@@ -744,18 +893,14 @@ impl Drop for Service {
     }
 }
 
-/// Per-executor execution resources, fixed at service start.
-#[derive(Clone)]
-enum WorkerBackend {
-    Compiled(Arc<ProgramCell>),
-    Interpreted(Arc<NetlistCell>),
-}
-
 /// Pipeline stage 1, one per shard — sole owner of its admission receiver.
-/// Every dispatch decision comes from [`batcher::Policy::decide`] via
-/// [`batcher::collect_with`]; formed batches go onto this shard's deque in
-/// the work-stealing pool. Exits when admission is disconnected and
-/// drained, closing its producer handle so the pool can wind down.
+/// Requests are split into per-tenant queues and dispatched deficit-round-
+/// robin by [`batcher::DrrCollector`] (dispatch conditions identical to
+/// [`batcher::Policy::decide`]; single-tenant traffic degenerates to the
+/// [`batcher::collect_with`] pipeline batch-for-batch); formed batches are
+/// single-tenant and go onto this shard's deque in the work-stealing pool.
+/// Exits when admission is disconnected and drained, closing its producer
+/// handle so the pool can wind down.
 fn dispatcher_loop(
     shard: usize,
     rx: Receiver<Pending>,
@@ -765,7 +910,13 @@ fn dispatcher_loop(
     drain: Arc<DrainGate>,
 ) {
     let mut cs = batcher::CollectStats::default();
-    while let Some(batch) = batcher::collect_with(&rx, &policy, &mut cs) {
+    let mut drr = DrrCollector::new(policy);
+    while let Some(batch) = drr.next(&rx, &mut cs) {
+        // per-tenant formation accounting, tenant counter first (the DRR
+        // collector never mixes tenants within a batch)
+        let tc = batch.items[0].tenant.counters();
+        tc.batches.fetch_add(1, Ordering::Relaxed);
+        tc.batch_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
         shared.shards[shard].publish(&cs);
         // admission slots just freed: wake submitters parked on backpressure
         // (before push, which may itself block on a full deque)
@@ -784,7 +935,7 @@ fn dispatcher_loop(
 fn executor_loop(
     pool: Arc<WorkPool<Batch<Pending>>>,
     home: usize,
-    backend: WorkerBackend,
+    warm: Option<Arc<ProgramCell>>,
     shared: Arc<Shared>,
     cfg: ServiceCfg,
 ) {
@@ -798,44 +949,69 @@ fn executor_loop(
         }
     }
     let _consumer = ConsumerGuard(&pool);
-    // per-executor scratch, reused across batches and hot-swaps; sized so
-    // the compiled hot path never allocates planes after startup. `flat` is
-    // the caller-owned output plane of `run_batch_into`: one flat buffer
-    // per executor instead of a Vec<Vec<i64>> per batch.
-    let mut exec = match &backend {
-        WorkerBackend::Compiled(programs) => {
-            Executor::with_capacity(&programs.load().1, cfg.max_batch)
-        }
-        WorkerBackend::Interpreted(_) => Executor::new(),
+    // per-executor scratch, reused across batches, TENANTS and hot-swaps
+    // (the Executor grows to the largest geometry it serves), warm-sized
+    // from the default tenant so steady state never allocates planes.
+    // `flat` is the caller-owned output plane of `run_batch_into`; `flat2`
+    // is the canaried rows' plane of the same batch.
+    let mut exec = match &warm {
+        Some(programs) => Executor::with_capacity(&programs.load().1, cfg.max_batch),
+        None => Executor::new(),
     };
     let mut flat: Vec<i64> = Vec::new();
+    let mut flat2: Vec<i64> = Vec::new();
     while let Some((src_shard, batch)) = pool.pop(home) {
-        execute_batch(batch, src_shard, &backend, &mut exec, &mut flat, &shared, &cfg);
+        execute_batch(batch, src_shard, &mut exec, &mut flat, &mut flat2, &shared, &cfg);
     }
     // pool drained and every dispatcher closed: graceful exit
 }
 
-/// Run one batch on the backend and complete its requests. `src_shard` is
-/// the admission shard whose dispatcher formed the batch (it may differ
-/// from the executor's home shard — that's a steal).
+/// Index of the largest sum, ties to the lowest index — the class an
+/// argmax head predicts; canary agreement compares these per row.
+fn argmax(sums: &[i64]) -> usize {
+    let mut best = 0;
+    for (i, v) in sums.iter().enumerate().skip(1) {
+        if *v > sums[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Run one (single-tenant) batch on its tenant's snapshot and complete
+/// its requests. `src_shard` is the admission shard whose dispatcher
+/// formed the batch (it may differ from the executor's home shard —
+/// that's a steal). When the tenant has a canary, the canaried row subset
+/// ALSO runs on the canary program: those rows answer from the canary,
+/// and their argmax is scored against the primary (which ran for every
+/// row) into the tenant's live agreement counters.
 fn execute_batch(
     batch: Batch<Pending>,
     src_shard: usize,
-    backend: &WorkerBackend,
     exec: &mut Executor,
     flat: &mut Vec<i64>,
+    flat2: &mut Vec<i64>,
     shared: &Shared,
     cfg: &ServiceCfg,
 ) {
     let items = batch.items;
+    // the batch carries its tenant: executors never touch the registry,
+    // and an unloaded tenant's snapshot lives until this drains
+    let tenant = Arc::clone(&items[0].tenant);
+    debug_assert!(
+        items.iter().all(|p| p.req.model == items[0].req.model),
+        "DRR batches are single-tenant"
+    );
+    let canary = tenant.canary_snapshot();
+    let (mut canary_rows, mut canary_agree) = (0u64, 0u64);
     // batch-consistent snapshot: a concurrent hot-swap applies to the
     // NEXT batch, never mid-batch (PR-region semantics). Requests whose
     // width no longer matches the snapshot (admission raced a
     // whole-model replace) yield None: their reply channel is dropped
     // instead of corrupting co-batched samples.
-    let outputs: Vec<Option<Vec<i64>>> = match backend {
-        WorkerBackend::Compiled(programs) => {
-            let (net, prog) = programs.load();
+    let outputs: Vec<Option<Vec<i64>>> = match cfg.backend {
+        Backend::Compiled => {
+            let (net, prog) = tenant.programs().load();
             let d_in = prog.d_in();
             let d_out = prog.d_out();
             let rows: Vec<&[u32]> = items
@@ -849,6 +1025,45 @@ fn execute_batch(
             shared
                 .fused_ops
                 .fetch_add((rows.len() * prog.n_ops()) as u64, Ordering::Relaxed);
+            // canary split: claim one global sequence slot per valid row
+            // (exact percentages regardless of batching), run the chosen
+            // subset on the canary program into flat2, score agreement
+            let mask: Vec<bool> = match &canary {
+                Some(c) => rows.iter().map(|_| c.take_row()).collect(),
+                None => Vec::new(),
+            };
+            if let Some(c) = canary.as_ref().filter(|_| mask.contains(&true)) {
+                let crows: Vec<&[u32]> =
+                    rows.iter().zip(&mask).filter_map(|(r, &m)| m.then_some(*r)).collect();
+                let (cnet, cprog) = c.programs().load();
+                exec.run_batch_into(&cprog, &crows, flat2);
+                shared
+                    .fused_ops
+                    .fetch_add((crows.len() * cprog.n_ops()) as u64, Ordering::Relaxed);
+                let mut ci = 0usize;
+                for (i, &m) in mask.iter().enumerate() {
+                    if !m {
+                        continue;
+                    }
+                    let prim = &flat[i * d_out..(i + 1) * d_out];
+                    let can = &flat2[ci * d_out..(ci + 1) * d_out];
+                    if argmax(prim) == argmax(can) {
+                        canary_agree += 1;
+                    }
+                    ci += 1;
+                }
+                canary_rows = crows.len() as u64;
+                if cfg!(debug_assertions) {
+                    let mut ev = sim::Evaluator::new(&cnet);
+                    for (k, row) in crows.iter().enumerate() {
+                        debug_assert_eq!(
+                            ev.eval(row),
+                            &flat2[k * d_out..(k + 1) * d_out],
+                            "canary engine/sim divergence"
+                        );
+                    }
+                }
+            }
             shared.scratch.fetch_max(exec.scratch_bytes() as u64, Ordering::Relaxed);
             // checked invariant: the compiled program IS the netlist
             if cfg!(debug_assertions) {
@@ -861,37 +1076,63 @@ fn execute_batch(
                     );
                 }
             }
+            // slice responses back out: canaried rows answer from the
+            // canary plane, everything else from the primary plane
             let mut next = 0usize;
-            items
-                .iter()
-                .map(|p| {
-                    (p.req.codes.len() == d_in).then(|| {
-                        let sums = flat[next * d_out..(next + 1) * d_out].to_vec();
-                        next += 1;
-                        sums
-                    })
-                })
-                .collect()
+            let mut crow = 0usize;
+            let mut outs = Vec::with_capacity(items.len());
+            for p in &items {
+                outs.push((p.req.codes.len() == d_in).then(|| {
+                    let i = next;
+                    next += 1;
+                    if mask.get(i).copied().unwrap_or(false) {
+                        let k = crow;
+                        crow += 1;
+                        flat2[k * d_out..(k + 1) * d_out].to_vec()
+                    } else {
+                        flat[i * d_out..(i + 1) * d_out].to_vec()
+                    }
+                }));
+            }
+            outs
         }
-        WorkerBackend::Interpreted(cell) => {
-            let net = cell.load();
+        Backend::Interpreted => {
+            let net = tenant.cell().load();
             let d_in = net.input_width();
             let ops_per_sample = net.n_luts() as u64;
             let mut ev = sim::Evaluator::new(&net);
+            let cpair = canary.as_ref().map(|c| (c.cell().load(), c));
+            let mut cev =
+                cpair.as_ref().map(|(n, _)| (sim::Evaluator::new(n), n.n_luts() as u64));
             let mut valid = 0u64;
-            let outs: Vec<Option<Vec<i64>>> = items
-                .iter()
-                .map(|p| {
-                    (p.req.codes.len() == d_in).then(|| {
-                        valid += 1;
-                        ev.eval(&p.req.codes).to_vec()
-                    })
-                })
-                .collect();
+            let mut outs = Vec::with_capacity(items.len());
+            for p in &items {
+                outs.push((p.req.codes.len() == d_in).then(|| {
+                    valid += 1;
+                    let prim = ev.eval(&p.req.codes).to_vec();
+                    if let (Some((_, c)), Some((cev, cops))) = (&cpair, &mut cev) {
+                        if c.take_row() {
+                            let can = cev.eval(&p.req.codes).to_vec();
+                            canary_rows += 1;
+                            shared.fused_ops.fetch_add(*cops, Ordering::Relaxed);
+                            if argmax(&can) == argmax(&prim) {
+                                canary_agree += 1;
+                            }
+                            return can;
+                        }
+                    }
+                    prim
+                }));
+            }
             shared.fused_ops.fetch_add(valid * ops_per_sample, Ordering::Relaxed);
             outs
         }
     };
+    if canary_rows > 0 {
+        let tc = tenant.counters();
+        tc.canary_rows.fetch_add(canary_rows, Ordering::Relaxed);
+        tc.canary_agree.fetch_add(canary_agree, Ordering::Relaxed);
+    }
     if !cfg.exec_delay.is_zero() {
         let shard_hit = match cfg.exec_delay_shard {
             Some(s) => s == src_shard,
@@ -916,10 +1157,19 @@ fn execute_batch(
         }
     }
     if dropped > 0 {
+        // tenant counter first, service-wide second (stats consistency)
+        tenant.counters().dropped.fetch_add(dropped, Ordering::Relaxed);
         shared.dropped.fetch_add(dropped, Ordering::Relaxed);
     }
     if !done.is_empty() {
-        // one lock acquisition for the whole batch, not one per response
+        // one lock acquisition per reservoir for the whole batch, not one
+        // per response; both store seconds
+        {
+            let mut lat = tenant.counters().latencies.lock().unwrap();
+            for (_, _, latency) in &done {
+                lat.push(latency.as_secs_f64());
+            }
+        }
         {
             let mut lat = shared.latencies.lock().unwrap();
             for (_, _, latency) in &done {
@@ -927,7 +1177,8 @@ fn execute_batch(
             }
         }
         // publish counts before replying so a client holding its response
-        // always observes itself in `completed`
+        // always observes itself in `completed` (tenant first, again)
+        tenant.counters().completed.fetch_add(done.len() as u64, Ordering::Relaxed);
         shared.completed.fetch_add(done.len() as u64, Ordering::Relaxed);
         for (p, sums, latency) in done {
             let _ = p.reply.send(Response { id: p.req.id, sums, latency });
@@ -1502,5 +1753,295 @@ mod tests {
         assert!(st.latency_p90_us >= st.latency_p50_us);
         assert!(st.latency_p99_us >= st.latency_p90_us);
         svc.shutdown();
+    }
+
+    // -- multi-tenant registry serving -----------------------------------
+
+    fn build_net(dims: &[usize], bits: &[u32], seed: u64) -> Arc<Netlist> {
+        let ck = synthetic(dims, bits, seed);
+        let tables = lut::from_checkpoint(&ck);
+        Arc::new(Netlist::build(&ck, &tables, 2))
+    }
+
+    #[test]
+    fn single_tenant_service_degenerates_to_default_tenant() {
+        // the N=1 registry IS the pre-registry plane: one "default"
+        // tenant whose counters equal the service totals at quiescence
+        let (net, svc) = service(ServiceCfg::default());
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let codes: Vec<u32> = (0..4).map(|_| rng.below(16) as u32).collect();
+            let want = sim::eval(&net, &codes);
+            assert_eq!(svc.submit_blocking(codes).unwrap().sums, want);
+        }
+        svc.shutdown();
+        let st = svc.stats();
+        assert_eq!(st.per_tenant.len(), 1);
+        let t = &st.per_tenant[0];
+        assert_eq!(t.name, "default");
+        assert_eq!(t.id, ModelId::DEFAULT.raw());
+        assert!(!t.retired);
+        assert_eq!(t.completed, st.completed);
+        assert_eq!(t.admitted, st.per_shard.iter().map(|s| s.admitted).sum::<u64>());
+        assert_eq!(t.batches, st.batches);
+        assert_eq!(t.mean_batch, st.mean_batch);
+        assert_eq!(t.dropped, 0);
+        assert_eq!(t.quota_drops, 0);
+        assert_eq!(t.inflight, 0, "quota gauge drains with the plane");
+        assert!(t.latency_p50_us > 0.0);
+        assert_eq!(st.quota_drops, 0);
+    }
+
+    #[test]
+    fn multi_tenant_routing_is_bit_exact_per_tenant() {
+        // two tenants with DIFFERENT geometries behind one plane: every
+        // response must come from the tenant the request named
+        let net_a = build_net(&[4, 3, 2], &[4, 5, 6], 2024);
+        let net_b = build_net(&[6, 4, 3], &[3, 5, 6], 777);
+        let reg = Arc::new(ModelRegistry::new(OptLevel::default()));
+        let a = reg.load("a", Arc::clone(&net_a)).unwrap();
+        let b = reg.load("b", Arc::clone(&net_b)).unwrap();
+        let svc = Service::start_registry(
+            Arc::clone(&reg),
+            ServiceCfg { workers: 4, shards: 2, ..Default::default() },
+        );
+        let mut rng = Rng::new(11);
+        let mut pending = Vec::new();
+        for i in 0..120 {
+            let (model, net, d, bits) =
+                if i % 2 == 0 { (a, &net_a, 4, 16) } else { (b, &net_b, 6, 8) };
+            let codes: Vec<u32> = (0..d).map(|_| rng.below(bits) as u32).collect();
+            let want = sim::eval(net, &codes);
+            pending.push((svc.submit_model(model, codes).unwrap(), want));
+        }
+        for (rx, want) in pending {
+            assert_eq!(rx.recv().unwrap().sums, want);
+        }
+        // width checks are per-tenant: a's width is Invalid on b
+        assert!(matches!(svc.submit_model(b, vec![0; 4]), Err(SubmitError::Invalid(_))));
+        // unknown ids are a typed, terminal error
+        assert!(matches!(
+            svc.submit_model(ModelId::from_raw(99), vec![0; 4]),
+            Err(SubmitError::UnknownModel(_))
+        ));
+        svc.shutdown();
+        let st = svc.stats();
+        assert_eq!(st.completed, 120);
+        assert_eq!(st.per_tenant.len(), 2);
+        for t in &st.per_tenant {
+            assert_eq!(t.completed, 60, "{t:?}");
+            assert!(t.batches >= 1);
+            assert!(t.latency_p99_us >= t.latency_p50_us);
+        }
+        assert_eq!(st.per_tenant.iter().map(|t| t.completed).sum::<u64>(), st.completed);
+        assert_eq!(st.per_tenant.iter().map(|t| t.batches).sum::<u64>(), st.batches);
+        assert_eq!(
+            st.per_tenant.iter().map(|t| t.admitted).sum::<u64>(),
+            st.per_shard.iter().map(|s| s.admitted).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn quota_caps_in_flight_per_tenant() {
+        // zero workers: admitted requests never drain, so the quota gauge
+        // saturates deterministically; the unlimited neighbor is untouched
+        let reg = Arc::new(ModelRegistry::new(OptLevel::default()));
+        let q = reg.load_with_quota("q", build_net(&[2, 2], &[3, 6], 7), 3).unwrap();
+        let free = reg.load("free", build_net(&[2, 2], &[3, 6], 8)).unwrap();
+        let svc = Service::start_registry(
+            Arc::clone(&reg),
+            ServiceCfg { workers: 0, queue_depth: 64, ..Default::default() },
+        );
+        let mut rxs = Vec::new();
+        let mut drops = 0;
+        for _ in 0..5 {
+            match svc.submit_model(q, vec![0, 1]) {
+                Ok(rx) => rxs.push(rx),
+                Err(e) => {
+                    assert_eq!(e, SubmitError::Backpressure);
+                    drops += 1;
+                }
+            }
+        }
+        assert_eq!(rxs.len(), 3);
+        assert_eq!(drops, 2);
+        for _ in 0..5 {
+            rxs.push(svc.submit_model(free, vec![1, 0]).unwrap());
+        }
+        let st = svc.stats();
+        assert_eq!(st.quota_drops, 2);
+        assert_eq!(st.rejected, 0, "quota drops are not queue backpressure");
+        let tq = st.per_tenant.iter().find(|t| t.name == "q").unwrap();
+        assert_eq!(tq.quota_drops, 2);
+        assert_eq!(tq.inflight, 3);
+        assert_eq!(tq.admitted, 3);
+        let tf = st.per_tenant.iter().find(|t| t.name == "free").unwrap();
+        assert_eq!(tf.quota_drops, 0);
+        assert_eq!(tf.admitted, 5);
+        // shutdown discards the parked requests; the RAII guards must
+        // drain the in-flight gauges with them
+        svc.shutdown();
+        drop(rxs);
+        let st = svc.stats();
+        assert!(st.per_tenant.iter().all(|t| t.inflight == 0), "{:?}", st.per_tenant);
+    }
+
+    #[test]
+    fn canary_accounting_is_exact_and_bit_exact() {
+        // phase 1: canary == primary at 50% over 100 rows -> EXACTLY 50
+        // canaried rows, 100% agreement, responses bit-exact either way
+        let net = build_net(&[4, 3, 2], &[4, 5, 6], 2024);
+        let reg = Arc::new(ModelRegistry::new(OptLevel::default()));
+        let m = reg.load("m", Arc::clone(&net)).unwrap();
+        reg.set_canary("m", Arc::clone(&net), 50).unwrap();
+        let svc = Service::start_registry(
+            Arc::clone(&reg),
+            ServiceCfg { workers: 2, shards: 2, ..Default::default() },
+        );
+        let mut rng = Rng::new(21);
+        let mut pending = Vec::new();
+        for _ in 0..100 {
+            let codes: Vec<u32> = (0..4).map(|_| rng.below(16) as u32).collect();
+            let want = sim::eval(&net, &codes);
+            pending.push((svc.submit_model(m, codes).unwrap(), want));
+        }
+        for (rx, want) in pending {
+            assert_eq!(rx.recv().unwrap().sums, want);
+        }
+        let st = svc.stats();
+        let t = &st.per_tenant[0];
+        assert_eq!(t.canary_rows, 50, "50% of 100 rows, exactly");
+        assert_eq!(t.canary_agree, 50, "identical checkpoints always agree");
+        assert_eq!(t.canary_agreement, 1.0);
+        // phase 2: a DIFFERENT same-geometry checkpoint at 100% — every
+        // row is answered by the canary, bit-exact with ITS netlist
+        let net2 = build_net(&[4, 3, 2], &[4, 5, 6], 4242);
+        reg.set_canary("m", Arc::clone(&net2), 100).unwrap();
+        let mut pending = Vec::new();
+        for _ in 0..40 {
+            let codes: Vec<u32> = (0..4).map(|_| rng.below(16) as u32).collect();
+            let want = sim::eval(&net2, &codes);
+            pending.push((svc.submit_model(m, codes).unwrap(), want));
+        }
+        for (rx, want) in pending {
+            assert_eq!(rx.recv().unwrap().sums, want, "100% canary answers from net2");
+        }
+        let st = svc.stats();
+        let t = &st.per_tenant[0];
+        assert_eq!(t.canary_rows, 90, "50 from phase 1 + 40 from phase 2");
+        assert!(t.canary_agree >= 50 && t.canary_agree <= 90);
+        // clearing stops the split; counters freeze
+        reg.clear_canary("m").unwrap();
+        let codes = vec![1u32, 2, 3, 0];
+        let got = svc.submit_blocking_model(m, codes.clone()).unwrap();
+        assert_eq!(got.sums, sim::eval(&net, &codes));
+        assert_eq!(svc.stats().per_tenant[0].canary_rows, 90);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn registry_load_unload_swap_under_concurrent_traffic() {
+        let net_a = build_net(&[4, 3, 2], &[4, 5, 6], 2024);
+        let reg = Arc::new(ModelRegistry::new(OptLevel::default()));
+        let a = reg.load("a", Arc::clone(&net_a)).unwrap();
+        let svc = Arc::new(Service::start_registry(
+            Arc::clone(&reg),
+            ServiceCfg { workers: 4, shards: 2, ..Default::default() },
+        ));
+        // background clients hammer tenant "a" throughout the churn
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let svc = Arc::clone(&svc);
+            let net = Arc::clone(&net_a);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(300 + t);
+                for _ in 0..60 {
+                    let codes: Vec<u32> = (0..4).map(|_| rng.below(16) as u32).collect();
+                    let want = sim::eval(&net, &codes);
+                    assert_eq!(svc.submit_blocking_model(a, codes).unwrap().sums, want);
+                }
+            }));
+        }
+        // meanwhile: load a second tenant, serve it, intern, unload it
+        let net_b = build_net(&[6, 4, 3], &[3, 5, 6], 777);
+        let b = reg.load("b", Arc::clone(&net_b)).unwrap();
+        let mut rng = Rng::new(99);
+        for _ in 0..20 {
+            let codes: Vec<u32> = (0..6).map(|_| rng.below(8) as u32).collect();
+            let want = sim::eval(&net_b, &codes);
+            assert_eq!(svc.submit_blocking_model(b, codes).unwrap().sums, want);
+        }
+        let arena = reg.reintern();
+        assert_eq!(arena.programs, 2);
+        reg.unload("b").unwrap();
+        assert!(matches!(svc.submit_model(b, vec![0; 6]), Err(SubmitError::UnknownModel(_))));
+        // swap "a" wholesale to a different-geometry model mid-traffic is
+        // NOT safe for the asserting clients above, so swap after joining
+        for h in handles {
+            h.join().unwrap();
+        }
+        reg.swap("a", Arc::clone(&net_b)).unwrap();
+        let codes: Vec<u32> = vec![1, 2, 3, 0, 1, 2];
+        let got = svc.submit_blocking_model(a, codes.clone()).unwrap();
+        assert_eq!(got.sums, sim::eval(&net_b, &codes));
+        svc.shutdown();
+        let st = svc.stats();
+        assert_eq!(st.completed, 4 * 60 + 20 + 1);
+        let tb = st.per_tenant.iter().find(|t| t.name == "b").unwrap();
+        assert!(tb.retired, "unloaded tenant keeps frozen history");
+        assert_eq!(tb.completed, 20);
+        assert_eq!(st.per_tenant.iter().map(|t| t.completed).sum::<u64>(), st.completed);
+    }
+
+    #[test]
+    fn interleaved_tenants_form_single_tenant_batches() {
+        // alternate two tenants through ONE shard's dispatcher: the DRR
+        // collector must never mix tenants in a batch (execute_batch
+        // debug_asserts it — a mixed batch would panic the worker and hang
+        // this test), and the per-tenant batch counters must partition the
+        // service total. Deterministic starvation coverage for the DRR
+        // rotation itself lives in batcher::tests.
+        let net_a = build_net(&[4, 3, 2], &[4, 5, 6], 1);
+        let net_b = build_net(&[4, 3, 2], &[4, 5, 6], 2);
+        let reg = Arc::new(ModelRegistry::new(OptLevel::default()));
+        let a = reg.load("a", Arc::clone(&net_a)).unwrap();
+        let b = reg.load("b", Arc::clone(&net_b)).unwrap();
+        let svc = Service::start_registry(
+            Arc::clone(&reg),
+            ServiceCfg {
+                workers: 2,
+                shards: 1,
+                max_batch: 8,
+                max_wait: Duration::from_micros(100),
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::new(5);
+        let mut pending = Vec::new();
+        for i in 0..80 {
+            let (model, net) = if i % 2 == 0 { (a, &net_a) } else { (b, &net_b) };
+            let codes: Vec<u32> = (0..4).map(|_| rng.below(16) as u32).collect();
+            let want = sim::eval(net, &codes);
+            pending.push((svc.submit_to_model(0, model, codes).unwrap(), want));
+        }
+        for (rx, want) in pending {
+            assert_eq!(rx.recv().unwrap().sums, want);
+        }
+        svc.shutdown();
+        let st = svc.stats();
+        assert_eq!(st.completed, 80);
+        // single-tenant batches: each tenant's 40 rows need >= 5 batches of
+        // <= max_batch, and the two breakdowns partition the total exactly
+        let ta = st.per_tenant.iter().find(|t| t.name == "a").unwrap();
+        let tb = st.per_tenant.iter().find(|t| t.name == "b").unwrap();
+        assert_eq!((ta.completed, tb.completed), (40, 40));
+        assert!(ta.batches >= 5 && tb.batches >= 5, "{ta:?} {tb:?}");
+        assert!(ta.mean_batch <= 8.0 && tb.mean_batch <= 8.0);
+        assert_eq!(ta.batches + tb.batches, st.batches);
+        assert_eq!(
+            st.per_shard.iter().map(|s| s.batches).sum::<u64>(),
+            st.batches,
+            "one shard formed every batch"
+        );
     }
 }

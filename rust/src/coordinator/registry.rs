@@ -1,0 +1,673 @@
+//! Multi-tenant model registry: N independently loaded checkpoints served
+//! by ONE coordinator plane.
+//!
+//! ```text
+//!                 ModelRegistry (name -> ModelId -> Tenant)
+//!   "default" (id 0) ─ Tenant { NetlistCell ─ ProgramCell @ level, quota,
+//!   "ft-a"    (id 1) ─ Tenant {   per-tenant counters (survive unload),
+//!   "ft-b"    (id 2) ─ Tenant {   optional Canary: 2nd checkpoint, x% of
+//!        ...                      rows, live argmax agreement }
+//!          │
+//!          └── reintern(): cross-tenant table interning — identical tables
+//!              across fine-tuned variants materialize ONCE in a shared
+//!              arena ([`InternStats`]: shared vs private bytes), programs
+//!              republished in place via [`ProgramCell::install`]
+//! ```
+//!
+//! Each tenant owns its swappable netlist ([`NetlistCell`]) and compiled
+//! program cache ([`ProgramCell`]) **pinned at the tenant's own
+//! [`OptLevel`]** — a registry can serve one tenant at `Full` next to an
+//! A/B twin at `None`. Tenants are resolved once at admission into an
+//! `Arc<Tenant>` carried by the request, so executors never touch the
+//! registry lock and an unloaded tenant's snapshot stays alive exactly
+//! until its in-flight work drains.
+//!
+//! Counters are `Arc`-shared with the [`Tenant`] and moved to a retired
+//! list on unload, so a stats snapshot taken after `unload` still accounts
+//! for every request the plane ever completed (totals stay consistent).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{bail, Result};
+
+use crate::engine::{intern_tables, CompiledProgram, InternStats, OptLevel, ProgramCell};
+use crate::netlist::hotswap::NetlistCell;
+use crate::netlist::Netlist;
+use crate::util::Reservoir;
+
+use super::LATENCY_RESERVOIR;
+
+/// Dense tenant identifier, assigned at load time in load order. Threads
+/// through [`super::Request`] and the batcher's fairness key; the wire
+/// layer maps names to ids once per frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelId(u32);
+
+impl ModelId {
+    /// The first tenant loaded into a registry. Single-tenant services
+    /// (and wire frames without a `model` field) route here, which is what
+    /// makes the N=1 registry degenerate to the pre-registry plane.
+    pub const DEFAULT: ModelId = ModelId(0);
+
+    pub fn raw(self) -> u32 {
+        self.0
+    }
+
+    /// Construct from a raw id (wire plumbing and tests; resolution still
+    /// goes through the registry, unknown ids are refused at admission).
+    pub fn from_raw(raw: u32) -> ModelId {
+        ModelId(raw)
+    }
+}
+
+impl std::fmt::Display for ModelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Per-tenant counters, `Arc`-shared between the live [`Tenant`] and the
+/// registry's retired list so unload never loses accounting. Writers
+/// follow one global ordering rule: **tenant counter first, then the
+/// service-wide counter** — paired with readers doing the opposite
+/// ([`super::Service::stats`] reads globals first), a concurrent snapshot
+/// always observes `sum(per-tenant) >= global`, so the self-consistency
+/// debug assertion is race-free (exact equality holds quiescent).
+pub struct TenantCounters {
+    pub admitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub dropped: AtomicU64,
+    /// Admissions refused because the tenant's in-flight quota was full
+    /// (counted here AND in the service-wide total, never in `rejected`).
+    pub quota_drops: AtomicU64,
+    /// Requests currently inside the plane (admitted, not yet replied);
+    /// maintained by [`InflightGuard`], gates the quota.
+    pub inflight: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_items: AtomicU64,
+    /// Rows routed to the canary checkpoint.
+    pub canary_rows: AtomicU64,
+    /// Canary rows whose argmax agreed with the primary checkpoint.
+    pub canary_agree: AtomicU64,
+    /// Per-tenant latency reservoir (seconds, like the service-wide one).
+    pub latencies: Mutex<Reservoir>,
+}
+
+impl TenantCounters {
+    fn new() -> TenantCounters {
+        TenantCounters {
+            admitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            quota_drops: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_items: AtomicU64::new(0),
+            canary_rows: AtomicU64::new(0),
+            canary_agree: AtomicU64::new(0),
+            latencies: Mutex::new(Reservoir::new(LATENCY_RESERVOIR)),
+        }
+    }
+
+    fn snapshot(&self, name: &str, id: ModelId, retired: bool) -> TenantStats {
+        let [p50, p90, p99] = self.latencies.lock().unwrap().p50_p90_p99();
+        let batches = self.batches.load(Ordering::Relaxed);
+        let items = self.batch_items.load(Ordering::Relaxed);
+        let canary_rows = self.canary_rows.load(Ordering::Relaxed);
+        let canary_agree = self.canary_agree.load(Ordering::Relaxed);
+        TenantStats {
+            name: name.to_string(),
+            id: id.raw(),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            quota_drops: self.quota_drops.load(Ordering::Relaxed),
+            inflight: self.inflight.load(Ordering::Relaxed),
+            batches,
+            mean_batch: if batches == 0 { 0.0 } else { items as f64 / batches as f64 },
+            latency_p50_us: p50 * 1e6,
+            latency_p90_us: p90 * 1e6,
+            latency_p99_us: p99 * 1e6,
+            canary_rows,
+            canary_agree,
+            canary_agreement: if canary_rows == 0 {
+                0.0
+            } else {
+                canary_agree as f64 / canary_rows as f64
+            },
+            input_width: 0,
+            retired,
+        }
+    }
+}
+
+/// One tenant's statistics snapshot (carried in
+/// [`super::ServiceStats::per_tenant`]).
+#[derive(Clone, Debug, Default)]
+pub struct TenantStats {
+    pub name: String,
+    pub id: u32,
+    pub admitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub dropped: u64,
+    pub quota_drops: u64,
+    pub inflight: u64,
+    /// Single-tenant batches formed for this tenant by the DRR dispatchers.
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub latency_p50_us: f64,
+    pub latency_p90_us: f64,
+    pub latency_p99_us: f64,
+    pub canary_rows: u64,
+    pub canary_agree: u64,
+    /// Live argmax agreement fraction (`0.0` before any canary row).
+    pub canary_agreement: f64,
+    /// Current model input width (0 for retired tenants) — advertised on
+    /// the wire so multi-model load generators can synthesize rows without
+    /// a local checkpoint per tenant.
+    pub input_width: u64,
+    /// Tenant was unloaded; counters are frozen history.
+    pub retired: bool,
+}
+
+/// RAII in-flight slot: decrements the tenant's `inflight` gauge when the
+/// request leaves the plane — completed, dropped, rejected after a failed
+/// spill, or discarded by shutdown. Held inside the queued request itself
+/// so every exit path is covered by `Drop`.
+pub struct InflightGuard(Arc<TenantCounters>);
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// A second checkpoint shadowing one tenant: `percent`% of the tenant's
+/// rows are answered by this program instead of the primary, and every
+/// such row's argmax is compared against the primary's (which still runs
+/// for the whole batch) into the tenant's agreement counters.
+pub struct Canary {
+    cell: Arc<NetlistCell>,
+    programs: Arc<ProgramCell>,
+    percent: u32,
+    /// Global row sequence. Row k is canaried iff `k % 100 < percent`, so
+    /// the first N rows contain **exactly** `N * percent / 100` canary
+    /// rows (N a multiple of 100) regardless of batching or executor
+    /// interleaving — deterministic accounting under concurrency.
+    seq: AtomicU64,
+}
+
+impl Canary {
+    pub fn cell(&self) -> &Arc<NetlistCell> {
+        &self.cell
+    }
+
+    pub fn programs(&self) -> &Arc<ProgramCell> {
+        &self.programs
+    }
+
+    pub fn percent(&self) -> u32 {
+        self.percent
+    }
+
+    /// Claim the next row sequence number and decide canary membership.
+    pub fn take_row(&self) -> bool {
+        self.seq.fetch_add(1, Ordering::Relaxed) % 100 < self.percent as u64
+    }
+}
+
+/// One loaded checkpoint: swappable netlist, compiled-program cache pinned
+/// at the tenant's level, quota, counters, optional canary.
+pub struct Tenant {
+    id: ModelId,
+    name: String,
+    cell: Arc<NetlistCell>,
+    programs: Arc<ProgramCell>,
+    level: OptLevel,
+    /// Max in-flight requests admitted for this tenant; `0` = unlimited.
+    quota: u64,
+    canary: RwLock<Option<Arc<Canary>>>,
+    counters: Arc<TenantCounters>,
+}
+
+impl Tenant {
+    pub fn id(&self) -> ModelId {
+        self.id
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn level(&self) -> OptLevel {
+        self.level
+    }
+
+    pub fn quota(&self) -> u64 {
+        self.quota
+    }
+
+    pub fn cell(&self) -> &Arc<NetlistCell> {
+        &self.cell
+    }
+
+    pub fn programs(&self) -> &Arc<ProgramCell> {
+        &self.programs
+    }
+
+    pub fn counters(&self) -> &Arc<TenantCounters> {
+        &self.counters
+    }
+
+    /// Input width of the tenant's current snapshot.
+    pub fn input_width(&self) -> usize {
+        self.cell.input_width()
+    }
+
+    /// The canary active right now (batch-consistent: executors snapshot
+    /// once per batch).
+    pub fn canary_snapshot(&self) -> Option<Arc<Canary>> {
+        self.canary.read().unwrap().clone()
+    }
+
+    /// Claim an in-flight slot, refusing when the quota is full. The
+    /// increment-then-check shape makes concurrent admits race-free: the
+    /// loser of an over-admit race backs its increment out.
+    pub fn try_admit(&self) -> Option<InflightGuard> {
+        let prev = self.counters.inflight.fetch_add(1, Ordering::Relaxed);
+        if self.quota > 0 && prev >= self.quota {
+            self.counters.inflight.fetch_sub(1, Ordering::Relaxed);
+            return None;
+        }
+        Some(InflightGuard(Arc::clone(&self.counters)))
+    }
+}
+
+struct Retired {
+    name: String,
+    id: ModelId,
+    counters: Arc<TenantCounters>,
+}
+
+struct Inner {
+    by_id: HashMap<u32, Arc<Tenant>>,
+    by_name: HashMap<String, u32>,
+    retired: Vec<Retired>,
+    next_id: u32,
+    /// Result of the last [`ModelRegistry::reintern`] pass; invalidated by
+    /// load/unload/swap/canary changes (the arena composition changed).
+    arena: Option<InternStats>,
+}
+
+/// The registry: name/id → [`Tenant`], load/unload/swap at runtime, plus
+/// the cross-tenant arena interning pass.
+pub struct ModelRegistry {
+    level: OptLevel,
+    inner: RwLock<Inner>,
+}
+
+impl ModelRegistry {
+    /// Empty registry; tenants loaded later compile at `level` unless
+    /// loaded with an explicit override.
+    pub fn new(level: OptLevel) -> ModelRegistry {
+        ModelRegistry {
+            level,
+            inner: RwLock::new(Inner {
+                by_id: HashMap::new(),
+                by_name: HashMap::new(),
+                retired: Vec::new(),
+                next_id: 0,
+                arena: None,
+            }),
+        }
+    }
+
+    /// Single-tenant registry over an existing swappable cell — the
+    /// compatibility constructor [`super::Service::start_swappable`] uses;
+    /// the one tenant is named `"default"` and gets [`ModelId::DEFAULT`].
+    pub fn single(cell: Arc<NetlistCell>, level: OptLevel) -> ModelRegistry {
+        let reg = ModelRegistry::new(level);
+        reg.load_cell("default", cell, 0).expect("fresh registry accepts the first tenant");
+        reg
+    }
+
+    /// The level tenants compile at by default.
+    pub fn level(&self) -> OptLevel {
+        self.level
+    }
+
+    /// Load a checkpoint as a new tenant (unlimited quota).
+    pub fn load(&self, name: &str, net: Arc<Netlist>) -> Result<ModelId> {
+        self.load_cell(name, Arc::new(NetlistCell::new(net)), 0)
+    }
+
+    /// Load with an in-flight quota (`0` = unlimited).
+    pub fn load_with_quota(&self, name: &str, net: Arc<Netlist>, quota: u64) -> Result<ModelId> {
+        self.load_cell(name, Arc::new(NetlistCell::new(net)), quota)
+    }
+
+    /// Load over a caller-owned swappable cell.
+    pub fn load_cell(&self, name: &str, cell: Arc<NetlistCell>, quota: u64) -> Result<ModelId> {
+        if name.is_empty() {
+            bail!("tenant name must be non-empty");
+        }
+        // compile OUTSIDE the registry lock: loads must not stall the
+        // admission hot path behind a fresh tenant's first compile
+        let programs = Arc::new(ProgramCell::with_level(Arc::clone(&cell), self.level));
+        let mut inner = self.inner.write().unwrap();
+        if inner.by_name.contains_key(name) {
+            bail!("tenant '{name}' is already loaded");
+        }
+        let id = ModelId(inner.next_id);
+        inner.next_id += 1;
+        let tenant = Arc::new(Tenant {
+            id,
+            name: name.to_string(),
+            cell,
+            programs,
+            level: self.level,
+            quota,
+            canary: RwLock::new(None),
+            counters: Arc::new(TenantCounters::new()),
+        });
+        inner.by_name.insert(name.to_string(), id.raw());
+        inner.by_id.insert(id.raw(), tenant);
+        inner.arena = None;
+        Ok(id)
+    }
+
+    /// Unload a tenant. Its counters move to the retired list (history
+    /// stays in stats); in-flight requests finish on the `Arc<Tenant>`
+    /// they were admitted with.
+    pub fn unload(&self, name: &str) -> Result<()> {
+        let mut inner = self.inner.write().unwrap();
+        let Some(id) = inner.by_name.remove(name) else {
+            bail!("tenant '{name}' is not loaded");
+        };
+        let tenant = inner.by_id.remove(&id).expect("by_name and by_id agree");
+        inner.retired.push(Retired {
+            name: tenant.name.clone(),
+            id: tenant.id,
+            counters: Arc::clone(&tenant.counters),
+        });
+        inner.arena = None;
+        Ok(())
+    }
+
+    /// Swap a tenant's whole checkpoint while serving (in-flight batches
+    /// keep their snapshot — the netlist cell's PR-region semantics).
+    pub fn swap(&self, name: &str, net: Arc<Netlist>) -> Result<()> {
+        let t = self.resolve_name(name).ok_or_else(|| {
+            anyhow::anyhow!("tenant '{name}' is not loaded")
+        })?;
+        t.cell.replace(net);
+        self.inner.write().unwrap().arena = None;
+        Ok(())
+    }
+
+    /// Route `percent`% of `name`'s traffic to a second checkpoint,
+    /// tracking live argmax agreement. The canary must match the primary's
+    /// request/response geometry (rows are shared verbatim).
+    pub fn set_canary(&self, name: &str, net: Arc<Netlist>, percent: u32) -> Result<()> {
+        if percent > 100 {
+            bail!("canary percent {percent} out of range (0..=100)");
+        }
+        let t = self.resolve_name(name).ok_or_else(|| {
+            anyhow::anyhow!("tenant '{name}' is not loaded")
+        })?;
+        let cell = Arc::new(NetlistCell::new(net));
+        let programs = Arc::new(ProgramCell::with_level(Arc::clone(&cell), t.level));
+        let (d_in, d_out) = {
+            let p = programs.load().1;
+            (p.d_in(), p.d_out())
+        };
+        let primary = t.programs.load().1;
+        if d_in != primary.d_in() || d_out != primary.d_out() {
+            bail!(
+                "canary geometry {}x{} != tenant '{name}' geometry {}x{}",
+                d_in,
+                d_out,
+                primary.d_in(),
+                primary.d_out()
+            );
+        }
+        *t.canary.write().unwrap() =
+            Some(Arc::new(Canary { cell, programs, percent, seq: AtomicU64::new(0) }));
+        self.inner.write().unwrap().arena = None;
+        Ok(())
+    }
+
+    /// Stop canarying `name`'s traffic.
+    pub fn clear_canary(&self, name: &str) -> Result<()> {
+        let t = self.resolve_name(name).ok_or_else(|| {
+            anyhow::anyhow!("tenant '{name}' is not loaded")
+        })?;
+        *t.canary.write().unwrap() = None;
+        Ok(())
+    }
+
+    /// Resolve by id — the admission hot path (one shared read lock + one
+    /// hash lookup; executors never call this, they carry the `Arc`).
+    pub fn resolve(&self, id: ModelId) -> Option<Arc<Tenant>> {
+        self.inner.read().unwrap().by_id.get(&id.raw()).cloned()
+    }
+
+    /// Resolve by name — the wire front end's per-frame lookup.
+    pub fn resolve_name(&self, name: &str) -> Option<Arc<Tenant>> {
+        let inner = self.inner.read().unwrap();
+        inner.by_name.get(name).and_then(|id| inner.by_id.get(id)).cloned()
+    }
+
+    /// Name → id without cloning the tenant.
+    pub fn get(&self, name: &str) -> Option<ModelId> {
+        self.inner.read().unwrap().by_name.get(name).copied().map(ModelId)
+    }
+
+    /// Live tenants, sorted by id (stable stats ordering).
+    pub fn tenants(&self) -> Vec<Arc<Tenant>> {
+        let inner = self.inner.read().unwrap();
+        let mut out: Vec<Arc<Tenant>> = inner.by_id.values().cloned().collect();
+        out.sort_by_key(|t| t.id);
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().by_id.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cross-tenant table interning: hash-cons every table across ALL live
+    /// tenants' programs (primaries AND canaries) into one shared arena
+    /// and republish each program in place ([`ProgramCell::install`]).
+    /// Identical tables across fine-tuned variants of one checkpoint are
+    /// materialized once; the returned [`InternStats`] split shared vs
+    /// private bytes. Bit-exact: interning only relocates table content. A
+    /// swap racing the install is benign — the next `load()` on that cell
+    /// recompiles privately, and a later `reintern` re-shares it.
+    pub fn reintern(&self) -> InternStats {
+        // snapshot the program set under the read lock, intern outside any
+        // lock (the pass is O(total table bytes)), publish lock-free via
+        // the per-cell install, then record the stats
+        let mut cells: Vec<Arc<ProgramCell>> = Vec::new();
+        {
+            let inner = self.inner.read().unwrap();
+            let mut tenants: Vec<&Arc<Tenant>> = inner.by_id.values().collect();
+            tenants.sort_by_key(|t| t.id);
+            for t in tenants {
+                cells.push(Arc::clone(&t.programs));
+                if let Some(c) = t.canary.read().unwrap().as_ref() {
+                    cells.push(Arc::clone(&c.programs));
+                }
+            }
+        }
+        let pairs: Vec<(Arc<Netlist>, Arc<CompiledProgram>)> =
+            cells.iter().map(|c| c.load()).collect();
+        let progs: Vec<&CompiledProgram> = pairs.iter().map(|(_, p)| p.as_ref()).collect();
+        let (interned, stats) = intern_tables(&progs);
+        for (cell, ((net, _), prog)) in cells.iter().zip(pairs.iter().zip(interned)) {
+            cell.install(Arc::clone(net), Arc::new(prog));
+        }
+        self.inner.write().unwrap().arena = Some(stats);
+        stats
+    }
+
+    /// Stats of the last [`ModelRegistry::reintern`] pass, `None` when the
+    /// registry changed since (or never interned).
+    pub fn arena_stats(&self) -> Option<InternStats> {
+        self.inner.read().unwrap().arena
+    }
+
+    /// Per-tenant stats snapshots: live tenants sorted by id, then retired
+    /// tenants (frozen history), so totals summed over the returned list
+    /// account for every request the registry ever served.
+    pub fn tenant_stats(&self) -> Vec<TenantStats> {
+        let inner = self.inner.read().unwrap();
+        let mut live: Vec<&Arc<Tenant>> = inner.by_id.values().collect();
+        live.sort_by_key(|t| t.id);
+        let mut out: Vec<TenantStats> = live
+            .iter()
+            .map(|t| {
+                let mut st = t.counters.snapshot(&t.name, t.id, false);
+                st.input_width = t.input_width() as u64;
+                st
+            })
+            .collect();
+        out.extend(inner.retired.iter().map(|r| r.counters.snapshot(&r.name, r.id, true)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::synthetic;
+    use crate::engine;
+    use crate::lut;
+    use crate::sim;
+
+    fn net(dims: &[usize], bits: &[u32], seed: u64) -> Arc<Netlist> {
+        let ck = synthetic(dims, bits, seed);
+        let tables = lut::from_checkpoint(&ck);
+        Arc::new(Netlist::build(&ck, &tables, 2))
+    }
+
+    #[test]
+    fn load_resolve_unload_lifecycle() {
+        let reg = ModelRegistry::new(OptLevel::default());
+        assert!(reg.is_empty());
+        let a = reg.load("a", net(&[3, 2], &[3, 6], 1)).unwrap();
+        let b = reg.load("b", net(&[4, 2], &[4, 6], 2)).unwrap();
+        assert_eq!(a, ModelId::DEFAULT, "first tenant is the default route");
+        assert_ne!(a, b);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.get("a"), Some(a));
+        assert_eq!(reg.resolve(b).unwrap().name(), "b");
+        assert_eq!(reg.resolve_name("b").unwrap().input_width(), 4);
+        // duplicate names are a load-time error, not a silent replace
+        assert!(reg.load("a", net(&[3, 2], &[3, 6], 3)).is_err());
+        // unload retires the tenant but keeps its counters in stats
+        reg.resolve(a).unwrap().counters().completed.fetch_add(7, Ordering::Relaxed);
+        reg.unload("a").unwrap();
+        assert!(reg.resolve(a).is_none());
+        assert!(reg.get("a").is_none());
+        assert!(reg.unload("a").is_err());
+        let stats = reg.tenant_stats();
+        assert_eq!(stats.len(), 2);
+        let ra = stats.iter().find(|s| s.name == "a").unwrap();
+        assert!(ra.retired);
+        assert_eq!(ra.completed, 7);
+        assert!(!stats.iter().find(|s| s.name == "b").unwrap().retired);
+        // the name is free again after unload
+        let a2 = reg.load("a", net(&[3, 2], &[3, 6], 4)).unwrap();
+        assert_ne!(a2, a, "reloaded tenants get fresh ids");
+    }
+
+    #[test]
+    fn reintern_shares_tables_across_variants_bit_exactly() {
+        // two tenants loaded from the SAME checkpoint (fine-tune twins):
+        // after reintern, one arena backs both and nothing shifts a bit
+        let reg = ModelRegistry::new(OptLevel::default());
+        let base = net(&[4, 3, 2], &[4, 5, 6], 77);
+        reg.load("base", Arc::clone(&base)).unwrap();
+        reg.load("twin", Arc::clone(&base)).unwrap();
+        assert!(reg.arena_stats().is_none());
+        let codes: Vec<Vec<u32>> = vec![vec![1, 2, 3, 0], vec![15, 0, 7, 9]];
+        let want = sim::eval_batch(&base, &codes);
+        let st = reg.reintern();
+        assert_eq!(st.programs, 2);
+        assert!(st.bytes_interned < st.bytes_flat, "{st:?}");
+        assert_eq!(st.bytes_private, 0, "identical twins share every table: {st:?}");
+        assert_eq!(reg.arena_stats().unwrap(), st);
+        for t in reg.tenants() {
+            let (_, p) = t.programs().load();
+            assert_eq!(engine::run_batch(&p, &codes), want, "{}", t.name());
+        }
+        // the interned programs literally share the arena allocation
+        let pa = reg.resolve_name("base").unwrap().programs().load().1;
+        let pb = reg.resolve_name("twin").unwrap().programs().load().1;
+        assert_eq!(pa.tables64(), pb.tables64());
+        assert_eq!(pa.tables32(), pb.tables32());
+        // a later load invalidates the recorded arena stats
+        reg.load("c", net(&[3, 2], &[3, 6], 5)).unwrap();
+        assert!(reg.arena_stats().is_none());
+    }
+
+    #[test]
+    fn canary_split_is_exact_and_geometry_checked() {
+        let reg = ModelRegistry::new(OptLevel::default());
+        reg.load("m", net(&[4, 3, 2], &[4, 5, 6], 10)).unwrap();
+        // wrong-shape canary rejected up front
+        assert!(reg.set_canary("m", net(&[3, 2], &[3, 6], 11), 25).is_err());
+        assert!(reg.set_canary("m", net(&[4, 3, 2], &[4, 5, 6], 11), 101).is_err());
+        assert!(reg.set_canary("missing", net(&[4, 3, 2], &[4, 5, 6], 11), 25).is_err());
+        reg.set_canary("m", net(&[4, 3, 2], &[4, 5, 6], 11), 25).unwrap();
+        let c = reg.resolve_name("m").unwrap().canary_snapshot().unwrap();
+        assert_eq!(c.percent(), 25);
+        // exactly 25 of every 100 consecutive rows are canaried
+        let taken = (0..300).filter(|_| c.take_row()).count();
+        assert_eq!(taken, 75);
+        reg.clear_canary("m").unwrap();
+        assert!(reg.resolve_name("m").unwrap().canary_snapshot().is_none());
+    }
+
+    #[test]
+    fn quota_admits_up_to_limit_and_guard_frees() {
+        let reg = ModelRegistry::new(OptLevel::default());
+        reg.load_with_quota("q", net(&[3, 2], &[3, 6], 20), 2).unwrap();
+        let t = reg.resolve_name("q").unwrap();
+        let g1 = t.try_admit().expect("slot 1");
+        let _g2 = t.try_admit().expect("slot 2");
+        assert!(t.try_admit().is_none(), "quota 2 refuses the 3rd in-flight");
+        assert_eq!(t.counters().inflight.load(Ordering::Relaxed), 2);
+        drop(g1);
+        assert!(t.try_admit().is_some(), "freed slot admits again");
+        // unlimited quota never refuses
+        reg.load("free", net(&[3, 2], &[3, 6], 21)).unwrap();
+        let f = reg.resolve_name("free").unwrap();
+        let guards: Vec<_> = (0..64).map(|_| f.try_admit().expect("unlimited")).collect();
+        assert_eq!(guards.len(), 64);
+    }
+
+    #[test]
+    fn swap_replaces_checkpoint_in_place() {
+        let reg = ModelRegistry::new(OptLevel::default());
+        reg.load("m", net(&[3, 2], &[3, 6], 30)).unwrap();
+        let other = net(&[3, 4, 2], &[3, 4, 6], 31);
+        reg.swap("m", Arc::clone(&other)).unwrap();
+        let t = reg.resolve_name("m").unwrap();
+        let (n, p) = t.programs().load();
+        assert!(Arc::ptr_eq(&n, &other));
+        let codes = vec![vec![0u32, 1, 2]];
+        assert_eq!(engine::run_batch(&p, &codes), sim::eval_batch(&other, &codes));
+        assert!(reg.swap("missing", other).is_err());
+    }
+}

@@ -67,7 +67,10 @@ pub mod swap;
 
 pub use exec::{run_batch, Executor};
 pub use optim::{OptLevel, OptReport};
-pub use program::{CompiledProgram, FanOut, Lane, LayerPlan, LutOp, RequantPlan, PLAN_MAX_BITS};
+pub use program::{
+    intern_tables, CompiledProgram, FanOut, InternStats, Lane, LayerPlan, LutOp, RequantPlan,
+    PLAN_MAX_BITS,
+};
 pub use swap::ProgramCell;
 
 use crate::netlist::Netlist;

@@ -347,8 +347,8 @@ fn compile_full(net: &Netlist) -> CompiledProgram {
     CompiledProgram {
         name: work.name.clone(),
         frac_bits: work.frac_bits,
-        tables64,
-        tables32,
+        tables64: std::sync::Arc::new(tables64),
+        tables32: std::sync::Arc::new(tables32),
         ops,
         biases,
         // the public request width stays the checkpoint's: dead external

@@ -31,7 +31,9 @@
 //!   paper's flows). Equality with `Quantizer::encode_fixed` is enforced by
 //!   exhaustive and property tests below.
 
+use std::collections::HashMap;
 use std::ops::Range;
+use std::sync::Arc;
 
 use crate::fixed::Quantizer;
 use crate::netlist::{LayerNet, Netlist};
@@ -108,10 +110,12 @@ pub struct CompiledProgram {
     pub name: String,
     pub frac_bits: u32,
     /// i64 truth tables of wide-lane layers, packed back to back in op order
-    /// (hash-consed programs share slots, so offsets may repeat).
-    pub(super) tables64: Vec<i64>,
+    /// (hash-consed programs share slots, so offsets may repeat). Behind an
+    /// `Arc` so [`intern_tables`] can hand several programs literally the
+    /// same arena (cross-tenant sharing) without copying.
+    pub(super) tables64: Arc<Vec<i64>>,
     /// i32 truth tables of narrow-lane layers, packed back to back in op order.
-    pub(super) tables32: Vec<i32>,
+    pub(super) tables32: Arc<Vec<i32>>,
     /// The fused op stream, grouped by layer.
     pub(super) ops: Vec<LutOp>,
     /// Per-neuron constant operands (folded biases), grouped by layer.
@@ -205,8 +209,8 @@ impl CompiledProgram {
         CompiledProgram {
             name: net.name.clone(),
             frac_bits: net.frac_bits,
-            tables64,
-            tables32,
+            tables64: Arc::new(tables64),
+            tables32: Arc::new(tables32),
             ops,
             biases,
             d_in: net.input_width(),
@@ -304,6 +308,126 @@ impl CompiledProgram {
     pub fn opt_report(&self) -> Option<&OptReport> {
         self.opt.as_ref()
     }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-program table-arena interning
+// ---------------------------------------------------------------------------
+
+/// What [`intern_tables`] did across a set of programs. `bytes_shared +
+/// bytes_private == bytes_interned`, and `bytes_interned <= bytes_flat`
+/// (equality when no two programs — and no two ops — share a table).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct InternStats {
+    /// Programs interned together.
+    pub programs: usize,
+    /// Unique `(lane, content)` tables in the merged arena pair.
+    pub unique_tables: usize,
+    /// Sum of the source programs' individual `table_bytes()` — what N
+    /// independently materialized arenas would cost.
+    pub bytes_flat: usize,
+    /// Bytes of the merged arena pair actually resident after interning.
+    pub bytes_interned: usize,
+    /// Portion of `bytes_interned` referenced by two or more programs
+    /// (the cross-tenant sharing win).
+    pub bytes_shared: usize,
+    /// Portion referenced by exactly one program.
+    pub bytes_private: usize,
+}
+
+/// Intern N compiled programs into one shared table-arena pair: identical
+/// table contents (per lane) across programs — common between fine-tuned
+/// variants of one checkpoint — are materialized once, and every output
+/// program's ops are rewritten to address the merged arenas. All outputs
+/// share the same two `Arc` arenas, so each program's `table_bytes()`
+/// reports the *shared* resident footprint; the flat-vs-interned split is
+/// in the returned [`InternStats`].
+///
+/// Outputs are bit-exact with their inputs (same ops modulo `table_off`,
+/// same biases/plans/lanes); offsets are no longer monotone per lane —
+/// the executor addresses tables absolutely, exactly as it already does
+/// for hash-consed single-program arenas.
+pub fn intern_tables(progs: &[&CompiledProgram]) -> (Vec<CompiledProgram>, InternStats) {
+    let mut arena64: Vec<i64> = Vec::new();
+    let mut arena32: Vec<i32> = Vec::new();
+    let mut slot64: HashMap<Vec<i64>, u32> = HashMap::new();
+    let mut slot32: HashMap<Vec<i32>, u32> = HashMap::new();
+    // per unique merged slot: (bytes, first referencing program, multi-program?)
+    let mut owners: HashMap<(Lane, u32), (usize, usize, bool)> = HashMap::new();
+    let mut stats = InternStats { programs: progs.len(), ..Default::default() };
+    let mut rewritten: Vec<Vec<LutOp>> = Vec::with_capacity(progs.len());
+    for (pi, prog) in progs.iter().enumerate() {
+        stats.bytes_flat += prog.table_bytes();
+        let mut ops = prog.ops.clone();
+        for layer in &prog.layers {
+            for op in &mut ops[layer.ops.clone()] {
+                let start = op.table_off as usize;
+                let len = op.addr_mask as usize + 1;
+                let new_off = match layer.lane {
+                    Lane::I64 => *slot64
+                        .entry(prog.tables64[start..start + len].to_vec())
+                        .or_insert_with_key(|content| {
+                            let off = arena64.len() as u32;
+                            arena64.extend_from_slice(content);
+                            off
+                        }),
+                    Lane::I32 => *slot32
+                        .entry(prog.tables32[start..start + len].to_vec())
+                        .or_insert_with_key(|content| {
+                            let off = arena32.len() as u32;
+                            arena32.extend_from_slice(content);
+                            off
+                        }),
+                };
+                let owner = owners
+                    .entry((layer.lane, new_off))
+                    .or_insert((len * lane_bytes(layer.lane), pi, false));
+                if owner.1 != pi {
+                    owner.2 = true;
+                }
+                op.table_off = new_off;
+            }
+        }
+        rewritten.push(ops);
+    }
+    assert!(
+        arena64.len() <= u32::MAX as usize && arena32.len() <= u32::MAX as usize,
+        "interned table arena exceeds u32 addressing"
+    );
+    stats.unique_tables = owners.len();
+    stats.bytes_interned = arena64.len() * std::mem::size_of::<i64>()
+        + arena32.len() * std::mem::size_of::<i32>();
+    for (bytes, _, multi) in owners.values() {
+        if *multi {
+            stats.bytes_shared += bytes;
+        } else {
+            stats.bytes_private += bytes;
+        }
+    }
+    let arena64 = Arc::new(arena64);
+    let arena32 = Arc::new(arena32);
+    let out = progs
+        .iter()
+        .zip(rewritten)
+        .map(|(prog, ops)| CompiledProgram {
+            name: prog.name.clone(),
+            frac_bits: prog.frac_bits,
+            tables64: Arc::clone(&arena64),
+            tables32: Arc::clone(&arena32),
+            ops,
+            biases: prog.biases.clone(),
+            layers: prog.layers.clone(),
+            d_in: prog.d_in,
+            d_out: prog.d_out,
+            max_width: prog.max_width,
+            uses_i32: prog.uses_i32,
+            uses_i64: prog.uses_i64,
+            fanouts: prog.fanouts.clone(),
+            input_map: prog.input_map.clone(),
+            opt: prog.opt.clone(),
+        })
+        .collect();
+    (out, stats)
 }
 
 /// Exact interval analysis over one layer, in the executor's op order:
@@ -960,5 +1084,80 @@ mod tests {
         assert!(plan.is_integer());
         assert!(matches!(plan.kind_name(), "linear" | "thresholds"));
         assert_eq!(plan.quantizer().bits, 6);
+    }
+
+    // -- cross-program table interning -----------------------------------
+
+    #[test]
+    fn intern_identical_programs_share_one_arena() {
+        let (_, a) = compiled(&[5, 4, 3], &[4, 4, 5], 23);
+        let (_, b) = compiled(&[5, 4, 3], &[4, 4, 5], 23);
+        let flat = a.table_bytes();
+        let (out, st) = intern_tables(&[&a, &b]);
+        assert_eq!(st.programs, 2);
+        assert_eq!(st.bytes_flat, 2 * flat);
+        assert!(st.bytes_interned <= flat, "{st:?}");
+        assert_eq!(st.bytes_private, 0, "every table appears in both programs: {st:?}");
+        assert_eq!(st.bytes_shared, st.bytes_interned);
+        // literally one arena pair: both outputs hold the same Arcs
+        assert!(Arc::ptr_eq(&out[0].tables32, &out[1].tables32));
+        assert!(Arc::ptr_eq(&out[0].tables64, &out[1].tables64));
+        assert_eq!(out[0].table_bytes(), st.bytes_interned);
+    }
+
+    #[test]
+    fn intern_outputs_stay_bit_exact() {
+        // two lowerings of one netlist (the Full one's offsets already
+        // repeat from hash-consing) plus an unrelated variant: interning
+        // must preserve every program's outputs exactly
+        let ck = synthetic(&[5, 4, 3], &[4, 4, 5], 23);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, 2);
+        let a = CompiledProgram::compile(&net);
+        let b = CompiledProgram::compile_opt(&net, OptLevel::Full);
+        let ck2 = synthetic(&[5, 4, 3], &[4, 4, 5], 24);
+        let tables2 = lut::from_checkpoint(&ck2);
+        let net2 = Netlist::build(&ck2, &tables2, 2);
+        let c = CompiledProgram::compile(&net2);
+        let (out, st) = intern_tables(&[&a, &b, &c]);
+        assert_eq!(st.bytes_shared + st.bytes_private, st.bytes_interned);
+        let mut rng = crate::util::Rng::new(5);
+        let rows: Vec<Vec<u32>> =
+            (0..32).map(|_| (0..5).map(|_| rng.below(16) as u32).collect()).collect();
+        for (orig, interned) in [&a, &b, &c].into_iter().zip(&out) {
+            assert_eq!(orig.n_ops(), interned.n_ops());
+            assert_eq!(
+                crate::engine::run_batch(orig, &rows),
+                crate::engine::run_batch(interned, &rows),
+                "interning changed outputs"
+            );
+        }
+        // a and b lower the same netlist, so their table contents overlap:
+        // the merged arena must beat the flat sum
+        assert!(st.bytes_interned < st.bytes_flat, "{st:?}");
+    }
+
+    #[test]
+    fn intern_splits_shared_from_private_bytes() {
+        // two single-layer nets sharing exactly one 8-entry narrow table
+        let shared = vec![7i64; 8];
+        let net1 = manual_net(vec![vec![shared.clone(), vec![11; 8]]], 2);
+        let net2 = manual_net(vec![vec![shared, vec![-3; 8]]], 2);
+        let p1 = CompiledProgram::compile(&net1);
+        let p2 = CompiledProgram::compile(&net2);
+        let (out, st) = intern_tables(&[&p1, &p2]);
+        let entry = std::mem::size_of::<i32>(); // small entries: narrow lane
+        assert_eq!(st.unique_tables, 3);
+        assert_eq!(st.bytes_flat, 4 * 8 * entry);
+        assert_eq!(st.bytes_interned, 3 * 8 * entry);
+        assert_eq!(st.bytes_shared, 8 * entry);
+        assert_eq!(st.bytes_private, 2 * 8 * entry);
+        let rows: Vec<Vec<u32>> = (0..8).map(|i| vec![i as u32, (7 - i) as u32]).collect();
+        for (orig, interned) in [&p1, &p2].into_iter().zip(&out) {
+            assert_eq!(
+                crate::engine::run_batch(orig, &rows),
+                crate::engine::run_batch(interned, &rows)
+            );
+        }
     }
 }

@@ -83,6 +83,17 @@ impl ProgramCell {
         }
         (Arc::clone(&cached.0), Arc::clone(&cached.1))
     }
+
+    /// Publish an externally prepared `(netlist, program)` pair — the model
+    /// registry's cross-tenant interning pass rewrites programs to address
+    /// a shared arena and installs them here. Caller's contract: `prog` is
+    /// bit-exact with `net` at this cell's level (interning only relocates
+    /// tables). Staleness detection is unaffected: if `net` is not the
+    /// source's current snapshot (a swap raced the install), the next
+    /// [`ProgramCell::load`] recompiles privately as usual.
+    pub fn install(&self, net: Arc<Netlist>, prog: Arc<CompiledProgram>) {
+        *self.cached.write().unwrap() = (net, prog);
+    }
 }
 
 #[cfg(test)]
@@ -161,6 +172,29 @@ mod tests {
         let want = sim::eval_batch(&net_f, &codes);
         assert_eq!(engine::run_batch(&pf, &codes), want);
         assert_eq!(engine::run_batch(&pn, &codes), want);
+    }
+
+    #[test]
+    fn install_publishes_until_next_swap() {
+        let (bits, nc) = cell(9);
+        let pc = ProgramCell::new(Arc::clone(&nc));
+        let (net, prog) = pc.load();
+        let (interned, _) = engine::intern_tables(&[&prog]);
+        let interned = Arc::new(interned.into_iter().next().unwrap());
+        pc.install(Arc::clone(&net), Arc::clone(&interned));
+        assert!(Arc::ptr_eq(&pc.load().1, &interned), "install published the pair");
+        // a later swap supersedes the installed program: load recompiles
+        let (q, p) = nc.load().layers[0]
+            .neurons
+            .iter()
+            .enumerate()
+            .find_map(|(q, n)| n.luts.first().map(|l| (q, l.input)))
+            .expect("at least one active edge");
+        nc.swap_edge(0, q, p, vec![123_456; 1usize << bits]).unwrap();
+        let (net2, p2) = pc.load();
+        assert!(!Arc::ptr_eq(&p2, &interned));
+        let codes = vec![vec![0u32, 1, 2]];
+        assert_eq!(engine::run_batch(&p2, &codes), sim::eval_batch(&net2, &codes));
     }
 
     #[test]

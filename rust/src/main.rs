@@ -13,7 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use kanele::checkpoint::{testutil, Checkpoint, TestSet};
 use kanele::config;
-use kanele::coordinator::{Backend, Service, ServiceCfg, SubmitError};
+use kanele::coordinator::{Backend, ModelRegistry, Service, ServiceCfg, SubmitError};
 use kanele::engine::{self, OptLevel};
 use kanele::net::{self, LoadGenCfg, NetCfg, NetServer};
 use kanele::netlist::Netlist;
@@ -41,7 +41,8 @@ COMMANDS:
   serve <name> [--requests N] [--workers W] [--shards S] [--steal on|off]
         [--batch B] [--wait-us U] [--queue-depth Q]
         [--backend compiled|interpreted] [--opt full|none]
-        [--listen ADDR] [--duration-s N]
+        [--listen ADDR] [--duration-s N] [--auth-token TOK]
+        [--model NAME=CKPT ...] [--canary T=CKPT:PCT]
       batched inference service through the sharded dispatcher/executor
       plane: S admission shards (client-affine round-robin, each with its
       own dispatcher forming batches — fill to --batch or flush --wait-us
@@ -55,16 +56,25 @@ COMMANDS:
       free port; prints `listening on <addr>`) until a client sends the
       `shutdown` op or --duration-s elapses. Falls back to a synthetic
       checkpoint twin when the artifact is missing and <name> is a known
-      experiment.
+      experiment. Repeatable --model NAME=CKPT flags (require --listen)
+      load a multi-tenant registry instead of <name>: requests carrying
+      `model` route to that tenant, table arenas are interned across
+      tenants, and --canary T=CKPT:PCT shadows PCT percent of T's rows
+      with a second checkpoint, tracking live argmax agreement (PCT in
+      0..=100).
+      --auth-token gates every connection behind a shared-secret hello.
   loadgen <addr> [--connections N] [--requests N] [--rate R]
           [--tail-every K] [--tail-batch B] [--seed S] [--shutdown]
+          [--model-mix a:3,b:1] [--auth-token TOK]
       closed-loop load generator against a running `serve --listen` server:
       N connections split --requests total single-sample inferences (--rate
       is a per-connection target in req/s, 0 = max; every K-th request is
       an infer_batch of B rows for heavy-tail runs). Learns the request
       shape from the server's stats op, retries backpressure frames, and
-      reports completed/rps plus wire-latency p50/p90/p99. --shutdown sends
-      the server a shutdown op at the end.
+      reports completed/rps plus wire-latency p50/p90/p99. --model-mix
+      weights requests across named tenants (per-tenant widths come from
+      the stats frame); --auth-token sends the hello handshake first.
+      --shutdown sends the server a shutdown op at the end.
   table2|table3|table4|table5|fig6|table7|report-all [--n-add N]
       regenerate the paper's tables/figures (report-all renders everything
       and saves to artifacts/reports/).
@@ -117,6 +127,17 @@ impl<'a> Flags<'a> {
         }
     }
 
+    /// Every value of a repeatable flag (`--model a=x --model b=y`).
+    fn get_all(&self, key: &str) -> Vec<&'a str> {
+        self.args
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| *a == key)
+            .filter_map(|(i, _)| self.args.get(i + 1))
+            .map(|s| s.as_str())
+            .collect()
+    }
+
     /// Presence flag with no value (`--shutdown`).
     fn has(&self, key: &str) -> bool {
         self.args.iter().any(|a| a == key)
@@ -151,6 +172,73 @@ fn load_checkpoint_or_synthetic(name_or_path: &str) -> Result<Checkpoint> {
         }
     }
     load_checkpoint(name_or_path)
+}
+
+/// Wire-serving loop shared by `serve --listen`'s single-model and
+/// multi-tenant paths: bind, print `listening on <addr>`, run until a
+/// client's `shutdown` op or the duration budget elapses, then drain and
+/// print the plane's report (per-tenant lines when a registry serves more
+/// than one model).
+fn serve_wire(
+    svc: &Arc<Service>,
+    addr: &str,
+    levels: usize,
+    auth_token: Option<String>,
+    duration_s: u64,
+) -> Result<()> {
+    let listener = std::net::TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let mut server = NetServer::start(
+        Arc::clone(svc),
+        listener,
+        NetCfg { levels, auth_token, ..NetCfg::default() },
+    )?;
+    println!("listening on {}", server.local_addr());
+    let t0 = Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_millis(100));
+        if server.shutdown_requested() {
+            println!("serve: shutdown requested by client");
+            break;
+        }
+        if duration_s > 0 && t0.elapsed().as_secs() >= duration_s {
+            println!("serve: duration budget elapsed");
+            break;
+        }
+    }
+    server.shutdown();
+    let ns = server.stats();
+    let stats = svc.stats();
+    println!(
+        "wire            : {} conns, {} frames in / {} out, {} parse errors, {} completions",
+        ns.accepted, ns.frames_in, ns.frames_out, ns.parse_errors, ns.wire_completed
+    );
+    println!(
+        "served          : {} samples ({:.0} samples/s; rejected {}, dropped {})",
+        stats.completed, stats.throughput_rps, stats.rejected, stats.dropped
+    );
+    println!(
+        "latency p50/p90/p99 : {:.1} / {:.1} / {:.1} us",
+        stats.latency_p50_us, stats.latency_p90_us, stats.latency_p99_us
+    );
+    println!("mean batch      : {:.1} (batches: {})", stats.mean_batch, stats.batches);
+    if stats.per_tenant.len() > 1 {
+        for t in &stats.per_tenant {
+            let mark = if t.retired { " (retired)" } else { "" };
+            println!(
+                "  model {:<10}: {} completed, {} batches (mean {:.1}), p99 {:.1} us, quota drops {}{mark}",
+                t.name, t.completed, t.batches, t.mean_batch, t.latency_p99_us, t.quota_drops
+            );
+            if t.canary_rows > 0 {
+                println!(
+                    "    canary      : {} rows, argmax agreement {:.4} ({} agreed)",
+                    t.canary_rows, t.canary_agreement, t.canary_agree
+                );
+            }
+        }
+    }
+    svc.shutdown();
+    println!("serve: clean shutdown");
+    Ok(())
 }
 
 fn run(args: &[String]) -> Result<()> {
@@ -331,6 +419,74 @@ fn run(args: &[String]) -> Result<()> {
                 None => OptLevel::default(),
             };
             let listen = flags.get("--listen").map(String::from);
+            let auth_token = flags.get("--auth-token").map(String::from);
+            let svc_cfg = ServiceCfg {
+                workers,
+                shards,
+                steal,
+                max_batch: batch,
+                max_wait: Duration::from_micros(wait_us as u64),
+                queue_depth,
+                backend,
+                opt,
+                ..Default::default()
+            };
+            let model_specs = flags.get_all("--model");
+            if !model_specs.is_empty() {
+                // multi-tenant registry path: every tenant comes from a
+                // --model flag; the positional <name> is not loaded
+                let addr = listen.context("--model requires --listen ADDR")?;
+                let duration_s = flags.get_u64("--duration-s", 0)?;
+                let reg = Arc::new(ModelRegistry::new(opt));
+                let mut levels = 0usize;
+                for spec in &model_specs {
+                    let (tenant, path) = spec
+                        .split_once('=')
+                        .with_context(|| format!("bad --model {spec:?} (want NAME=CHECKPOINT)"))?;
+                    let ck = load_checkpoint_or_synthetic(path)?;
+                    if levels == 0 {
+                        levels = ck.quantizer(0).levels();
+                    }
+                    let tables = lut::from_checkpoint(&ck);
+                    let net = Arc::new(Netlist::build(&ck, &tables, 2));
+                    let id =
+                        reg.load(tenant, net).with_context(|| format!("loading tenant {tenant}"))?;
+                    println!("model           : {tenant} (id {}) <- {path}", id.raw());
+                }
+                if let Some(spec) = flags.get("--canary") {
+                    let bad = || format!("bad --canary {spec:?} (want TENANT=CHECKPOINT:PCT)");
+                    let (tenant, rest) = spec.split_once('=').with_context(bad)?;
+                    let (path, pct) = rest.rsplit_once(':').with_context(bad)?;
+                    let pct: u32 = pct.parse().with_context(bad)?;
+                    let ck = load_checkpoint_or_synthetic(path)?;
+                    let tables = lut::from_checkpoint(&ck);
+                    let net = Arc::new(Netlist::build(&ck, &tables, 2));
+                    reg.set_canary(tenant, net, pct)
+                        .with_context(|| format!("canarying tenant {tenant}"))?;
+                    println!("canary          : {tenant} shadows {pct}% of rows with {path}");
+                }
+                // one shared arena across all tenants (and canaries)
+                let arena = reg.reintern();
+                println!(
+                    "arena           : {} programs, {} unique tables; {} B interned ({} B shared) vs {} B flat",
+                    arena.programs,
+                    arena.unique_tables,
+                    arena.bytes_interned,
+                    arena.bytes_shared,
+                    arena.bytes_flat
+                );
+                let svc = Arc::new(Service::start_registry(reg, svc_cfg));
+                let eff_shards = svc.cfg().shards; // effective (clamped to workers)
+                println!("backend         : {backend:?}");
+                println!(
+                    "plane           : {eff_shards} admission shard(s) + {workers} executors (steal {}, queue depth {queue_depth} total)",
+                    if steal { "on" } else { "off" }
+                );
+                return serve_wire(&svc, &addr, levels, auth_token, duration_s);
+            }
+            if flags.get("--canary").is_some() {
+                bail!("--canary requires --model (the tenant it shadows)");
+            }
             let ck = if listen.is_some() {
                 load_checkpoint_or_synthetic(name)?
             } else {
@@ -338,20 +494,7 @@ fn run(args: &[String]) -> Result<()> {
             };
             let tables = lut::from_checkpoint(&ck);
             let net = Arc::new(Netlist::build(&ck, &tables, 2));
-            let svc = Arc::new(Service::start(
-                Arc::clone(&net),
-                ServiceCfg {
-                    workers,
-                    shards,
-                    steal,
-                    max_batch: batch,
-                    max_wait: Duration::from_micros(wait_us as u64),
-                    queue_depth,
-                    backend,
-                    opt,
-                    ..Default::default()
-                },
-            ));
+            let svc = Arc::new(Service::start(Arc::clone(&net), svc_cfg));
             let shards = svc.cfg().shards; // effective (clamped to workers)
             println!("backend         : {backend:?}");
             println!(
@@ -363,45 +506,7 @@ fn run(args: &[String]) -> Result<()> {
                 // shutdown or the duration budget elapses
                 let duration_s = flags.get_u64("--duration-s", 0)?;
                 let levels = ck.quantizer(0).levels();
-                let listener = std::net::TcpListener::bind(&addr)
-                    .with_context(|| format!("binding {addr}"))?;
-                let mut server = NetServer::start(
-                    Arc::clone(&svc),
-                    listener,
-                    NetCfg { levels, ..NetCfg::default() },
-                )?;
-                println!("listening on {}", server.local_addr());
-                let t0 = Instant::now();
-                loop {
-                    std::thread::sleep(Duration::from_millis(100));
-                    if server.shutdown_requested() {
-                        println!("serve: shutdown requested by client");
-                        break;
-                    }
-                    if duration_s > 0 && t0.elapsed().as_secs() >= duration_s {
-                        println!("serve: duration budget elapsed");
-                        break;
-                    }
-                }
-                server.shutdown();
-                let ns = server.stats();
-                let stats = svc.stats();
-                println!(
-                    "wire            : {} conns, {} frames in / {} out, {} parse errors, {} completions",
-                    ns.accepted, ns.frames_in, ns.frames_out, ns.parse_errors, ns.wire_completed
-                );
-                println!(
-                    "served          : {} samples ({:.0} samples/s; rejected {}, dropped {})",
-                    stats.completed, stats.throughput_rps, stats.rejected, stats.dropped
-                );
-                println!(
-                    "latency p50/p90/p99 : {:.1} / {:.1} / {:.1} us",
-                    stats.latency_p50_us, stats.latency_p90_us, stats.latency_p99_us
-                );
-                println!("mean batch      : {:.1} (batches: {})", stats.mean_batch, stats.batches);
-                svc.shutdown();
-                println!("serve: clean shutdown");
-                return Ok(());
+                return serve_wire(&svc, &addr, levels, auth_token, duration_s);
             }
             let ts_path = config::testset_path(&ck.name);
             let stream = if ts_path.exists() {
@@ -478,6 +583,19 @@ fn run(args: &[String]) -> Result<()> {
         }
         "loadgen" => {
             let addr = rest.first().context("loadgen <addr>")?;
+            // --model-mix a:3,b:1 — weighted tenant mix, `name` alone = weight 1
+            let mut model_mix = Vec::new();
+            if let Some(mix) = flags.get("--model-mix") {
+                for part in mix.split(',').filter(|p| !p.is_empty()) {
+                    let (tenant, weight) = match part.split_once(':') {
+                        Some((t, w)) => {
+                            (t, w.parse().with_context(|| format!("bad --model-mix weight {w:?}"))?)
+                        }
+                        None => (part, 1u64),
+                    };
+                    model_mix.push((tenant.to_string(), weight));
+                }
+            }
             let cfg = LoadGenCfg {
                 connections: flags.get_usize("--connections", 4)?,
                 requests: flags.get_u64("--requests", 10_000)?,
@@ -485,6 +603,8 @@ fn run(args: &[String]) -> Result<()> {
                 tail_every: flags.get_u64("--tail-every", 0)?,
                 tail_batch: flags.get_usize("--tail-batch", 32)?,
                 seed: flags.get_u64("--seed", 7)?,
+                model_mix,
+                auth: flags.get("--auth-token").map(String::from),
             };
             println!(
                 "loadgen         : {} conns x {} reqs @ {} (tail: every {} -> batch {})",
@@ -494,6 +614,12 @@ fn run(args: &[String]) -> Result<()> {
                 cfg.tail_every,
                 cfg.tail_batch
             );
+            if !cfg.model_mix.is_empty() {
+                let mix: Vec<String> =
+                    cfg.model_mix.iter().map(|(t, w)| format!("{t}:{w}")).collect();
+                println!("model mix       : {}", mix.join(", "));
+            }
+            let auth = cfg.auth.clone();
             let r = net::loadgen(addr, cfg)?;
             println!(
                 "completed       : {} samples in {:.3} s ({:.0} samples/s)",
@@ -509,6 +635,9 @@ fn run(args: &[String]) -> Result<()> {
             );
             if flags.has("--shutdown") {
                 let mut c = net::Client::connect(addr).context("connecting for shutdown")?;
+                if let Some(tok) = auth.as_deref() {
+                    c.hello(Some(tok)).map_err(|e| anyhow::anyhow!("hello op failed: {e}"))?;
+                }
                 c.shutdown_server().map_err(|e| anyhow::anyhow!("shutdown op failed: {e}"))?;
                 println!("loadgen         : server shutdown requested");
             }

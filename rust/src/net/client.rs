@@ -9,6 +9,7 @@
 //! p50/p90/p99 wire latency from a [`Reservoir`], the same estimator the
 //! serving plane uses internally.
 
+use std::collections::HashMap;
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -112,11 +113,33 @@ impl Client {
         Ok(resp)
     }
 
+    /// Present the shared-secret token (or just say hello to a server that
+    /// requires none). Against a token-gated server this must be the first
+    /// call on the connection; a wrong token comes back as
+    /// [`NetError::Remote`] with [`ErrorKind::Auth`] and the server closes
+    /// the socket.
+    pub fn hello(&mut self, auth: Option<&str>) -> Result<(), NetError> {
+        let id = self.fresh_id();
+        self.call(WireRequest::Hello { id, auth: auth.map(str::to_string) })?;
+        Ok(())
+    }
+
     /// One sample; returns the output sums and the server-side latency in
     /// microseconds (queue + batch + execute, as the serving plane saw it).
     pub fn infer(&mut self, codes: Vec<u32>) -> Result<(Vec<i64>, f64), NetError> {
+        self.infer_model(None, codes)
+    }
+
+    /// [`Client::infer`] routed to a named tenant (`None` = the server's
+    /// default model — byte-identical to the pre-registry frame).
+    pub fn infer_model(
+        &mut self,
+        model: Option<&str>,
+        codes: Vec<u32>,
+    ) -> Result<(Vec<i64>, f64), NetError> {
         let id = self.fresh_id();
-        match self.call(WireRequest::Infer { id, codes })? {
+        let model = model.map(str::to_string);
+        match self.call(WireRequest::Infer { id, model, codes })? {
             WireResponse::Sums { sums, latency_us, .. } => Ok((sums, latency_us)),
             other => Err(NetError::Proto(ProtoError(format!("expected sums, got {other:?}")))),
         }
@@ -124,8 +147,18 @@ impl Client {
 
     /// Several samples in one frame; rows come back in request order.
     pub fn infer_batch(&mut self, batch: Vec<Vec<u32>>) -> Result<Vec<Vec<i64>>, NetError> {
+        self.infer_batch_model(None, batch)
+    }
+
+    /// [`Client::infer_batch`] routed to a named tenant.
+    pub fn infer_batch_model(
+        &mut self,
+        model: Option<&str>,
+        batch: Vec<Vec<u32>>,
+    ) -> Result<Vec<Vec<i64>>, NetError> {
         let id = self.fresh_id();
-        match self.call(WireRequest::InferBatch { id, batch })? {
+        let model = model.map(str::to_string);
+        match self.call(WireRequest::InferBatch { id, model, batch })? {
             WireResponse::Batch { batch, .. } => Ok(batch),
             other => Err(NetError::Proto(ProtoError(format!("expected batch, got {other:?}")))),
         }
@@ -142,8 +175,21 @@ impl Client {
 
     /// Hot-swap one edge's truth table on the serving model.
     pub fn swap(&mut self, layer: usize, q: usize, p: usize, table: Vec<i64>) -> Result<(), NetError> {
+        self.swap_model(None, layer, q, p, table)
+    }
+
+    /// [`Client::swap`] routed to a named tenant.
+    pub fn swap_model(
+        &mut self,
+        model: Option<&str>,
+        layer: usize,
+        q: usize,
+        p: usize,
+        table: Vec<i64>,
+    ) -> Result<(), NetError> {
         let id = self.fresh_id();
-        self.call(WireRequest::Swap { id, layer, q, p, table })?;
+        let model = model.map(str::to_string);
+        self.call(WireRequest::Swap { id, model, layer, q, p, table })?;
         Ok(())
     }
 
@@ -157,7 +203,7 @@ impl Client {
 }
 
 /// Load-generator shape: `connections` closed loops, `requests` total.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct LoadGenCfg {
     pub connections: usize,
     /// Total single-sample requests across all connections (split evenly;
@@ -172,6 +218,15 @@ pub struct LoadGenCfg {
     pub tail_every: u64,
     pub tail_batch: usize,
     pub seed: u64,
+    /// Weighted tenant mix: each request picks a model name with
+    /// probability proportional to its weight. Empty = model-less frames
+    /// (the server's default tenant), byte-identical to the pre-registry
+    /// wire traffic. Per-model input widths are learned from the `models`
+    /// array in the server's stats frame.
+    pub model_mix: Vec<(String, u64)>,
+    /// Shared-secret token sent in a `hello` frame before any other op.
+    /// `None` sends no hello at all.
+    pub auth: Option<String>,
 }
 
 impl Default for LoadGenCfg {
@@ -183,6 +238,8 @@ impl Default for LoadGenCfg {
             tail_every: 0,
             tail_batch: 32,
             seed: 7,
+            model_mix: Vec::new(),
+            auth: None,
         }
     }
 }
@@ -208,10 +265,29 @@ pub struct LoadGenReport {
     pub p99_us: f64,
 }
 
+/// Per-tenant input widths from the stats frame's `models` array. Retired
+/// tenants advertise width 0 and are skipped; servers predating the
+/// registry have no `models` array and yield an empty map (callers fall
+/// back to the top-level `input_width`).
+fn tenant_widths(stats: &Value) -> HashMap<String, usize> {
+    let mut out = HashMap::new();
+    for m in stats.get("models").and_then(Value::as_array).unwrap_or(&[]) {
+        let w = m.get("input_width").and_then(Value::as_i64).unwrap_or(0);
+        if let Some(name) = m.get("name").and_then(Value::as_str) {
+            if w > 0 {
+                out.insert(name.to_string(), w as usize);
+            }
+        }
+    }
+    out
+}
+
 /// Run a closed-loop load test against a running server. Each connection
-/// first issues a `stats` op to learn the model's input width and level
-/// count, so the generator needs no local checkpoint. Backpressure frames
-/// are retried (and counted); terminal errors end that connection.
+/// first sends `hello` if an auth token is configured, then issues a
+/// `stats` op to learn input width and level count (per tenant, via the
+/// `models` array, when a model mix is set), so the generator needs no
+/// local checkpoint. Backpressure frames are retried (and counted);
+/// terminal errors end that connection.
 pub fn loadgen(addr: &str, cfg: LoadGenCfg) -> anyhow::Result<LoadGenReport> {
     let conns = cfg.connections.max(1);
     let completed = Arc::new(AtomicU64::new(0));
@@ -225,6 +301,7 @@ pub fn loadgen(addr: &str, cfg: LoadGenCfg) -> anyhow::Result<LoadGenReport> {
     for c in 0..conns {
         let quota = cfg.requests / conns as u64 + u64::from((c as u64) < cfg.requests % conns as u64);
         let addr = addr.to_string();
+        let cfg = cfg.clone();
         let completed = Arc::clone(&completed);
         let backpressure = Arc::clone(&backpressure);
         let dropped = Arc::clone(&dropped);
@@ -238,20 +315,27 @@ pub fn loadgen(addr: &str, cfg: LoadGenCfg) -> anyhow::Result<LoadGenReport> {
                     return;
                 }
             };
+            if let Some(token) = cfg.auth.as_deref() {
+                if client.hello(Some(token)).is_err() {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            }
             // learn the request shape from the server
-            let (width, levels) = match client.stats() {
+            let (width, levels, tenant_widths) = match client.stats() {
                 Ok(s) => {
                     let w = s.get("input_width").and_then(Value::as_i64).unwrap_or(0).max(0);
                     let l = s.get("levels").and_then(Value::as_i64).unwrap_or(0).max(0);
-                    (w as usize, if l > 0 { l as u64 } else { 64 })
+                    (w as usize, if l > 0 { l as u64 } else { 64 }, tenant_widths(&s))
                 }
                 Err(_) => {
                     errors.fetch_add(1, Ordering::Relaxed);
                     return;
                 }
             };
+            let total_weight: u64 = cfg.model_mix.iter().map(|(_, w)| *w).sum();
             let mut rng = Rng::new(cfg.seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(c as u64 + 1)));
-            let mut row = |rng: &mut Rng| -> Vec<u32> {
+            let row = |rng: &mut Rng, width: usize| -> Vec<u32> {
                 (0..width).map(|_| rng.below(levels) as u32).collect()
             };
             let t0 = Instant::now();
@@ -265,15 +349,32 @@ pub fn loadgen(addr: &str, cfg: LoadGenCfg) -> anyhow::Result<LoadGenReport> {
                         std::thread::sleep(due - elapsed);
                     }
                 }
+                // weighted tenant pick, fixed before the retry loop so a
+                // backpressured request lands on the same model
+                let model: Option<&str> = if total_weight > 0 {
+                    let mut pick = rng.below(total_weight);
+                    let mut chosen = None;
+                    for (name, weight) in &cfg.model_mix {
+                        if pick < *weight {
+                            chosen = Some(name.as_str());
+                            break;
+                        }
+                        pick -= *weight;
+                    }
+                    chosen
+                } else {
+                    None
+                };
+                let w = model.and_then(|m| tenant_widths.get(m)).copied().unwrap_or(width);
                 let is_tail = cfg.tail_every > 0 && (k + 1) % cfg.tail_every == 0;
                 loop {
                     let req_start = Instant::now();
                     let outcome = if is_tail {
                         let batch: Vec<Vec<u32>> =
-                            (0..cfg.tail_batch.max(1)).map(|_| row(&mut rng)).collect();
-                        client.infer_batch(batch).map(|rows| rows.len() as u64)
+                            (0..cfg.tail_batch.max(1)).map(|_| row(&mut rng, w)).collect();
+                        client.infer_batch_model(model, batch).map(|rows| rows.len() as u64)
                     } else {
-                        client.infer(row(&mut rng)).map(|_| 1u64)
+                        client.infer_model(model, row(&mut rng, w)).map(|_| 1u64)
                     };
                     match outcome {
                         Ok(n) => {

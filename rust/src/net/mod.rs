@@ -20,32 +20,46 @@
 //! Requests carry `"op"` and a client-chosen `"id"`; responses echo the
 //! id, so clients may pipeline and match out of band:
 //!
-//! | op            | request fields                  | success response            |
-//! |---------------|---------------------------------|-----------------------------|
-//! | `infer`       | `codes: [u32]`                  | `sums: [i64], latency_us`   |
-//! | `infer_batch` | `batch: [[u32]]`                | `batch: [[i64]]`            |
-//! | `stats`       | —                               | `stats: {..}`               |
-//! | `swap`        | `layer, q, p, table: [i64]`     | bare ack                    |
-//! | `shutdown`    | —                               | bare ack                    |
+//! | op            | request fields                      | success response            |
+//! |---------------|-------------------------------------|-----------------------------|
+//! | `hello`       | `auth?: str`                        | bare ack                    |
+//! | `infer`       | `codes: [u32], model?: str`         | `sums: [i64], latency_us`   |
+//! | `infer_batch` | `batch: [[u32]], model?: str`       | `batch: [[i64]]`            |
+//! | `stats`       | —                                   | `stats: {..}` (+ `models`)  |
+//! | `swap`        | `layer, q, p, table: [i64], model?` | bare ack                    |
+//! | `shutdown`    | —                                   | bare ack                    |
+//!
+//! Fields marked `?` are optional and omitted when absent, so a frame
+//! without them is byte-identical to the pre-registry protocol: old
+//! clients keep working and land on the default tenant.
 //!
 //! Failures are `{"id":N,"ok":false,"error":"<kind>","msg":"..."}` with
 //! kind one of `backpressure` / `stopped` / `invalid` (the serving plane's
 //! [`crate::coordinator::SubmitError`] verbatim) or `parse` / `dropped` /
-//! `unsupported` (wire-layer). Error frames are written from the reader
-//! thread, ahead of pending completions — an overloaded server answers
-//! `backpressure` immediately; it never leaves a client hanging.
+//! `unsupported` / `auth` (wire-layer; an unknown `model` name is
+//! `unsupported`). Error frames are written from the reader thread, ahead
+//! of pending completions — an overloaded server answers `backpressure`
+//! immediately; it never leaves a client hanging.
 //!
-//! # Wire topology
+//! # Wire topology (multi-tenant)
 //!
 //! ```text
-//!  client conns          NetServer                    Service (PR 4/5)
-//!  ───────────           ─────────                    ────────────────
-//!  conn 0 ──TCP──▶ reader ─submit_to(0)──▶ [shard 0 queue]─▶ dispatcher ─┐
-//!         ◀─TCP── writer ◀── completion ◀─ reply rxs                     │ work
-//!  conn 1 ──TCP──▶ reader ─submit_to(1)──▶ [shard 1 queue]─▶ dispatcher ─┤ pool
-//!         ◀─TCP── writer ◀── completion ◀─ reply rxs                     │ (steal)
-//!  conn k ──TCP──▶ reader ─submit_to(k%S)▶ [shard k%S ...]               ┘
+//!  client conns          NetServer                    Service + ModelRegistry
+//!  ───────────           ─────────                    ───────────────────────
+//!  conn 0 ──TCP──▶ reader ─submit_to(0, model)─▶ [shard 0 queue]─▶ DRR ─┐
+//!         ◀─TCP── writer ◀── completion ◀─ reply rxs        dispatcher  │ work
+//!  conn 1 ──TCP──▶ reader ─submit_to(1, model)─▶ [shard 1 queue]─▶ DRR ─┤ pool
+//!         ◀─TCP── writer ◀── completion ◀─ reply rxs        dispatcher  │ (steal)
+//!  conn k ──TCP──▶ reader ─submit_to(k%S, ...)─▶ [shard k%S ...]        ┘
+//!                   │                                   │
+//!                   └─ name → ModelId (registry) ───────┴─▶ tenant cells
+//!                                                           (shared arena)
 //! ```
+//!
+//! The reader resolves the optional `model` name to a [`ModelId`] once per
+//! frame; admission, deficit-round-robin batch formation, and execution
+//! all run on ids. Requests from different tenants share shards and the
+//! work pool but never share a batch.
 //!
 //! Each connection pins to one admission shard (connection = client, same
 //! affinity the in-process plane assumes), runs a reader thread (frames →
@@ -55,6 +69,8 @@
 //! admitted → flush → FIN. [`NetServer::shutdown`] forces exactly that
 //! path on every connection by closing read halves, so in-flight responses
 //! are flushed, never abandoned.
+//!
+//! [`ModelId`]: crate::coordinator::ModelId
 //!
 //! Entry points: `kanele serve --listen <addr>` wraps [`NetServer`];
 //! `kanele loadgen <addr>` wraps [`client::loadgen`].

@@ -29,8 +29,14 @@ pub enum ErrorKind {
     /// Admitted but the reply channel closed (model swap or shutdown
     /// landed mid-flight); the request may or may not have executed.
     Dropped,
-    /// Recognized JSON, unrecognized `"op"`.
+    /// Recognized JSON, unrecognized `"op"` — or a `"model"` naming no
+    /// loaded tenant (the registry analog of an unknown op: typed, the
+    /// connection survives, other models keep working).
     Unsupported,
+    /// The server requires a shared-secret `hello` and this connection has
+    /// not presented the right token (absent, wrong, or a non-`hello`
+    /// first frame). The server closes the connection after sending this.
+    Auth,
 }
 
 impl ErrorKind {
@@ -42,6 +48,7 @@ impl ErrorKind {
             ErrorKind::Parse => "parse",
             ErrorKind::Dropped => "dropped",
             ErrorKind::Unsupported => "unsupported",
+            ErrorKind::Auth => "auth",
         }
     }
 
@@ -53,6 +60,7 @@ impl ErrorKind {
             "parse" => ErrorKind::Parse,
             "dropped" => ErrorKind::Dropped,
             "unsupported" => ErrorKind::Unsupported,
+            "auth" => ErrorKind::Auth,
             _ => return None,
         })
     }
@@ -82,18 +90,31 @@ fn perr(msg: impl Into<String>) -> ProtoError {
 }
 
 /// Client→server messages.
+///
+/// Inference and swap ops carry an optional `"model"` tenant name; `None`
+/// encodes to no field at all, so a single-tenant client speaking the
+/// pre-registry protocol emits byte-identical frames and keeps working
+/// against multi-tenant servers (model-less frames route to the default
+/// tenant).
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireRequest {
-    /// One sample: `{"op":"infer","id":N,"codes":[...]}`.
-    Infer { id: u64, codes: Vec<u32> },
-    /// Several samples in one frame: `{"op":"infer_batch","id":N,"batch":[[...],...]}`.
+    /// Optional first frame: `{"op":"hello","id":N,"auth":"..."}`. A
+    /// server started with a shared-secret token requires this before any
+    /// other op (and answers [`ErrorKind::Auth`] otherwise); servers
+    /// without a token ack it as a no-op, so clients may always lead with
+    /// a hello.
+    Hello { id: u64, auth: Option<String> },
+    /// One sample: `{"op":"infer","id":N,"codes":[...],"model":"name"?}`.
+    Infer { id: u64, model: Option<String>, codes: Vec<u32> },
+    /// Several samples in one frame:
+    /// `{"op":"infer_batch","id":N,"batch":[[...],...],"model":"name"?}`.
     /// One response frame carries all rows.
-    InferBatch { id: u64, batch: Vec<Vec<u32>> },
+    InferBatch { id: u64, model: Option<String>, batch: Vec<Vec<u32>> },
     /// Serving-plane + wire counters snapshot: `{"op":"stats","id":N}`.
     Stats { id: u64 },
     /// Hot-swap one edge's truth table:
-    /// `{"op":"swap","id":N,"layer":L,"q":Q,"p":P,"table":[...]}`.
-    Swap { id: u64, layer: usize, q: usize, p: usize, table: Vec<i64> },
+    /// `{"op":"swap","id":N,"layer":L,"q":Q,"p":P,"table":[...],"model":"name"?}`.
+    Swap { id: u64, model: Option<String>, layer: usize, q: usize, p: usize, table: Vec<i64> },
     /// Ask the server process to begin shutdown: `{"op":"shutdown","id":N}`.
     Shutdown { id: u64 },
 }
@@ -164,10 +185,35 @@ fn sums_value(sums: &[i64]) -> Value {
     Value::Array(sums.iter().map(|&s| Value::Int(s)).collect())
 }
 
+/// Append `("model", name)` when a tenant is named — absent otherwise, so
+/// model-less frames stay byte-identical to the pre-registry protocol.
+fn push_model(fields: &mut Vec<(&str, Value)>, model: &Option<String>) {
+    if let Some(m) = model {
+        fields.push(("model", Value::Str(m.clone())));
+    }
+}
+
+/// Optional string field (`"model"` tenant name, `"auth"` token);
+/// present-but-not-a-string is malformed, absent is `None`.
+fn get_str_opt(v: &Value, key: &str) -> Result<Option<String>, ProtoError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(m) => match m.as_str() {
+            Some(s) => Ok(Some(s.to_string())),
+            None => Err(perr(format!("\"{key}\" must be a string"))),
+        },
+    }
+}
+
+fn get_model(v: &Value) -> Result<Option<String>, ProtoError> {
+    get_str_opt(v, "model")
+}
+
 impl WireRequest {
     pub fn id(&self) -> u64 {
         match self {
-            WireRequest::Infer { id, .. }
+            WireRequest::Hello { id, .. }
+            | WireRequest::Infer { id, .. }
             | WireRequest::InferBatch { id, .. }
             | WireRequest::Stats { id }
             | WireRequest::Swap { id, .. }
@@ -177,28 +223,50 @@ impl WireRequest {
 
     pub fn encode(&self) -> String {
         let v = match self {
-            WireRequest::Infer { id, codes } => obj(vec![
-                ("op", Value::Str("infer".into())),
-                ("id", Value::Int(*id as i64)),
-                ("codes", codes_value(codes)),
-            ]),
-            WireRequest::InferBatch { id, batch } => obj(vec![
-                ("op", Value::Str("infer_batch".into())),
-                ("id", Value::Int(*id as i64)),
-                ("batch", Value::Array(batch.iter().map(|row| codes_value(row)).collect())),
-            ]),
+            WireRequest::Hello { id, auth } => {
+                let mut fields = vec![
+                    ("op", Value::Str("hello".into())),
+                    ("id", Value::Int(*id as i64)),
+                ];
+                if let Some(a) = auth {
+                    fields.push(("auth", Value::Str(a.clone())));
+                }
+                obj(fields)
+            }
+            WireRequest::Infer { id, model, codes } => {
+                let mut fields = vec![
+                    ("op", Value::Str("infer".into())),
+                    ("id", Value::Int(*id as i64)),
+                    ("codes", codes_value(codes)),
+                ];
+                push_model(&mut fields, model);
+                obj(fields)
+            }
+            WireRequest::InferBatch { id, model, batch } => {
+                let mut fields = vec![
+                    ("op", Value::Str("infer_batch".into())),
+                    ("id", Value::Int(*id as i64)),
+                    ("batch", Value::Array(batch.iter().map(|row| codes_value(row)).collect())),
+                ];
+                push_model(&mut fields, model);
+                obj(fields)
+            }
             WireRequest::Stats { id } => obj(vec![
                 ("op", Value::Str("stats".into())),
                 ("id", Value::Int(*id as i64)),
             ]),
-            WireRequest::Swap { id, layer, q, p, table } => obj(vec![
-                ("op", Value::Str("swap".into())),
-                ("id", Value::Int(*id as i64)),
-                ("layer", Value::Int(*layer as i64)),
-                ("q", Value::Int(*q as i64)),
-                ("p", Value::Int(*p as i64)),
-                ("table", sums_value(table)),
-            ]),
+            WireRequest::Swap { id, model, layer, q, p, table } => {
+                let mut fields = vec![
+                    ("op", Value::Str("swap".into())),
+                    ("id", Value::Int(*id as i64)),
+                    ("layer", Value::Int(*layer as i64)),
+                    ("q", Value::Int(*q as i64)),
+                    ("p", Value::Int(*p as i64)),
+                    ("table", sums_value(table)),
+                ];
+                push_model(&mut fields, model);
+                obj(fields)
+            }
             WireRequest::Shutdown { id } => obj(vec![
                 ("op", Value::Str("shutdown".into())),
                 ("id", Value::Int(*id as i64)),
@@ -215,9 +283,10 @@ impl WireRequest {
         let id = get_id(&v)?;
         let op = v.get("op").and_then(Value::as_str).ok_or_else(|| perr("missing \"op\""))?;
         match op {
+            "hello" => Ok(WireRequest::Hello { id, auth: get_str_opt(&v, "auth")? }),
             "infer" => {
                 let codes = get_codes(v.req("codes").map_err(|e| perr(e.to_string()))?, "codes")?;
-                Ok(WireRequest::Infer { id, codes })
+                Ok(WireRequest::Infer { id, model: get_model(&v)?, codes })
             }
             "infer_batch" => {
                 let rows = v.req_array("batch").map_err(|e| perr(e.to_string()))?;
@@ -225,7 +294,7 @@ impl WireRequest {
                     .iter()
                     .map(|row| get_codes(row, "batch rows"))
                     .collect::<Result<Vec<_>, _>>()?;
-                Ok(WireRequest::InferBatch { id, batch })
+                Ok(WireRequest::InferBatch { id, model: get_model(&v)?, batch })
             }
             "stats" => Ok(WireRequest::Stats { id }),
             "swap" => {
@@ -241,7 +310,14 @@ impl WireRequest {
                     .iter()
                     .map(|x| x.as_i64().ok_or_else(|| perr("table entries must be integers")))
                     .collect::<Result<Vec<_>, _>>()?;
-                Ok(WireRequest::Swap { id, layer: dim("layer")?, q: dim("q")?, p: dim("p")?, table })
+                Ok(WireRequest::Swap {
+                    id,
+                    model: get_model(&v)?,
+                    layer: dim("layer")?,
+                    q: dim("q")?,
+                    p: dim("p")?,
+                    table,
+                })
             }
             "shutdown" => Ok(WireRequest::Shutdown { id }),
             other => Err(perr(format!("unsupported op {other:?}"))),
@@ -331,21 +407,60 @@ mod tests {
 
     #[test]
     fn requests_roundtrip() {
-        roundtrip_req(WireRequest::Infer { id: 0, codes: vec![] });
-        roundtrip_req(WireRequest::Infer { id: 7, codes: vec![0, 1, u32::MAX] });
+        roundtrip_req(WireRequest::Infer { id: 0, model: None, codes: vec![] });
+        roundtrip_req(WireRequest::Infer { id: 7, model: None, codes: vec![0, 1, u32::MAX] });
+        roundtrip_req(WireRequest::Infer {
+            id: 7,
+            model: Some("jsc-v2".into()),
+            codes: vec![0, 1],
+        });
         roundtrip_req(WireRequest::InferBatch {
             id: 8,
+            model: None,
             batch: vec![vec![1, 2, 3], vec![4, 5, 6]],
+        });
+        roundtrip_req(WireRequest::InferBatch {
+            id: 8,
+            model: Some("b".into()),
+            batch: vec![vec![1, 2, 3]],
         });
         roundtrip_req(WireRequest::Stats { id: 9 });
         roundtrip_req(WireRequest::Swap {
             id: 10,
+            model: None,
             layer: 1,
             q: 2,
             p: 3,
             table: vec![-5, 0, 5, i64::MAX],
         });
+        roundtrip_req(WireRequest::Swap {
+            id: 10,
+            model: Some("canary".into()),
+            layer: 0,
+            q: 0,
+            p: 0,
+            table: vec![1],
+        });
         roundtrip_req(WireRequest::Shutdown { id: u64::MAX / 2 });
+        roundtrip_req(WireRequest::Hello { id: 11, auth: None });
+        roundtrip_req(WireRequest::Hello { id: 12, auth: Some("s3cret".into()) });
+    }
+
+    #[test]
+    fn model_less_frames_keep_the_pre_registry_encoding() {
+        // a `model: None` request must not emit a "model" key at all:
+        // old servers reject unknown fields nowhere, but old *captures*
+        // (and the bench baselines) compare frames byte-for-byte
+        let wire = WireRequest::Infer { id: 3, model: None, codes: vec![7, 0] }.encode();
+        assert!(!wire.contains("model"), "{wire}");
+        assert_eq!(wire, "{\"op\":\"infer\",\"id\":3,\"codes\":[7,0]}");
+        // and a model-less decode accepts frames from pre-registry clients
+        let req = WireRequest::decode("{\"op\":\"infer\",\"id\":3,\"codes\":[7,0]}").unwrap();
+        assert_eq!(req, WireRequest::Infer { id: 3, model: None, codes: vec![7, 0] });
+        // "model" present but not a string is malformed, not ignored
+        let bad = "{\"op\":\"infer\",\"id\":1,\"codes\":[],\"model\":7}";
+        assert!(WireRequest::decode(bad).is_err());
+        assert!(WireRequest::decode("{\"op\":\"hello\",\"id\":1,\"auth\":9}").is_err());
     }
 
     #[test]
@@ -360,6 +475,7 @@ mod tests {
             ErrorKind::Parse,
             ErrorKind::Dropped,
             ErrorKind::Unsupported,
+            ErrorKind::Auth,
         ] {
             roundtrip_resp(WireResponse::Error { id: 4, kind, msg: "why".into() });
         }

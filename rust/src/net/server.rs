@@ -22,6 +22,19 @@
 //!   every connection; readers see EOF, completion threads flush what was
 //!   already admitted, then FIN. The server never shuts the [`Service`]
 //!   down — the caller owns that ordering.
+//! - **Multi-tenant routing**: inference and swap frames may name a
+//!   `"model"`; the name is resolved against the service's
+//!   [`ModelRegistry`](crate::coordinator::ModelRegistry) *per frame* (a
+//!   concurrent load/unload/swap takes effect on the very next frame), and
+//!   an unknown name answers a typed `unsupported` error while the
+//!   connection — and every other tenant on it — keeps working. Model-less
+//!   frames route to the default tenant, so pre-registry clients are
+//!   wire-compatible without changes.
+//! - **Shared-secret auth**: when [`NetCfg::auth_token`] is set, the first
+//!   frame of every connection must be a `hello` carrying the token; any
+//!   other first frame, or a wrong token, gets a typed `auth` error and
+//!   the connection is closed. Without a configured token, `hello` is an
+//!   acked no-op so clients may always lead with one.
 
 use std::io::{BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -31,14 +44,14 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::coordinator::{Response, Service, SubmitError};
+use crate::coordinator::{ModelId, Response, Service, SubmitError};
 use crate::json::{obj, Value};
 
 use super::frame::{read_frame, write_frame, FrameError, MAX_FRAME};
 use super::proto::{peek_id, ErrorKind, WireRequest, WireResponse};
 
-/// Front-end knobs, all per-connection except `levels`.
-#[derive(Clone, Copy, Debug)]
+/// Front-end knobs, all per-connection except `levels` and `auth_token`.
+#[derive(Clone, Debug)]
 pub struct NetCfg {
     /// Frame-size cap in both directions (default [`MAX_FRAME`]).
     pub max_frame: usize,
@@ -49,11 +62,15 @@ pub struct NetCfg {
     /// Quantizer level count advertised in `stats` frames so remote load
     /// generators can synthesize in-range codes; `0` when unknown.
     pub levels: u64,
+    /// Shared secret. `Some(token)` requires every connection's first
+    /// frame to be a `hello` presenting exactly this token before any
+    /// other op is served; `None` (default) disables the gate.
+    pub auth_token: Option<String>,
 }
 
 impl Default for NetCfg {
     fn default() -> Self {
-        NetCfg { max_frame: MAX_FRAME, in_flight: 64, levels: 0 }
+        NetCfg { max_frame: MAX_FRAME, in_flight: 64, levels: 0, auth_token: None }
     }
 }
 
@@ -140,7 +157,7 @@ impl NetServer {
                                 Arc::clone(&svc),
                                 stream,
                                 shard,
-                                cfg,
+                                cfg.clone(),
                                 Arc::clone(&counters),
                                 Arc::clone(&shutdown_requested),
                             ) {
@@ -233,8 +250,24 @@ fn submit_error(id: u64, e: SubmitError) -> WireResponse {
         SubmitError::Backpressure => ErrorKind::Backpressure,
         SubmitError::Stopped => ErrorKind::Stopped,
         SubmitError::Invalid(_) => ErrorKind::Invalid,
+        // the registry analog of an unknown op: typed, non-fatal
+        SubmitError::UnknownModel(_) => ErrorKind::Unsupported,
     };
     WireResponse::Error { id, kind, msg: e.to_string() }
+}
+
+/// Resolve an optional wire model name to a tenant id: no name routes to
+/// the default tenant, an unknown name is a typed `unsupported` error
+/// carrying the name (the connection survives — resolution is per frame).
+fn resolve_model(svc: &Service, id: u64, model: Option<&str>) -> Result<ModelId, WireResponse> {
+    match model {
+        None => Ok(ModelId::DEFAULT),
+        Some(name) => svc.registry().get(name).ok_or_else(|| WireResponse::Error {
+            id,
+            kind: ErrorKind::Unsupported,
+            msg: format!("unknown model: {name}"),
+        }),
+    }
 }
 
 /// The `stats` frame body: serving-plane snapshot + model/topology facts a
@@ -244,10 +277,36 @@ fn submit_error(id: u64, e: SubmitError) -> WireResponse {
 fn stats_value(svc: &Service, counters: &NetCounters, levels: u64) -> Value {
     let s = svc.stats();
     let nz = |x: f64| if x.is_finite() { x } else { 0.0 };
+    // per-tenant breakdown: live tenants sorted by id, then retired
+    // history — remote dashboards and the multi-model loadgen read this
+    let models = Value::Array(
+        s.per_tenant
+            .iter()
+            .map(|t| {
+                obj(vec![
+                    ("name", Value::Str(t.name.clone())),
+                    ("id", Value::Int(t.id as i64)),
+                    ("input_width", Value::Int(t.input_width as i64)),
+                    ("admitted", Value::Int(t.admitted as i64)),
+                    ("completed", Value::Int(t.completed as i64)),
+                    ("quota_drops", Value::Int(t.quota_drops as i64)),
+                    ("batches", Value::Int(t.batches as i64)),
+                    ("mean_batch", Value::Float(nz(t.mean_batch))),
+                    ("latency_p50_us", Value::Float(nz(t.latency_p50_us))),
+                    ("latency_p99_us", Value::Float(nz(t.latency_p99_us))),
+                    ("canary_rows", Value::Int(t.canary_rows as i64)),
+                    ("canary_agreement", Value::Float(nz(t.canary_agreement))),
+                    ("retired", Value::Bool(t.retired)),
+                ])
+            })
+            .collect(),
+    );
     obj(vec![
         ("completed", Value::Int(s.completed as i64)),
         ("rejected", Value::Int(s.rejected as i64)),
         ("dropped", Value::Int(s.dropped as i64)),
+        ("quota_drops", Value::Int(s.quota_drops as i64)),
+        ("models", models),
         ("batches", Value::Int(s.batches as i64)),
         ("mean_batch", Value::Float(nz(s.mean_batch))),
         ("latency_p50_us", Value::Float(nz(s.latency_p50_us))),
@@ -281,14 +340,19 @@ fn spawn_conn(
     let mut rstream = stream.try_clone()?;
     let writer = Arc::new(Mutex::new(BufWriter::new(stream.try_clone()?)));
     let (tx, rx): (SyncSender<Out>, Receiver<Out>) = sync_channel(cfg.in_flight.max(1));
+    // NetCfg is not Copy (it carries the token); both per-connection
+    // threads want pieces of it, so split the scalars out here
+    let NetCfg { max_frame, levels, auth_token, .. } = cfg;
 
     let reader = {
         let svc = Arc::clone(&svc);
         let writer = Arc::clone(&writer);
         let counters = Arc::clone(&counters);
         std::thread::spawn(move || {
+            // no token configured = every connection starts authenticated
+            let mut authed = auth_token.is_none();
             loop {
-                let payload = match read_frame(&mut rstream, cfg.max_frame) {
+                let payload = match read_frame(&mut rstream, max_frame) {
                     Ok(p) => p,
                     Err(FrameError::Oversized { len, max }) => {
                         counters.parse_errors.fetch_add(1, Ordering::Relaxed);
@@ -297,7 +361,7 @@ fn spawn_conn(
                             kind: ErrorKind::Parse,
                             msg: format!("frame of {len} bytes exceeds the {max}-byte cap"),
                         };
-                        write_response(&writer, &counters, cfg.max_frame, &resp);
+                        write_response(&writer, &counters, max_frame, &resp);
                         break;
                     }
                     // Closed (clean), Truncated, Io: teardown either way
@@ -320,7 +384,7 @@ fn spawn_conn(
                                 };
                                 let resp =
                                     WireResponse::Error { id, kind, msg: e.to_string() };
-                                if !write_response(&writer, &counters, cfg.max_frame, &resp) {
+                                if !write_response(&writer, &counters, max_frame, &resp) {
                                     break;
                                 }
                                 continue;
@@ -332,34 +396,89 @@ fn spawn_conn(
                                     kind: ErrorKind::Parse,
                                     msg: e.to_string(),
                                 };
-                                write_response(&writer, &counters, cfg.max_frame, &resp);
+                                write_response(&writer, &counters, max_frame, &resp);
                                 break;
                             }
                         }
                     }
                 };
                 match req {
-                    WireRequest::Infer { id, codes } => match svc.submit_to(shard, codes) {
-                        Ok(rx) => {
-                            if tx.send(Out::Reply { id, rxs: vec![rx], batch: false }).is_err() {
-                                break;
+                    WireRequest::Hello { id, auth } => {
+                        let granted = match &auth_token {
+                            // no gate: hello is an acked no-op, so clients
+                            // may lead with one unconditionally
+                            None => true,
+                            Some(tok) => auth.as_deref() == Some(tok.as_str()),
+                        };
+                        if !granted {
+                            let resp = WireResponse::Error {
+                                id,
+                                kind: ErrorKind::Auth,
+                                msg: "bad or missing auth token".to_string(),
+                            };
+                            write_response(&writer, &counters, max_frame, &resp);
+                            break;
+                        }
+                        authed = true;
+                        if !write_response(&writer, &counters, max_frame, &WireResponse::Ok { id })
+                        {
+                            break;
+                        }
+                    }
+                    // the gate: a token is configured and this connection
+                    // has not presented it — nothing but hello is served
+                    other if !authed => {
+                        let resp = WireResponse::Error {
+                            id: other.id(),
+                            kind: ErrorKind::Auth,
+                            msg: "authentication required: send hello with the token first"
+                                .to_string(),
+                        };
+                        write_response(&writer, &counters, max_frame, &resp);
+                        break;
+                    }
+                    WireRequest::Infer { id, model, codes } => {
+                        let mid = match resolve_model(&svc, id, model.as_deref()) {
+                            Ok(m) => m,
+                            Err(resp) => {
+                                if !write_response(&writer, &counters, max_frame, &resp) {
+                                    break;
+                                }
+                                continue;
+                            }
+                        };
+                        match svc.submit_to_model(shard, mid, codes) {
+                            Ok(rx) => {
+                                let out = Out::Reply { id, rxs: vec![rx], batch: false };
+                                if tx.send(out).is_err() {
+                                    break;
+                                }
+                            }
+                            // error frames bypass the completion queue:
+                            // written here, immediately — backpressure must
+                            // be visible while earlier responses pend
+                            Err(e) => {
+                                let resp = submit_error(id, e);
+                                if !write_response(&writer, &counters, max_frame, &resp) {
+                                    break;
+                                }
                             }
                         }
-                        // error frames bypass the completion queue: written
-                        // here, immediately — backpressure must be visible
-                        // even while earlier responses are still pending
-                        Err(e) => {
-                            let resp = submit_error(id, e);
-                            if !write_response(&writer, &counters, cfg.max_frame, &resp) {
-                                break;
+                    }
+                    WireRequest::InferBatch { id, model, batch } => {
+                        let mid = match resolve_model(&svc, id, model.as_deref()) {
+                            Ok(m) => m,
+                            Err(resp) => {
+                                if !write_response(&writer, &counters, max_frame, &resp) {
+                                    break;
+                                }
+                                continue;
                             }
-                        }
-                    },
-                    WireRequest::InferBatch { id, batch } => {
+                        };
                         let mut rxs = Vec::with_capacity(batch.len());
                         let mut failed = None;
                         for row in batch {
-                            match svc.submit_to(shard, row) {
+                            match svc.submit_to_model(shard, mid, row) {
                                 Ok(rx) => rxs.push(rx),
                                 Err(e) => {
                                     failed = Some(e);
@@ -376,7 +495,7 @@ fn spawn_conn(
                                 if !write_response(
                                     &writer,
                                     &counters,
-                                    cfg.max_frame,
+                                    max_frame,
                                     &submit_error(id, e),
                                 ) {
                                     break;
@@ -391,22 +510,38 @@ fn spawn_conn(
                     WireRequest::Stats { id } => {
                         let resp = WireResponse::Stats {
                             id,
-                            stats: stats_value(&svc, &counters, cfg.levels),
+                            stats: stats_value(&svc, &counters, levels),
                         };
-                        if !write_response(&writer, &counters, cfg.max_frame, &resp) {
+                        if !write_response(&writer, &counters, max_frame, &resp) {
                             break;
                         }
                     }
-                    WireRequest::Swap { id, layer, q, p, table } => {
-                        let resp = match svc.swap_edge(layer, q, p, table) {
-                            Ok(()) => WireResponse::Ok { id },
-                            Err(e) => WireResponse::Error {
+                    WireRequest::Swap { id, model, layer, q, p, table } => {
+                        // swaps route by tenant too: the named (or default)
+                        // tenant's own netlist cell takes the new table
+                        let target = match model.as_deref() {
+                            None => svc.registry().resolve(ModelId::DEFAULT),
+                            Some(name) => svc.registry().resolve_name(name),
+                        };
+                        let resp = match target {
+                            Some(t) => match t.cell().swap_edge(layer, q, p, table) {
+                                Ok(()) => WireResponse::Ok { id },
+                                Err(e) => WireResponse::Error {
+                                    id,
+                                    kind: ErrorKind::Invalid,
+                                    msg: e.to_string(),
+                                },
+                            },
+                            None => WireResponse::Error {
                                 id,
-                                kind: ErrorKind::Invalid,
-                                msg: e.to_string(),
+                                kind: ErrorKind::Unsupported,
+                                msg: format!(
+                                    "unknown model: {}",
+                                    model.as_deref().unwrap_or("<default>")
+                                ),
                             },
                         };
-                        if !write_response(&writer, &counters, cfg.max_frame, &resp) {
+                        if !write_response(&writer, &counters, max_frame, &resp) {
                             break;
                         }
                     }
@@ -415,7 +550,7 @@ fn spawn_conn(
                         if !write_response(
                             &writer,
                             &counters,
-                            cfg.max_frame,
+                            max_frame,
                             &WireResponse::Ok { id },
                         ) {
                             break;
@@ -473,7 +608,7 @@ fn spawn_conn(
                         // queued reply is still received so executors'
                         // results are consumed and the thread terminates
                         if alive {
-                            alive = write_response(&writer, &counters, cfg.max_frame, &resp);
+                            alive = write_response(&writer, &counters, max_frame, &resp);
                         }
                     }
                     Out::Discard(rxs) => {

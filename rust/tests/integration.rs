@@ -6,7 +6,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use kanele::checkpoint::{testutil, Checkpoint, TestSet};
-use kanele::coordinator::{Backend, Service, ServiceCfg, SubmitError};
+use kanele::coordinator::{Backend, ModelRegistry, Service, ServiceCfg, SubmitError};
 use kanele::net::{Client, ErrorKind, NetCfg, NetError, NetServer, WireRequest, WireResponse};
 use kanele::netlist::Netlist;
 use kanele::util::Rng;
@@ -569,9 +569,9 @@ fn wire_backpressure_is_typed_not_a_hang() {
     let mut client = wire_client(&server);
 
     for id in 1..=2u64 {
-        client.send(&WireRequest::Infer { id, codes: vec![0; 5] }).unwrap();
+        client.send(&WireRequest::Infer { id, model: None, codes: vec![0; 5] }).unwrap();
     }
-    client.send(&WireRequest::Infer { id: 3, codes: vec![0; 5] }).unwrap();
+    client.send(&WireRequest::Infer { id: 3, model: None, codes: vec![0; 5] }).unwrap();
     // the ONLY frame that can arrive now is the typed rejection of id 3 —
     // ids 1 and 2 are parked in admission with no executor to drain them
     match client.recv_response().unwrap() {
@@ -617,7 +617,7 @@ fn wire_client_disconnect_mid_request_no_stall() {
     {
         let mut doomed = wire_client(&server);
         for id in 1..=5u64 {
-            doomed.send(&WireRequest::Infer { id, codes: vec![1; 5] }).unwrap();
+            doomed.send(&WireRequest::Infer { id, model: None, codes: vec![1; 5] }).unwrap();
         }
         // dropped here: connection closes with all five un-replied
     }
@@ -653,7 +653,7 @@ fn wire_server_shutdown_drains_in_flight() {
     for id in 1..=8u64 {
         let codes: Vec<u32> = (0..5).map(|_| rng.below(16) as u32).collect();
         want.insert(id, sim::eval(&net, &codes));
-        client.send(&WireRequest::Infer { id, codes }).unwrap();
+        client.send(&WireRequest::Infer { id, model: None, codes }).unwrap();
     }
     // let the reader admit everything (exec_delay keeps the batches
     // themselves in flight well past this), then drain concurrently with
@@ -736,4 +736,190 @@ fn wire_cheetah_control_loop_with_slo() {
     drop(client);
     server.shutdown();
     svc.shutdown();
+}
+
+/// Two-tenant wire fixture: `a` (input width 5, 3 outputs) and `b` (input
+/// width 4, 2 outputs) have different geometries, so routing is provable
+/// from the response shape alone, not just the values.
+fn registry_wire_fixture() -> (Arc<Netlist>, Arc<Netlist>, Arc<Service>, NetServer) {
+    let build = |dims: &[usize], seed: u64| {
+        let ck = testutil::synthetic(dims, &[4, 4, 4], seed);
+        let tables = lut::from_checkpoint(&ck);
+        Arc::new(Netlist::build(&ck, &tables, 2))
+    };
+    let net_a = build(&[5, 4, 3], 2071);
+    let net_b = build(&[4, 4, 2], 2072);
+    let reg = Arc::new(ModelRegistry::new(engine::OptLevel::default()));
+    reg.load("a", Arc::clone(&net_a)).unwrap();
+    reg.load("b", Arc::clone(&net_b)).unwrap();
+    let svc = Arc::new(Service::start_registry(
+        reg,
+        ServiceCfg { workers: 2, shards: 2, ..Default::default() },
+    ));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        listener,
+        NetCfg { levels: 16, ..NetCfg::default() },
+    )
+    .unwrap();
+    (net_a, net_b, svc, server)
+}
+
+#[test]
+fn wire_multi_tenant_routing_and_pr6_compat() {
+    let (net_a, net_b, svc, mut server) = registry_wire_fixture();
+    let mut client = wire_client(&server);
+    let mut rng = Rng::new(21);
+
+    // named routing is bit-exact per tenant, provable by output width
+    for _ in 0..16 {
+        let ca: Vec<u32> = (0..5).map(|_| rng.below(16) as u32).collect();
+        let cb: Vec<u32> = (0..4).map(|_| rng.below(16) as u32).collect();
+        let (sa, _) = client.infer_model(Some("a"), ca.clone()).unwrap();
+        let (sb, _) = client.infer_model(Some("b"), cb.clone()).unwrap();
+        assert_eq!(sa, sim::eval(&net_a, &ca));
+        assert_eq!(sb, sim::eval(&net_b, &cb));
+        assert_eq!(sa.len(), 3);
+        assert_eq!(sb.len(), 2);
+    }
+    // batch frames route too
+    let batch: Vec<Vec<u32>> =
+        (0..8).map(|_| (0..4).map(|_| rng.below(16) as u32).collect()).collect();
+    let rows = client.infer_batch_model(Some("b"), batch.clone()).unwrap();
+    assert_eq!(rows, sim::eval_batch(&net_b, &batch));
+
+    // a frame with NO model field — a pre-registry client — lands on the
+    // default tenant (the first loaded: "a")
+    let codes = vec![3u32; 5];
+    let (sums, _) = client.infer(codes.clone()).unwrap();
+    assert_eq!(sums, sim::eval(&net_a, &codes));
+
+    // unknown model: typed `unsupported` error frame, connection survives
+    match client.infer_model(Some("ghost"), vec![0; 5]) {
+        Err(NetError::Remote { kind: ErrorKind::Unsupported, msg }) => {
+            assert!(msg.contains("ghost"), "msg: {msg}");
+        }
+        other => panic!("expected Unsupported error frame, got {other:?}"),
+    }
+    let again = vec![0u32; 5];
+    let (sums, _) = client.infer(again.clone()).unwrap();
+    assert_eq!(sums, sim::eval(&net_a, &again));
+
+    // stats advertises per-tenant widths for multi-model load generators
+    let stats = client.stats().unwrap();
+    let models = stats.get("models").and_then(|v| v.as_array()).expect("models array");
+    assert_eq!(models.len(), 2);
+    let width_of = |name: &str| {
+        models
+            .iter()
+            .find(|m| m.get("name").and_then(|v| v.as_str()) == Some(name))
+            .and_then(|m| m.get("input_width"))
+            .and_then(|v| v.as_i64())
+    };
+    assert_eq!(width_of("a"), Some(5));
+    assert_eq!(width_of("b"), Some(4));
+
+    drop(client);
+    server.shutdown();
+    svc.shutdown();
+}
+
+#[test]
+fn wire_registry_load_unload_swap_under_traffic() {
+    let (net_a, _net_b, svc, mut server) = registry_wire_fixture();
+    let mut client = wire_client(&server);
+
+    // load a third tenant while the wire serves: the name becomes routable
+    // on live connections without reconnecting
+    let ck_c = testutil::synthetic(&[6, 3, 2], &[4, 4, 4], 2073);
+    let tables = lut::from_checkpoint(&ck_c);
+    let net_c = Arc::new(Netlist::build(&ck_c, &tables, 2));
+    svc.registry().load("c", Arc::clone(&net_c)).unwrap();
+    let cc = vec![1u32; 6];
+    let (sums, _) = client.infer_model(Some("c"), cc.clone()).unwrap();
+    assert_eq!(sums, sim::eval(&net_c, &cc));
+
+    // a routed swap rewires that tenant only
+    let p = net_c.layers[0].neurons[0].luts[0].input;
+    let n_codes = 1usize << net_c.layers[0].in_bits;
+    client.swap_model(Some("c"), 0, 0, p, vec![777; n_codes]).unwrap();
+    let after = svc.registry().resolve_name("c").unwrap().cell().load();
+    let (sums, _) = client.infer_model(Some("c"), cc.clone()).unwrap();
+    assert_eq!(sums, sim::eval(&after, &cc));
+    let ca = vec![1u32; 5];
+    let (sa, _) = client.infer_model(Some("a"), ca.clone()).unwrap();
+    assert_eq!(sa, sim::eval(&net_a, &ca), "tenant a must be untouched by c's swap");
+
+    // unload: the name stops routing with a typed error frame; the
+    // connection and the remaining tenants keep serving
+    svc.registry().unload("c").unwrap();
+    match client.infer_model(Some("c"), cc) {
+        Err(NetError::Remote { kind: ErrorKind::Unsupported, .. }) => {}
+        other => panic!("expected Unsupported after unload, got {other:?}"),
+    }
+    let (sa, _) = client.infer_model(Some("a"), ca.clone()).unwrap();
+    assert_eq!(sa, sim::eval(&net_a, &ca));
+
+    drop(client);
+    server.shutdown();
+    svc.shutdown();
+}
+
+#[test]
+fn wire_auth_token_gate() {
+    // token-gated server: the first frame must be a hello with the secret
+    let ck = testutil::synthetic(&[5, 4, 3], &[4, 4, 4], 2074);
+    let tables = lut::from_checkpoint(&ck);
+    let net = Arc::new(Netlist::build(&ck, &tables, 2));
+    let svc = Arc::new(Service::start(
+        Arc::clone(&net),
+        ServiceCfg { workers: 1, shards: 1, ..Default::default() },
+    ));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let mut server = NetServer::start(
+        Arc::clone(&svc),
+        listener,
+        NetCfg { levels: 16, auth_token: Some("s3cret".into()), ..NetCfg::default() },
+    )
+    .unwrap();
+
+    // no hello at all: typed auth error, then the server closes the socket
+    let mut nohello = wire_client(&server);
+    match nohello.infer(vec![0; 5]) {
+        Err(NetError::Remote { kind: ErrorKind::Auth, .. }) => {}
+        other => panic!("expected Auth error frame, got {other:?}"),
+    }
+    assert!(nohello.infer(vec![0; 5]).is_err(), "connection must close after an auth failure");
+
+    // wrong token: same gate
+    let mut wrong = wire_client(&server);
+    match wrong.hello(Some("nope")) {
+        Err(NetError::Remote { kind: ErrorKind::Auth, .. }) => {}
+        other => panic!("expected Auth error frame, got {other:?}"),
+    }
+
+    // right token: hello acks and the connection serves bit-exactly
+    let mut good = wire_client(&server);
+    good.hello(Some("s3cret")).unwrap();
+    let codes = vec![1u32; 5];
+    let (sums, _) = good.infer(codes.clone()).unwrap();
+    assert_eq!(sums, sim::eval(&net, &codes));
+
+    drop(good);
+    server.shutdown();
+    svc.shutdown();
+
+    // a token-less server acks hello as a no-op, so old and new clients mix
+    let (net2, svc2, mut server2) =
+        wire_fixture(ServiceCfg { workers: 1, shards: 1, ..Default::default() }, 2075);
+    let mut c = wire_client(&server2);
+    c.hello(None).unwrap();
+    c.hello(Some("anything")).unwrap();
+    let codes = vec![0u32; 5];
+    let (sums, _) = c.infer(codes.clone()).unwrap();
+    assert_eq!(sums, sim::eval(&net2, &codes));
+    drop(c);
+    server2.shutdown();
+    svc2.shutdown();
 }
