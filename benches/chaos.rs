@@ -1,0 +1,470 @@
+//! Deterministic chaos harness: the fault-tolerance counterpart to the
+//! serving bench. Every fault is *injected from a seeded plan* — executor
+//! panics via `FaultPlan`, torn frames / reply stalls via `WireFaults` —
+//! so each scenario is reproducible and gates on hard invariants instead
+//! of luck:
+//!
+//! 1. panic soak — a poisoned plane keeps serving: every admitted request
+//!    gets exactly one typed outcome, completions stay bit-exact vs
+//!    `sim::eval_batch`, workers survive all panics;
+//! 2. deadline storm — a saturated single worker sheds expired requests
+//!    with typed `Expired` replies, generous deadlines still complete;
+//! 3. quarantine lifecycle — a repeatedly panicking tenant trips its
+//!    breaker, co-tenants are untouched, the window half-opens and a
+//!    clean probe recovers the tenant;
+//! 4. wire chaos — loadgen drives a server injecting executor panics,
+//!    torn frames and reply stalls, and finishes every request through
+//!    reconnects and typed-failure retries.
+//!
+//!     cargo bench --bench chaos
+//!     KANELE_BENCH_QUICK=1 cargo bench --bench chaos   # CI smoke mode
+//!
+//! Acceptance bar (ISSUE 8): zero hangs (every reply is collected under a
+//! timeout and a watchdog aborts the whole run past its wall budget),
+//! `completed + failed + shed_expired + dropped == admitted` on every
+//! scenario, and rows land under `section: "chaos"` in `BENCH_serving.json`
+//! (merged, not overwritten — the serving bench owns the rest of the file).
+
+mod common;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kanele::checkpoint::testutil;
+use kanele::coordinator::{FaultPlan, ModelRegistry, Service, ServiceCfg, SubmitError};
+use kanele::json::{obj, Value};
+use kanele::net::{self, LoadGenCfg, NetCfg, NetServer, WireFaults};
+use kanele::netlist::Netlist;
+use kanele::{data, lut, sim};
+
+/// Hard wall budget for the whole bench: a hang anywhere (stuck reply,
+/// unjoinable thread, wedged socket) turns into a loud process abort
+/// instead of a silent CI timeout.
+const WALL_BUDGET: Duration = Duration::from_secs(300);
+
+/// Per-reply collection timeout: no typed outcome within this window is a
+/// hang, full stop.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Typed-outcome tally for one scenario. The invariant every scenario
+/// gates on: `ok + failed + expired + dropped == admitted`.
+#[derive(Default)]
+struct Tally {
+    admitted: u64,
+    ok: u64,
+    failed: u64,
+    expired: u64,
+    dropped: u64,
+}
+
+impl Tally {
+    fn assert_conserved(&self, scenario: &str) {
+        assert_eq!(
+            self.ok + self.failed + self.expired + self.dropped,
+            self.admitted,
+            "{scenario}: typed outcomes do not partition admissions \
+             (ok {} + failed {} + expired {} + dropped {} != admitted {})",
+            self.ok,
+            self.failed,
+            self.expired,
+            self.dropped,
+            self.admitted
+        );
+    }
+
+    fn row(&self, scenario: &str, extra: Vec<(&str, Value)>) -> Value {
+        let mut fields: Vec<(&str, Value)> = vec![
+            ("section", "chaos".into()),
+            ("scenario", scenario.into()),
+            ("admitted", (self.admitted as i64).into()),
+            ("completed", (self.ok as i64).into()),
+            ("failed", (self.failed as i64).into()),
+            ("expired", (self.expired as i64).into()),
+            ("dropped", (self.dropped as i64).into()),
+            ("conserved", true.into()),
+        ];
+        fields.extend(extra);
+        obj(fields)
+    }
+}
+
+/// Collect one reply into the tally; `oracle` is the bit-exact expectation
+/// for a completion (panicked and shed requests never reach an executor,
+/// so only `Ok` outcomes are comparable).
+fn collect(
+    tally: &mut Tally,
+    rx: std::sync::mpsc::Receiver<kanele::coordinator::Reply>,
+    oracle: Option<&Vec<i64>>,
+    scenario: &str,
+) {
+    match rx.recv_timeout(REPLY_TIMEOUT) {
+        Ok(Ok(resp)) => {
+            tally.ok += 1;
+            if let Some(want) = oracle {
+                assert_eq!(&resp.sums, want, "{scenario}: completed row diverges from sim");
+            }
+        }
+        Ok(Err(SubmitError::Failed)) => tally.failed += 1,
+        Ok(Err(SubmitError::Expired)) => tally.expired += 1,
+        Ok(Err(e)) => panic!("{scenario}: unexpected typed reply {e}"),
+        Err(RecvTimeoutError::Disconnected) => tally.dropped += 1,
+        Err(RecvTimeoutError::Timeout) => {
+            panic!("{scenario}: reply channel hung past {REPLY_TIMEOUT:?}")
+        }
+    }
+}
+
+fn main() {
+    let quick = std::env::var("KANELE_BENCH_QUICK").is_ok();
+    println!("=== chaos bench: seeded faults, typed outcomes, hard invariants ===");
+
+    // watchdog: the whole point of this bench is "no hangs", so a hang in
+    // the bench itself must fail loudly rather than stall CI
+    let done = Arc::new(AtomicBool::new(false));
+    {
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            let t0 = Instant::now();
+            while t0.elapsed() < WALL_BUDGET {
+                std::thread::sleep(Duration::from_millis(200));
+                if done.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+            eprintln!("CHAOS HANG: wall budget {WALL_BUDGET:?} exceeded");
+            std::process::exit(2);
+        });
+    }
+
+    let ck = common::checkpoint_or_synthetic("jsc_openml");
+    let tables = lut::from_checkpoint(&ck);
+    let net = Arc::new(Netlist::build(&ck, &tables, 2));
+    let n_stream = if quick { 2_000 } else { 10_000 };
+    let stream = data::random_code_stream(&ck, n_stream, 17);
+    let oracle = sim::eval_batch(&net, &stream);
+    let mut rows: Vec<Value> = Vec::new();
+
+    // -- 1. panic soak: a poisoned plane keeps serving ----------------------
+    // every 5th executed batch panics (never two in a row, so the default
+    // breaker stays closed); the closed loop below must see exactly one
+    // typed outcome per admission and bit-exact completions
+    {
+        let svc = Service::start(
+            Arc::clone(&net),
+            ServiceCfg {
+                workers: 4,
+                shards: 2,
+                steal: true,
+                max_batch: 16,
+                max_wait: Duration::from_micros(50),
+                queue_depth: 1 << 12,
+                faults: FaultPlan { seed: 0xC4A05, panic_every: 5, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let mut tally = Tally::default();
+        let mut pending: VecDeque<(usize, _)> = VecDeque::with_capacity(512);
+        let t0 = Instant::now();
+        for (i, codes) in stream.iter().enumerate() {
+            let mut codes = codes.clone();
+            loop {
+                match svc.try_submit(codes) {
+                    Ok(rx) => {
+                        tally.admitted += 1;
+                        pending.push_back((i, rx));
+                        break;
+                    }
+                    Err((SubmitError::Backpressure, back)) => {
+                        codes = back.expect("codes back on backpressure");
+                        if let Some((j, rx)) = pending.pop_front() {
+                            collect(&mut tally, rx, Some(&oracle[j]), "panic_soak");
+                        }
+                    }
+                    Err((e, _)) => panic!("panic_soak: submit failed: {e}"),
+                }
+            }
+            if pending.len() >= 512 {
+                if let Some((j, rx)) = pending.pop_front() {
+                    collect(&mut tally, rx, Some(&oracle[j]), "panic_soak");
+                }
+            }
+        }
+        for (j, rx) in pending {
+            collect(&mut tally, rx, Some(&oracle[j]), "panic_soak");
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        svc.shutdown(); // must return: a leaked/wedged worker would hang here
+        let st = svc.stats();
+        tally.assert_conserved("panic_soak");
+        assert!(st.exec_panics > 0, "fault plan injected nothing");
+        assert!(st.faults_injected > 0);
+        assert!(st.respawns >= 1, "no supervised restart recorded");
+        assert_eq!(st.failed, tally.failed, "service failed-counter disagrees with replies");
+        assert_eq!(st.completed, tally.ok);
+        println!(
+            "   panic soak: {} admitted -> {} ok / {} failed / {} dropped | {} panics, {} respawns, {:.0} req/s",
+            tally.admitted,
+            tally.ok,
+            tally.failed,
+            tally.dropped,
+            st.exec_panics,
+            st.respawns,
+            tally.admitted as f64 / wall
+        );
+        rows.push(tally.row(
+            "panic_soak",
+            vec![
+                ("exec_panics", (st.exec_panics as i64).into()),
+                ("respawns", (st.respawns as i64).into()),
+                ("faults_injected", (st.faults_injected as i64).into()),
+                ("rps", (tally.admitted as f64 / wall).into()),
+            ],
+        ));
+    }
+
+    // -- 2. deadline storm: expiry shedding under a saturated worker --------
+    // one worker stretched 2 ms per batch; a burst with 200 us deadlines
+    // mostly expires at batch formation (typed, cheap — shed batches never
+    // execute), then a generous pass completes bit-exact
+    {
+        let svc = Service::start(
+            Arc::clone(&net),
+            ServiceCfg {
+                workers: 1,
+                shards: 1,
+                max_batch: 8,
+                max_wait: Duration::from_micros(100),
+                queue_depth: 1 << 12,
+                exec_delay: Duration::from_millis(2),
+                exec_delay_every: 0,
+                ..Default::default()
+            },
+        );
+        let n_burst = if quick { 100 } else { 300 };
+        let mut tally = Tally::default();
+        let mut pending = Vec::with_capacity(n_burst);
+        for (i, codes) in stream.iter().take(n_burst).enumerate() {
+            let rx = svc.submit_deadline(codes.clone(), Some(200)).expect("burst admit");
+            tally.admitted += 1;
+            pending.push((i, rx));
+        }
+        for (j, rx) in pending.drain(..) {
+            collect(&mut tally, rx, Some(&oracle[j]), "deadline_storm");
+        }
+        assert!(tally.expired > 0, "saturated plane shed nothing");
+        // generous deadlines ride the same stretched plane and still land
+        let n_generous = 50usize;
+        for (i, codes) in stream.iter().take(n_generous).enumerate() {
+            let rx = svc.submit_deadline(codes.clone(), Some(10_000_000)).expect("generous admit");
+            tally.admitted += 1;
+            pending.push((i, rx));
+        }
+        let before_generous = tally.ok;
+        for (j, rx) in pending {
+            collect(&mut tally, rx, Some(&oracle[j]), "deadline_storm");
+        }
+        assert_eq!(
+            tally.ok - before_generous,
+            n_generous as u64,
+            "a generous deadline was shed or failed"
+        );
+        svc.shutdown();
+        let st = svc.stats();
+        tally.assert_conserved("deadline_storm");
+        assert_eq!(st.shed_expired, tally.expired, "shed counter disagrees with typed replies");
+        assert_eq!(st.per_shard.iter().map(|s| s.shed_expired).sum::<u64>(), st.shed_expired);
+        println!(
+            "   deadline storm: {} admitted -> {} ok / {} expired (typed, shed at formation)",
+            tally.admitted, tally.ok, tally.expired
+        );
+        rows.push(tally.row(
+            "deadline_storm",
+            vec![
+                ("deadline_us", 200.into()),
+                ("shed_expired", (st.shed_expired as i64).into()),
+                ("generous_completed", (n_generous as i64).into()),
+            ],
+        ));
+    }
+
+    // -- 3. quarantine lifecycle: trip -> isolate -> half-open -> recover ---
+    // tenant a panics on its first two batches (seeded, budgeted), trips a
+    // 2-strike breaker, is refused with a typed error while tenant b keeps
+    // serving bit-exact, then the window elapses and a clean probe closes
+    // the breaker
+    {
+        let ck_a = testutil::synthetic(&[4, 3, 2], &[4, 5, 6], 2024);
+        let ck_b = testutil::synthetic(&[6, 4, 3], &[3, 5, 6], 777);
+        let net_a = Arc::new(Netlist::build(&ck_a, &lut::from_checkpoint(&ck_a), 2));
+        let net_b = Arc::new(Netlist::build(&ck_b, &lut::from_checkpoint(&ck_b), 2));
+        let reg = Arc::new(ModelRegistry::new(kanele::engine::OptLevel::default()));
+        let a = reg.load("a", Arc::clone(&net_a)).expect("load tenant a");
+        let b = reg.load("b", Arc::clone(&net_b)).expect("load tenant b");
+        let svc = Service::start_registry(
+            Arc::clone(&reg),
+            ServiceCfg {
+                workers: 1,
+                max_batch: 1,
+                max_wait: Duration::from_micros(10),
+                faults: FaultPlan {
+                    panic_every: 1,
+                    panic_budget: 2,
+                    panic_model: Some(a),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let window = Duration::from_millis(60);
+        reg.resolve(a).expect("tenant a").quarantine_policy(2, window);
+        let codes_a = vec![1u32, 2, 3, 0];
+        let codes_b = vec![1u32, 2, 3, 0, 1, 2];
+        for _ in 0..2 {
+            let rx = svc.submit_model(a, codes_a.clone()).expect("poisoned admit");
+            let reply = rx.recv_timeout(REPLY_TIMEOUT).expect("poisoned reply");
+            assert_eq!(reply.unwrap_err(), SubmitError::Failed);
+        }
+        let refusal = svc.submit_model(a, codes_a.clone()).expect_err("breaker should be open");
+        assert!(matches!(refusal, SubmitError::Quarantined(_)), "untyped refusal: {refusal}");
+        let got = svc.submit_blocking_model(b, codes_b.clone()).expect("co-tenant");
+        assert_eq!(got.sums, sim::eval(&net_b, &codes_b), "co-tenant b disturbed by a's breaker");
+        std::thread::sleep(2 * window);
+        // half-open probe: the fault budget is spent, so it runs clean
+        let probe = svc.submit_blocking_model(a, codes_a.clone()).expect("half-open probe");
+        assert_eq!(probe.sums, sim::eval(&net_a, &codes_a));
+        svc.shutdown();
+        let st = svc.stats();
+        let sa = st.per_tenant.iter().find(|t| t.name == "a").expect("tenant a stats");
+        assert_eq!((sa.panics, sa.failed), (2, 2));
+        assert!(sa.quarantine_drops >= 1);
+        assert!(!sa.quarantined, "breaker still open after clean probe");
+        assert_eq!(st.quarantine_drops, sa.quarantine_drops);
+        let admitted: u64 = st.per_shard.iter().map(|s| s.admitted).sum();
+        assert_eq!(st.completed + st.failed + st.shed_expired + st.dropped, admitted);
+        println!(
+            "   quarantine: tripped after 2 panics, {} refusal(s), co-tenant clean, recovered",
+            sa.quarantine_drops
+        );
+        rows.push(obj(vec![
+            ("section", "chaos".into()),
+            ("scenario", "quarantine".into()),
+            ("panics", (sa.panics as i64).into()),
+            ("quarantine_drops", (sa.quarantine_drops as i64).into()),
+            ("recovered", (!sa.quarantined).into()),
+            ("conserved", true.into()),
+        ]));
+    }
+
+    // -- 4. wire chaos: panics + torn frames + stalls through loadgen -------
+    // the server injects an executor panic every 9th batch, tears every
+    // 17th reply frame mid-write and stalls every 13th; loadgen must land
+    // every request through reconnects and typed-failure retries
+    {
+        let svc = Arc::new(Service::start(
+            Arc::clone(&net),
+            ServiceCfg {
+                workers: 2,
+                shards: 2,
+                steal: true,
+                max_batch: 16,
+                max_wait: Duration::from_micros(100),
+                queue_depth: 1 << 12,
+                faults: FaultPlan { seed: 0xFACADE, panic_every: 9, ..Default::default() },
+                ..Default::default()
+            },
+        ));
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let mut server = NetServer::start(
+            Arc::clone(&svc),
+            listener,
+            NetCfg {
+                levels: ck.quantizer(0).levels(),
+                faults: WireFaults {
+                    torn_every: 17,
+                    stall_every: 13,
+                    stall: Duration::from_micros(200),
+                    ..Default::default()
+                },
+                ..NetCfg::default()
+            },
+        )
+        .expect("start chaos server");
+        let addr = server.local_addr().to_string();
+        let requests: u64 = if quick { 400 } else { 2_000 };
+        let r = net::loadgen(
+            &addr,
+            LoadGenCfg {
+                connections: 2,
+                requests,
+                seed: 29,
+                deadline_us: 50_000,
+                ..Default::default()
+            },
+        )
+        .expect("chaos loadgen");
+        assert_eq!(r.errors, 0, "wire chaos produced terminal client errors");
+        assert_eq!(
+            r.completed + r.expired,
+            requests,
+            "requests lost on the wire (completed {} + expired {} != {requests})",
+            r.completed,
+            r.expired
+        );
+        assert!(r.reconnects >= 1, "torn frames never forced a reconnect");
+        assert!(r.failed_retries >= 1, "injected panics never surfaced as typed retries");
+        let ns = server.stats();
+        assert!(ns.faults_injected >= 1, "server injected no wire faults");
+        let st = svc.stats();
+        assert!(st.exec_panics >= 1, "server injected no executor panics");
+        server.shutdown(); // must return with faults armed: no wedged conns
+        svc.shutdown();
+        println!(
+            "   wire chaos: {requests} reqs -> {} ok / {} expired | {} reconnects, {} failed retries, {} wire faults, {} panics",
+            r.completed,
+            r.expired,
+            r.reconnects,
+            r.failed_retries,
+            ns.faults_injected,
+            st.exec_panics
+        );
+        rows.push(obj(vec![
+            ("section", "chaos".into()),
+            ("scenario", "wire_chaos".into()),
+            ("requests", (requests as i64).into()),
+            ("completed", (r.completed as i64).into()),
+            ("expired", (r.expired as i64).into()),
+            ("reconnects", (r.reconnects as i64).into()),
+            ("failed_retries", (r.failed_retries as i64).into()),
+            ("wire_faults_injected", (ns.faults_injected as i64).into()),
+            ("exec_panics", (st.exec_panics as i64).into()),
+            ("conserved", true.into()),
+        ]));
+    }
+
+    done.store(true, Ordering::Relaxed);
+
+    // merge (not overwrite) into the serving trajectory file: replace any
+    // previous chaos rows, leave the serving bench's own rows alone
+    let path = std::path::Path::new("BENCH_serving.json");
+    let mut doc: BTreeMap<String, Value> = match kanele::json::from_file(path) {
+        Ok(Value::Object(o)) => o,
+        _ => {
+            let mut o = BTreeMap::new();
+            o.insert("bench".to_string(), Value::Str("serving".to_string()));
+            o
+        }
+    };
+    let mut all_rows = match doc.remove("rows") {
+        Some(Value::Array(a)) => a,
+        _ => Vec::new(),
+    };
+    all_rows.retain(|r| r.get("section").and_then(|s| s.as_str()) != Some("chaos"));
+    all_rows.extend(rows);
+    doc.insert("rows".to_string(), Value::Array(all_rows));
+    std::fs::write(path, kanele::json::to_string(&Value::Object(doc)))
+        .expect("write BENCH_serving.json");
+    println!("merged chaos rows into BENCH_serving.json");
+}

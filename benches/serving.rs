@@ -411,7 +411,7 @@ fn main() {
             .map(|(i, c)| svc.submit_to(i % shards, c.clone()).expect("probe"))
             .collect();
         for (rx, want) in rxs.into_iter().zip(&oracle) {
-            assert_eq!(&rx.recv().unwrap().sums, want, "sharded plane diverges from sim");
+            assert_eq!(&rx.recv().unwrap().unwrap().sums, want, "sharded plane diverges from sim");
         }
         svc.shutdown();
         println!("   bit-exactness gate: baseline == sharded == sim on {} probes", probe.len());

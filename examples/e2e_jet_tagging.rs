@@ -155,7 +155,7 @@ fn main() -> Result<()> {
                 // malformed request must abort instead of spinning
                 Err(SubmitError::Backpressure) => {
                     for rx in pending.drain(..) {
-                        rx.recv()?;
+                        rx.recv()??;
                         done += 1;
                     }
                 }
@@ -164,7 +164,7 @@ fn main() -> Result<()> {
         }
     }
     for rx in pending {
-        rx.recv()?;
+        rx.recv()??;
         done += 1;
     }
     let wall = t0.elapsed().as_secs_f64();

@@ -118,11 +118,11 @@ fn main() -> Result<()> {
             }
         }
         while pending.len() >= IN_FLIGHT {
-            pending.pop_front().unwrap().recv()?;
+            pending.pop_front().unwrap().recv()??;
         }
     }
     while let Some(rx) = pending.pop_front() {
-        rx.recv()?;
+        rx.recv()??;
     }
     let st = svc.stats();
     svc.shutdown();

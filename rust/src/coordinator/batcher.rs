@@ -23,6 +23,16 @@
 //! heavy tenant's backlog cannot starve a light one. With a single key the
 //! collector degenerates to `collect_with` exactly (same batch lengths,
 //! same flush reasons, same [`CollectStats`]) — asserted by test.
+//!
+//! Items may also carry an absolute **deadline** ([`Timestamped::deadline`],
+//! default `None`). The DRR collector sheds already-expired items at batch
+//! formation time — they never enter a batch; instead they are handed to
+//! the caller's `on_shed` sink (the dispatcher replies with a typed
+//! `Expired` error) and counted in [`CollectStats::shed_expired`]. Under
+//! overload the plane degrades to answering fresh requests on time instead
+//! of answering everything late. Deadline-free traffic takes none of these
+//! paths: per-queue `has_deadlines` keeps the shedding scan entirely off
+//! the deadline-less hot path.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
@@ -94,6 +104,13 @@ impl Policy {
 /// Anything carrying a submission timestamp can be collected into batches.
 pub trait Timestamped {
     fn submitted(&self) -> Instant;
+
+    /// Absolute deadline, if the item carries one. Items whose deadline has
+    /// passed are shed at batch formation by [`DrrCollector`] instead of
+    /// entering a batch. The default (`None`) opts out entirely.
+    fn deadline(&self) -> Option<Instant> {
+        None
+    }
 }
 
 /// Bare timestamps batch as themselves (tests and simulations).
@@ -170,6 +187,9 @@ pub struct CollectStats {
     pub flush_full: u64,
     pub flush_timeout: u64,
     pub flush_disconnect: u64,
+    /// Items shed at batch formation because their deadline had already
+    /// expired (never entered a batch; `items` does not include them).
+    pub shed_expired: u64,
 }
 
 impl CollectStats {
@@ -254,6 +274,14 @@ struct KeyQueue<T> {
     key: u32,
     items: VecDeque<T>,
     deficit: usize,
+    /// Any parked item carries a deadline — gates the shedding scan so
+    /// deadline-free tenants never pay for it.
+    has_deadlines: bool,
+}
+
+/// The item's deadline has passed.
+fn is_expired<T: Timestamped>(item: &T, now: Instant) -> bool {
+    item.deadline().is_some_and(|d| d <= now)
 }
 
 /// Per-tenant deficit-round-robin batch collection — the multi-tenant
@@ -293,26 +321,43 @@ impl<T: Timestamped + Keyed> DrrCollector<T> {
     /// Collect the next single-tenant batch. Returns `None` once admission
     /// is disconnected and every queue is drained; partial queues at
     /// disconnection are still flushed (admitted requests always complete).
+    ///
+    /// Expired items are silently dropped on this path (their reply channel
+    /// closes); callers whose items carry deadlines should use
+    /// [`DrrCollector::next_with`] and reply typed `Expired` from the sink.
     pub fn next(&mut self, rx: &Receiver<T>, stats: &mut CollectStats) -> Option<Batch<T>> {
+        self.next_with(rx, stats, &mut |_| {})
+    }
+
+    /// [`DrrCollector::next`] with a shed sink: every item shed for an
+    /// expired deadline is handed to `on_shed` the moment the collector
+    /// notices it (admission drain or batch formation), so typed `Expired`
+    /// replies go out promptly even when no batch is ready.
+    pub fn next_with<F: FnMut(T)>(
+        &mut self,
+        rx: &Receiver<T>,
+        stats: &mut CollectStats,
+        on_shed: &mut F,
+    ) -> Option<Batch<T>> {
         loop {
-            self.drain(rx);
-            if let Some(b) = self.dispatch(stats, false) {
+            self.drain(rx, stats, on_shed);
+            if let Some(b) = self.dispatch(stats, false, on_shed) {
                 return Some(b);
             }
             if self.disconnected {
-                return self.dispatch(stats, true);
+                return self.dispatch(stats, true, on_shed);
             }
             match self.earliest_oldest() {
                 // nothing parked: block for the first item
                 None => match rx.recv() {
-                    Ok(item) => self.enqueue(item),
+                    Ok(item) => self.enqueue(item, stats, on_shed),
                     Err(_) => self.disconnected = true,
                 },
                 // wait until the earliest queue head exhausts its budget
                 Some(oldest) => {
                     let wait = self.policy.max_wait.saturating_sub(oldest.elapsed());
                     match rx.recv_timeout(wait) {
-                        Ok(item) => self.enqueue(item),
+                        Ok(item) => self.enqueue(item, stats, on_shed),
                         Err(RecvTimeoutError::Timeout) => {}
                         Err(RecvTimeoutError::Disconnected) => self.disconnected = true,
                     }
@@ -323,10 +368,10 @@ impl<T: Timestamped + Keyed> DrrCollector<T> {
 
     /// Park everything currently admitted (greedy, like `collect_with`'s
     /// drain — queued requests join batches without waiting).
-    fn drain(&mut self, rx: &Receiver<T>) {
+    fn drain<F: FnMut(T)>(&mut self, rx: &Receiver<T>, stats: &mut CollectStats, on_shed: &mut F) {
         loop {
             match rx.try_recv() {
-                Ok(item) => self.enqueue(item),
+                Ok(item) => self.enqueue(item, stats, on_shed),
                 Err(TryRecvError::Empty) => return,
                 Err(TryRecvError::Disconnected) => {
                     self.disconnected = true;
@@ -338,15 +383,30 @@ impl<T: Timestamped + Keyed> DrrCollector<T> {
 
     /// Linear scan over *active* keys (tenants with parked work) — small by
     /// construction; the registry may hold many tenants but only those with
-    /// a backlog on this shard appear here.
-    fn enqueue(&mut self, item: T) {
+    /// a backlog on this shard appear here. Items already past their
+    /// deadline go straight to the shed sink instead of parking.
+    fn enqueue<F: FnMut(T)>(&mut self, item: T, stats: &mut CollectStats, on_shed: &mut F) {
+        let has_deadline = item.deadline().is_some();
+        if has_deadline && is_expired(&item, Instant::now()) {
+            stats.shed_expired += 1;
+            on_shed(item);
+            return;
+        }
         let key = item.key();
         match self.queues.iter_mut().find(|q| q.key == key) {
-            Some(q) => q.items.push_back(item),
+            Some(q) => {
+                q.has_deadlines |= has_deadline;
+                q.items.push_back(item);
+            }
             None => {
                 let mut items = VecDeque::new();
                 items.push_back(item);
-                self.queues.push_back(KeyQueue { key, items, deficit: 0 });
+                self.queues.push_back(KeyQueue {
+                    key,
+                    items,
+                    deficit: 0,
+                    has_deadlines: has_deadline,
+                });
             }
         }
     }
@@ -357,37 +417,65 @@ impl<T: Timestamped + Keyed> DrrCollector<T> {
 
     /// Dispatch from the first ready queue in rotation order. `flush`
     /// overrides readiness (shutdown: everything parked must complete).
-    fn dispatch(&mut self, stats: &mut CollectStats, flush: bool) -> Option<Batch<T>> {
+    /// Expired items are shed to `on_shed` before the batch forms; a queue
+    /// whose entire backlog expired yields to the next ready queue.
+    fn dispatch<F: FnMut(T)>(
+        &mut self,
+        stats: &mut CollectStats,
+        flush: bool,
+        on_shed: &mut F,
+    ) -> Option<Batch<T>> {
         let cap = self.policy.max_batch.max(1);
-        let idx = self.queues.iter().position(|q| {
-            flush
-                || q.items.len() >= cap
-                || q.items
-                    .front()
-                    .is_some_and(|t| t.submitted().elapsed() >= self.policy.max_wait)
-        })?;
-        let mut q = self.queues.remove(idx).expect("position is in range");
-        let quantum = self.policy.quantum();
-        // deficit is capped at one batch: a queue skipped while not ready
-        // must not accumulate an unbounded burst allowance
-        q.deficit = (q.deficit + quantum).min(cap);
-        let fill = q.items.len();
-        let take = fill.min(cap).min(q.deficit);
-        q.deficit -= take;
-        let items: Vec<T> = q.items.drain(..take).collect();
-        let reason = if flush {
-            FlushReason::Disconnect
-        } else if fill >= cap {
-            FlushReason::Full
-        } else {
-            FlushReason::Timeout
-        };
-        if q.items.is_empty() {
-            q.deficit = 0; // a drained tenant starts fresh next backlog
-        } else {
-            self.queues.push_back(q);
+        loop {
+            let idx = self.queues.iter().position(|q| {
+                flush
+                    || q.items.len() >= cap
+                    || q.items
+                        .front()
+                        .is_some_and(|t| t.submitted().elapsed() >= self.policy.max_wait)
+            })?;
+            let mut q = self.queues.remove(idx).expect("position is in range");
+            // deadline shedding at formation time: expired items never
+            // enter a batch (deadline-free queues skip the scan entirely)
+            if q.has_deadlines {
+                let now = Instant::now();
+                let before = q.items.len();
+                let mut kept = VecDeque::with_capacity(before);
+                for item in q.items.drain(..) {
+                    if is_expired(&item, now) {
+                        on_shed(item);
+                    } else {
+                        kept.push_back(item);
+                    }
+                }
+                stats.shed_expired += (before - kept.len()) as u64;
+                q.items = kept;
+                if q.items.is_empty() {
+                    continue; // whole backlog expired; try the next queue
+                }
+            }
+            let quantum = self.policy.quantum();
+            // deficit is capped at one batch: a queue skipped while not
+            // ready must not accumulate an unbounded burst allowance
+            q.deficit = (q.deficit + quantum).min(cap);
+            let fill = q.items.len();
+            let take = fill.min(cap).min(q.deficit);
+            q.deficit -= take;
+            let items: Vec<T> = q.items.drain(..take).collect();
+            let reason = if flush {
+                FlushReason::Disconnect
+            } else if fill >= cap {
+                FlushReason::Full
+            } else {
+                FlushReason::Timeout
+            };
+            if q.items.is_empty() {
+                q.deficit = 0; // a drained tenant starts fresh next backlog
+            } else {
+                self.queues.push_back(q);
+            }
+            return Some(stats.record(reason, Batch::new(items)));
         }
-        Some(stats.record(reason, Batch::new(items)))
     }
 }
 
@@ -631,6 +719,79 @@ mod tests {
         assert_eq!(sum(1), 4);
         assert_eq!(cs.items, 104);
         assert_eq!(cs.batches, order.len() as u64);
+    }
+
+    /// Test item: key 0, explicit submission time + optional deadline.
+    #[derive(Clone, Copy, Debug)]
+    struct D(Instant, Option<Instant>);
+    impl Timestamped for D {
+        fn submitted(&self) -> Instant {
+            self.0
+        }
+        fn deadline(&self) -> Option<Instant> {
+            self.1
+        }
+    }
+    impl Keyed for D {
+        fn key(&self) -> u32 {
+            0
+        }
+    }
+
+    #[test]
+    fn drr_sheds_already_expired_items_and_batches_the_rest() {
+        // items expired before admission are shed at the drain (handed to
+        // the sink, counted in shed_expired, never parked); live items —
+        // with or without a future deadline — batch normally
+        let p = Policy { max_batch: 4, max_wait: Duration::from_secs(5), ..Default::default() };
+        let (tx, rx) = sync_channel::<D>(64);
+        let now = Instant::now();
+        let expired = Some(now - Duration::from_millis(5));
+        let live = Some(now + Duration::from_secs(10));
+        tx.send(D(now, expired)).unwrap();
+        tx.send(D(now, live)).unwrap();
+        tx.send(D(now, None)).unwrap();
+        tx.send(D(now, expired)).unwrap();
+        tx.send(D(now, live)).unwrap();
+        tx.send(D(now, live)).unwrap();
+        drop(tx);
+        let mut cs = CollectStats::default();
+        let mut drr = DrrCollector::new(p);
+        let mut shed = Vec::new();
+        let b = drr.next_with(&rx, &mut cs, &mut |it| shed.push(it)).expect("one full batch");
+        assert_eq!(b.len(), 4, "the four live items form one full batch");
+        assert_eq!(shed.len(), 2);
+        assert_eq!(cs.shed_expired, 2);
+        assert_eq!(cs.items, 4, "shed items are not counted as batched items");
+        assert!(drr.next_with(&rx, &mut cs, &mut |it| shed.push(it)).is_none());
+        assert_eq!(shed.len(), 2);
+    }
+
+    #[test]
+    fn drr_sheds_items_that_expire_while_parked_at_formation_time() {
+        // items live at admission but expired by the time their queue is
+        // ready never enter a batch: the formation-time scan sheds them
+        // (deadline 25 ms, formation gated by max_wait 50 ms)
+        let p = Policy { max_batch: 4, max_wait: Duration::from_millis(50), ..Default::default() };
+        let (tx, rx) = sync_channel::<D>(8);
+        let now = Instant::now();
+        let deadline = Some(now + Duration::from_millis(25));
+        let producer = std::thread::spawn(move || {
+            tx.send(D(now, deadline)).unwrap();
+            tx.send(D(now, deadline)).unwrap();
+            std::thread::sleep(Duration::from_millis(150));
+            // tx drops here: queues already shed, collection ends
+        });
+        let mut cs = CollectStats::default();
+        let mut drr = DrrCollector::new(p);
+        let mut shed = Vec::new();
+        let got = drr.next_with(&rx, &mut cs, &mut |it| shed.push(it));
+        producer.join().unwrap();
+        assert!(got.is_none(), "every item expired; no batch may form");
+        assert_eq!(shed.len(), 2);
+        assert_eq!(cs.shed_expired, 2);
+        assert_eq!(cs.batches, 0);
+        assert_eq!(drr.backlog(), 0);
     }
 
     #[test]

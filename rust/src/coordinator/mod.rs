@@ -63,6 +63,35 @@
 //! so `sum(per_tenant) >= total` holds even mid-traffic and exactly at
 //! quiescence).
 //!
+//! **Failure containment**: executors and dispatchers are *supervised* —
+//! each batch runs under `catch_unwind`, so a poisoned batch fails its own
+//! requests with typed [`SubmitError::Failed`] replies instead of killing
+//! the worker; the thread rebuilds its scratch state in place and keeps
+//! serving (bounded restarts, `exec_panics`/`respawns` counters). A
+//! per-tenant circuit breaker quarantines a tenant whose batches
+//! repeatedly panic ([`registry::QUARANTINE_TRIP`] consecutive strikes
+//! open it for [`registry::QUARANTINE_WINDOW`]; the first admission after
+//! the window half-opens it, [`registry::Tenant::probe`] re-probes
+//! manually), so one bad checkpoint cannot take down co-tenants. Requests
+//! may carry a **deadline** ([`Service::submit_deadline`]): the DRR
+//! batcher sheds already-expired requests at formation time with a typed
+//! [`SubmitError::Expired`] reply, so an overloaded plane answers fresh
+//! requests on time instead of everything late. A seeded [`FaultPlan`]
+//! injects deterministic panics for the chaos bench; it is all-off by
+//! default and every injection hook sits behind one disarmed check.
+//!
+//! Failure modes → typed outcome at the client → who retries → counter:
+//!
+//! | failure | outcome | retry? | counter |
+//! |---|---|---|---|
+//! | admission queues full | `Err(Backpressure)` at submit | yes, backoff | `rejected` |
+//! | tenant quota full | `Err(Backpressure)` at submit | yes, backoff | `quota_drops` |
+//! | tenant quarantined | `Err(Quarantined)` at submit | after window / probe | `quarantine_drops` |
+//! | batch panicked | `Err(Failed)` reply | new request | `failed`, `exec_panics` |
+//! | deadline expired | `Err(Expired)` reply | no — answer is stale | `shed_expired` |
+//! | width raced a swap | reply channel closed | new request | `dropped` |
+//! | service stopped | `Err(Stopped)` at submit | no | — |
+//!
 //! Shutdown is graceful across shards: [`Service::shutdown`] disconnects
 //! every admission channel, each dispatcher drains and dispatches what was
 //! already admitted and closes its producer handle on the pool, executors
@@ -73,6 +102,7 @@ pub mod batcher;
 pub mod registry;
 pub mod steal;
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
@@ -105,6 +135,10 @@ pub struct Request {
     pub model: ModelId,
     pub codes: Vec<u32>,
     pub submitted: Instant,
+    /// Absolute formation deadline (computed at admission from the
+    /// caller's `deadline_us`). The batcher sheds the request with a
+    /// typed [`SubmitError::Expired`] reply instead of executing it late.
+    pub deadline: Option<Instant>,
 }
 
 /// Completed response.
@@ -116,6 +150,13 @@ pub struct Response {
     pub latency: Duration,
 }
 
+/// Every admitted request gets **exactly one** typed outcome on its reply
+/// channel: `Ok(Response)`, or a terminal `Err` ([`SubmitError::Failed`]
+/// for a panicked batch, [`SubmitError::Expired`] for a deadline shed).
+/// A closed channel (`RecvError`) is the `dropped` case: admission raced
+/// a whole-model replace, or shutdown discarded a parked request.
+pub type Reply = Result<Response, SubmitError>;
+
 struct Pending {
     req: Request,
     /// Resolved once at admission; executors run the batch on this handle
@@ -125,12 +166,16 @@ struct Pending {
     /// RAII quota slot: decrements the tenant's in-flight gauge on every
     /// exit path (completion, width drop, shutdown discard).
     _inflight: registry::InflightGuard,
-    reply: SyncSender<Response>,
+    reply: SyncSender<Reply>,
 }
 
 impl Timestamped for Pending {
     fn submitted(&self) -> Instant {
         self.req.submitted
+    }
+
+    fn deadline(&self) -> Option<Instant> {
+        self.req.deadline
     }
 }
 
@@ -154,6 +199,22 @@ pub enum SubmitError {
     /// No tenant with that id is loaded (never was, or was unloaded);
     /// terminal for this request.
     UnknownModel(String),
+    /// The batch carrying this request panicked (poisoned input, bad
+    /// swap, injected fault) — the supervisor contained it and failed the
+    /// whole batch; a fresh submit may succeed. Also returned at
+    /// admission when a dispatcher crashed outright (its supervisor
+    /// exhausted its restarts) while the service is still up, which is
+    /// distinguishable from a clean [`SubmitError::Stopped`].
+    Failed,
+    /// The request's deadline expired before its batch formed; it was
+    /// shed unexecuted. Retrying is pointless — the answer is stale by
+    /// definition.
+    Expired,
+    /// The named tenant's circuit breaker is open (its batches repeatedly
+    /// panicked); admissions are refused until the quarantine window
+    /// elapses (half-open) or [`registry::Tenant::probe`] re-probes.
+    /// Co-tenants are unaffected.
+    Quarantined(String),
 }
 
 impl std::fmt::Display for SubmitError {
@@ -163,6 +224,9 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Stopped => write!(f, "service stopped"),
             SubmitError::Invalid(msg) => write!(f, "invalid request: {msg}"),
             SubmitError::UnknownModel(m) => write!(f, "unknown model: {m}"),
+            SubmitError::Failed => write!(f, "request failed (batch panicked)"),
+            SubmitError::Expired => write!(f, "request deadline expired before execution"),
+            SubmitError::Quarantined(m) => write!(f, "model '{m}' quarantined (repeated panics)"),
         }
     }
 }
@@ -188,6 +252,35 @@ impl Backend {
             "interpreted" | "sim" => Some(Backend::Interpreted),
             _ => None,
         }
+    }
+}
+
+/// Seeded, deterministic fault-injection plan ([`ServiceCfg::faults`];
+/// all-off by default). Given the same plan and the same executed-batch
+/// sequence, the same slots fire — the chaos bench and tests assert exact
+/// counter totals, not "some faults happened". Production configs leave
+/// it disarmed; the executor fast path is one `armed()` check.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Phase offset into the executed-batch sequence: slot `k` fires when
+    /// `(k + seed) % panic_every == 0`.
+    pub seed: u64,
+    /// Panic every Nth executed batch (of `panic_model`'s batches when
+    /// set); `0` disarms panic injection entirely.
+    pub panic_every: usize,
+    /// Total injected panics before the plan goes quiet (`0` means
+    /// unlimited). Lets quarantine tests watch a tenant trip, half-open
+    /// and then recover on clean traffic.
+    pub panic_budget: usize,
+    /// Restrict panic injection to one tenant's batches so co-tenant
+    /// isolation is observable; `None` poisons any tenant.
+    pub panic_model: Option<ModelId>,
+}
+
+impl FaultPlan {
+    /// Whether any fault is armed (when not, injection costs one branch).
+    pub fn armed(&self) -> bool {
+        self.panic_every > 0
     }
 }
 
@@ -229,6 +322,9 @@ pub struct ServiceCfg {
     /// execution sequence); `0`/`1` delay every batch. Synthetic
     /// heavy-tailed load for benches.
     pub exec_delay_every: usize,
+    /// Deterministic fault injection (all-off by default): drives the
+    /// chaos bench and the CI smoke; production configs never arm it.
+    pub faults: FaultPlan,
 }
 
 impl Default for ServiceCfg {
@@ -245,6 +341,7 @@ impl Default for ServiceCfg {
             exec_delay: Duration::ZERO,
             exec_delay_shard: None,
             exec_delay_every: 0,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -267,6 +364,9 @@ pub struct ShardStats {
     pub flush_timeout: u64,
     /// Partial batches flushed by shutdown disconnecting admission.
     pub flush_disconnect: u64,
+    /// Requests this shard's dispatcher shed at formation because their
+    /// deadline had already expired (typed `Expired` reply).
+    pub shed_expired: u64,
 }
 
 /// Aggregated service statistics. Totals (`batches`, `mean_batch`, ...)
@@ -283,6 +383,24 @@ pub struct ServiceStats {
     /// Admissions refused by per-tenant in-flight quotas (summed over
     /// tenants; disjoint from `rejected`, which is queue backpressure).
     pub quota_drops: u64,
+    /// Requests answered with a typed [`SubmitError::Failed`] reply
+    /// because their batch panicked (real bug or injected fault).
+    /// Disjoint from `dropped`: failed requests got an explicit answer.
+    pub failed: u64,
+    /// Requests shed at batch formation because their deadline had
+    /// already expired; each got a typed [`SubmitError::Expired`] reply.
+    pub shed_expired: u64,
+    /// Batch executions that panicked and were contained by the
+    /// supervisor (each failed its own requests; the worker survived).
+    pub exec_panics: u64,
+    /// In-thread supervisor restarts: executor scratch rebuilt after a
+    /// caught panic, or a dispatcher loop re-entered. Bounded per thread.
+    pub respawns: u64,
+    /// Admissions refused because the tenant's circuit breaker was open
+    /// (repeated batch panics); summed over tenants like `quota_drops`.
+    pub quarantine_drops: u64,
+    /// Faults injected by the seeded [`FaultPlan`] (`0` in production).
+    pub faults_injected: u64,
     /// Batches formed by the dispatchers (counted at formation, so under
     /// load this runs ahead of execution — the pipeline is visible here).
     pub batches: u64,
@@ -338,6 +456,7 @@ struct ShardShared {
     flush_full: AtomicU64,
     flush_timeout: AtomicU64,
     flush_disconnect: AtomicU64,
+    shed_expired: AtomicU64,
 }
 
 impl ShardShared {
@@ -348,6 +467,7 @@ impl ShardShared {
         self.flush_full.store(cs.flush_full, Ordering::Relaxed);
         self.flush_timeout.store(cs.flush_timeout, Ordering::Relaxed);
         self.flush_disconnect.store(cs.flush_disconnect, Ordering::Relaxed);
+        self.shed_expired.store(cs.shed_expired, Ordering::Relaxed);
     }
 }
 
@@ -369,6 +489,22 @@ struct Shared {
     /// Service-wide executed-batch sequence (only advanced when
     /// `exec_delay_every` instrumentation is armed).
     exec_seq: AtomicU64,
+    /// Requests failed with a typed reply by a panicked batch.
+    failed: AtomicU64,
+    /// Requests shed at formation past their deadline (service total;
+    /// the per-shard split rides in each dispatcher's `CollectStats`).
+    shed_expired: AtomicU64,
+    /// Batch executions the supervisor caught panicking.
+    exec_panics: AtomicU64,
+    /// In-thread supervisor restarts (executor or dispatcher).
+    respawns: AtomicU64,
+    /// Admissions refused by open tenant circuit breakers.
+    quarantine_drops: AtomicU64,
+    /// Injected-fault slot sequence for [`FaultPlan`] (targeted batches
+    /// only, so "every Nth" is relative to the targeted tenant).
+    fault_seq: AtomicU64,
+    /// Panics actually injected; doubles as the budget gauge.
+    faults_injected: AtomicU64,
     shards: Vec<ShardShared>,
 }
 
@@ -513,6 +649,13 @@ impl Service {
             fused_ops: AtomicU64::new(0),
             scratch: AtomicU64::new(0),
             exec_seq: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            shed_expired: AtomicU64::new(0),
+            exec_panics: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            quarantine_drops: AtomicU64::new(0),
+            fault_seq: AtomicU64::new(0),
+            faults_injected: AtomicU64::new(0),
             shards: (0..cfg.shards).map(|_| ShardShared::default()).collect(),
         });
         let drain = Arc::new(DrainGate::new());
@@ -614,7 +757,8 @@ impl Service {
         pin: Option<usize>,
         model: ModelId,
         codes: Vec<u32>,
-    ) -> Result<Receiver<Response>, (SubmitError, Option<Vec<u32>>)> {
+        deadline_us: Option<u64>,
+    ) -> Result<Receiver<Reply>, (SubmitError, Option<Vec<u32>>)> {
         // resolved + validated on every call: a concurrent unload or
         // swap can change the tenant set and widths between retries
         let Some(tenant) = self.registry.resolve(model) else {
@@ -632,6 +776,15 @@ impl Service {
                 )),
                 Some(codes),
             ));
+        }
+        // circuit breaker before quota: a quarantined tenant is refused
+        // while its window runs. The first admission after the window
+        // half-opens the breaker (one probe batch: clean closes it,
+        // another panic re-trips). Tenant counter first (inside
+        // `breaker_admit`), then service-wide — the consistency ordering.
+        if !tenant.breaker_admit() {
+            self.shared.quarantine_drops.fetch_add(1, Ordering::Relaxed);
+            return Err((SubmitError::Quarantined(tenant.name().to_string()), Some(codes)));
         }
         // quota before queueing: a tenant at its in-flight cap is refused
         // without consuming shared admission capacity (tenant counter
@@ -651,11 +804,13 @@ impl Service {
             None => (affine_seed() % n, n),
         };
         let (reply_tx, reply_rx) = sync_channel(1);
+        let now = Instant::now();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             model,
             codes,
-            submitted: Instant::now(),
+            submitted: now,
+            deadline: deadline_us.map(|us| now + Duration::from_micros(us)),
         };
         let mut pending =
             Pending { req, tenant: Arc::clone(&tenant), _inflight: quota_slot, reply: reply_tx };
@@ -668,9 +823,12 @@ impl Service {
                     return Ok(reply_rx);
                 }
                 Err(TrySendError::Full(p)) => pending = p,
-                // a dispatcher died (panic); indistinguishable from stopped
+                // the dispatcher died while the service is still up (we
+                // hold the txs read lock, so shutdown cannot have begun):
+                // that is a crash — its supervisor exhausted its restarts
+                // — not a clean stop, and clients must be able to tell
                 Err(TrySendError::Disconnected(p)) => {
-                    return Err((SubmitError::Stopped, Some(p.req.codes)))
+                    return Err((SubmitError::Failed, Some(p.req.codes)))
                 }
             }
         }
@@ -680,11 +838,24 @@ impl Service {
     }
 
     /// Submit a request to the default tenant; the returned receiver
-    /// yields the response. Fails fast with a typed [`SubmitError`]: wrong
-    /// width, unknown model and shutdown are terminal, full admission
-    /// queues (and full tenant quotas) are retryable backpressure.
-    pub fn submit(&self, codes: Vec<u32>) -> Result<Receiver<Response>, SubmitError> {
+    /// yields the typed outcome ([`Reply`]). Fails fast with a typed
+    /// [`SubmitError`]: wrong width, unknown model, quarantine and
+    /// shutdown are terminal, full admission queues (and full tenant
+    /// quotas) are retryable backpressure.
+    pub fn submit(&self, codes: Vec<u32>) -> Result<Receiver<Reply>, SubmitError> {
         self.submit_model(ModelId::DEFAULT, codes)
+    }
+
+    /// [`Service::submit`] with a relative deadline: a request still
+    /// unformed `deadline_us` after this call is shed with a typed
+    /// [`SubmitError::Expired`] reply instead of executing late.
+    /// `None` never expires.
+    pub fn submit_deadline(
+        &self,
+        codes: Vec<u32>,
+        deadline_us: Option<u64>,
+    ) -> Result<Receiver<Reply>, SubmitError> {
+        self.submit_shard(None, ModelId::DEFAULT, codes, deadline_us).map_err(|(e, _)| e)
     }
 
     /// [`Service::submit`] routed to an explicit tenant.
@@ -692,8 +863,18 @@ impl Service {
         &self,
         model: ModelId,
         codes: Vec<u32>,
-    ) -> Result<Receiver<Response>, SubmitError> {
-        self.submit_shard(None, model, codes).map_err(|(e, _)| e)
+    ) -> Result<Receiver<Reply>, SubmitError> {
+        self.submit_shard(None, model, codes, None).map_err(|(e, _)| e)
+    }
+
+    /// [`Service::submit_deadline`] routed to an explicit tenant.
+    pub fn submit_model_deadline(
+        &self,
+        model: ModelId,
+        codes: Vec<u32>,
+        deadline_us: Option<u64>,
+    ) -> Result<Receiver<Reply>, SubmitError> {
+        self.submit_shard(None, model, codes, deadline_us).map_err(|(e, _)| e)
     }
 
     /// [`Service::submit`] that hands the codes back on recoverable
@@ -702,8 +883,8 @@ impl Service {
     pub fn try_submit(
         &self,
         codes: Vec<u32>,
-    ) -> Result<Receiver<Response>, (SubmitError, Option<Vec<u32>>)> {
-        self.submit_shard(None, ModelId::DEFAULT, codes)
+    ) -> Result<Receiver<Reply>, (SubmitError, Option<Vec<u32>>)> {
+        self.submit_shard(None, ModelId::DEFAULT, codes, None)
     }
 
     /// [`Service::try_submit`] routed to an explicit tenant.
@@ -711,19 +892,15 @@ impl Service {
         &self,
         model: ModelId,
         codes: Vec<u32>,
-    ) -> Result<Receiver<Response>, (SubmitError, Option<Vec<u32>>)> {
-        self.submit_shard(None, model, codes)
+    ) -> Result<Receiver<Reply>, (SubmitError, Option<Vec<u32>>)> {
+        self.submit_shard(None, model, codes, None)
     }
 
     /// Submit pinned to one admission shard — no affine spill. For tests,
     /// benches and clients doing their own placement; `shard` is taken
     /// modulo the shard count.
-    pub fn submit_to(
-        &self,
-        shard: usize,
-        codes: Vec<u32>,
-    ) -> Result<Receiver<Response>, SubmitError> {
-        self.submit_shard(Some(shard), ModelId::DEFAULT, codes).map_err(|(e, _)| e)
+    pub fn submit_to(&self, shard: usize, codes: Vec<u32>) -> Result<Receiver<Reply>, SubmitError> {
+        self.submit_shard(Some(shard), ModelId::DEFAULT, codes, None).map_err(|(e, _)| e)
     }
 
     /// [`Service::submit_to`] routed to an explicit tenant.
@@ -732,8 +909,20 @@ impl Service {
         shard: usize,
         model: ModelId,
         codes: Vec<u32>,
-    ) -> Result<Receiver<Response>, SubmitError> {
-        self.submit_shard(Some(shard), model, codes).map_err(|(e, _)| e)
+    ) -> Result<Receiver<Reply>, SubmitError> {
+        self.submit_shard(Some(shard), model, codes, None).map_err(|(e, _)| e)
+    }
+
+    /// [`Service::submit_to_model`] with a relative deadline
+    /// (see [`Service::submit_deadline`]).
+    pub fn submit_to_model_deadline(
+        &self,
+        shard: usize,
+        model: ModelId,
+        codes: Vec<u32>,
+        deadline_us: Option<u64>,
+    ) -> Result<Receiver<Reply>, SubmitError> {
+        self.submit_shard(Some(shard), model, codes, deadline_us).map_err(|(e, _)| e)
     }
 
     /// Submit with blocking retry (used by the closed-loop example). Only
@@ -755,7 +944,10 @@ impl Service {
             let seen = self.drain.generation();
             match self.try_submit_model(model, codes) {
                 Ok(rx) => {
-                    return rx.recv().context("request dropped (model swap or shutdown mid-flight)")
+                    return rx
+                        .recv()
+                        .context("request dropped (model swap or shutdown mid-flight)")?
+                        .map_err(Into::into)
                 }
                 Err((SubmitError::Backpressure, reclaimed)) => {
                     codes = reclaimed.expect("backpressure hands the codes back");
@@ -776,6 +968,12 @@ impl Service {
         let rejected = self.shared.rejected.load(Ordering::Relaxed);
         let dropped = self.shared.dropped.load(Ordering::Relaxed);
         let quota_drops = self.shared.quota_drops.load(Ordering::Relaxed);
+        let failed = self.shared.failed.load(Ordering::Relaxed);
+        let shed_expired = self.shared.shed_expired.load(Ordering::Relaxed);
+        let exec_panics = self.shared.exec_panics.load(Ordering::Relaxed);
+        let respawns = self.shared.respawns.load(Ordering::Relaxed);
+        let quarantine_drops = self.shared.quarantine_drops.load(Ordering::Relaxed);
+        let faults_injected = self.shared.faults_injected.load(Ordering::Relaxed);
         let fused_ops = self.shared.fused_ops.load(Ordering::Relaxed);
         let mut per_shard = Vec::with_capacity(self.shared.shards.len());
         let (mut batches, mut batched) = (0u64, 0u64);
@@ -789,6 +987,7 @@ impl Service {
                 flush_full: ss.flush_full.load(Ordering::Relaxed),
                 flush_timeout: ss.flush_timeout.load(Ordering::Relaxed),
                 flush_disconnect: ss.flush_disconnect.load(Ordering::Relaxed),
+                shed_expired: ss.shed_expired.load(Ordering::Relaxed),
             });
             batches += b;
             batched += n;
@@ -811,6 +1010,15 @@ impl Service {
                 sum(|t| t.quota_drops) >= quota_drops,
                 "per-tenant quota_drops undercounts"
             );
+            debug_assert!(sum(|t| t.failed) >= failed, "per-tenant failed undercounts");
+            debug_assert!(
+                sum(|t| t.shed_expired) >= shed_expired,
+                "per-tenant shed_expired undercounts"
+            );
+            debug_assert!(
+                sum(|t| t.quarantine_drops) >= quarantine_drops,
+                "per-tenant quarantine_drops undercounts"
+            );
         }
         let elapsed = self.started.elapsed().as_secs_f64();
         ServiceStats {
@@ -818,6 +1026,12 @@ impl Service {
             rejected,
             dropped,
             quota_drops,
+            failed,
+            shed_expired,
+            exec_panics,
+            respawns,
+            quarantine_drops,
+            faults_injected,
             batches,
             mean_batch: if batches == 0 { 0.0 } else { batched as f64 / batches as f64 },
             latency_p50_us: p50 * 1e6,
@@ -893,14 +1107,25 @@ impl Drop for Service {
     }
 }
 
+/// Consecutive caught panics a supervised thread tolerates before giving
+/// up. One poisoned batch resets the streak on the next clean one; only a
+/// panic *storm* this dense — a plane bug, not bad input — stops a thread.
+const SUPERVISOR_MAX_RESTARTS: usize = 16;
+
 /// Pipeline stage 1, one per shard — sole owner of its admission receiver.
 /// Requests are split into per-tenant queues and dispatched deficit-round-
 /// robin by [`batcher::DrrCollector`] (dispatch conditions identical to
 /// [`batcher::Policy::decide`]; single-tenant traffic degenerates to the
 /// [`batcher::collect_with`] pipeline batch-for-batch); formed batches are
 /// single-tenant and go onto this shard's deque in the work-stealing pool.
-/// Exits when admission is disconnected and drained, closing its producer
-/// handle so the pool can wind down.
+/// Requests whose deadline lapsed before formation are shed with a typed
+/// [`SubmitError::Expired`] reply the moment the collector notices them.
+/// Supervised: the collector and running stats live OUTSIDE the unwind
+/// boundary, so a caught panic (defensive — formation runs no tenant
+/// code) loses nothing already queued; the loop re-enters and keeps
+/// forming, bounded by [`SUPERVISOR_MAX_RESTARTS`]. Exits when admission
+/// is disconnected and drained, closing its producer handle so the pool
+/// can wind down.
 fn dispatcher_loop(
     shard: usize,
     rx: Receiver<Pending>,
@@ -911,20 +1136,48 @@ fn dispatcher_loop(
 ) {
     let mut cs = batcher::CollectStats::default();
     let mut drr = DrrCollector::new(policy);
-    while let Some(batch) = drr.next(&rx, &mut cs) {
-        // per-tenant formation accounting, tenant counter first (the DRR
-        // collector never mixes tenants within a batch)
-        let tc = batch.items[0].tenant.counters();
-        tc.batches.fetch_add(1, Ordering::Relaxed);
-        tc.batch_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
-        shared.shards[shard].publish(&cs);
-        // admission slots just freed: wake submitters parked on backpressure
-        // (before push, which may itself block on a full deque)
-        drain.bump();
-        if !pool.push(shard, batch) {
-            break; // every executor died (panic); nothing left to feed
+    let mut restarts = 0usize;
+    loop {
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            // typed outcome for a stale request: tenant counter first,
+            // then service-wide (the consistency ordering); the per-shard
+            // split rides in `cs` and publishes with the batch totals
+            let mut shed = |p: Pending| {
+                let tc = p.tenant.counters();
+                tc.shed_expired.fetch_add(1, Ordering::Relaxed);
+                shared.shed_expired.fetch_add(1, Ordering::Relaxed);
+                let _ = p.reply.try_send(Err(SubmitError::Expired));
+            };
+            while let Some(batch) = drr.next_with(&rx, &mut cs, &mut shed) {
+                // per-tenant formation accounting, tenant counter first
+                // (the DRR collector never mixes tenants within a batch)
+                let tc = batch.items[0].tenant.counters();
+                tc.batches.fetch_add(1, Ordering::Relaxed);
+                tc.batch_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                shared.shards[shard].publish(&cs);
+                // admission slots just freed: wake submitters parked on
+                // backpressure (before push, which may block on a full deque)
+                drain.bump();
+                if !pool.push(shard, batch) {
+                    break; // every executor died; nothing left to feed
+                }
+            }
+        }));
+        match run {
+            Ok(()) => break, // admission drained + disconnected: graceful
+            Err(_) => {
+                shared.respawns.fetch_add(1, Ordering::Relaxed);
+                restarts += 1;
+                if restarts >= SUPERVISOR_MAX_RESTARTS {
+                    // submitters now see the disconnected sender as the
+                    // typed `Failed` (crash), not a clean `Stopped`
+                    break;
+                }
+            }
         }
     }
+    // trailing sheds with no batch formed after them still publish
+    shared.shards[shard].publish(&cs);
     pool.close_producer();
 }
 
@@ -932,6 +1185,12 @@ fn dispatcher_loop(
 /// oldest from victims when idle) and run them. Only executors with
 /// nothing local to do ever touch another shard's deque, so executions
 /// overlap freely and no lock is held across a batch-collection wait.
+/// Supervised: each batch runs under `catch_unwind` with the batch owned
+/// OUT HERE, so a panicked execution still answers every request (typed
+/// [`SubmitError::Failed`]), takes a breaker strike on its tenant, and
+/// the executor rebuilds its scratch state and keeps consuming. The OS
+/// thread never dies for a contained panic, so the pool's fixed
+/// producer/consumer accounting is untouched.
 fn executor_loop(
     pool: Arc<WorkPool<Batch<Pending>>>,
     home: usize,
@@ -939,9 +1198,10 @@ fn executor_loop(
     shared: Arc<Shared>,
     cfg: ServiceCfg,
 ) {
-    // RAII consumer registration: runs on normal wind-down AND on panic
-    // unwind, so once the last executor is gone dispatchers fail their
-    // push instead of blocking forever on a deque nothing will drain
+    // RAII consumer registration: runs on normal wind-down AND on the
+    // (now only restart-exhausted) exit, so once the last executor is
+    // gone dispatchers fail their push instead of blocking forever on a
+    // deque nothing will drain
     struct ConsumerGuard<'a>(&'a WorkPool<Batch<Pending>>);
     impl Drop for ConsumerGuard<'_> {
         fn drop(&mut self) {
@@ -954,16 +1214,95 @@ fn executor_loop(
     // from the default tenant so steady state never allocates planes.
     // `flat` is the caller-owned output plane of `run_batch_into`; `flat2`
     // is the canaried rows' plane of the same batch.
-    let mut exec = match &warm {
+    let fresh = |warm: &Option<Arc<ProgramCell>>| match warm {
         Some(programs) => Executor::with_capacity(&programs.load().1, cfg.max_batch),
         None => Executor::new(),
     };
+    let mut exec = fresh(&warm);
     let mut flat: Vec<i64> = Vec::new();
     let mut flat2: Vec<i64> = Vec::new();
+    let mut consecutive = 0usize;
     while let Some((src_shard, batch)) = pool.pop(home) {
-        execute_batch(batch, src_shard, &mut exec, &mut flat, &mut flat2, &shared, &cfg);
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            execute_batch(&batch, src_shard, &mut exec, &mut flat, &mut flat2, &shared, &cfg);
+        }));
+        match run {
+            Ok(()) => consecutive = 0,
+            Err(_) => {
+                fail_batch(&batch, &shared);
+                // scratch may be torn mid-write: rebuild before reuse
+                exec = fresh(&warm);
+                flat = Vec::new();
+                flat2 = Vec::new();
+                shared.respawns.fetch_add(1, Ordering::Relaxed);
+                consecutive += 1;
+                if consecutive >= SUPERVISOR_MAX_RESTARTS {
+                    // a panic storm this dense is a plane bug, not one bad
+                    // batch: stop consuming (the guard closes the slot so
+                    // dispatchers fail fast instead of blocking)
+                    break;
+                }
+            }
+        }
     }
     // pool drained and every dispatcher closed: graceful exit
+}
+
+/// Complete a poisoned batch with typed outcomes: every request gets an
+/// explicit [`SubmitError::Failed`] reply (tenant counters first, then
+/// service-wide — the stats consistency ordering) and the tenant's
+/// circuit breaker takes a strike, so repeat offenders are quarantined.
+/// `try_send` (capacity-1 reply channels are empty unless a response was
+/// already delivered) keeps this path non-blocking no matter where the
+/// unwind started.
+fn fail_batch(batch: &Batch<Pending>, shared: &Shared) {
+    let tenant = &batch.items[0].tenant;
+    let n = batch.items.len() as u64;
+    let tc = tenant.counters();
+    tc.panics.fetch_add(1, Ordering::Relaxed);
+    tc.failed.fetch_add(n, Ordering::Relaxed);
+    shared.exec_panics.fetch_add(1, Ordering::Relaxed);
+    shared.failed.fetch_add(n, Ordering::Relaxed);
+    tenant.breaker_panic();
+    for p in &batch.items {
+        let _ = p.reply.try_send(Err(SubmitError::Failed));
+    }
+}
+
+/// Deterministic injection decision for one about-to-run batch. The slot
+/// counter only advances for batches the plan targets, so "every Nth
+/// batch" is relative to the targeted tenant; budget slots are claimed
+/// with a CAS so concurrent executors never overshoot the budget.
+fn should_inject_panic(shared: &Shared, plan: &FaultPlan, model: ModelId) -> bool {
+    if plan.panic_every == 0 {
+        return false;
+    }
+    if plan.panic_model.is_some_and(|m| m != model) {
+        return false;
+    }
+    let slot = shared.fault_seq.fetch_add(1, Ordering::Relaxed);
+    if slot.wrapping_add(plan.seed) % plan.panic_every as u64 != 0 {
+        return false;
+    }
+    if plan.panic_budget > 0 {
+        let mut used = shared.faults_injected.load(Ordering::Relaxed);
+        loop {
+            if used >= plan.panic_budget as u64 {
+                return false;
+            }
+            match shared.faults_injected.compare_exchange(
+                used,
+                used + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(u) => used = u,
+            }
+        }
+    }
+    shared.faults_injected.fetch_add(1, Ordering::Relaxed);
+    true
 }
 
 /// Index of the largest sum, ties to the lowest index — the class an
@@ -986,7 +1325,7 @@ fn argmax(sums: &[i64]) -> usize {
 /// and their argmax is scored against the primary (which ran for every
 /// row) into the tenant's live agreement counters.
 fn execute_batch(
-    batch: Batch<Pending>,
+    batch: &Batch<Pending>,
     src_shard: usize,
     exec: &mut Executor,
     flat: &mut Vec<i64>,
@@ -994,7 +1333,10 @@ fn execute_batch(
     shared: &Shared,
     cfg: &ServiceCfg,
 ) {
-    let items = batch.items;
+    // borrowed, not consumed: the batch stays owned by the supervising
+    // executor_loop, so a panic below leaves every reply sender alive for
+    // `fail_batch` to answer (SyncSender::send takes &self)
+    let items = &batch.items;
     // the batch carries its tenant: executors never touch the registry,
     // and an unloaded tenant's snapshot lives until this drains
     let tenant = Arc::clone(&items[0].tenant);
@@ -1002,6 +1344,11 @@ fn execute_batch(
         items.iter().all(|p| p.req.model == items[0].req.model),
         "DRR batches are single-tenant"
     );
+    // seeded fault injection: a claimed slot poisons this batch before
+    // any row runs; the supervisor catches the unwind and fails it
+    if cfg.faults.armed() && should_inject_panic(shared, &cfg.faults, items[0].req.model) {
+        panic!("injected fault: FaultPlan poisons this batch");
+    }
     let canary = tenant.canary_snapshot();
     let (mut canary_rows, mut canary_agree) = (0u64, 0u64);
     // batch-consistent snapshot: a concurrent hot-swap applies to the
@@ -1081,7 +1428,7 @@ fn execute_batch(
             let mut next = 0usize;
             let mut crow = 0usize;
             let mut outs = Vec::with_capacity(items.len());
-            for p in &items {
+            for p in items.iter() {
                 outs.push((p.req.codes.len() == d_in).then(|| {
                     let i = next;
                     next += 1;
@@ -1106,7 +1453,7 @@ fn execute_batch(
                 cpair.as_ref().map(|(n, _)| (sim::Evaluator::new(n), n.n_luts() as u64));
             let mut valid = 0u64;
             let mut outs = Vec::with_capacity(items.len());
-            for p in &items {
+            for p in items.iter() {
                 outs.push((p.req.codes.len() == d_in).then(|| {
                     valid += 1;
                     let prim = ev.eval(&p.req.codes).to_vec();
@@ -1145,8 +1492,8 @@ fn execute_batch(
         }
     }
     let mut dropped = 0u64;
-    let mut done: Vec<(Pending, Vec<i64>, Duration)> = Vec::with_capacity(items.len());
-    for (p, sums) in items.into_iter().zip(outputs) {
+    let mut done: Vec<(&Pending, Vec<i64>, Duration)> = Vec::with_capacity(items.len());
+    for (p, sums) in items.iter().zip(outputs) {
         match sums {
             Some(sums) => {
                 let latency = p.req.submitted.elapsed();
@@ -1181,9 +1528,13 @@ fn execute_batch(
         tenant.counters().completed.fetch_add(done.len() as u64, Ordering::Relaxed);
         shared.completed.fetch_add(done.len() as u64, Ordering::Relaxed);
         for (p, sums, latency) in done {
-            let _ = p.reply.send(Response { id: p.req.id, sums, latency });
+            let _ = p.reply.send(Ok(Response { id: p.req.id, sums, latency }));
         }
     }
+    // a clean batch resets the tenant's breaker strike streak, so only
+    // CONSECUTIVE panics quarantine (one poisoned input among healthy
+    // traffic fails its batch and nothing more)
+    tenant.breaker_ok();
 }
 
 #[cfg(test)]
@@ -1214,7 +1565,7 @@ mod tests {
                 pending.push(svc.submit(codes).unwrap());
             }
             for (rx, w) in pending.into_iter().zip(want) {
-                assert_eq!(rx.recv().unwrap().sums, w, "{backend:?}");
+                assert_eq!(rx.recv().unwrap().unwrap().sums, w, "{backend:?}");
             }
             // fused_ops counts work actually executed: the interpreter
             // walks every netlist L-LUT, the compiled backend runs the
@@ -1249,7 +1600,7 @@ mod tests {
             pending.push(svc.submit(codes).unwrap());
         }
         for (rx, w) in pending.into_iter().zip(want) {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().unwrap();
             assert_eq!(resp.sums, w);
         }
         let stats = svc.stats();
@@ -1416,7 +1767,7 @@ mod tests {
         });
         let rxs: Vec<_> = (0..64).map(|_| svc.submit(vec![1, 2, 3, 0]).unwrap()).collect();
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         let stats = svc.stats();
         assert!(stats.mean_batch > 1.5, "mean batch {}", stats.mean_batch);
@@ -1502,7 +1853,7 @@ mod tests {
             st.batches
         );
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         svc.shutdown();
     }
@@ -1545,7 +1896,7 @@ mod tests {
             pending.push((svc.submit_to(i % 3, codes).unwrap(), want));
         }
         for (rx, want) in pending {
-            assert_eq!(rx.recv().unwrap().sums, want);
+            assert_eq!(rx.recv().unwrap().unwrap().sums, want);
         }
         svc.shutdown();
         let st = svc.stats();
@@ -1587,7 +1938,7 @@ mod tests {
             let rxs: Vec<_> =
                 (0..8).map(|_| svc.submit_to(0, codes.clone()).unwrap()).collect();
             for rx in rxs {
-                assert_eq!(rx.recv().unwrap().sums, want);
+                assert_eq!(rx.recv().unwrap().unwrap().sums, want);
             }
             let wall = t0.elapsed();
             svc.shutdown();
@@ -1643,7 +1994,11 @@ mod tests {
         let rxs: Vec<_> = (0..12).map(|_| svc.submit(codes.clone()).unwrap()).collect();
         svc.shutdown(); // immediately: admitted requests must still complete
         for rx in rxs {
-            assert_eq!(rx.recv().unwrap().sums, want, "admitted request lost in shutdown drain");
+            assert_eq!(
+                rx.recv().unwrap().unwrap().sums,
+                want,
+                "admitted request lost in shutdown drain"
+            );
         }
         let st = svc.stats();
         assert_eq!(st.completed, 12);
@@ -1663,6 +2018,163 @@ mod tests {
         assert!(t.elapsed() < Duration::from_secs(1));
         // (d) no steals can occur with one shard and stealing off
         assert_eq!(svc.stats().steals, 0);
+        // (e) the supervision wrappers are free with fault injection off:
+        // no panic, restart, shed, quarantine or injection counter moved,
+        // so the degenerate configuration stays the PR-7 pipeline exactly
+        let st = svc.stats();
+        assert_eq!((st.exec_panics, st.respawns, st.failed), (0, 0, 0));
+        assert_eq!((st.shed_expired, st.quarantine_drops, st.faults_injected), (0, 0, 0));
+        assert!(st.per_shard.iter().all(|s| s.shed_expired == 0));
+        assert!(st
+            .per_tenant
+            .iter()
+            .all(|t| t.panics == 0 && t.failed == 0 && t.shed_expired == 0 && !t.quarantined));
+    }
+
+    #[test]
+    fn supervised_executor_survives_panics_and_fails_only_its_batch() {
+        // every 3rd batch is poisoned: its request gets a typed Failed
+        // reply, the lone worker survives all 10 panics, and the other 20
+        // requests stay bit-exact. workers=1 + max_batch=1 make the
+        // injection slots deterministic (execution order == formation
+        // order, one request per batch).
+        let (net, svc) = service(ServiceCfg {
+            workers: 1,
+            max_batch: 1,
+            max_wait: Duration::from_micros(10),
+            faults: FaultPlan { panic_every: 3, ..Default::default() },
+            ..Default::default()
+        });
+        let mut rng = Rng::new(88);
+        let mut pending = Vec::new();
+        for _ in 0..30 {
+            let codes: Vec<u32> = (0..4).map(|_| rng.below(16) as u32).collect();
+            let want = sim::eval(&net, &codes);
+            pending.push((svc.submit(codes).unwrap(), want));
+        }
+        let (mut ok, mut failed) = (0u64, 0u64);
+        for (rx, want) in pending {
+            match rx.recv().unwrap() {
+                Ok(resp) => {
+                    assert_eq!(resp.sums, want, "non-faulted rows stay bit-exact");
+                    ok += 1;
+                }
+                Err(SubmitError::Failed) => failed += 1,
+                Err(e) => panic!("unexpected reply error: {e}"),
+            }
+        }
+        svc.shutdown();
+        assert_eq!((ok, failed), (20, 10));
+        let st = svc.stats();
+        assert_eq!(st.completed, 20);
+        assert_eq!(st.failed, 10);
+        assert_eq!(st.exec_panics, 10);
+        assert_eq!(st.respawns, 10);
+        assert_eq!(st.faults_injected, 10);
+        // every admitted request got exactly one typed outcome
+        let admitted: u64 = st.per_shard.iter().map(|s| s.admitted).sum();
+        assert_eq!(st.completed + st.failed + st.shed_expired + st.dropped, admitted);
+        let t = &st.per_tenant[0];
+        assert_eq!((t.failed, t.panics), (10, 10));
+        assert_eq!(t.completed, 20);
+    }
+
+    #[test]
+    fn expired_requests_shed_at_formation_with_typed_replies() {
+        // one live request plus three whose 5 ms deadline lapses inside
+        // the 40 ms formation wait: the batch executes the survivor and
+        // each stale request gets a typed Expired reply
+        let (net, svc) = service(ServiceCfg {
+            workers: 1,
+            max_batch: 64,
+            max_wait: Duration::from_millis(40),
+            ..Default::default()
+        });
+        let codes = vec![1u32, 2, 3, 0];
+        let want = sim::eval(&net, &codes);
+        let live = svc.submit(codes.clone()).unwrap();
+        let stale: Vec<_> =
+            (0..3).map(|_| svc.submit_deadline(codes.clone(), Some(5_000)).unwrap()).collect();
+        assert_eq!(live.recv().unwrap().unwrap().sums, want);
+        for rx in stale {
+            assert_eq!(rx.recv().unwrap().unwrap_err(), SubmitError::Expired);
+        }
+        // a generous deadline is not shed
+        let rx = svc.submit_deadline(codes.clone(), Some(5_000_000)).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap().sums, want);
+        svc.shutdown();
+        let st = svc.stats();
+        assert_eq!(st.completed, 2);
+        assert_eq!(st.shed_expired, 3);
+        assert_eq!(st.per_shard[0].shed_expired, 3);
+        let admitted: u64 = st.per_shard.iter().map(|s| s.admitted).sum();
+        assert_eq!(st.completed + st.failed + st.shed_expired + st.dropped, admitted);
+        let t = &st.per_tenant[0];
+        assert_eq!((t.shed_expired, t.completed), (3, 2));
+    }
+
+    #[test]
+    fn quarantine_trips_half_opens_and_recovers_with_cotenant_isolation() {
+        let net_a = build_net(&[4, 3, 2], &[4, 5, 6], 2024);
+        let net_b = build_net(&[6, 4, 3], &[3, 5, 6], 777);
+        let reg = Arc::new(ModelRegistry::new(OptLevel::default()));
+        let a = reg.load("a", Arc::clone(&net_a)).unwrap();
+        let b = reg.load("b", Arc::clone(&net_b)).unwrap();
+        // poison ONLY tenant a's batches, and only the first two
+        let svc = Service::start_registry(
+            Arc::clone(&reg),
+            ServiceCfg {
+                workers: 1,
+                max_batch: 1,
+                max_wait: Duration::from_micros(10),
+                faults: FaultPlan {
+                    panic_every: 1,
+                    panic_budget: 2,
+                    panic_model: Some(a),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let ta = reg.resolve(a).unwrap();
+        ta.quarantine_policy(2, Duration::from_millis(40));
+        let codes_a = vec![1u32, 2, 3, 0];
+        let codes_b = vec![1u32, 2, 3, 0, 1, 2];
+        // two poisoned batches back to back: strike, strike -> OPEN
+        for _ in 0..2 {
+            let rx = svc.submit_model(a, codes_a.clone()).unwrap();
+            assert_eq!(rx.recv().unwrap().unwrap_err(), SubmitError::Failed);
+        }
+        // quarantined: typed rejection without consuming admission capacity
+        assert!(matches!(
+            svc.submit_model(a, codes_a.clone()).unwrap_err(),
+            SubmitError::Quarantined(_)
+        ));
+        // co-tenant b is untouched throughout
+        let got = svc.submit_blocking_model(b, codes_b.clone()).unwrap();
+        assert_eq!(got.sums, sim::eval(&net_b, &codes_b));
+        // window elapses -> half-open: the probe admission runs clean
+        // (the fault budget is spent) and closes the breaker
+        std::thread::sleep(Duration::from_millis(80));
+        let rx = svc.submit_model(a, codes_a.clone()).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap().sums, sim::eval(&net_a, &codes_a));
+        // recovered: subsequent traffic flows
+        let got = svc.submit_blocking_model(a, codes_a.clone()).unwrap();
+        assert_eq!(got.sums, sim::eval(&net_a, &codes_a));
+        svc.shutdown();
+        let st = svc.stats();
+        assert_eq!(st.exec_panics, 2);
+        assert_eq!(st.failed, 2);
+        assert_eq!(st.faults_injected, 2);
+        assert_eq!(st.quarantine_drops, 1);
+        let sa = st.per_tenant.iter().find(|t| t.name == "a").unwrap();
+        assert_eq!((sa.panics, sa.failed, sa.quarantine_drops), (2, 2, 1));
+        assert!(!sa.quarantined, "breaker closed after the clean probe");
+        assert_eq!(sa.completed, 2);
+        let sb = st.per_tenant.iter().find(|t| t.name == "b").unwrap();
+        assert_eq!((sb.completed, sb.failed, sb.panics), (1, 0, 0));
+        let admitted: u64 = st.per_shard.iter().map(|s| s.admitted).sum();
+        assert_eq!(st.completed + st.failed + st.shed_expired + st.dropped, admitted);
     }
 
     #[test]
@@ -1696,7 +2208,7 @@ mod tests {
                 pending.push((svc.submit(codes).unwrap(), want));
             }
             for (rx, want) in pending {
-                assert_eq!(rx.recv().unwrap().sums, want, "{level:?}");
+                assert_eq!(rx.recv().unwrap().unwrap().sums, want, "{level:?}");
             }
             let st = svc.stats();
             let opt = st.opt.as_ref().expect("compiled backend surfaces its report");
@@ -1737,7 +2249,7 @@ mod tests {
                     }
                     Err(SubmitError::Backpressure) => {
                         for rx in pending.drain(..) {
-                            rx.recv().unwrap();
+                            rx.recv().unwrap().unwrap();
                         }
                     }
                     Err(e) => panic!("unexpected submit error: {e}"),
@@ -1745,7 +2257,7 @@ mod tests {
             }
         }
         for rx in pending {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         let st = svc.stats();
         assert_eq!(st.completed, 2 * LATENCY_RESERVOIR as u64);
@@ -1815,7 +2327,7 @@ mod tests {
             pending.push((svc.submit_model(model, codes).unwrap(), want));
         }
         for (rx, want) in pending {
-            assert_eq!(rx.recv().unwrap().sums, want);
+            assert_eq!(rx.recv().unwrap().unwrap().sums, want);
         }
         // width checks are per-tenant: a's width is Invalid on b
         assert!(matches!(svc.submit_model(b, vec![0; 4]), Err(SubmitError::Invalid(_))));
@@ -1906,7 +2418,7 @@ mod tests {
             pending.push((svc.submit_model(m, codes).unwrap(), want));
         }
         for (rx, want) in pending {
-            assert_eq!(rx.recv().unwrap().sums, want);
+            assert_eq!(rx.recv().unwrap().unwrap().sums, want);
         }
         let st = svc.stats();
         let t = &st.per_tenant[0];
@@ -1924,7 +2436,7 @@ mod tests {
             pending.push((svc.submit_model(m, codes).unwrap(), want));
         }
         for (rx, want) in pending {
-            assert_eq!(rx.recv().unwrap().sums, want, "100% canary answers from net2");
+            assert_eq!(rx.recv().unwrap().unwrap().sums, want, "100% canary answers from net2");
         }
         let st = svc.stats();
         let t = &st.per_tenant[0];
@@ -2025,7 +2537,7 @@ mod tests {
             pending.push((svc.submit_to_model(0, model, codes).unwrap(), want));
         }
         for (rx, want) in pending {
-            assert_eq!(rx.recv().unwrap().sums, want);
+            assert_eq!(rx.recv().unwrap().unwrap().sums, want);
         }
         svc.shutdown();
         let st = svc.stats();

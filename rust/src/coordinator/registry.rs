@@ -25,10 +25,18 @@
 //! Counters are `Arc`-shared with the [`Tenant`] and moved to a retired
 //! list on unload, so a stats snapshot taken after `unload` still accounts
 //! for every request the plane ever completed (totals stay consistent).
+//!
+//! Each tenant also carries a lock-free **panic circuit breaker**: when
+//! [`QUARANTINE_TRIP`] consecutive batches of a tenant poison an executor
+//! (a bad canary or hot-swapped checkpoint), the tenant is quarantined —
+//! its admissions come back as typed `Quarantined` rejections so
+//! co-tenants keep serving — until the [`QUARANTINE_WINDOW`] elapses
+//! (timed half-open re-probe) or an operator calls [`Tenant::probe`].
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -92,6 +100,17 @@ pub struct TenantCounters {
     pub canary_rows: AtomicU64,
     /// Canary rows whose argmax agreed with the primary checkpoint.
     pub canary_agree: AtomicU64,
+    /// Requests answered with a typed `Failed` because their batch
+    /// poisoned an executor (panic caught by supervision).
+    pub failed: AtomicU64,
+    /// Requests shed at batch formation because their deadline had
+    /// already expired (typed `Expired` reply).
+    pub shed_expired: AtomicU64,
+    /// Batches of this tenant that panicked inside an executor.
+    pub panics: AtomicU64,
+    /// Admissions refused while the tenant was quarantined by the panic
+    /// circuit breaker (typed `Quarantined` rejection).
+    pub quarantine_drops: AtomicU64,
     /// Per-tenant latency reservoir (seconds, like the service-wide one).
     pub latencies: Mutex<Reservoir>,
 }
@@ -109,6 +128,10 @@ impl TenantCounters {
             batch_items: AtomicU64::new(0),
             canary_rows: AtomicU64::new(0),
             canary_agree: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            shed_expired: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            quarantine_drops: AtomicU64::new(0),
             latencies: Mutex::new(Reservoir::new(LATENCY_RESERVOIR)),
         }
     }
@@ -140,6 +163,11 @@ impl TenantCounters {
             } else {
                 canary_agree as f64 / canary_rows as f64
             },
+            failed: self.failed.load(Ordering::Relaxed),
+            shed_expired: self.shed_expired.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            quarantine_drops: self.quarantine_drops.load(Ordering::Relaxed),
+            quarantined: false,
             input_width: 0,
             retired,
         }
@@ -168,6 +196,17 @@ pub struct TenantStats {
     pub canary_agree: u64,
     /// Live argmax agreement fraction (`0.0` before any canary row).
     pub canary_agreement: f64,
+    /// Requests failed by supervised executor panics (typed `Failed`).
+    pub failed: u64,
+    /// Requests shed already-expired at batch formation (typed `Expired`).
+    pub shed_expired: u64,
+    /// Batches of this tenant that poisoned an executor.
+    pub panics: u64,
+    /// Admissions refused while quarantined (typed `Quarantined`).
+    pub quarantine_drops: u64,
+    /// Breaker state at snapshot time: the tenant is currently refusing
+    /// admissions (its quarantine window has not elapsed).
+    pub quarantined: bool,
     /// Current model input width (0 for retired tenants) — advertised on
     /// the wire so multi-model load generators can synthesize rows without
     /// a local checkpoint per tenant.
@@ -222,6 +261,43 @@ impl Canary {
     }
 }
 
+/// Consecutive poisoned batches that trip a tenant's circuit breaker
+/// (override per tenant via [`Tenant::quarantine_policy`]).
+pub const QUARANTINE_TRIP: u32 = 3;
+
+/// How long a tripped breaker refuses admissions before the timed
+/// half-open re-probe lets traffic through again.
+pub const QUARANTINE_WINDOW: Duration = Duration::from_millis(250);
+
+/// Per-tenant panic circuit breaker. All-atomic so the healthy admission
+/// fast path is a single relaxed load (`until_us == 0`); timestamps are
+/// microseconds since the tenant's load instant so they fit an atomic.
+struct Breaker {
+    epoch: Instant,
+    /// Consecutive poisoned batches; any clean batch resets it.
+    strikes: AtomicU32,
+    /// Refuse admissions until this many µs past `epoch`; `0` = closed
+    /// (healthy — the only state a tenant that never panicked ever sees).
+    until_us: AtomicU64,
+    trip: AtomicU32,
+    window_us: AtomicU64,
+    /// Times the breaker tripped (monotonic, for stats and tests).
+    trips: AtomicU64,
+}
+
+impl Breaker {
+    fn new() -> Breaker {
+        Breaker {
+            epoch: Instant::now(),
+            strikes: AtomicU32::new(0),
+            until_us: AtomicU64::new(0),
+            trip: AtomicU32::new(QUARANTINE_TRIP),
+            window_us: AtomicU64::new(QUARANTINE_WINDOW.as_micros() as u64),
+            trips: AtomicU64::new(0),
+        }
+    }
+}
+
 /// One loaded checkpoint: swappable netlist, compiled-program cache pinned
 /// at the tenant's level, quota, counters, optional canary.
 pub struct Tenant {
@@ -234,6 +310,7 @@ pub struct Tenant {
     quota: u64,
     canary: RwLock<Option<Arc<Canary>>>,
     counters: Arc<TenantCounters>,
+    breaker: Breaker,
 }
 
 impl Tenant {
@@ -286,6 +363,78 @@ impl Tenant {
             return None;
         }
         Some(InflightGuard(Arc::clone(&self.counters)))
+    }
+
+    /// Override the breaker's trip threshold / re-probe window (tests, or
+    /// operators tightening a tenant's blast radius).
+    pub fn quarantine_policy(&self, trip: u32, window: Duration) {
+        self.breaker.trip.store(trip.max(1), Ordering::Relaxed);
+        self.breaker.window_us.store((window.as_micros() as u64).max(1), Ordering::Relaxed);
+    }
+
+    /// The breaker is open right now: admissions come back `Quarantined`.
+    pub fn is_quarantined(&self) -> bool {
+        let until = self.breaker.until_us.load(Ordering::Relaxed);
+        until != 0 && (self.breaker.epoch.elapsed().as_micros() as u64) < until
+    }
+
+    /// Times the breaker has tripped since load.
+    pub fn quarantine_trips(&self) -> u64 {
+        self.breaker.trips.load(Ordering::Relaxed)
+    }
+
+    /// Manually re-probe a quarantined tenant: admissions resume
+    /// immediately, one strike away from re-tripping (a clean batch closes
+    /// the breaker fully). No-op on a healthy tenant.
+    pub fn probe(&self) {
+        if self.breaker.until_us.swap(0, Ordering::Relaxed) != 0 {
+            let trip = self.breaker.trip.load(Ordering::Relaxed);
+            self.breaker.strikes.store(trip.saturating_sub(1), Ordering::Relaxed);
+        }
+    }
+
+    /// Admission-time breaker check. `false` = quarantined (the caller
+    /// rejects with the typed `Quarantined` error; the tenant-side drop
+    /// counter is bumped here, the service-wide one by the caller — the
+    /// tenant-first write ordering the counters contract requires).
+    pub(crate) fn breaker_admit(&self) -> bool {
+        let until = self.breaker.until_us.load(Ordering::Relaxed);
+        if until == 0 {
+            return true;
+        }
+        let now = self.breaker.epoch.elapsed().as_micros() as u64;
+        if now < until {
+            self.counters.quarantine_drops.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        // timed half-open: the window elapsed, so let traffic probe the
+        // tenant again — one strike away from re-tripping, so a single
+        // further panic re-opens the breaker immediately while a clean
+        // batch closes it fully (racing admits store idempotent values)
+        let trip = self.breaker.trip.load(Ordering::Relaxed);
+        self.breaker.strikes.store(trip.saturating_sub(1), Ordering::Relaxed);
+        self.breaker.until_us.store(0, Ordering::Relaxed);
+        true
+    }
+
+    /// A batch of this tenant poisoned an executor: strike, and trip the
+    /// breaker when the consecutive-panic threshold is reached.
+    pub(crate) fn breaker_panic(&self) {
+        let strikes = self.breaker.strikes.fetch_add(1, Ordering::Relaxed) + 1;
+        if strikes >= self.breaker.trip.load(Ordering::Relaxed) {
+            let window = self.breaker.window_us.load(Ordering::Relaxed).max(1);
+            let now = self.breaker.epoch.elapsed().as_micros() as u64;
+            self.breaker.until_us.store(now + window, Ordering::Relaxed);
+            self.breaker.trips.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A batch of this tenant completed cleanly: reset the strike count
+    /// (the load-then-store keeps the healthy path write-free).
+    pub(crate) fn breaker_ok(&self) {
+        if self.breaker.strikes.load(Ordering::Relaxed) != 0 {
+            self.breaker.strikes.store(0, Ordering::Relaxed);
+        }
     }
 }
 
@@ -375,6 +524,7 @@ impl ModelRegistry {
             quota,
             canary: RwLock::new(None),
             counters: Arc::new(TenantCounters::new()),
+            breaker: Breaker::new(),
         });
         inner.by_name.insert(name.to_string(), id.raw());
         inner.by_id.insert(id.raw(), tenant);
@@ -538,6 +688,7 @@ impl ModelRegistry {
             .map(|t| {
                 let mut st = t.counters.snapshot(&t.name, t.id, false);
                 st.input_width = t.input_width() as u64;
+                st.quarantined = t.is_quarantined();
                 st
             })
             .collect();
@@ -655,6 +806,44 @@ mod tests {
         let f = reg.resolve_name("free").unwrap();
         let guards: Vec<_> = (0..64).map(|_| f.try_admit().expect("unlimited")).collect();
         assert_eq!(guards.len(), 64);
+    }
+
+    #[test]
+    fn quarantine_breaker_trips_half_opens_and_recovers() {
+        let reg = ModelRegistry::new(OptLevel::default());
+        reg.load("m", net(&[3, 2], &[3, 6], 40)).unwrap();
+        let t = reg.resolve_name("m").unwrap();
+        t.quarantine_policy(2, Duration::from_millis(30));
+        assert!(t.breaker_admit());
+        t.breaker_panic();
+        assert!(!t.is_quarantined(), "one strike below the trip threshold");
+        t.breaker_ok();
+        t.breaker_panic();
+        assert!(!t.is_quarantined(), "a clean batch resets the strike count");
+        t.breaker_panic();
+        assert!(t.is_quarantined(), "2 consecutive poisoned batches trip");
+        assert!(!t.breaker_admit());
+        assert_eq!(t.counters().quarantine_drops.load(Ordering::Relaxed), 1);
+        assert_eq!(t.quarantine_trips(), 1);
+        // timed half-open: after the window, traffic probes again...
+        std::thread::sleep(Duration::from_millis(45));
+        assert!(!t.is_quarantined());
+        assert!(t.breaker_admit());
+        // ...and a single further panic re-trips immediately
+        t.breaker_panic();
+        assert!(t.is_quarantined());
+        assert_eq!(t.quarantine_trips(), 2);
+        // manual probe reopens admission without waiting out the window
+        t.probe();
+        assert!(t.breaker_admit());
+        t.breaker_ok();
+        t.breaker_panic();
+        assert!(!t.is_quarantined(), "recovered: the clean batch closed the breaker");
+        // snapshot carries the breaker-facing counters
+        let st = reg.tenant_stats();
+        let m = st.iter().find(|s| s.name == "m").unwrap();
+        assert_eq!(m.quarantine_drops, 1);
+        assert!(!m.quarantined);
     }
 
     #[test]

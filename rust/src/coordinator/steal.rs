@@ -26,6 +26,14 @@
 //! sleeper counts and skip the gate entirely). A defensive wait timeout
 //! bounds any missed-wakeup bug to one poll interval; correctness does not
 //! rely on it (see the ordering argument on [`WorkPool::push`]).
+//!
+//! **Supervision invariant** (PR 8): the coordinator's executors and
+//! dispatchers catch panics *in-thread* and restart their loops in place,
+//! so the pool's fixed producer/consumer accounting — `close_producer`
+//! once per dispatcher thread, the RAII consumer guard once per executor
+//! thread — is untouched by a contained panic. `consumers` only reaches
+//! zero when a supervisor genuinely gives up (restart budget exhausted),
+//! which is exactly when `push` must start failing fast again.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};

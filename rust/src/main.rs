@@ -13,9 +13,9 @@ use anyhow::{bail, Context, Result};
 
 use kanele::checkpoint::{testutil, Checkpoint, TestSet};
 use kanele::config;
-use kanele::coordinator::{Backend, ModelRegistry, Service, ServiceCfg, SubmitError};
+use kanele::coordinator::{Backend, FaultPlan, ModelRegistry, Service, ServiceCfg, SubmitError};
 use kanele::engine::{self, OptLevel};
-use kanele::net::{self, LoadGenCfg, NetCfg, NetServer};
+use kanele::net::{self, LoadGenCfg, NetCfg, NetServer, WireFaults};
 use kanele::netlist::Netlist;
 use kanele::report;
 use kanele::sim;
@@ -43,6 +43,9 @@ COMMANDS:
         [--backend compiled|interpreted] [--opt full|none]
         [--listen ADDR] [--duration-s N] [--auth-token TOK]
         [--model NAME=CKPT ...] [--canary T=CKPT:PCT]
+        [--read-idle-ms N] [--fault-panic-every N] [--fault-panic-budget N]
+        [--fault-seed S] [--fault-torn-every N] [--fault-stall-every N]
+        [--fault-stall-us U] [--fault-disconnect-after N]
       batched inference service through the sharded dispatcher/executor
       plane: S admission shards (client-affine round-robin, each with its
       own dispatcher forming batches — fill to --batch or flush --wait-us
@@ -63,9 +66,17 @@ COMMANDS:
       with a second checkpoint, tracking live argmax agreement (PCT in
       0..=100).
       --auth-token gates every connection behind a shared-secret hello.
+      --read-idle-ms bounds how long an idle connection may sit before the
+      slow-loris guard closes it (default 60000; 0 disables). The
+      --fault-* flags arm deterministic fault injection for chaos runs:
+      panic every Nth executed batch (budgeted by --fault-panic-budget,
+      phase-shifted by --fault-seed), tear every Nth response frame
+      mid-payload, stall every Nth response --fault-stall-us, or sever
+      each connection after N inbound frames. All default to 0 = off;
+      production serves never arm them.
   loadgen <addr> [--connections N] [--requests N] [--rate R]
           [--tail-every K] [--tail-batch B] [--seed S] [--shutdown]
-          [--model-mix a:3,b:1] [--auth-token TOK]
+          [--model-mix a:3,b:1] [--auth-token TOK] [--deadline-us D]
       closed-loop load generator against a running `serve --listen` server:
       N connections split --requests total single-sample inferences (--rate
       is a per-connection target in req/s, 0 = max; every K-th request is
@@ -74,6 +85,11 @@ COMMANDS:
       reports completed/rps plus wire-latency p50/p90/p99. --model-mix
       weights requests across named tenants (per-tenant widths come from
       the stats frame); --auth-token sends the hello handshake first.
+      --deadline-us stamps every inference with a relative deadline (the
+      server sheds requests still unbatched past it with typed `expired`
+      frames, which are counted, not retried). Transport faults trigger a
+      reconnect with capped exponential backoff; `failed` frames (server
+      batch panics) are retried on the same connection.
       --shutdown sends the server a shutdown op at the end.
   table2|table3|table4|table5|fig6|table7|report-all [--n-add N]
       regenerate the paper's tables/figures (report-all renders everything
@@ -179,19 +195,9 @@ fn load_checkpoint_or_synthetic(name_or_path: &str) -> Result<Checkpoint> {
 /// client's `shutdown` op or the duration budget elapses, then drain and
 /// print the plane's report (per-tenant lines when a registry serves more
 /// than one model).
-fn serve_wire(
-    svc: &Arc<Service>,
-    addr: &str,
-    levels: usize,
-    auth_token: Option<String>,
-    duration_s: u64,
-) -> Result<()> {
+fn serve_wire(svc: &Arc<Service>, addr: &str, net_cfg: NetCfg, duration_s: u64) -> Result<()> {
     let listener = std::net::TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    let mut server = NetServer::start(
-        Arc::clone(svc),
-        listener,
-        NetCfg { levels, auth_token, ..NetCfg::default() },
-    )?;
+    let mut server = NetServer::start(Arc::clone(svc), listener, net_cfg)?;
     println!("listening on {}", server.local_addr());
     let t0 = Instant::now();
     loop {
@@ -209,12 +215,28 @@ fn serve_wire(
     let ns = server.stats();
     let stats = svc.stats();
     println!(
-        "wire            : {} conns, {} frames in / {} out, {} parse errors, {} completions",
-        ns.accepted, ns.frames_in, ns.frames_out, ns.parse_errors, ns.wire_completed
+        "wire            : {} conns, {} frames in / {} out, {} parse errors, {} completions, {} idle kills, {} injected wire faults",
+        ns.accepted,
+        ns.frames_in,
+        ns.frames_out,
+        ns.parse_errors,
+        ns.wire_completed,
+        ns.idle_kills,
+        ns.faults_injected
     );
     println!(
         "served          : {} samples ({:.0} samples/s; rejected {}, dropped {})",
         stats.completed, stats.throughput_rps, stats.rejected, stats.dropped
+    );
+    // one greppable line for the CI chaos smoke: every fault-path counter
+    println!(
+        "faults          : exec_panics={} respawns={} failed={} shed_expired={} quarantine_drops={} injected={}",
+        stats.exec_panics,
+        stats.respawns,
+        stats.failed,
+        stats.shed_expired,
+        stats.quarantine_drops,
+        stats.faults_injected
     );
     println!(
         "latency p50/p90/p99 : {:.1} / {:.1} / {:.1} us",
@@ -420,6 +442,35 @@ fn run(args: &[String]) -> Result<()> {
             };
             let listen = flags.get("--listen").map(String::from);
             let auth_token = flags.get("--auth-token").map(String::from);
+            let read_idle_ms = flags.get_u64("--read-idle-ms", 60_000)?;
+            let read_idle = (read_idle_ms > 0).then(|| Duration::from_millis(read_idle_ms));
+            let faults = FaultPlan {
+                seed: flags.get_u64("--fault-seed", 0)?,
+                panic_every: flags.get_usize("--fault-panic-every", 0)?,
+                panic_budget: flags.get_usize("--fault-panic-budget", 0)?,
+                panic_model: None,
+            };
+            let wire_faults = WireFaults {
+                torn_every: flags.get_usize("--fault-torn-every", 0)?,
+                stall_every: flags.get_usize("--fault-stall-every", 0)?,
+                stall: Duration::from_micros(flags.get_u64("--fault-stall-us", 0)?),
+                disconnect_after: flags.get_usize("--fault-disconnect-after", 0)?,
+            };
+            if faults.armed() {
+                println!(
+                    "fault plan      : panic every {} batch(es), budget {}, seed {}",
+                    faults.panic_every, faults.panic_budget, faults.seed
+                );
+            }
+            if wire_faults.armed() {
+                println!(
+                    "wire faults     : torn_every={} stall_every={} stall_us={} disconnect_after={}",
+                    wire_faults.torn_every,
+                    wire_faults.stall_every,
+                    wire_faults.stall.as_micros(),
+                    wire_faults.disconnect_after
+                );
+            }
             let svc_cfg = ServiceCfg {
                 workers,
                 shards,
@@ -429,6 +480,7 @@ fn run(args: &[String]) -> Result<()> {
                 queue_depth,
                 backend,
                 opt,
+                faults,
                 ..Default::default()
             };
             let model_specs = flags.get_all("--model");
@@ -438,7 +490,7 @@ fn run(args: &[String]) -> Result<()> {
                 let addr = listen.context("--model requires --listen ADDR")?;
                 let duration_s = flags.get_u64("--duration-s", 0)?;
                 let reg = Arc::new(ModelRegistry::new(opt));
-                let mut levels = 0usize;
+                let mut levels = 0u64;
                 for spec in &model_specs {
                     let (tenant, path) = spec
                         .split_once('=')
@@ -482,7 +534,14 @@ fn run(args: &[String]) -> Result<()> {
                     "plane           : {eff_shards} admission shard(s) + {workers} executors (steal {}, queue depth {queue_depth} total)",
                     if steal { "on" } else { "off" }
                 );
-                return serve_wire(&svc, &addr, levels, auth_token, duration_s);
+                let net_cfg = NetCfg {
+                    levels,
+                    auth_token,
+                    read_idle,
+                    faults: wire_faults,
+                    ..NetCfg::default()
+                };
+                return serve_wire(&svc, &addr, net_cfg, duration_s);
             }
             if flags.get("--canary").is_some() {
                 bail!("--canary requires --model (the tenant it shadows)");
@@ -506,7 +565,14 @@ fn run(args: &[String]) -> Result<()> {
                 // shutdown or the duration budget elapses
                 let duration_s = flags.get_u64("--duration-s", 0)?;
                 let levels = ck.quantizer(0).levels();
-                return serve_wire(&svc, &addr, levels, auth_token, duration_s);
+                let net_cfg = NetCfg {
+                    levels,
+                    auth_token,
+                    read_idle,
+                    faults: wire_faults,
+                    ..NetCfg::default()
+                };
+                return serve_wire(&svc, &addr, net_cfg, duration_s);
             }
             let ts_path = config::testset_path(&ck.name);
             let stream = if ts_path.exists() {
@@ -605,6 +671,7 @@ fn run(args: &[String]) -> Result<()> {
                 seed: flags.get_u64("--seed", 7)?,
                 model_mix,
                 auth: flags.get("--auth-token").map(String::from),
+                deadline_us: flags.get_u64("--deadline-us", 0)?,
             };
             println!(
                 "loadgen         : {} conns x {} reqs @ {} (tail: every {} -> batch {})",
@@ -628,6 +695,10 @@ fn run(args: &[String]) -> Result<()> {
             println!(
                 "retries/errors  : {} backpressure, {} dropped, {} terminal",
                 r.backpressure_retries, r.dropped, r.errors
+            );
+            println!(
+                "resilience      : {} expired, {} failed retries, {} reconnects",
+                r.expired, r.failed_retries, r.reconnects
             );
             println!(
                 "wire latency    : mean {:.1} us, p50/p90/p99 {:.1} / {:.1} / {:.1} us",

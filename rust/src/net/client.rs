@@ -8,6 +8,14 @@
 //! heavy-tail knob (every k-th request is a batch) — and reports
 //! p50/p90/p99 wire latency from a [`Reservoir`], the same estimator the
 //! serving plane uses internally.
+//!
+//! The load generator is resilient by design: transport faults (torn
+//! frames, resets, mid-stream disconnects) trigger a reconnect with
+//! capped exponential backoff plus jitter, the interrupted request is
+//! retried on the fresh connection, and the report separates `completed`
+//! work from `reconnects`, `failed_retries` (server-side batch panics
+//! absorbed by retrying) and `expired` (deadline shed — not retried, the
+//! deadline already passed).
 
 use std::collections::HashMap;
 use std::net::{TcpStream, ToSocketAddrs};
@@ -61,19 +69,29 @@ pub struct Client {
     pub(crate) stream: TcpStream,
     max_frame: usize,
     next_id: u64,
+    deadline_us: Option<u64>,
 }
 
 impl Client {
     pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let _ = stream.set_nodelay(true);
-        Ok(Client { stream, max_frame: MAX_FRAME, next_id: 1 })
+        Ok(Client { stream, max_frame: MAX_FRAME, next_id: 1, deadline_us: None })
     }
 
     /// Bound how long `recv_response` may block — tests use this so a
     /// protocol bug shows as a failed assertion, not a hung run.
     pub fn set_read_timeout(&mut self, t: Option<Duration>) -> std::io::Result<()> {
         self.stream.set_read_timeout(t)
+    }
+
+    /// Sticky per-request deadline: every subsequent `infer` /
+    /// `infer_batch` frame carries this `deadline_us` budget (relative,
+    /// microseconds). The server sheds requests still unbatched past the
+    /// budget with a typed `expired` error. `None` (the default) emits no
+    /// field — byte-identical to the pre-deadline protocol.
+    pub fn set_deadline(&mut self, deadline_us: Option<u64>) {
+        self.deadline_us = deadline_us;
     }
 
     fn fresh_id(&mut self) -> u64 {
@@ -139,7 +157,8 @@ impl Client {
     ) -> Result<(Vec<i64>, f64), NetError> {
         let id = self.fresh_id();
         let model = model.map(str::to_string);
-        match self.call(WireRequest::Infer { id, model, codes })? {
+        let deadline_us = self.deadline_us;
+        match self.call(WireRequest::Infer { id, model, codes, deadline_us })? {
             WireResponse::Sums { sums, latency_us, .. } => Ok((sums, latency_us)),
             other => Err(NetError::Proto(ProtoError(format!("expected sums, got {other:?}")))),
         }
@@ -158,7 +177,8 @@ impl Client {
     ) -> Result<Vec<Vec<i64>>, NetError> {
         let id = self.fresh_id();
         let model = model.map(str::to_string);
-        match self.call(WireRequest::InferBatch { id, model, batch })? {
+        let deadline_us = self.deadline_us;
+        match self.call(WireRequest::InferBatch { id, model, batch, deadline_us })? {
             WireResponse::Batch { batch, .. } => Ok(batch),
             other => Err(NetError::Proto(ProtoError(format!("expected batch, got {other:?}")))),
         }
@@ -227,6 +247,9 @@ pub struct LoadGenCfg {
     /// Shared-secret token sent in a `hello` frame before any other op.
     /// `None` sends no hello at all.
     pub auth: Option<String>,
+    /// Relative deadline carried on every inference frame, microseconds;
+    /// `0` sends no deadline at all (the pre-deadline wire encoding).
+    pub deadline_us: u64,
 }
 
 impl Default for LoadGenCfg {
@@ -240,6 +263,7 @@ impl Default for LoadGenCfg {
             seed: 7,
             model_mix: Vec::new(),
             auth: None,
+            deadline_us: 0,
         }
     }
 }
@@ -256,6 +280,16 @@ pub struct LoadGenReport {
     pub dropped: u64,
     /// Connections that ended early on a terminal error.
     pub errors: u64,
+    /// `expired` error frames: the request's deadline passed before its
+    /// batch formed. Not retried — the budget is already blown.
+    pub expired: u64,
+    /// `failed` / `quarantined` error frames absorbed by retrying (the
+    /// server's executor panicked under that request, or its tenant was
+    /// briefly quarantined).
+    pub failed_retries: u64,
+    /// Successful reconnects after a transport fault; the interrupted
+    /// request was retried on the fresh connection.
+    pub reconnects: u64,
     pub wall_s: f64,
     /// Completed samples per second over the whole run.
     pub rps: f64,
@@ -264,6 +298,12 @@ pub struct LoadGenReport {
     pub p90_us: f64,
     pub p99_us: f64,
 }
+
+/// Reconnect policy after a transport fault: up to this many attempts
+/// with exponential backoff (base below, doubling, capped at 32x) plus
+/// uniform jitter so a fleet of clients does not reconnect in lockstep.
+const RECONNECT_ATTEMPTS: usize = 6;
+const RECONNECT_BASE_MS: u64 = 10;
 
 /// Per-tenant input widths from the stats frame's `models` array. Retired
 /// tenants advertise width 0 and are skipped; servers predating the
@@ -294,6 +334,9 @@ pub fn loadgen(addr: &str, cfg: LoadGenCfg) -> anyhow::Result<LoadGenReport> {
     let backpressure = Arc::new(AtomicU64::new(0));
     let dropped = Arc::new(AtomicU64::new(0));
     let errors = Arc::new(AtomicU64::new(0));
+    let expired = Arc::new(AtomicU64::new(0));
+    let failed_retries = Arc::new(AtomicU64::new(0));
+    let reconnects = Arc::new(AtomicU64::new(0));
     let lat = Arc::new(Mutex::new(Reservoir::new(4096)));
 
     let start = Instant::now();
@@ -306,8 +349,12 @@ pub fn loadgen(addr: &str, cfg: LoadGenCfg) -> anyhow::Result<LoadGenReport> {
         let backpressure = Arc::clone(&backpressure);
         let dropped = Arc::clone(&dropped);
         let errors = Arc::clone(&errors);
+        let expired = Arc::clone(&expired);
+        let failed_retries = Arc::clone(&failed_retries);
+        let reconnects = Arc::clone(&reconnects);
         let lat = Arc::clone(&lat);
         handles.push(std::thread::spawn(move || {
+            let deadline = if cfg.deadline_us > 0 { Some(cfg.deadline_us) } else { None };
             let mut client = match Client::connect(&addr) {
                 Ok(c) => c,
                 Err(_) => {
@@ -315,6 +362,7 @@ pub fn loadgen(addr: &str, cfg: LoadGenCfg) -> anyhow::Result<LoadGenReport> {
                     return;
                 }
             };
+            client.set_deadline(deadline);
             if let Some(token) = cfg.auth.as_deref() {
                 if client.hello(Some(token)).is_err() {
                     errors.fetch_add(1, Ordering::Relaxed);
@@ -392,6 +440,55 @@ pub fn loadgen(addr: &str, cfg: LoadGenCfg) -> anyhow::Result<LoadGenReport> {
                             dropped.fetch_add(1, Ordering::Relaxed);
                             break;
                         }
+                        // the deadline already passed server-side; retrying
+                        // a blown budget only wastes capacity
+                        Err(NetError::Remote { kind: ErrorKind::Expired, .. }) => {
+                            expired.fetch_add(1, Ordering::Relaxed);
+                            break;
+                        }
+                        // the batch panicked under this request: safe and
+                        // worthwhile to retry on the same connection
+                        Err(NetError::Remote { kind: ErrorKind::Failed, .. }) => {
+                            failed_retries.fetch_add(1, Ordering::Relaxed);
+                        }
+                        // quarantined tenants half-open after a window;
+                        // retry gently rather than hammering the breaker
+                        Err(NetError::Remote { kind: ErrorKind::Quarantined, .. }) => {
+                            failed_retries.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        // transport fault (torn frame / reset / mid-stream
+                        // disconnect): reconnect with capped exponential
+                        // backoff + jitter, re-hello, retry this request
+                        Err(NetError::Frame(_)) => {
+                            let mut fresh = None;
+                            for attempt in 0..RECONNECT_ATTEMPTS {
+                                let base_ms = RECONNECT_BASE_MS << attempt.min(5);
+                                let jitter_ms = rng.below(base_ms / 2 + 1);
+                                std::thread::sleep(Duration::from_millis(base_ms + jitter_ms));
+                                if let Ok(mut c) = Client::connect(&addr) {
+                                    let authed = match cfg.auth.as_deref() {
+                                        None => true,
+                                        Some(tok) => c.hello(Some(tok)).is_ok(),
+                                    };
+                                    if authed {
+                                        c.set_deadline(deadline);
+                                        fresh = Some(c);
+                                        break;
+                                    }
+                                }
+                            }
+                            match fresh {
+                                Some(c) => {
+                                    client = c;
+                                    reconnects.fetch_add(1, Ordering::Relaxed);
+                                }
+                                None => {
+                                    errors.fetch_add(1, Ordering::Relaxed);
+                                    return;
+                                }
+                            }
+                        }
                         Err(_) => {
                             errors.fetch_add(1, Ordering::Relaxed);
                             return;
@@ -415,6 +512,9 @@ pub fn loadgen(addr: &str, cfg: LoadGenCfg) -> anyhow::Result<LoadGenReport> {
         backpressure_retries: backpressure.load(Ordering::Relaxed),
         dropped: dropped.load(Ordering::Relaxed),
         errors: errors.load(Ordering::Relaxed),
+        expired: expired.load(Ordering::Relaxed),
+        failed_retries: failed_retries.load(Ordering::Relaxed),
+        reconnects: reconnects.load(Ordering::Relaxed),
         wall_s,
         rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
         mean_us: nz(lat.mean()),

@@ -20,26 +20,47 @@
 //! Requests carry `"op"` and a client-chosen `"id"`; responses echo the
 //! id, so clients may pipeline and match out of band:
 //!
-//! | op            | request fields                      | success response            |
-//! |---------------|-------------------------------------|-----------------------------|
-//! | `hello`       | `auth?: str`                        | bare ack                    |
-//! | `infer`       | `codes: [u32], model?: str`         | `sums: [i64], latency_us`   |
-//! | `infer_batch` | `batch: [[u32]], model?: str`       | `batch: [[i64]]`            |
-//! | `stats`       | —                                   | `stats: {..}` (+ `models`)  |
-//! | `swap`        | `layer, q, p, table: [i64], model?` | bare ack                    |
-//! | `shutdown`    | —                                   | bare ack                    |
+//! | op            | request fields                              | success response            |
+//! |---------------|----------------------------------------------|-----------------------------|
+//! | `hello`       | `auth?: str`                                 | bare ack                    |
+//! | `infer`       | `codes: [u32], model?: str, deadline_us?`    | `sums: [i64], latency_us`   |
+//! | `infer_batch` | `batch: [[u32]], model?: str, deadline_us?`  | `batch: [[i64]]`            |
+//! | `stats`       | —                                            | `stats: {..}` (+ `models`)  |
+//! | `swap`        | `layer, q, p, table: [i64], model?`          | bare ack                    |
+//! | `shutdown`    | —                                            | bare ack                    |
 //!
 //! Fields marked `?` are optional and omitted when absent, so a frame
 //! without them is byte-identical to the pre-registry protocol: old
 //! clients keep working and land on the default tenant.
 //!
 //! Failures are `{"id":N,"ok":false,"error":"<kind>","msg":"..."}` with
-//! kind one of `backpressure` / `stopped` / `invalid` (the serving plane's
+//! kind one of `backpressure` / `stopped` / `invalid` / `failed` /
+//! `expired` / `quarantined` (the serving plane's
 //! [`crate::coordinator::SubmitError`] verbatim) or `parse` / `dropped` /
 //! `unsupported` / `auth` (wire-layer; an unknown `model` name is
 //! `unsupported`). Error frames are written from the reader thread, ahead
 //! of pending completions — an overloaded server answers `backpressure`
 //! immediately; it never leaves a client hanging.
+//!
+//! # What happens when things break
+//!
+//! Every failure mode has a typed outcome and a recovery path; none of
+//! them hangs a client or wedges a server thread:
+//!
+//! | failure                        | client sees                   | recovery                                    |
+//! |--------------------------------|-------------------------------|---------------------------------------------|
+//! | admission queue full           | `backpressure` frame          | retry with backoff (loadgen does)           |
+//! | executor panic under the batch | `failed` frame                | retry; request never half-executes          |
+//! | deadline passed before batch   | `expired` frame               | don't retry — the budget is blown           |
+//! | tenant breaker open            | `quarantined` frame           | other tenants unaffected; retry after window|
+//! | swap/shutdown race             | `dropped` frame               | retry if idempotent                         |
+//! | server dies mid-send           | `Truncated` read              | reconnect + retry ([`client::loadgen`] does)|
+//! | client goes silent             | — (connection closed)         | server `read_idle` guard frees the thread   |
+//! | oversized / malformed frame    | `parse` frame, then close     | fix the client                              |
+//!
+//! The serving-plane rows are exercised deterministically by the chaos
+//! harness (`benches/chaos.rs`) via [`crate::coordinator::FaultPlan`] and
+//! [`server::WireFaults`] — seeded fault schedules, not OS packet games.
 //!
 //! # Wire topology (multi-tenant)
 //!
@@ -83,7 +104,7 @@ pub mod server;
 pub use client::{loadgen, Client, LoadGenCfg, LoadGenReport, NetError};
 pub use frame::{FrameError, MAX_FRAME};
 pub use proto::{ErrorKind, ProtoError, WireRequest, WireResponse};
-pub use server::{NetCfg, NetServer, NetStats};
+pub use server::{NetCfg, NetServer, NetStats, WireFaults};
 
 #[cfg(test)]
 mod tests {
@@ -183,5 +204,150 @@ mod tests {
     /// Tests poke raw bytes through the client's socket.
     fn client_stream(c: &Client) -> &std::net::TcpStream {
         &c.stream
+    }
+
+    #[test]
+    fn error_kind_wire_strings_are_stable_across_protocol_growth() {
+        // clients from earlier protocol revisions hard-code these strings;
+        // growing the set must never rename an existing kind, and every
+        // kind (old and new) must survive an encode/decode roundtrip
+        let fixed = [
+            (ErrorKind::Backpressure, "backpressure"),
+            (ErrorKind::Stopped, "stopped"),
+            (ErrorKind::Invalid, "invalid"),
+            (ErrorKind::Parse, "parse"),
+            (ErrorKind::Dropped, "dropped"),
+            (ErrorKind::Unsupported, "unsupported"),
+            (ErrorKind::Auth, "auth"),
+            (ErrorKind::Failed, "failed"),
+            (ErrorKind::Expired, "expired"),
+            (ErrorKind::Quarantined, "quarantined"),
+        ];
+        for (kind, s) in fixed {
+            assert_eq!(kind.as_str(), s);
+            assert_eq!(ErrorKind::parse(s), Some(kind));
+        }
+        // a pre-fault-tolerance capture decodes unchanged...
+        let old = "{\"id\":4,\"ok\":false,\"error\":\"backpressure\",\"msg\":\"queue full\"}";
+        match WireResponse::decode(old).unwrap() {
+            WireResponse::Error { id: 4, kind: ErrorKind::Backpressure, .. } => {}
+            other => panic!("old capture misdecoded: {other:?}"),
+        }
+        // ...and the grown kinds come back typed, not as protocol errors
+        for s in ["failed", "expired", "quarantined"] {
+            let frame = format!("{{\"id\":9,\"ok\":false,\"error\":\"{s}\",\"msg\":\"m\"}}");
+            match WireResponse::decode(&frame).unwrap() {
+                WireResponse::Error { id: 9, kind, .. } => {
+                    assert_eq!(kind.as_str(), s);
+                }
+                other => panic!("expected error frame for {s}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn loopback_deadline_expiry_is_typed_and_generous_deadline_completes() {
+        let ck = testutil::synthetic(&[6, 4, 3], &[4, 4, 4], 99);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Arc::new(Netlist::build(&ck, &tables, 2));
+        // one worker, wide batches, 50 ms formation wait: a microsecond
+        // deadline is deterministically stale by the time the batch forms
+        let svc = Arc::new(Service::start(
+            net,
+            ServiceCfg {
+                workers: 1,
+                shards: 1,
+                max_batch: 64,
+                max_wait: Duration::from_millis(50),
+                ..ServiceCfg::default()
+            },
+        ));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut server =
+            NetServer::start(Arc::clone(&svc), listener, NetCfg { levels: 16, ..NetCfg::default() })
+                .unwrap();
+        let mut client = Client::connect(server.local_addr()).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+        client.set_deadline(Some(1));
+        match client.infer(vec![1, 2, 3, 4, 5, 6]) {
+            Err(NetError::Remote { kind: ErrorKind::Expired, .. }) => {}
+            other => panic!("expected Expired error frame, got {other:?}"),
+        }
+        // the connection survives, and a generous budget completes
+        client.set_deadline(Some(5_000_000));
+        let (sums, _) = client.infer(vec![1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(sums.len(), 3);
+        let direct = svc.submit_blocking(vec![1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(sums, direct.sums);
+
+        server.shutdown();
+        let st = svc.stats();
+        assert_eq!(st.shed_expired, 1, "exactly the stale request was shed");
+        assert_eq!(st.completed, 2, "wire + direct requests completed");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn loadgen_reconnects_through_injected_torn_frames() {
+        let ck = testutil::synthetic(&[6, 4, 3], &[4, 4, 4], 99);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Arc::new(Netlist::build(&ck, &tables, 2));
+        let svc = Arc::new(Service::start(
+            net,
+            ServiceCfg { workers: 2, shards: 2, ..ServiceCfg::default() },
+        ));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        // tear every 3rd inference reply mid-payload: the client must
+        // observe Truncated, reconnect, and retry to finish its quota
+        let cfg = NetCfg {
+            levels: 16,
+            faults: WireFaults { torn_every: 3, ..WireFaults::default() },
+            ..NetCfg::default()
+        };
+        let mut server = NetServer::start(Arc::clone(&svc), listener, cfg).unwrap();
+
+        let report = loadgen(
+            &server.local_addr().to_string(),
+            LoadGenCfg { connections: 1, requests: 10, ..LoadGenCfg::default() },
+        )
+        .unwrap();
+        assert_eq!(report.errors, 0, "torn frames must be absorbed, not terminal");
+        assert_eq!(report.completed, 10, "every request completes after retries");
+        assert!(report.reconnects >= 1, "at least one torn frame forced a reconnect");
+        assert!(server.stats().faults_injected >= 1);
+
+        server.shutdown();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn idle_connection_is_killed_by_the_slow_loris_guard() {
+        let (svc, mut server) = loopback(1);
+        // rebind with a tight idle budget: loopback() uses the default
+        // 60 s guard, far too slow for a test
+        server.shutdown();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let cfg =
+            NetCfg { levels: 16, read_idle: Some(Duration::from_millis(50)), ..NetCfg::default() };
+        let mut server = NetServer::start(Arc::clone(&svc), listener, cfg).unwrap();
+
+        let mut client = Client::connect(server.local_addr()).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        // a healthy request first: the guard must not fire between frames
+        // that arrive within budget
+        let (sums, _) = client.infer(vec![0; 6]).unwrap();
+        assert_eq!(sums.len(), 3);
+        // now go silent and let the budget lapse
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while server.stats().idle_kills == 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(server.stats().idle_kills, 1, "silent connection must be reaped");
+        // the reaped socket is dead from the client's side too
+        assert!(client.infer(vec![0; 6]).is_err());
+
+        server.shutdown();
+        svc.shutdown();
     }
 }

@@ -12,9 +12,9 @@
 
 use crate::json::{self, obj, Value};
 
-/// Machine-readable error kinds carried in error frames. The first three
-/// mirror [`crate::coordinator::SubmitError`] one-to-one; the rest are
-/// wire-layer conditions the serving plane never sees.
+/// Machine-readable error kinds carried in error frames. The serving-plane
+/// kinds mirror [`crate::coordinator::SubmitError`] one-to-one; the rest
+/// are wire-layer conditions the serving plane never sees.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ErrorKind {
     /// Admission queues full — retry later (maps `SubmitError::Backpressure`).
@@ -37,6 +37,16 @@ pub enum ErrorKind {
     /// not presented the right token (absent, wrong, or a non-`hello`
     /// first frame). The server closes the connection after sending this.
     Auth,
+    /// The request's batch panicked during execution; the request did not
+    /// complete and is safe to retry (maps `SubmitError::Failed`).
+    Failed,
+    /// The request's deadline passed before its batch formed; it never
+    /// executed (maps `SubmitError::Expired`).
+    Expired,
+    /// The target model is quarantined after repeated executor panics;
+    /// retry after the quarantine window, or pick another tenant (maps
+    /// `SubmitError::Quarantined`).
+    Quarantined,
 }
 
 impl ErrorKind {
@@ -49,6 +59,9 @@ impl ErrorKind {
             ErrorKind::Dropped => "dropped",
             ErrorKind::Unsupported => "unsupported",
             ErrorKind::Auth => "auth",
+            ErrorKind::Failed => "failed",
+            ErrorKind::Expired => "expired",
+            ErrorKind::Quarantined => "quarantined",
         }
     }
 
@@ -61,6 +74,9 @@ impl ErrorKind {
             "dropped" => ErrorKind::Dropped,
             "unsupported" => ErrorKind::Unsupported,
             "auth" => ErrorKind::Auth,
+            "failed" => ErrorKind::Failed,
+            "expired" => ErrorKind::Expired,
+            "quarantined" => ErrorKind::Quarantined,
             _ => return None,
         })
     }
@@ -104,12 +120,18 @@ pub enum WireRequest {
     /// without a token ack it as a no-op, so clients may always lead with
     /// a hello.
     Hello { id: u64, auth: Option<String> },
-    /// One sample: `{"op":"infer","id":N,"codes":[...],"model":"name"?}`.
-    Infer { id: u64, model: Option<String>, codes: Vec<u32> },
+    /// One sample:
+    /// `{"op":"infer","id":N,"codes":[...],"model":"name"?,"deadline_us":D?}`.
+    /// `deadline_us` is a relative budget: if the request has not entered a
+    /// batch within `D` microseconds of admission it is shed with a typed
+    /// `expired` error instead of executing late. Like `model`, `None`
+    /// emits no field at all.
+    Infer { id: u64, model: Option<String>, codes: Vec<u32>, deadline_us: Option<u64> },
     /// Several samples in one frame:
-    /// `{"op":"infer_batch","id":N,"batch":[[...],...],"model":"name"?}`.
-    /// One response frame carries all rows.
-    InferBatch { id: u64, model: Option<String>, batch: Vec<Vec<u32>> },
+    /// `{"op":"infer_batch","id":N,"batch":[[...],...],"model":"name"?,"deadline_us":D?}`.
+    /// One response frame carries all rows; the deadline applies to every
+    /// row independently.
+    InferBatch { id: u64, model: Option<String>, batch: Vec<Vec<u32>>, deadline_us: Option<u64> },
     /// Serving-plane + wire counters snapshot: `{"op":"stats","id":N}`.
     Stats { id: u64 },
     /// Hot-swap one edge's truth table:
@@ -209,6 +231,26 @@ fn get_model(v: &Value) -> Result<Option<String>, ProtoError> {
     get_str_opt(v, "model")
 }
 
+/// Append `("deadline_us", D)` when a deadline is set — absent otherwise,
+/// same compatibility contract as [`push_model`].
+fn push_deadline(fields: &mut Vec<(&str, Value)>, deadline_us: &Option<u64>) {
+    if let Some(d) = deadline_us {
+        fields.push(("deadline_us", Value::Int(*d as i64)));
+    }
+}
+
+/// Optional non-negative integer `"deadline_us"`; absent is `None`,
+/// present-but-negative (or non-integer) is malformed.
+fn get_deadline(v: &Value) -> Result<Option<u64>, ProtoError> {
+    match v.get("deadline_us") {
+        None => Ok(None),
+        Some(d) => match d.as_i64() {
+            Some(us) if us >= 0 => Ok(Some(us as u64)),
+            _ => Err(perr("\"deadline_us\" must be a non-negative integer")),
+        },
+    }
+}
+
 impl WireRequest {
     pub fn id(&self) -> u64 {
         match self {
@@ -233,22 +275,24 @@ impl WireRequest {
                 }
                 obj(fields)
             }
-            WireRequest::Infer { id, model, codes } => {
+            WireRequest::Infer { id, model, codes, deadline_us } => {
                 let mut fields = vec![
                     ("op", Value::Str("infer".into())),
                     ("id", Value::Int(*id as i64)),
                     ("codes", codes_value(codes)),
                 ];
                 push_model(&mut fields, model);
+                push_deadline(&mut fields, deadline_us);
                 obj(fields)
             }
-            WireRequest::InferBatch { id, model, batch } => {
+            WireRequest::InferBatch { id, model, batch, deadline_us } => {
                 let mut fields = vec![
                     ("op", Value::Str("infer_batch".into())),
                     ("id", Value::Int(*id as i64)),
                     ("batch", Value::Array(batch.iter().map(|row| codes_value(row)).collect())),
                 ];
                 push_model(&mut fields, model);
+                push_deadline(&mut fields, deadline_us);
                 obj(fields)
             }
             WireRequest::Stats { id } => obj(vec![
@@ -286,7 +330,12 @@ impl WireRequest {
             "hello" => Ok(WireRequest::Hello { id, auth: get_str_opt(&v, "auth")? }),
             "infer" => {
                 let codes = get_codes(v.req("codes").map_err(|e| perr(e.to_string()))?, "codes")?;
-                Ok(WireRequest::Infer { id, model: get_model(&v)?, codes })
+                Ok(WireRequest::Infer {
+                    id,
+                    model: get_model(&v)?,
+                    codes,
+                    deadline_us: get_deadline(&v)?,
+                })
             }
             "infer_batch" => {
                 let rows = v.req_array("batch").map_err(|e| perr(e.to_string()))?;
@@ -294,7 +343,12 @@ impl WireRequest {
                     .iter()
                     .map(|row| get_codes(row, "batch rows"))
                     .collect::<Result<Vec<_>, _>>()?;
-                Ok(WireRequest::InferBatch { id, model: get_model(&v)?, batch })
+                Ok(WireRequest::InferBatch {
+                    id,
+                    model: get_model(&v)?,
+                    batch,
+                    deadline_us: get_deadline(&v)?,
+                })
             }
             "stats" => Ok(WireRequest::Stats { id }),
             "swap" => {
@@ -407,22 +461,30 @@ mod tests {
 
     #[test]
     fn requests_roundtrip() {
-        roundtrip_req(WireRequest::Infer { id: 0, model: None, codes: vec![] });
-        roundtrip_req(WireRequest::Infer { id: 7, model: None, codes: vec![0, 1, u32::MAX] });
+        roundtrip_req(WireRequest::Infer { id: 0, model: None, codes: vec![], deadline_us: None });
+        roundtrip_req(WireRequest::Infer {
+            id: 7,
+            model: None,
+            codes: vec![0, 1, u32::MAX],
+            deadline_us: None,
+        });
         roundtrip_req(WireRequest::Infer {
             id: 7,
             model: Some("jsc-v2".into()),
             codes: vec![0, 1],
+            deadline_us: Some(2_500),
         });
         roundtrip_req(WireRequest::InferBatch {
             id: 8,
             model: None,
             batch: vec![vec![1, 2, 3], vec![4, 5, 6]],
+            deadline_us: Some(0),
         });
         roundtrip_req(WireRequest::InferBatch {
             id: 8,
             model: Some("b".into()),
             batch: vec![vec![1, 2, 3]],
+            deadline_us: None,
         });
         roundtrip_req(WireRequest::Stats { id: 9 });
         roundtrip_req(WireRequest::Swap {
@@ -448,19 +510,27 @@ mod tests {
 
     #[test]
     fn model_less_frames_keep_the_pre_registry_encoding() {
-        // a `model: None` request must not emit a "model" key at all:
-        // old servers reject unknown fields nowhere, but old *captures*
-        // (and the bench baselines) compare frames byte-for-byte
-        let wire = WireRequest::Infer { id: 3, model: None, codes: vec![7, 0] }.encode();
+        // a `model: None` / `deadline_us: None` request must not emit the
+        // keys at all: old servers reject unknown fields nowhere, but old
+        // *captures* (and the bench baselines) compare frames byte-for-byte
+        let plain = WireRequest::Infer { id: 3, model: None, codes: vec![7, 0], deadline_us: None };
+        let wire = plain.encode();
         assert!(!wire.contains("model"), "{wire}");
+        assert!(!wire.contains("deadline"), "{wire}");
         assert_eq!(wire, "{\"op\":\"infer\",\"id\":3,\"codes\":[7,0]}");
         // and a model-less decode accepts frames from pre-registry clients
         let req = WireRequest::decode("{\"op\":\"infer\",\"id\":3,\"codes\":[7,0]}").unwrap();
-        assert_eq!(req, WireRequest::Infer { id: 3, model: None, codes: vec![7, 0] });
+        assert_eq!(
+            req,
+            WireRequest::Infer { id: 3, model: None, codes: vec![7, 0], deadline_us: None }
+        );
         // "model" present but not a string is malformed, not ignored
         let bad = "{\"op\":\"infer\",\"id\":1,\"codes\":[],\"model\":7}";
         assert!(WireRequest::decode(bad).is_err());
         assert!(WireRequest::decode("{\"op\":\"hello\",\"id\":1,\"auth\":9}").is_err());
+        // same for a bogus deadline: typed rejection, not silent acceptance
+        let bad = "{\"op\":\"infer\",\"id\":1,\"codes\":[],\"deadline_us\":-3}";
+        assert!(WireRequest::decode(bad).is_err());
     }
 
     #[test]
@@ -476,6 +546,9 @@ mod tests {
             ErrorKind::Dropped,
             ErrorKind::Unsupported,
             ErrorKind::Auth,
+            ErrorKind::Failed,
+            ErrorKind::Expired,
+            ErrorKind::Quarantined,
         ] {
             roundtrip_resp(WireResponse::Error { id: 4, kind, msg: "why".into() });
         }

@@ -35,6 +35,19 @@
 //!   other first frame, or a wrong token, gets a typed `auth` error and
 //!   the connection is closed. Without a configured token, `hello` is an
 //!   acked no-op so clients may always lead with one.
+//! - **Slow-loris guard**: [`NetCfg::read_idle`] bounds how long a reader
+//!   blocks waiting for the next byte. A connection that goes quiet (or
+//!   trickles a frame slower than the budget) is closed and counted in
+//!   `idle_kills` — idle sockets cannot pin reader threads forever.
+//! - **Typed failure frames**: the serving plane's fault outcomes surface
+//!   as error frames with their own kinds — `failed` (batch panicked,
+//!   retryable), `expired` (deadline passed before batch formation),
+//!   `quarantined` (tenant circuit breaker open). Requests carry an
+//!   optional `deadline_us` that flows through to the DRR batcher.
+//! - **Deterministic wire faults**: [`WireFaults`] (off by default) makes
+//!   the server misbehave on purpose — torn frames, response stalls,
+//!   mid-stream disconnects — on a fixed schedule, so client resilience
+//!   and the chaos harness are testable without OS-level packet games.
 
 use std::io::{BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -44,11 +57,38 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::coordinator::{ModelId, Response, Service, SubmitError};
+use crate::coordinator::{ModelId, Reply, Service, SubmitError};
 use crate::json::{obj, Value};
 
 use super::frame::{read_frame, write_frame, FrameError, MAX_FRAME};
 use super::proto::{peek_id, ErrorKind, WireRequest, WireResponse};
+
+/// Deterministic wire-fault injection schedule, all counted per
+/// connection. Zero means "never" everywhere, so `Default` is a server
+/// that never misbehaves; the chaos harness and `serve --fault-*` arm it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireFaults {
+    /// Every `torn_every`-th response frame is torn: the length prefix
+    /// claims the full payload, half the bytes follow, then the socket is
+    /// severed — the client observes `Truncated` mid-frame.
+    pub torn_every: usize,
+    /// Every `stall_every`-th response is delayed by [`WireFaults::stall`]
+    /// before it is written (a server-side hiccup the client's read
+    /// timeout must absorb or surface).
+    pub stall_every: usize,
+    /// How long a stalled response sits before writing.
+    pub stall: Duration,
+    /// Sever the connection (both halves) after this many inbound frames,
+    /// without answering the last one — a mid-stream crash from the
+    /// client's point of view.
+    pub disconnect_after: usize,
+}
+
+impl WireFaults {
+    pub fn armed(&self) -> bool {
+        self.torn_every > 0 || self.stall_every > 0 || self.disconnect_after > 0
+    }
+}
 
 /// Front-end knobs, all per-connection except `levels` and `auth_token`.
 #[derive(Clone, Debug)]
@@ -66,11 +106,26 @@ pub struct NetCfg {
     /// frame to be a `hello` presenting exactly this token before any
     /// other op is served; `None` (default) disables the gate.
     pub auth_token: Option<String>,
+    /// Per-connection read idle budget (the slow-loris guard): if no byte
+    /// arrives for this long the connection is closed and counted in
+    /// `idle_kills`. `None` disables the guard; the default is 60 s —
+    /// far above any sane inter-frame gap, low enough that abandoned
+    /// sockets cannot pin reader threads indefinitely.
+    pub read_idle: Option<Duration>,
+    /// Deterministic wire-fault schedule; `Default` (all zeros) is off.
+    pub faults: WireFaults,
 }
 
 impl Default for NetCfg {
     fn default() -> Self {
-        NetCfg { max_frame: MAX_FRAME, in_flight: 64, levels: 0, auth_token: None }
+        NetCfg {
+            max_frame: MAX_FRAME,
+            in_flight: 64,
+            levels: 0,
+            auth_token: None,
+            read_idle: Some(Duration::from_secs(60)),
+            faults: WireFaults::default(),
+        }
     }
 }
 
@@ -83,6 +138,10 @@ pub struct NetCounters {
     pub parse_errors: AtomicU64,
     /// Response frames carrying successful results.
     pub wire_completed: AtomicU64,
+    /// Connections closed by the read-idle (slow-loris) guard.
+    pub idle_kills: AtomicU64,
+    /// Wire faults deliberately injected per the [`WireFaults`] schedule.
+    pub faults_injected: AtomicU64,
 }
 
 /// Point-in-time copy of [`NetCounters`].
@@ -93,17 +152,19 @@ pub struct NetStats {
     pub frames_out: u64,
     pub parse_errors: u64,
     pub wire_completed: u64,
+    pub idle_kills: u64,
+    pub faults_injected: u64,
 }
 
 /// What the reader hands the completion thread. The channel is bounded at
 /// `in_flight`, which is what bounds per-connection server memory.
 enum Out {
     /// Pending replies to collect and write, in admission order.
-    Reply { id: u64, rxs: Vec<Receiver<Response>>, batch: bool },
+    Reply { id: u64, rxs: Vec<Receiver<Reply>>, batch: bool },
     /// Replies to drain without writing (a batch that partially failed
     /// admission — the client already got an error frame for the whole
     /// batch, but the admitted rows still execute and must be received).
-    Discard(Vec<Receiver<Response>>),
+    Discard(Vec<Receiver<Reply>>),
 }
 
 struct Conn {
@@ -195,6 +256,8 @@ impl NetServer {
             frames_out: self.counters.frames_out.load(Ordering::Relaxed),
             parse_errors: self.counters.parse_errors.load(Ordering::Relaxed),
             wire_completed: self.counters.wire_completed.load(Ordering::Relaxed),
+            idle_kills: self.counters.idle_kills.load(Ordering::Relaxed),
+            faults_injected: self.counters.faults_injected.load(Ordering::Relaxed),
         }
     }
 
@@ -252,8 +315,40 @@ fn submit_error(id: u64, e: SubmitError) -> WireResponse {
         SubmitError::Invalid(_) => ErrorKind::Invalid,
         // the registry analog of an unknown op: typed, non-fatal
         SubmitError::UnknownModel(_) => ErrorKind::Unsupported,
+        // fault outcomes: each keeps its own kind so clients can pick the
+        // right recovery (retry / respect the deadline / back off tenant)
+        SubmitError::Failed => ErrorKind::Failed,
+        SubmitError::Expired => ErrorKind::Expired,
+        SubmitError::Quarantined(_) => ErrorKind::Quarantined,
     };
     WireResponse::Error { id, kind, msg: e.to_string() }
+}
+
+/// A reply channel closed without a verdict: the request raced a model
+/// swap or shutdown and may or may not have executed.
+fn dropped_error(id: u64) -> WireResponse {
+    WireResponse::Error {
+        id,
+        kind: ErrorKind::Dropped,
+        msg: "reply dropped (model swap or shutdown mid-flight)".to_string(),
+    }
+}
+
+/// Tear a response on purpose: claim the full payload length, emit half
+/// the bytes, flush, and sever the socket — the wire analogue of a server
+/// dying mid-send. The peer's next read ends in `FrameError::Truncated`.
+fn inject_torn_frame(
+    writer: &Mutex<BufWriter<TcpStream>>,
+    counters: &NetCounters,
+    resp: &WireResponse,
+) {
+    counters.faults_injected.fetch_add(1, Ordering::Relaxed);
+    let payload = resp.encode();
+    let mut w = writer.lock().unwrap();
+    let _ = w.write_all(&(payload.len() as u32).to_be_bytes());
+    let _ = w.write_all(&payload.as_bytes()[..payload.len() / 2]);
+    let _ = w.flush();
+    let _ = w.get_ref().shutdown(Shutdown::Both);
 }
 
 /// Resolve an optional wire model name to a tenant id: no name routes to
@@ -297,6 +392,9 @@ fn stats_value(svc: &Service, counters: &NetCounters, levels: u64) -> Value {
                     ("canary_rows", Value::Int(t.canary_rows as i64)),
                     ("canary_agreement", Value::Float(nz(t.canary_agreement))),
                     ("retired", Value::Bool(t.retired)),
+                    ("failed", Value::Int(t.failed as i64)),
+                    ("shed_expired", Value::Int(t.shed_expired as i64)),
+                    ("quarantined", Value::Bool(t.quarantined)),
                 ])
             })
             .collect(),
@@ -306,6 +404,11 @@ fn stats_value(svc: &Service, counters: &NetCounters, levels: u64) -> Value {
         ("rejected", Value::Int(s.rejected as i64)),
         ("dropped", Value::Int(s.dropped as i64)),
         ("quota_drops", Value::Int(s.quota_drops as i64)),
+        ("failed", Value::Int(s.failed as i64)),
+        ("shed_expired", Value::Int(s.shed_expired as i64)),
+        ("exec_panics", Value::Int(s.exec_panics as i64)),
+        ("respawns", Value::Int(s.respawns as i64)),
+        ("quarantine_drops", Value::Int(s.quarantine_drops as i64)),
         ("models", models),
         ("batches", Value::Int(s.batches as i64)),
         ("mean_batch", Value::Float(nz(s.mean_batch))),
@@ -322,6 +425,11 @@ fn stats_value(svc: &Service, counters: &NetCounters, levels: u64) -> Value {
         ("net_frames_in", Value::Int(counters.frames_in.load(Ordering::Relaxed) as i64)),
         ("net_frames_out", Value::Int(counters.frames_out.load(Ordering::Relaxed) as i64)),
         ("net_parse_errors", Value::Int(counters.parse_errors.load(Ordering::Relaxed) as i64)),
+        ("net_idle_kills", Value::Int(counters.idle_kills.load(Ordering::Relaxed) as i64)),
+        (
+            "net_faults_injected",
+            Value::Int(counters.faults_injected.load(Ordering::Relaxed) as i64),
+        ),
     ])
 }
 
@@ -338,11 +446,14 @@ fn spawn_conn(
     stream.set_nonblocking(false)?;
     let _ = stream.set_nodelay(true);
     let mut rstream = stream.try_clone()?;
+    // slow-loris guard: a reader blocked on a silent socket wakes after
+    // read_idle and tears the connection down instead of pinning a thread
+    rstream.set_read_timeout(cfg.read_idle)?;
     let writer = Arc::new(Mutex::new(BufWriter::new(stream.try_clone()?)));
     let (tx, rx): (SyncSender<Out>, Receiver<Out>) = sync_channel(cfg.in_flight.max(1));
     // NetCfg is not Copy (it carries the token); both per-connection
     // threads want pieces of it, so split the scalars out here
-    let NetCfg { max_frame, levels, auth_token, .. } = cfg;
+    let NetCfg { max_frame, levels, auth_token, faults, .. } = cfg;
 
     let reader = {
         let svc = Arc::clone(&svc);
@@ -351,6 +462,7 @@ fn spawn_conn(
         std::thread::spawn(move || {
             // no token configured = every connection starts authenticated
             let mut authed = auth_token.is_none();
+            let mut frames_seen: usize = 0;
             loop {
                 let payload = match read_frame(&mut rstream, max_frame) {
                     Ok(p) => p,
@@ -364,10 +476,30 @@ fn spawn_conn(
                         write_response(&writer, &counters, max_frame, &resp);
                         break;
                     }
+                    // the read-idle budget expired: close the connection
+                    // (WouldBlock on unix, TimedOut on windows)
+                    Err(FrameError::Io(e))
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) =>
+                    {
+                        counters.idle_kills.fetch_add(1, Ordering::Relaxed);
+                        let _ = rstream.shutdown(Shutdown::Both);
+                        break;
+                    }
                     // Closed (clean), Truncated, Io: teardown either way
                     Err(_) => break,
                 };
                 counters.frames_in.fetch_add(1, Ordering::Relaxed);
+                frames_seen += 1;
+                // injected mid-stream crash: the last frame read is never
+                // answered and both socket halves go away under the client
+                if faults.disconnect_after > 0 && frames_seen >= faults.disconnect_after {
+                    counters.faults_injected.fetch_add(1, Ordering::Relaxed);
+                    let _ = rstream.shutdown(Shutdown::Both);
+                    break;
+                }
                 let text = String::from_utf8_lossy(&payload);
                 let req = match WireRequest::decode(&text) {
                     Ok(req) => req,
@@ -437,7 +569,7 @@ fn spawn_conn(
                         write_response(&writer, &counters, max_frame, &resp);
                         break;
                     }
-                    WireRequest::Infer { id, model, codes } => {
+                    WireRequest::Infer { id, model, codes, deadline_us } => {
                         let mid = match resolve_model(&svc, id, model.as_deref()) {
                             Ok(m) => m,
                             Err(resp) => {
@@ -447,7 +579,7 @@ fn spawn_conn(
                                 continue;
                             }
                         };
-                        match svc.submit_to_model(shard, mid, codes) {
+                        match svc.submit_to_model_deadline(shard, mid, codes, deadline_us) {
                             Ok(rx) => {
                                 let out = Out::Reply { id, rxs: vec![rx], batch: false };
                                 if tx.send(out).is_err() {
@@ -465,7 +597,7 @@ fn spawn_conn(
                             }
                         }
                     }
-                    WireRequest::InferBatch { id, model, batch } => {
+                    WireRequest::InferBatch { id, model, batch, deadline_us } => {
                         let mid = match resolve_model(&svc, id, model.as_deref()) {
                             Ok(m) => m,
                             Err(resp) => {
@@ -478,7 +610,7 @@ fn spawn_conn(
                         let mut rxs = Vec::with_capacity(batch.len());
                         let mut failed = None;
                         for row in batch {
-                            match svc.submit_to_model(shard, mid, row) {
+                            match svc.submit_to_model_deadline(shard, mid, row, deadline_us) {
                                 Ok(rx) => rxs.push(rx),
                                 Err(e) => {
                                     failed = Some(e);
@@ -566,49 +698,62 @@ fn spawn_conn(
         let counters = Arc::clone(&counters);
         std::thread::spawn(move || {
             let mut alive = true;
+            let mut replies_out: usize = 0;
             for out in rx {
                 match out {
                     Out::Reply { id, rxs, batch } => {
                         let resp = if batch {
                             let mut rows = Vec::with_capacity(rxs.len());
-                            let mut dropped = false;
+                            // the first failure's kind speaks for the whole
+                            // frame; the remaining rows are still drained so
+                            // no executor blocks on an unread reply
+                            let mut failure: Option<WireResponse> = None;
                             for r in rxs {
                                 match r.recv() {
-                                    Ok(resp) => rows.push(resp.sums),
-                                    Err(_) => dropped = true,
+                                    Ok(Ok(resp)) => rows.push(resp.sums),
+                                    Ok(Err(e)) => {
+                                        if failure.is_none() {
+                                            failure = Some(submit_error(id, e));
+                                        }
+                                    }
+                                    Err(_) => {
+                                        if failure.is_none() {
+                                            failure = Some(dropped_error(id));
+                                        }
+                                    }
                                 }
                             }
-                            if dropped {
-                                WireResponse::Error {
-                                    id,
-                                    kind: ErrorKind::Dropped,
-                                    msg: "reply dropped (model swap or shutdown mid-flight)"
-                                        .to_string(),
-                                }
-                            } else {
-                                WireResponse::Batch { id, batch: rows }
-                            }
+                            failure.unwrap_or(WireResponse::Batch { id, batch: rows })
                         } else {
                             let r = rxs.into_iter().next().expect("non-batch reply has one rx");
                             match r.recv() {
-                                Ok(resp) => WireResponse::Sums {
+                                Ok(Ok(resp)) => WireResponse::Sums {
                                     id,
                                     sums: resp.sums,
                                     latency_us: resp.latency.as_secs_f64() * 1e6,
                                 },
-                                Err(_) => WireResponse::Error {
-                                    id,
-                                    kind: ErrorKind::Dropped,
-                                    msg: "reply dropped (model swap or shutdown mid-flight)"
-                                        .to_string(),
-                                },
+                                Ok(Err(e)) => submit_error(id, e),
+                                Err(_) => dropped_error(id),
                             }
                         };
+                        replies_out += 1;
+                        // injected stall: hold the finished frame, then
+                        // deliver it late (the connection survives)
+                        if faults.stall_every > 0 && replies_out % faults.stall_every == 0 {
+                            counters.faults_injected.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(faults.stall);
+                        }
                         // a dead socket stops writes, not draining: every
                         // queued reply is still received so executors'
                         // results are consumed and the thread terminates
                         if alive {
-                            alive = write_response(&writer, &counters, max_frame, &resp);
+                            if faults.torn_every > 0 && replies_out % faults.torn_every == 0 {
+                                // injected torn frame: sever mid-payload
+                                inject_torn_frame(&writer, &counters, &resp);
+                                alive = false;
+                            } else {
+                                alive = write_response(&writer, &counters, max_frame, &resp);
+                            }
                         }
                     }
                     Out::Discard(rxs) => {

@@ -178,7 +178,7 @@ fn serving_over_real_checkpoint() {
             pending.push((codes.clone(), svc.submit(codes.clone()).unwrap()));
         }
         for (codes, rx) in pending {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().unwrap();
             assert_eq!(resp.sums, sim::eval(&net, &codes), "{backend:?}");
         }
         assert_eq!(svc.stats().completed, 2000);
@@ -228,7 +228,7 @@ fn coordinator_pipeline_under_saturating_load() {
                 }
             }
             for (rx, want) in pending {
-                assert_eq!(rx.recv().unwrap().sums, want);
+                assert_eq!(rx.recv().unwrap().unwrap().sums, want);
             }
         }));
     }
@@ -301,7 +301,7 @@ fn sharded_plane_under_saturating_load() {
                 }
             }
             for (rx, want) in pending {
-                assert_eq!(rx.recv().unwrap().sums, want);
+                assert_eq!(rx.recv().unwrap().unwrap().sums, want);
             }
         }));
     }
@@ -426,7 +426,7 @@ fn optimizer_pipeline_end_to_end_on_pruned_checkpoint() {
         pending.push((codes.clone(), svc.submit(codes.clone()).unwrap()));
     }
     for (codes, rx) in pending {
-        assert_eq!(rx.recv().unwrap().sums, sim::eval(&net, &codes));
+        assert_eq!(rx.recv().unwrap().unwrap().sums, sim::eval(&net, &codes));
     }
     let st = svc.stats();
     assert_eq!(st.opt.as_ref().map(|o| o.ops_after), Some(prog.n_ops()));
@@ -569,9 +569,11 @@ fn wire_backpressure_is_typed_not_a_hang() {
     let mut client = wire_client(&server);
 
     for id in 1..=2u64 {
-        client.send(&WireRequest::Infer { id, model: None, codes: vec![0; 5] }).unwrap();
+        let req = WireRequest::Infer { id, model: None, codes: vec![0; 5], deadline_us: None };
+        client.send(&req).unwrap();
     }
-    client.send(&WireRequest::Infer { id: 3, model: None, codes: vec![0; 5] }).unwrap();
+    let req = WireRequest::Infer { id: 3, model: None, codes: vec![0; 5], deadline_us: None };
+    client.send(&req).unwrap();
     // the ONLY frame that can arrive now is the typed rejection of id 3 —
     // ids 1 and 2 are parked in admission with no executor to drain them
     match client.recv_response().unwrap() {
@@ -617,7 +619,8 @@ fn wire_client_disconnect_mid_request_no_stall() {
     {
         let mut doomed = wire_client(&server);
         for id in 1..=5u64 {
-            doomed.send(&WireRequest::Infer { id, model: None, codes: vec![1; 5] }).unwrap();
+            let req = WireRequest::Infer { id, model: None, codes: vec![1; 5], deadline_us: None };
+            doomed.send(&req).unwrap();
         }
         // dropped here: connection closes with all five un-replied
     }
@@ -653,7 +656,7 @@ fn wire_server_shutdown_drains_in_flight() {
     for id in 1..=8u64 {
         let codes: Vec<u32> = (0..5).map(|_| rng.below(16) as u32).collect();
         want.insert(id, sim::eval(&net, &codes));
-        client.send(&WireRequest::Infer { id, model: None, codes }).unwrap();
+        client.send(&WireRequest::Infer { id, model: None, codes, deadline_us: None }).unwrap();
     }
     // let the reader admit everything (exec_delay keeps the batches
     // themselves in flight well past this), then drain concurrently with
