@@ -3,9 +3,14 @@
 //! arena, f64 requant), which is frozen below as `mod baseline` so the A/B
 //! stays honest across future refactors. Also microbenches the requant plan
 //! against the float oracle, the flat-output path against the
-//! `Vec<Vec<i64>>` convenience, and (section 4) the optimizing pass
-//! pipeline (constant folding, dead-input elimination, table hash-consing,
-//! CSE) against the 1:1 `OptLevel::None` lowering on a pruned synthetic net.
+//! `Vec<Vec<i64>>` convenience, (section 4) the optimizing pass pipeline
+//! (constant folding, dead-input elimination, table hash-consing, CSE)
+//! against the 1:1 `OptLevel::None` lowering on a pruned synthetic net,
+//! (section 5) the CHUNK-wide lane kernels against the frozen PR-3 scalar
+//! reference (bit-exact gate on tail shapes first, `gate_1_3x` at batch
+//! 64), and (section 6) intra-batch data-parallelism: one large batch
+//! sliced across 4 executors vs 1 (`gate_2x`), with the sub-threshold
+//! unsliced path proven on the same config.
 //!
 //!     cargo bench --bench engine
 //!     KANELE_BENCH_QUICK=1 cargo bench --bench engine    # CI smoke mode
@@ -19,6 +24,11 @@
 
 mod common;
 
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kanele::coordinator::{Service, ServiceCfg};
+use kanele::engine::exec::scalar_ref::ScalarExecutor;
 use kanele::engine::{self, OptLevel, RequantPlan};
 use kanele::fixed::Quantizer;
 use kanele::json::{obj, Value};
@@ -389,6 +399,166 @@ fn main() {
         ("opt_cse_fanouts", (report.cse_fanouts as i64).into()),
         ("opt_tables_total", (report.tables_total as i64).into()),
         ("opt_tables_unique", (report.tables_unique as i64).into()),
+    ]));
+
+    // -- 5. chunked (SIMD-width) lane kernels vs frozen PR-3 scalar ref ------
+    // scalar_ref is the one-element-per-iteration executor frozen inside
+    // engine::exec; the live executor runs the same passes through
+    // CHUNK-wide kernels (std::simd bodies under --features simd)
+    println!("-- chunked lane kernels vs frozen scalar reference --");
+    let chunk = engine::CHUNK;
+    println!(
+        "  chunk width {} samples, simd feature {}",
+        chunk,
+        if cfg!(feature = "simd") { "ON (std::simd)" } else { "off (autovectorized)" }
+    );
+    // bit-exactness gate first, on the tail shapes the chunked path must
+    // get right (n = 1, CHUNK-1, CHUNK+1) plus the full probe
+    {
+        let mut sex = ScalarExecutor::new();
+        let mut sflat: Vec<i64> = Vec::new();
+        let mut ex = engine::Executor::with_capacity(&prog, chunk + 1);
+        let mut cflat: Vec<i64> = Vec::new();
+        for n in [1usize, chunk - 1, chunk + 1, probe.len()] {
+            let sub = &probe[..n.min(probe.len())];
+            sex.run_batch_into(&prog, sub, &mut sflat);
+            ex.run_batch_into(&prog, sub, &mut cflat);
+            assert_eq!(sflat, cflat, "chunked kernels diverge from scalar_ref at n={n}");
+        }
+    }
+    for batch in [1usize, chunk - 1, 64, 256] {
+        let mut sex = ScalarExecutor::new();
+        let mut sflat: Vec<i64> = Vec::new();
+        let r_scalar = common::bench(&format!("scalar_ref kernels (batch {batch})"), || {
+            for c in stream.chunks(batch) {
+                sex.run_batch_into(&prog, c, &mut sflat);
+                std::hint::black_box(&sflat);
+            }
+        });
+        let mut ex = engine::Executor::with_capacity(&prog, batch);
+        let mut cflat: Vec<i64> = Vec::new();
+        let r_chunked = common::bench(&format!("chunked kernels (batch {batch})"), || {
+            for c in stream.chunks(batch) {
+                ex.run_batch_into(&prog, c, &mut cflat);
+                std::hint::black_box(&cflat);
+            }
+        });
+        let speedup = r_scalar.median_ns / r_chunked.median_ns;
+        let gate = speedup >= 1.3;
+        println!(
+            "      batch {batch:>3}: chunked kernels are {speedup:.2}x scalar_ref{}",
+            if batch == 64 {
+                if gate {
+                    " | gate >= 1.30x: PASS"
+                } else {
+                    " | gate >= 1.30x: MISS"
+                }
+            } else {
+                ""
+            }
+        );
+        rows.push(obj(vec![
+            ("section", "simd".into()),
+            ("batch", (batch as i64).into()),
+            ("chunk", (chunk as i64).into()),
+            ("simd_feature", cfg!(feature = "simd").into()),
+            ("bit_exact", true.into()),
+            ("scalar_ns", r_scalar.median_ns.into()),
+            ("chunked_ns", r_chunked.median_ns.into()),
+            ("speedup", speedup.into()),
+            ("gate_1_3x", gate.into()),
+        ]));
+    }
+
+    // -- 6. intra-batch data-parallelism: one big batch across the pool ------
+    // a batch large enough that one executor is the bottleneck: the
+    // coordinator slices its sample dimension across 4 executors
+    // (ServiceCfg::parallel_grain) and must reproduce the engine's flat
+    // plane bit-for-bit while cutting wall clock
+    println!("-- intra-batch slicing: one large batch across the executor pool --");
+    let big_ck = {
+        let mut c =
+            kanele::checkpoint::testutil::synthetic(&[64, 48, 32, 8], &[6, 6, 6, 6], 0x51CE);
+        c.name = "intra-batch-synthetic".into();
+        c
+    };
+    let big_tables = lut::from_checkpoint(&big_ck);
+    let big_net = Netlist::build(&big_ck, &big_tables, 2);
+    let n_big = if quick { 2_000 } else { 10_000 };
+    let big_stream = data::random_code_stream(&big_ck, n_big, 17);
+    // the reference plane comes straight off the engine: both service
+    // configurations below must reproduce it exactly
+    let big_prog = engine::compile_with(&big_net, OptLevel::Full);
+    let mut want_flat: Vec<i64> = Vec::new();
+    engine::run_batch_flat(&big_prog, &big_stream, &mut want_flat);
+    let d_out = big_prog.d_out();
+    let drive = |workers: usize, grain: usize, max_batch: usize, rows_in: &[Vec<u32>]| {
+        let svc = Service::start(
+            Arc::new(big_net.clone()),
+            ServiceCfg {
+                workers,
+                shards: 1,
+                max_batch,
+                max_wait: Duration::from_millis(500),
+                queue_depth: 1 << 15,
+                parallel_grain: grain,
+                ..Default::default()
+            },
+        );
+        let t0 = Instant::now();
+        let pending: Vec<_> = rows_in
+            .iter()
+            .map(|c| svc.submit(c.clone()).expect("queue sized for the whole batch"))
+            .collect();
+        let mut got: Vec<i64> = Vec::with_capacity(rows_in.len() * d_out);
+        for rx in pending {
+            got.extend(rx.recv().unwrap().unwrap().sums);
+        }
+        let dt = t0.elapsed();
+        let st = svc.stats();
+        svc.shutdown();
+        (dt, got, st)
+    };
+    let (dt_single, got_single, st_single) = drive(1, 0, n_big, &big_stream);
+    assert_eq!(got_single, want_flat, "single-executor service diverges from engine");
+    assert_eq!(st_single.sliced_batches, 0, "workers=1/grain=0 must never slice");
+    let (dt_sliced, got_sliced, st_sliced) = drive(4, 512, n_big, &big_stream);
+    assert_eq!(got_sliced, want_flat, "sliced service diverges from engine");
+    assert!(st_sliced.sliced_batches >= 1, "one {n_big}-row batch at grain 512 must slice");
+    // small batches provably keep the unsliced path on the very same config
+    let small = &big_stream[..256.min(n_big)];
+    let (_, got_small, st_small) = drive(4, 512, 64, small);
+    assert_eq!(
+        got_small.as_slice(),
+        &want_flat[..got_small.len()],
+        "small-batch run diverges from engine"
+    );
+    assert_eq!(st_small.sliced_batches, 0, "sub-threshold batches must not slice");
+    let core_speedup = dt_single.as_secs_f64() / dt_sliced.as_secs_f64();
+    let gate_2x = core_speedup >= 2.0;
+    println!(
+        "      one {n_big}-sample batch: 1 executor {:.1} ms -> 4 executors sliced {:.1} ms ({core_speedup:.2}x) | gate >= 2.00x: {}",
+        dt_single.as_secs_f64() * 1e3,
+        dt_sliced.as_secs_f64() * 1e3,
+        if gate_2x { "PASS" } else { "MISS" }
+    );
+    println!(
+        "      sliced_batches {} | slice_tasks {} | small-batch run sliced_batches {} (unsliced path proven)",
+        st_sliced.sliced_batches, st_sliced.slice_tasks, st_small.sliced_batches
+    );
+    rows.push(obj(vec![
+        ("section", "intra_batch".into()),
+        ("batch", (n_big as i64).into()),
+        ("workers", 4i64.into()),
+        ("grain", 512i64.into()),
+        ("bit_exact", true.into()),
+        ("single_ms", (dt_single.as_secs_f64() * 1e3).into()),
+        ("sliced_ms", (dt_sliced.as_secs_f64() * 1e3).into()),
+        ("speedup", core_speedup.into()),
+        ("gate_2x", gate_2x.into()),
+        ("sliced_batches", (st_sliced.sliced_batches as i64).into()),
+        ("slice_tasks", (st_sliced.slice_tasks as i64).into()),
+        ("small_batch_unsliced", (st_small.sliced_batches == 0).into()),
     ]));
 
     // machine-readable trajectory: stdout grids rot in logs, this does not

@@ -54,8 +54,12 @@ fn main() -> Result<()> {
     }
 
     // -- equivalence 1b: the compiled serving engine vs the same oracle -----
+    // (flat-plane path: one contiguous buffer, no per-sample allocations)
     let prog = engine::compile(&net);
-    if engine::run_batch(&prog, &tv.input_codes) != tv.output_sums {
+    let mut flat = Vec::new();
+    engine::run_batch_flat(&prog, &tv.input_codes, &mut flat);
+    let want: Vec<i64> = tv.output_sums.iter().flatten().copied().collect();
+    if flat != want {
         bail!("compiled engine deviates from the Python oracle");
     }
     println!(

@@ -71,8 +71,13 @@ fn main() -> Result<()> {
     if !ok {
         bail!("netlist does not match the training-side oracle");
     }
+    // flat-plane path: one contiguous output buffer for the whole batch,
+    // no per-sample allocations (what the serving executors run)
     let prog = engine::compile(&net);
-    if engine::run_batch(&prog, &tv.input_codes) != tv.output_sums {
+    let mut flat = Vec::new();
+    engine::run_batch_flat(&prog, &tv.input_codes, &mut flat);
+    let want: Vec<i64> = tv.output_sums.iter().flatten().copied().collect();
+    if flat != want {
         bail!("compiled engine does not match the training-side oracle");
     }
     println!(

@@ -54,6 +54,22 @@
 //! the netlist-walking interpreter remains selectable for debugging and
 //! A/B benchmarking.
 //!
+//! **Intra-batch data-parallelism** ([`ServiceCfg::parallel_grain`]): one
+//! very large compiled batch would otherwise serialize on one executor
+//! while the rest idle. Past the threshold (`>= 2 * parallel_grain` valid
+//! rows, `workers > 1`) the executing thread splits the batch's sample
+//! dimension into up to `workers` even contiguous ranges, offers all but
+//! the first back onto the SAME work-stealing deques as slice tasks
+//! (non-blocking: a full deque runs that range inline), runs its own
+//! range, helps with *other* batches' slices while it waits, and stitches
+//! the per-range output planes in sample order — byte-for-byte the
+//! single-executor plane, because samples are independent and the engine's
+//! chunked kernels never mix samples across a slice boundary. Small
+//! batches never see any of this: below the threshold the code path is
+//! exactly the pre-slicing one. A panicked slice poisons its job's latch;
+//! the originator then panics into its supervisor and the whole batch
+//! fails with the same typed replies as any other contained panic.
+//!
 //! Statistics are kept per shard ([`ShardStats`]), per tenant
 //! ([`TenantStats`]: admitted/completed/batches/latency quantiles/quota
 //! drops/canary agreement, retained after unload) plus service-wide
@@ -110,7 +126,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::engine::{Executor, InternStats, OptLevel, OptReport, ProgramCell};
+use crate::engine::{CompiledProgram, Executor, InternStats, OptLevel, OptReport, ProgramCell};
 use crate::netlist::hotswap::NetlistCell;
 use crate::netlist::Netlist;
 use crate::sim;
@@ -325,6 +341,16 @@ pub struct ServiceCfg {
     /// Deterministic fault injection (all-off by default): drives the
     /// chaos bench and the CI smoke; production configs never arm it.
     pub faults: FaultPlan,
+    /// Intra-batch data-parallelism grain, in samples. A compiled batch
+    /// with at least `2 * parallel_grain` valid rows is split into up to
+    /// `workers` grain-sized sample ranges; the ranges fan out across the
+    /// executor pool as slice tasks and the originating executor stitches
+    /// the per-range planes back together (sample order preserved, so the
+    /// output is byte-for-byte what the unsliced path produces). Batches
+    /// below the threshold — and everything when `0` or `workers <= 1` —
+    /// take the single-executor path untouched: slicing only ever engages
+    /// where the fan-out overhead is amortized over thousands of samples.
+    pub parallel_grain: usize,
 }
 
 impl Default for ServiceCfg {
@@ -342,6 +368,7 @@ impl Default for ServiceCfg {
             exec_delay_shard: None,
             exec_delay_every: 0,
             faults: FaultPlan::default(),
+            parallel_grain: 2048,
         }
     }
 }
@@ -423,6 +450,15 @@ pub struct ServiceStats {
     pub throughput_ops: f64,
     /// Largest executor scratch footprint observed (bytes).
     pub scratch_bytes: u64,
+    /// Batches the compiled backend split into intra-batch sample slices
+    /// (at least `2 * parallel_grain` valid rows; see
+    /// [`ServiceCfg::parallel_grain`]). `0` proves every batch took the
+    /// single-executor path.
+    pub sliced_batches: u64,
+    /// Slice tasks actually fanned out to the executor pool (excludes the
+    /// originator's own range and any range it ran inline because the
+    /// deques were full).
+    pub slice_tasks: u64,
     /// What the compiled backend's pass pipeline did to the *current*
     /// program snapshot (ops/table/lane before-after). `None` for the
     /// interpreted backend or a worker-less service.
@@ -505,7 +541,119 @@ struct Shared {
     fault_seq: AtomicU64,
     /// Panics actually injected; doubles as the budget gauge.
     faults_injected: AtomicU64,
+    /// Compiled batches split into intra-batch sample slices.
+    sliced_batches: AtomicU64,
+    /// Slice tasks fanned out to the pool (originator ranges excluded).
+    slice_tasks: AtomicU64,
     shards: Vec<ShardShared>,
+}
+
+/// What travels on the executor deques. Dispatchers only ever push whole
+/// formed batches; slice tasks are pushed by an executor that decided to
+/// split one large compiled batch across the pool (see
+/// [`ServiceCfg::parallel_grain`]). Keeping both on the SAME deques means
+/// slices inherit the pool's stealing, shutdown and accounting for free —
+/// idle executors pick slices up exactly like batches, and the originator
+/// drains *slice* work (never nested batches) while it waits for its own.
+enum Work {
+    Batch(Batch<Pending>),
+    Slice(SliceTask),
+}
+
+/// One sliced compiled batch: the shared state every slice task of that
+/// batch hangs off. `rows` are indices into `batch.items` whose width
+/// matched the program snapshot (the same filter the unsliced path
+/// applies), so slice ranges address *valid* samples only and the stitched
+/// plane is byte-identical to one `run_batch_into` over all of them.
+struct SliceJob {
+    batch: Arc<Batch<Pending>>,
+    /// The originator's program snapshot: every slice runs the SAME
+    /// program even if a hot-swap lands mid-batch (PR-region semantics).
+    prog: Arc<CompiledProgram>,
+    /// Valid-row indices into `batch.items`, in batch order.
+    rows: Vec<usize>,
+    /// One output plane per slice, filled by whoever ran it; the
+    /// originator stitches them in index order (== sample order).
+    slots: Mutex<Vec<Option<Vec<i64>>>>,
+    /// Counts the slices the originator did NOT run as its own range
+    /// (fanned out or inline-fallback); poisoned if any of them panicked.
+    latch: SliceLatch,
+}
+
+/// One contiguous valid-row range `[lo, hi)` of a [`SliceJob`].
+struct SliceTask {
+    job: Arc<SliceJob>,
+    /// Slot index this task's output plane lands in.
+    idx: usize,
+    lo: usize,
+    hi: usize,
+}
+
+/// Completion latch for a sliced batch: the originator parks on it while
+/// helpers finish. `complete(false)` poisons it — the originator then
+/// panics into its supervisor so the whole batch fails with typed replies
+/// (slices have no reply channels of their own; the batch does). Waits
+/// are short-timeout polls, mirroring the pool's defensive-poll shape, so
+/// a lost wakeup costs a poll interval and never a hang.
+struct SliceLatch {
+    /// `(slices outstanding, any slice panicked)`.
+    state: Mutex<(usize, bool)>,
+    cond: Condvar,
+}
+
+impl SliceLatch {
+    fn new(remaining: usize) -> SliceLatch {
+        SliceLatch { state: Mutex::new((remaining, false)), cond: Condvar::new() }
+    }
+
+    fn complete(&self, ok: bool) {
+        let mut s = self.state.lock().unwrap();
+        s.0 -= 1;
+        if !ok {
+            s.1 = true;
+        }
+        if s.0 == 0 {
+            self.cond.notify_all();
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.state.lock().unwrap().0 == 0
+    }
+
+    fn poisoned(&self) -> bool {
+        self.state.lock().unwrap().1
+    }
+
+    /// Park until every outstanding slice completes or `timeout` passes
+    /// (callers re-check `done` in a loop; the timeout is the safety poll).
+    fn wait(&self, timeout: Duration) {
+        let s = self.state.lock().unwrap();
+        if s.0 > 0 {
+            let _ = self.cond.wait_timeout(s, timeout).unwrap();
+        }
+    }
+}
+
+/// An executor's reusable per-thread scratch: the engine executor plus the
+/// two flat output planes (primary + canary rows). Bundled so the
+/// supervisor can rebuild all of it in one assignment after a caught
+/// panic, and so `execute_batch` takes one scratch handle instead of three
+/// `&mut` parameters.
+struct ExecScratch {
+    exec: Executor,
+    /// Caller-owned output plane of `run_batch_into` for the whole batch.
+    flat: Vec<i64>,
+    /// The canaried row subset's plane for the same batch.
+    flat2: Vec<i64>,
+}
+
+/// The executor pool as seen from inside one executor: the shared deques
+/// plus this thread's home shard (where it offers slice tasks and looks
+/// first when draining slice work).
+struct PoolRef<'a> {
+    pool: &'a WorkPool<Work>,
+    home: usize,
 }
 
 /// Condvar wakeup for `submit_blocking`'s backpressure waits: dispatchers
@@ -591,7 +739,7 @@ pub struct Service {
     /// is observable without anything draining them.
     rx_parked: Mutex<Vec<Receiver<Pending>>>,
     /// Dispatcher → executor handoff; `None` when `workers == 0`.
-    pool: Option<Arc<WorkPool<Batch<Pending>>>>,
+    pool: Option<Arc<WorkPool<Work>>>,
     drain: Arc<DrainGate>,
     /// Tenant registry: every loaded checkpoint with its own swappable
     /// cell, compiled-program cache, quota, counters and optional canary.
@@ -656,6 +804,8 @@ impl Service {
             quarantine_drops: AtomicU64::new(0),
             fault_seq: AtomicU64::new(0),
             faults_injected: AtomicU64::new(0),
+            sliced_batches: AtomicU64::new(0),
+            slice_tasks: AtomicU64::new(0),
             shards: (0..cfg.shards).map(|_| ShardShared::default()).collect(),
         });
         let drain = Arc::new(DrainGate::new());
@@ -677,9 +827,15 @@ impl Service {
             // per-shard deque depth ~ executors per shard (rounded up, so
             // the total staged budget is never below the old single work
             // channel of depth `workers`): every executor can be running
-            // one batch with another staged before a dispatcher blocks
-            let deque_cap = cfg.workers.div_ceil(cfg.shards);
-            let p: Arc<WorkPool<Batch<Pending>>> =
+            // one batch with another staged before a dispatcher blocks.
+            // With intra-batch slicing armed, each shard gets `workers`
+            // extra slots of headroom so slice offers (non-blocking
+            // `try_push`) land even while batches are staged — a full
+            // deque only costs the originator an inline slice, never a
+            // block.
+            let slice_headroom = if cfg.parallel_grain > 0 { cfg.workers } else { 0 };
+            let deque_cap = cfg.workers.div_ceil(cfg.shards) + slice_headroom;
+            let p: Arc<WorkPool<Work>> =
                 Arc::new(WorkPool::new(cfg.shards, deque_cap, cfg.steal, cfg.shards, cfg.workers));
             for w in 0..cfg.workers {
                 let pool = Arc::clone(&p);
@@ -1041,6 +1197,8 @@ impl Service {
             fused_ops,
             throughput_ops: fused_ops as f64 / elapsed,
             scratch_bytes: self.shared.scratch.load(Ordering::Relaxed),
+            sliced_batches: self.shared.sliced_batches.load(Ordering::Relaxed),
+            slice_tasks: self.shared.slice_tasks.load(Ordering::Relaxed),
             // the default tenant's CURRENT snapshot report (a hot-swap
             // recompile updates it); loading here may pay the first
             // post-swap recompile, which stats consumers can afford.
@@ -1129,7 +1287,7 @@ const SUPERVISOR_MAX_RESTARTS: usize = 16;
 fn dispatcher_loop(
     shard: usize,
     rx: Receiver<Pending>,
-    pool: Arc<WorkPool<Batch<Pending>>>,
+    pool: Arc<WorkPool<Work>>,
     policy: Policy,
     shared: Arc<Shared>,
     drain: Arc<DrainGate>,
@@ -1158,7 +1316,7 @@ fn dispatcher_loop(
                 // admission slots just freed: wake submitters parked on
                 // backpressure (before push, which may block on a full deque)
                 drain.bump();
-                if !pool.push(shard, batch) {
+                if !pool.push(shard, Work::Batch(batch)) {
                     break; // every executor died; nothing left to feed
                 }
             }
@@ -1181,18 +1339,22 @@ fn dispatcher_loop(
     pool.close_producer();
 }
 
-/// Pipeline stage 2 — pop formed batches (home shard first, stealing the
-/// oldest from victims when idle) and run them. Only executors with
-/// nothing local to do ever touch another shard's deque, so executions
-/// overlap freely and no lock is held across a batch-collection wait.
-/// Supervised: each batch runs under `catch_unwind` with the batch owned
-/// OUT HERE, so a panicked execution still answers every request (typed
-/// [`SubmitError::Failed`]), takes a breaker strike on its tenant, and
-/// the executor rebuilds its scratch state and keeps consuming. The OS
-/// thread never dies for a contained panic, so the pool's fixed
-/// producer/consumer accounting is untouched.
+/// Pipeline stage 2 — pop work (home shard first, stealing the oldest
+/// from victims when idle) and run it. Only executors with nothing local
+/// to do ever touch another shard's deque, so executions overlap freely
+/// and no lock is held across a batch-collection wait. Work is either a
+/// whole formed batch or one slice of a large batch another executor
+/// split (see [`ServiceCfg::parallel_grain`]); slices run on this
+/// thread's scratch exactly like batches do. Supervised: each batch runs
+/// under `catch_unwind` with the batch owned OUT HERE, so a panicked
+/// execution still answers every request (typed [`SubmitError::Failed`]),
+/// takes a breaker strike on its tenant, and the executor rebuilds its
+/// scratch state and keeps consuming; a panicked *slice* poisons its
+/// job's latch instead (the originator fails the whole batch with the
+/// same typed replies). The OS thread never dies for a contained panic,
+/// so the pool's fixed producer/consumer accounting is untouched.
 fn executor_loop(
-    pool: Arc<WorkPool<Batch<Pending>>>,
+    pool: Arc<WorkPool<Work>>,
     home: usize,
     warm: Option<Arc<ProgramCell>>,
     shared: Arc<Shared>,
@@ -1202,7 +1364,7 @@ fn executor_loop(
     // (now only restart-exhausted) exit, so once the last executor is
     // gone dispatchers fail their push instead of blocking forever on a
     // deque nothing will drain
-    struct ConsumerGuard<'a>(&'a WorkPool<Batch<Pending>>);
+    struct ConsumerGuard<'a>(&'a WorkPool<Work>);
     impl Drop for ConsumerGuard<'_> {
         fn drop(&mut self) {
             self.0.close_consumer();
@@ -1212,40 +1374,82 @@ fn executor_loop(
     // per-executor scratch, reused across batches, TENANTS and hot-swaps
     // (the Executor grows to the largest geometry it serves), warm-sized
     // from the default tenant so steady state never allocates planes.
-    // `flat` is the caller-owned output plane of `run_batch_into`; `flat2`
-    // is the canaried rows' plane of the same batch.
-    let fresh = |warm: &Option<Arc<ProgramCell>>| match warm {
-        Some(programs) => Executor::with_capacity(&programs.load().1, cfg.max_batch),
-        None => Executor::new(),
+    let fresh = |warm: &Option<Arc<ProgramCell>>| ExecScratch {
+        exec: match warm {
+            Some(programs) => Executor::with_capacity(&programs.load().1, cfg.max_batch),
+            None => Executor::new(),
+        },
+        flat: Vec::new(),
+        flat2: Vec::new(),
     };
-    let mut exec = fresh(&warm);
-    let mut flat: Vec<i64> = Vec::new();
-    let mut flat2: Vec<i64> = Vec::new();
+    let mut scratch = fresh(&warm);
     let mut consecutive = 0usize;
-    while let Some((src_shard, batch)) = pool.pop(home) {
-        let run = catch_unwind(AssertUnwindSafe(|| {
-            execute_batch(&batch, src_shard, &mut exec, &mut flat, &mut flat2, &shared, &cfg);
-        }));
-        match run {
-            Ok(()) => consecutive = 0,
-            Err(_) => {
-                fail_batch(&batch, &shared);
-                // scratch may be torn mid-write: rebuild before reuse
-                exec = fresh(&warm);
-                flat = Vec::new();
-                flat2 = Vec::new();
-                shared.respawns.fetch_add(1, Ordering::Relaxed);
-                consecutive += 1;
-                if consecutive >= SUPERVISOR_MAX_RESTARTS {
-                    // a panic storm this dense is a plane bug, not one bad
-                    // batch: stop consuming (the guard closes the slot so
-                    // dispatchers fail fast instead of blocking)
-                    break;
+    while let Some((src_shard, work)) = pool.pop(home) {
+        let ok = match work {
+            Work::Batch(batch) => {
+                // Arc-owned OUT HERE: a slice job shares the batch with
+                // helper executors, and a panic below still leaves every
+                // reply sender alive for `fail_batch` to answer
+                let batch = Arc::new(batch);
+                let run = catch_unwind(AssertUnwindSafe(|| {
+                    let pool = PoolRef { pool: &pool, home };
+                    execute_batch(&batch, src_shard, &mut scratch, pool, &shared, &cfg);
+                }));
+                if run.is_err() {
+                    fail_batch(&batch, &shared);
                 }
+                run.is_ok()
+            }
+            // helper side of a sliced batch: catches its own panics and
+            // completes/poisons the job latch either way
+            Work::Slice(task) => run_slice(task, &mut scratch.exec),
+        };
+        if ok {
+            consecutive = 0;
+        } else {
+            // scratch may be torn mid-write: rebuild before reuse
+            scratch = fresh(&warm);
+            shared.respawns.fetch_add(1, Ordering::Relaxed);
+            consecutive += 1;
+            if consecutive >= SUPERVISOR_MAX_RESTARTS {
+                // a panic storm this dense is a plane bug, not one bad
+                // batch: stop consuming (the guard closes the slot so
+                // dispatchers fail fast instead of blocking)
+                break;
             }
         }
     }
     // pool drained and every dispatcher closed: graceful exit
+}
+
+/// Run one slice of another executor's batch on this thread's scratch.
+/// Panics are contained HERE (the slice has no reply channels to answer —
+/// the originating batch does): the job latch is completed either way,
+/// poisoned on panic, and the originator fails the whole batch through
+/// its own supervisor. Returns whether the slice ran clean so the caller
+/// can rebuild possibly-torn scratch.
+fn run_slice(task: SliceTask, exec: &mut Executor) -> bool {
+    let ok = catch_unwind(AssertUnwindSafe(|| run_slice_body(&task, exec))).is_ok();
+    task.job.latch.complete(ok);
+    ok
+}
+
+/// The slice itself: gather the range's rows off the shared batch, run
+/// them through the job's program snapshot, park the output plane in the
+/// task's slot. Row indices pre-filtered at job construction, so every
+/// row here matches the program width. Batch-level panic accounting
+/// (`exec_panics` / `failed` / breaker strike) lands once, in the
+/// originator's `fail_batch`, when the poisoned latch fails the whole
+/// batch — only the respawn is the helper's own.
+fn run_slice_body(task: &SliceTask, exec: &mut Executor) {
+    let job = &task.job;
+    let rows: Vec<&[u32]> = job.rows[task.lo..task.hi]
+        .iter()
+        .map(|&r| job.batch.items[r].req.codes.as_slice())
+        .collect();
+    let mut out = Vec::with_capacity((task.hi - task.lo) * job.prog.d_out());
+    exec.run_batch_into(&job.prog, &rows, &mut out);
+    job.slots.lock().unwrap()[task.idx] = Some(out);
 }
 
 /// Complete a poisoned batch with typed outcomes: every request gets an
@@ -1323,19 +1527,22 @@ fn argmax(sums: &[i64]) -> usize {
 /// that's a steal). When the tenant has a canary, the canaried row subset
 /// ALSO runs on the canary program: those rows answer from the canary,
 /// and their argmax is scored against the primary (which ran for every
-/// row) into the tenant's live agreement counters.
+/// row) into the tenant's live agreement counters. A compiled batch past
+/// the [`ServiceCfg::parallel_grain`] threshold fans sample slices across
+/// `pool` and stitches the identical output plane (see `execute_sliced`).
 fn execute_batch(
-    batch: &Batch<Pending>,
+    batch: &Arc<Batch<Pending>>,
     src_shard: usize,
-    exec: &mut Executor,
-    flat: &mut Vec<i64>,
-    flat2: &mut Vec<i64>,
+    scratch: &mut ExecScratch,
+    pool: PoolRef<'_>,
     shared: &Shared,
     cfg: &ServiceCfg,
 ) {
-    // borrowed, not consumed: the batch stays owned by the supervising
-    // executor_loop, so a panic below leaves every reply sender alive for
-    // `fail_batch` to answer (SyncSender::send takes &self)
+    let ExecScratch { exec, flat, flat2 } = scratch;
+    // borrowed, not consumed: the batch stays owned (via its Arc) by the
+    // supervising executor_loop, so a panic below leaves every reply
+    // sender alive for `fail_batch` to answer (SyncSender::send takes
+    // &self)
     let items = &batch.items;
     // the batch carries its tenant: executors never touch the registry,
     // and an unloaded tenant's snapshot lives until this drains
@@ -1367,8 +1574,33 @@ fn execute_batch(
                 .filter(|r| r.len() == d_in)
                 .collect();
             // whole batch into the reused flat plane: the engine allocates
-            // nothing; per-request sums are sliced out at completion
-            exec.run_batch_into(&prog, &rows, flat);
+            // nothing; per-request sums are sliced out at completion. A
+            // batch past the slicing threshold instead fans grain-sized
+            // sample ranges across the pool and stitches the SAME plane
+            // (byte-for-byte: samples are independent and keep their
+            // batch order), so everything downstream — canary split,
+            // debug sim cross-check, reply slicing — is path-agnostic.
+            let grain = cfg.parallel_grain;
+            if grain > 0 && cfg.workers > 1 && rows.len() >= 2 * grain {
+                let row_idx: Vec<usize> = items
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, p)| p.req.codes.len() == d_in)
+                    .map(|(i, _)| i)
+                    .collect();
+                let k = (rows.len() / grain).min(cfg.workers).max(2);
+                let job = Arc::new(SliceJob {
+                    batch: Arc::clone(batch),
+                    prog: Arc::clone(&prog),
+                    rows: row_idx,
+                    slots: Mutex::new(vec![None; k]),
+                    latch: SliceLatch::new(k - 1),
+                });
+                shared.sliced_batches.fetch_add(1, Ordering::Relaxed);
+                execute_sliced(&job, exec, flat, &pool, shared);
+            } else {
+                exec.run_batch_into(&prog, &rows, flat);
+            }
             shared
                 .fused_ops
                 .fetch_add((rows.len() * prog.n_ops()) as u64, Ordering::Relaxed);
@@ -1537,6 +1769,82 @@ fn execute_batch(
     tenant.breaker_ok();
 }
 
+/// Originator side of a sliced batch: carve the valid rows into even
+/// contiguous ranges, offer all but the first to the pool (non-blocking —
+/// a full deque just means that range runs inline here), run the first
+/// range, then join. While helpers finish, this thread drains OTHER
+/// slice work off the deques (the predicate never admits a nested whole
+/// batch, so recursion depth is one) and parks briefly when there is
+/// none — two sliced batches in flight make progress on each other's
+/// slices instead of deadlocking parked. A poisoned latch panics into
+/// the originator's supervisor, failing the batch with typed replies.
+/// Finally the per-range planes are stitched, in slot order == sample
+/// order, into `flat` — byte-identical to one `run_batch_into` over all
+/// valid rows.
+fn execute_sliced(
+    job: &Arc<SliceJob>,
+    exec: &mut Executor,
+    flat: &mut Vec<i64>,
+    pool: &PoolRef<'_>,
+    shared: &Shared,
+) {
+    let n = job.rows.len();
+    let k = job.slots.lock().unwrap().len();
+    let (base, rem) = (n / k, n % k);
+    let mut ranges = Vec::with_capacity(k);
+    let mut at = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < rem);
+        ranges.push((at, at + len));
+        at += len;
+    }
+    for (i, &(lo, hi)) in ranges.iter().enumerate().skip(1) {
+        let task = SliceTask { job: Arc::clone(job), idx: i, lo, hi };
+        match pool.pool.try_push(pool.home, Work::Slice(task)) {
+            Ok(()) => {
+                shared.slice_tasks.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(Work::Slice(task)) => {
+                // deque full: run the range here rather than block the
+                // fan-out (a panic unwinds into our own supervisor, and
+                // outstanding helpers complete their slots harmlessly)
+                run_slice_body(&task, exec);
+                task.job.latch.complete(true);
+            }
+            Err(Work::Batch(_)) => unreachable!("pushed a slice"),
+        }
+    }
+    let (lo, hi) = ranges[0];
+    let own = SliceTask { job: Arc::clone(job), idx: 0, lo, hi };
+    run_slice_body(&own, exec);
+    while !job.latch.done() {
+        let other = pool.pool.try_pop_where(pool.home, |w| matches!(w, Work::Slice(_)));
+        match other {
+            Some((_, Work::Slice(t))) => {
+                // a foreign slice panicking must poison ITS latch before
+                // unwinding into OUR supervisor: both batches then fail
+                // with typed replies and neither originator spins on a
+                // latch nobody will complete
+                let r = catch_unwind(AssertUnwindSafe(|| run_slice_body(&t, exec)));
+                t.job.latch.complete(r.is_ok());
+                if let Err(p) = r {
+                    std::panic::resume_unwind(p);
+                }
+            }
+            Some((_, Work::Batch(_))) => unreachable!("predicate admits slices only"),
+            None => job.latch.wait(Duration::from_millis(1)),
+        }
+    }
+    if job.latch.poisoned() {
+        panic!("slice execution panicked (job poisoned)");
+    }
+    flat.clear();
+    let slots = job.slots.lock().unwrap();
+    for s in slots.iter() {
+        flat.extend_from_slice(s.as_deref().expect("completed slice filled its slot"));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1614,6 +1922,122 @@ mod tests {
         // the compiled backend publishes its feature-major scratch footprint
         assert!(stats.scratch_bytes > 0);
         svc.shutdown();
+    }
+
+    #[test]
+    fn large_batches_slice_across_executors_and_stay_bit_exact() {
+        // tiny grain + a wide batching window so one large batch forms:
+        // the originator must fan sample slices across the pool and the
+        // stitched responses must still match the sim oracle exactly
+        let (net, svc) = service(ServiceCfg {
+            workers: 4,
+            shards: 1,
+            max_batch: 512,
+            max_wait: Duration::from_millis(100),
+            queue_depth: 1 << 12,
+            parallel_grain: 8,
+            ..Default::default()
+        });
+        let mut rng = Rng::new(77);
+        let mut pending = Vec::new();
+        let mut want = Vec::new();
+        for _ in 0..300 {
+            let codes: Vec<u32> = (0..4).map(|_| rng.below(16) as u32).collect();
+            want.push(sim::eval(&net, &codes));
+            pending.push(svc.submit(codes).unwrap());
+        }
+        for (rx, w) in pending.into_iter().zip(want) {
+            assert_eq!(rx.recv().unwrap().unwrap().sums, w);
+        }
+        let st = svc.stats();
+        assert_eq!(st.completed, 300);
+        assert!(st.sliced_batches >= 1, "a batch past 2*grain valid rows must slice");
+        assert!(st.slice_tasks >= 1, "slices must fan out to the pool");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn small_batches_keep_the_single_executor_path() {
+        // default grain (2048): nothing here comes near the threshold, so
+        // the sliced counters must prove the old path ran untouched
+        let (net, svc) = service(ServiceCfg { workers: 4, ..Default::default() });
+        let mut rng = Rng::new(78);
+        let mut pending = Vec::new();
+        let mut want = Vec::new();
+        for _ in 0..100 {
+            let codes: Vec<u32> = (0..4).map(|_| rng.below(16) as u32).collect();
+            want.push(sim::eval(&net, &codes));
+            pending.push(svc.submit(codes).unwrap());
+        }
+        for (rx, w) in pending.into_iter().zip(want) {
+            assert_eq!(rx.recv().unwrap().unwrap().sums, w);
+        }
+        let st = svc.stats();
+        assert_eq!(st.sliced_batches, 0, "below-threshold batches must not slice");
+        assert_eq!(st.slice_tasks, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn parallel_grain_zero_disables_slicing() {
+        // grain 0 is the kill switch: even a batch that would slice at any
+        // nonzero grain runs single-executor
+        let (net, svc) = service(ServiceCfg {
+            workers: 4,
+            shards: 1,
+            max_batch: 512,
+            max_wait: Duration::from_millis(50),
+            queue_depth: 1 << 12,
+            parallel_grain: 0,
+            ..Default::default()
+        });
+        let mut rng = Rng::new(79);
+        let mut pending = Vec::new();
+        let mut want = Vec::new();
+        for _ in 0..200 {
+            let codes: Vec<u32> = (0..4).map(|_| rng.below(16) as u32).collect();
+            want.push(sim::eval(&net, &codes));
+            pending.push(svc.submit(codes).unwrap());
+        }
+        for (rx, w) in pending.into_iter().zip(want) {
+            assert_eq!(rx.recv().unwrap().unwrap().sums, w);
+        }
+        let st = svc.stats();
+        assert_eq!(st.sliced_batches, 0);
+        assert_eq!(st.slice_tasks, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn slice_latch_counts_down_and_records_poison() {
+        let latch = SliceLatch::new(2);
+        assert!(!latch.done());
+        latch.complete(true);
+        assert!(!latch.done());
+        latch.complete(false);
+        assert!(latch.done());
+        assert!(latch.poisoned());
+        // wait on a completed latch returns immediately, not after timeout
+        let t0 = Instant::now();
+        latch.wait(Duration::from_secs(5));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn slice_latch_wakes_parked_waiter() {
+        let latch = Arc::new(SliceLatch::new(1));
+        let l2 = Arc::clone(&latch);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            l2.complete(true);
+        });
+        let start = Instant::now();
+        while !latch.done() {
+            latch.wait(Duration::from_millis(1));
+            assert!(start.elapsed() < Duration::from_secs(5), "latch never completed");
+        }
+        assert!(!latch.poisoned());
+        t.join().unwrap();
     }
 
     #[test]

@@ -211,6 +211,68 @@ impl<T> WorkPool<T> {
         true
     }
 
+    /// Non-blocking push: enqueue onto `shard` if it is below capacity,
+    /// returning the item back on a full deque (or a dead consumer pool)
+    /// so the caller can run it inline. The intra-batch slicer's
+    /// opportunistic fan-out depends on this shape for deadlock freedom:
+    /// an executor that is itself mid-batch must never *block* on deque
+    /// space it is responsible for draining.
+    pub fn try_push(&self, shard: usize, item: T) -> Result<(), T> {
+        if self.consumers.load(Ordering::SeqCst) == 0 {
+            return Err(item);
+        }
+        {
+            let mut q = self.queues[shard].lock().unwrap();
+            if q.len() >= self.cap {
+                return Err(item);
+            }
+            q.push_back(item);
+            self.pushed.fetch_add(1, Ordering::Relaxed);
+        }
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            self.bump();
+        }
+        Ok(())
+    }
+
+    /// Non-blocking, filtered pop: remove and return the oldest queued
+    /// item matching `pred`, scanning the home shard first and then (with
+    /// stealing enabled) the victims in round-robin order. The intra-batch
+    /// slicer uses this from an executor that is *joining* its own sliced
+    /// batch: it keeps draining slice work — and only slice work, the
+    /// predicate never admits a whole batch, which would recurse — so a
+    /// pool full of joining originators still makes progress.
+    pub fn try_pop_where<F: FnMut(&T) -> bool>(
+        &self,
+        home: usize,
+        mut pred: F,
+    ) -> Option<(usize, T)> {
+        let n = self.queues.len();
+        let visible = if self.steal { n } else { 1 };
+        for i in 0..visible {
+            let shard = (home + i) % n;
+            let item = {
+                let mut q = self.queues[shard].lock().unwrap();
+                match q.iter().position(&mut pred) {
+                    Some(at) => q.remove(at),
+                    None => None,
+                }
+            };
+            if let Some(item) = item {
+                if shard == home {
+                    self.local.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.stolen.fetch_add(1, Ordering::Relaxed);
+                }
+                if self.full_waiters.load(Ordering::SeqCst) > 0 {
+                    self.bump();
+                }
+                return Some((shard, item));
+            }
+        }
+        None
+    }
+
     /// Pop the next item for a popper whose home shard is `home`; returns
     /// the *source* shard alongside the item (a `(victim, item)` result is
     /// a steal). Blocks while the visible shards are empty; returns `None`
@@ -366,6 +428,64 @@ mod tests {
         assert!(!blocked.join().unwrap(), "push must fail after the last consumer closes");
         // and new pushes fail immediately
         assert!(!pool.push(0, 3));
+    }
+
+    #[test]
+    fn try_push_is_nonblocking_and_reports_full() {
+        let pool: WorkPool<u32> = WorkPool::new(1, 2, true, 1, 1);
+        assert_eq!(pool.try_push(0, 1), Ok(()));
+        assert_eq!(pool.try_push(0, 2), Ok(()));
+        // full deque: the item comes straight back, no blocking
+        assert_eq!(pool.try_push(0, 3), Err(3));
+        assert_eq!(pool.pop(0), Some((0, 1)));
+        assert_eq!(pool.try_push(0, 3), Ok(()));
+        // dead consumer pool: fail fast like push()
+        pool.close_consumer();
+        assert_eq!(pool.try_push(0, 4), Err(4));
+        assert_eq!(pool.stats().pushed, 3);
+    }
+
+    #[test]
+    fn try_pop_where_picks_oldest_match_and_skips_others() {
+        let pool: WorkPool<u32> = WorkPool::new(1, 8, true, 1, 1);
+        for v in [10u32, 3, 12, 5] {
+            assert!(pool.push(0, v));
+        }
+        // oldest odd-ish (< 10) item is 3, from the middle of the deque
+        assert_eq!(pool.try_pop_where(0, |&v| v < 10), Some((0, 3)));
+        assert_eq!(pool.try_pop_where(0, |&v| v < 10), Some((0, 5)));
+        assert_eq!(pool.try_pop_where(0, |&v| v < 10), None);
+        // FIFO order of the unmatched items is preserved
+        assert_eq!(pool.pop(0), Some((0, 10)));
+        assert_eq!(pool.pop(0), Some((0, 12)));
+        pool.close_producer();
+        let st = pool.stats();
+        assert_eq!(st.local + st.stolen, st.pushed);
+    }
+
+    #[test]
+    fn try_pop_where_steals_only_when_enabled() {
+        let isolated: WorkPool<u32> = WorkPool::new(2, 8, false, 1, 2);
+        assert!(isolated.push(0, 7));
+        assert_eq!(isolated.try_pop_where(1, |_| true), None, "steal off must isolate");
+        assert_eq!(isolated.try_pop_where(0, |_| true), Some((0, 7)));
+
+        let stealing: WorkPool<u32> = WorkPool::new(2, 8, true, 1, 2);
+        assert!(stealing.push(0, 9));
+        assert_eq!(stealing.try_pop_where(1, |_| true), Some((0, 9)));
+        assert_eq!(stealing.stats().stolen, 1);
+    }
+
+    #[test]
+    fn try_pop_where_frees_space_for_blocked_pusher() {
+        let pool: Arc<WorkPool<u32>> = Arc::new(WorkPool::new(1, 1, true, 1, 1));
+        assert!(pool.push(0, 1));
+        let p = Arc::clone(&pool);
+        let blocked = std::thread::spawn(move || p.push(0, 2));
+        std::thread::sleep(Duration::from_millis(20)); // let it block on full
+        assert_eq!(pool.try_pop_where(0, |_| true), Some((0, 1)));
+        assert!(blocked.join().unwrap(), "filtered pop must wake a space-waiter");
+        assert_eq!(pool.pop(0), Some((0, 2)));
     }
 
     #[test]

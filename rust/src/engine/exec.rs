@@ -16,12 +16,29 @@
 //! Requests are transposed in at batch entry and the final sums transposed
 //! out at batch exit; everything in between is sequential.
 //!
+//! **Chunked kernels.** Every width-`n` pass runs through the fixed-width
+//! kernels of [`super::kernels`]: runs are processed in
+//! [`super::kernels::CHUNK`]-sample chunks with a scalar tail, and the
+//! per-layer loop is monomorphized over the two accumulator lanes via the
+//! `LaneKernel` trait (plain chunked loops that stable rustc
+//! autovectorizes by default; `std::simd` bodies behind the nightly-only
+//! `simd` cargo feature). Chunking regroups samples, never the per-sample
+//! order of adds, so the output is bit-identical to the one-element
+//! reference loop — which survives verbatim as [`scalar_ref`], the frozen
+//! A/B baseline and test oracle. The same sample independence makes the
+//! planes *sample-sliceable*: the coordinator fans grain-sized sample
+//! ranges of one large batch across its executor pool and stitches the
+//! per-slice planes back in order (`ServiceCfg::parallel_grain`), again
+//! byte-for-byte equal to the single-thread run.
+//!
 //! **Integer requant contract.** The inter-layer flip applies the layer's
-//! [`RequantPlan`] (`encode_sum`: fixed-point multiply/shift or threshold
-//! search), which is bit-exact with the float oracle
-//! `Quantizer::encode_fixed` by construction — so the hot path performs no
-//! floating-point arithmetic for any paper-scale program (code widths
-//! `<=` [`super::program::PLAN_MAX_BITS`]).
+//! [`RequantPlan`] over the whole sum plane
+//! ([`RequantPlan::encode_plane`]: fixed-point multiply/shift or threshold
+//! search, with the plan-kind dispatch hoisted out of the loop), which is
+//! bit-exact with the float oracle `Quantizer::encode_fixed` by
+//! construction — so the hot path performs no floating-point arithmetic
+//! for any paper-scale program (code widths `<=`
+//! [`super::program::PLAN_MAX_BITS`]).
 //!
 //! **Lanes.** Each layer runs in the scratch lane its compile-time range
 //! analysis proved safe: i32 planes and tables where no partial sum can
@@ -41,6 +58,7 @@
 //! current footprint is observable via [`Executor::scratch_bytes`] (the
 //! `kanele serve` stats line reports the max across executors).
 
+use super::kernels::{LaneKernel, CHUNK};
 use super::program::{CompiledProgram, FanOut, Lane, LutOp};
 
 /// Reusable batch executor: owns the feature-major scratch planes.
@@ -59,39 +77,21 @@ pub struct Executor {
     sums64: Vec<i64>,
 }
 
-/// The two accumulator widths the per-layer loop is monomorphized over.
-trait LaneWord: Copy + std::ops::AddAssign {
-    fn from_i64(v: i64) -> Self;
-}
-
-impl LaneWord for i64 {
-    #[inline(always)]
-    fn from_i64(v: i64) -> i64 {
-        v
-    }
-}
-
-impl LaneWord for i32 {
-    #[inline(always)]
-    fn from_i64(v: i64) -> i32 {
-        // lossless: the compile-time range analysis proved the value fits
-        debug_assert!(i32::try_from(v).is_ok(), "narrow-lane value out of range");
-        v as i32
-    }
-}
-
 /// One layer over the whole batch: seed biases, then stream the op slice.
 /// Every op reads `codes[input*n..][..n]` and writes `sums[neuron*n..][..n]`
 /// — two contiguous runs; the table gather stays in cache (tables are
-/// `2^bits` entries).
+/// `2^bits` entries). Both runs go through the chunked [`LaneKernel`]
+/// bodies ([`CHUNK`]-sample chunks, scalar tail).
 ///
 /// `fanouts` is the layer's CSE fanout slice, sorted by op index: an op
-/// with fanout entries gathers its code run **once** and feeds the value
-/// to its own accumulator plus every extra destination — k adds per read
-/// instead of k reads (a within-neuron duplicate simply adds twice). The
-/// 1:1 lowering has no fanouts, so the hot loop's only extra cost is one
-/// cursor compare per op.
-fn run_layer<T: LaneWord>(
+/// with fanout entries gathers each chunk of its code run **once** into a
+/// stack temporary and adds it to its own accumulator plus every extra
+/// destination — k chunk-adds per gather instead of k gathers (a
+/// within-neuron duplicate simply adds twice). Per (sample, neuron) pair
+/// the gathered value lands in the same op order as the scalar loop, so
+/// the integer sums are bit-identical. The 1:1 lowering has no fanouts,
+/// and its hot loop's only extra cost is one cursor compare per op.
+fn run_layer<T: LaneKernel>(
     ops: &[LutOp],
     fanouts: &[FanOut],
     tables: &[T],
@@ -101,37 +101,39 @@ fn run_layer<T: LaneWord>(
     n: usize,
 ) {
     for (q, &bias) in biases.iter().enumerate() {
-        sums[q * n..(q + 1) * n].fill(T::from_i64(bias));
+        T::fill_run(&mut sums[q * n..(q + 1) * n], bias);
     }
     let mut fi = 0usize;
     for (i, op) in ops.iter().enumerate() {
         let off = op.table_off as usize;
-        let mask = op.addr_mask as usize;
-        let table = &tables[off..off + mask + 1];
-        let src_off = op.input as usize * n;
+        let mask = op.addr_mask;
+        let table = &tables[off..off + mask as usize + 1];
+        let src = &codes[op.input as usize * n..][..n];
         let start = fi;
         while fi < fanouts.len() && fanouts[fi].op as usize == i {
             fi += 1;
         }
         if start == fi {
             // hot path: single destination, two contiguous runs
-            let src = &codes[src_off..src_off + n];
-            let dst = &mut sums[op.neuron as usize * n..op.neuron as usize * n + n];
-            for (acc, &code) in dst.iter_mut().zip(src) {
-                *acc += table[code as usize & mask];
-            }
+            let dst = &mut sums[op.neuron as usize * n..][..n];
+            T::gather_add(table, mask, src, dst);
         } else {
-            // CSE fanout: one contiguous read of the code run, each
-            // gathered value feeding the op's own accumulator plus the
-            // extra destinations
+            // CSE fanout: gather each chunk once, then re-add the
+            // temporary into the op's own run and every extra destination
             let extra = &fanouts[start..fi];
             let own = op.neuron as usize * n;
-            for (s, &code) in codes[src_off..src_off + n].iter().enumerate() {
-                let v = table[code as usize & mask];
-                sums[own + s] += v;
+            let mut g = [T::ZERO; CHUNK];
+            let mut at = 0usize;
+            while at < n {
+                let len = CHUNK.min(n - at);
+                let g = &mut g[..len];
+                T::gather(table, mask, &src[at..at + len], g);
+                T::add_run(&mut sums[own + at..own + at + len], g);
                 for f in extra {
-                    sums[f.neuron as usize * n + s] += v;
+                    let base = f.neuron as usize * n + at;
+                    T::add_run(&mut sums[base..base + len], g);
                 }
+                at += len;
             }
         }
     }
@@ -259,20 +261,13 @@ impl Executor {
             }
             // requant boundary: integer flip of the sum plane back into the
             // code plane — same feature-major layout on both sides, so this
-            // is one contiguous pass (and float-free for integer plans)
+            // is one contiguous plane pass (and float-free for integer
+            // plans), with the plan-kind dispatch hoisted out of the loop
             if let Some(rq) = &plan.requant {
                 let m = n * plan.d_out;
                 match plan.lane {
-                    Lane::I32 => {
-                        for (code, &sum) in self.codes[..m].iter_mut().zip(&self.sums32[..m]) {
-                            *code = rq.encode_sum(sum as i64);
-                        }
-                    }
-                    Lane::I64 => {
-                        for (code, &sum) in self.codes[..m].iter_mut().zip(&self.sums64[..m]) {
-                            *code = rq.encode_sum(sum);
-                        }
-                    }
+                    Lane::I32 => rq.encode_plane(&self.sums32[..m], &mut self.codes[..m]),
+                    Lane::I64 => rq.encode_plane(&self.sums64[..m], &mut self.codes[..m]),
                 }
             }
         }
@@ -300,8 +295,10 @@ impl Executor {
     }
 
     /// Per-sample convenience over [`Executor::run_batch_into`]: returns
-    /// one sum vector per sample (allocates the nested vectors; the serving
-    /// path threads a reused flat buffer instead).
+    /// one sum vector per sample. This allocates a `Vec` per sample —
+    /// anything that runs more than once should call
+    /// [`Executor::run_batch_into`] (or [`run_batch_flat`]) and slice the
+    /// flat plane instead.
     pub fn run_batch<S: AsRef<[u32]>>(
         &mut self,
         prog: &CompiledProgram,
@@ -323,6 +320,213 @@ impl Executor {
 /// plus a reused flat output buffer instead).
 pub fn run_batch<S: AsRef<[u32]>>(prog: &CompiledProgram, batch: &[S]) -> Vec<Vec<i64>> {
     Executor::with_capacity(prog, batch.len()).run_batch(prog, batch)
+}
+
+/// One-shot flat-plane variant of [`run_batch`]: fills the caller-owned
+/// sample-major plane (`out[s * d_out + q]`) with no per-sample `Vec`
+/// allocations — the shape examples and benches should use when they
+/// compare whole batches.
+pub fn run_batch_flat<S: AsRef<[u32]>>(prog: &CompiledProgram, batch: &[S], out: &mut Vec<i64>) {
+    Executor::with_capacity(prog, batch.len()).run_batch_into(prog, batch, out);
+}
+
+/// The PR-3 one-element-at-a-time executor loops, frozen verbatim.
+///
+/// Two consumers keep this alive: `benches/engine.rs` A/Bs the chunked
+/// kernels against it (the "frozen scalar kernels" baseline the speedup
+/// gate is defined against), and the tests in this module use it as the
+/// bit-exactness oracle alongside [`crate::sim`]. It is not part of the
+/// public API surface and carries no optimizations on purpose — do not
+/// "improve" it, its value is that it never changes.
+#[doc(hidden)]
+pub mod scalar_ref {
+    use super::super::program::{CompiledProgram, FanOut, Lane, LutOp};
+
+    trait LaneWord: Copy + std::ops::AddAssign {
+        fn from_i64(v: i64) -> Self;
+    }
+
+    impl LaneWord for i64 {
+        #[inline(always)]
+        fn from_i64(v: i64) -> i64 {
+            v
+        }
+    }
+
+    impl LaneWord for i32 {
+        #[inline(always)]
+        fn from_i64(v: i64) -> i32 {
+            debug_assert!(i32::try_from(v).is_ok(), "narrow-lane value out of range");
+            v as i32
+        }
+    }
+
+    fn run_layer<T: LaneWord>(
+        ops: &[LutOp],
+        fanouts: &[FanOut],
+        tables: &[T],
+        biases: &[i64],
+        codes: &[u32],
+        sums: &mut [T],
+        n: usize,
+    ) {
+        for (q, &bias) in biases.iter().enumerate() {
+            sums[q * n..(q + 1) * n].fill(T::from_i64(bias));
+        }
+        let mut fi = 0usize;
+        for (i, op) in ops.iter().enumerate() {
+            let off = op.table_off as usize;
+            let mask = op.addr_mask as usize;
+            let table = &tables[off..off + mask + 1];
+            let src_off = op.input as usize * n;
+            let start = fi;
+            while fi < fanouts.len() && fanouts[fi].op as usize == i {
+                fi += 1;
+            }
+            if start == fi {
+                let src = &codes[src_off..src_off + n];
+                let dst = &mut sums[op.neuron as usize * n..op.neuron as usize * n + n];
+                for (acc, &code) in dst.iter_mut().zip(src) {
+                    *acc += table[code as usize & mask];
+                }
+            } else {
+                let extra = &fanouts[start..fi];
+                let own = op.neuron as usize * n;
+                for (s, &code) in codes[src_off..src_off + n].iter().enumerate() {
+                    let v = table[code as usize & mask];
+                    sums[own + s] += v;
+                    for f in extra {
+                        sums[f.neuron as usize * n + s] += v;
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(fi, fanouts.len(), "fanout entries must map onto layer ops in order");
+    }
+
+    /// Frozen scalar twin of [`super::Executor`]: same scratch layout and
+    /// growth policy, per-element loops and per-element `encode_sum`
+    /// requant.
+    #[derive(Default)]
+    pub struct ScalarExecutor {
+        codes: Vec<u32>,
+        sums32: Vec<i32>,
+        sums64: Vec<i64>,
+    }
+
+    impl ScalarExecutor {
+        pub fn new() -> ScalarExecutor {
+            ScalarExecutor::default()
+        }
+
+        /// Frozen twin of [`super::Executor::run_batch_into`]; identical
+        /// contract, per-element inner loops.
+        pub fn run_batch_into<S: AsRef<[u32]>>(
+            &mut self,
+            prog: &CompiledProgram,
+            batch: &[S],
+            out: &mut Vec<i64>,
+        ) {
+            out.clear();
+            let n = batch.len();
+            let d_out = prog.d_out();
+            if n == 0 || d_out == 0 {
+                return;
+            }
+            let words = n * prog.max_width();
+            if self.codes.len() < words {
+                self.codes.resize(words, 0);
+            }
+            if prog.uses_i32() && self.sums32.len() < words {
+                self.sums32.resize(words, 0);
+            }
+            if prog.uses_i64() && self.sums64.len() < words {
+                self.sums64.resize(words, 0);
+            }
+
+            let d0 = prog.d_in();
+            match prog.input_map() {
+                None => {
+                    for (s, row) in batch.iter().enumerate() {
+                        let row = row.as_ref();
+                        assert_eq!(row.len(), d0, "batch row width != program d_in");
+                        for (f, &code) in row.iter().enumerate() {
+                            self.codes[f * n + s] = code;
+                        }
+                    }
+                }
+                Some(map) => {
+                    for (s, row) in batch.iter().enumerate() {
+                        let row = row.as_ref();
+                        assert_eq!(row.len(), d0, "batch row width != program d_in");
+                        for (i, &f) in map.iter().enumerate() {
+                            self.codes[i * n + s] = row[f as usize];
+                        }
+                    }
+                }
+            }
+
+            let ops = prog.ops();
+            let fanouts = prog.fanouts();
+            for plan in prog.layers() {
+                let biases = &prog.biases()[plan.bias_off..plan.bias_off + plan.d_out];
+                let layer_ops = &ops[plan.ops.clone()];
+                let layer_fan = &fanouts[plan.fanout.clone()];
+                match plan.lane {
+                    Lane::I32 => run_layer(
+                        layer_ops,
+                        layer_fan,
+                        prog.tables32(),
+                        biases,
+                        &self.codes,
+                        &mut self.sums32,
+                        n,
+                    ),
+                    Lane::I64 => run_layer(
+                        layer_ops,
+                        layer_fan,
+                        prog.tables64(),
+                        biases,
+                        &self.codes,
+                        &mut self.sums64,
+                        n,
+                    ),
+                }
+                if let Some(rq) = &plan.requant {
+                    let m = n * plan.d_out;
+                    match plan.lane {
+                        Lane::I32 => {
+                            for (code, &sum) in self.codes[..m].iter_mut().zip(&self.sums32[..m]) {
+                                *code = rq.encode_sum(sum as i64);
+                            }
+                        }
+                        Lane::I64 => {
+                            for (code, &sum) in self.codes[..m].iter_mut().zip(&self.sums64[..m]) {
+                                *code = rq.encode_sum(sum);
+                            }
+                        }
+                    }
+                }
+            }
+
+            out.reserve(n * d_out);
+            let last = prog.layers().last().expect("d_out > 0 implies layers");
+            match last.lane {
+                Lane::I32 => {
+                    let sums = &self.sums32[..n * d_out];
+                    for s in 0..n {
+                        out.extend((0..d_out).map(|q| sums[q * n + s] as i64));
+                    }
+                }
+                Lane::I64 => {
+                    let sums = &self.sums64[..n * d_out];
+                    for s in 0..n {
+                        out.extend((0..d_out).map(|q| sums[q * n + s]));
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -362,6 +566,36 @@ mod tests {
             let want_flat: Vec<i64> = want.iter().flatten().copied().collect();
             assert_eq!(flat, want_flat);
             assert_eq!(ex.run_batch(&prog, &batch), want);
+        }
+    }
+
+    #[test]
+    fn chunked_kernels_match_frozen_scalar_and_sim_on_tail_batches() {
+        // the tentpole gate, in miniature: chunked kernels == frozen PR-3
+        // scalar loops == sim, for batch sizes straddling every tail shape
+        // (1, CHUNK-1, CHUNK, CHUNK+1, ...), both opt levels
+        use crate::engine::OptLevel;
+        let cases = [
+            (net_for(&[4, 3, 2], &[4, 5, 6], 901), 4u32),
+            (net_for(&[6, 5, 4, 2], &[3, 4, 4, 6], 902), 3u32),
+        ];
+        let mut rng = Rng::new(77);
+        for (net, in_bits) in &cases {
+            for level in [OptLevel::None, OptLevel::Full] {
+                let prog = CompiledProgram::compile_opt(net, level);
+                let mut ex = Executor::new();
+                let mut sc = scalar_ref::ScalarExecutor::new();
+                let (mut flat, mut want) = (Vec::new(), Vec::new());
+                for n in [1usize, CHUNK - 1, CHUNK, CHUNK + 1, 2 * CHUNK + 3, 64] {
+                    let batch = random_batch(&mut rng, n, prog.d_in(), *in_bits);
+                    ex.run_batch_into(&prog, &batch, &mut flat);
+                    sc.run_batch_into(&prog, &batch, &mut want);
+                    assert_eq!(flat, want, "kernels != scalar_ref at n={n} level={level:?}");
+                    let sim_flat: Vec<i64> =
+                        sim::eval_batch(net, &batch).iter().flatten().copied().collect();
+                    assert_eq!(flat, sim_flat, "kernels != sim at n={n} level={level:?}");
+                }
+            }
         }
     }
 
@@ -487,6 +721,26 @@ mod tests {
     }
 
     #[test]
+    fn mixed_lane_tail_batches_match_frozen_scalar() {
+        // both lanes and the wide->requant flip, at every tail shape
+        let net = mixed_lane_net();
+        let prog = CompiledProgram::compile(&net);
+        let mut ex = Executor::new();
+        let mut sc = scalar_ref::ScalarExecutor::new();
+        let (mut flat, mut want) = (Vec::new(), Vec::new());
+        for n in [1usize, CHUNK - 1, CHUNK + 1, 2 * CHUNK + 1] {
+            let batch: Vec<Vec<u32>> =
+                (0..n as u32).map(|i| vec![i % 8, (i * 5 + 3) % 8]).collect();
+            ex.run_batch_into(&prog, &batch, &mut flat);
+            sc.run_batch_into(&prog, &batch, &mut want);
+            assert_eq!(flat, want, "mixed-lane kernels != scalar_ref at n={n}");
+            let sim_flat: Vec<i64> =
+                sim::eval_batch(&net, &batch).iter().flatten().copied().collect();
+            assert_eq!(flat, sim_flat, "mixed-lane kernels != sim at n={n}");
+        }
+    }
+
+    #[test]
     fn wide_lane_output_layer_unpacks_i64() {
         // wide lane on the LAST layer: the unpack transpose must read the
         // i64 plane (big raw sums survive to the output untouched)
@@ -565,12 +819,24 @@ mod tests {
         assert!(p_full.input_map().is_some(), "dead input 1 must be compacted");
         let mut ex = Executor::new();
         let mut rng = Rng::new(4);
-        for &nb in &[1usize, 9, 64, 2] {
+        for &nb in &[1usize, 9, CHUNK + 1, 64, 2] {
             let batch = random_batch(&mut rng, nb, 3, 3);
             let want = sim::eval_batch(&net, &batch);
             assert_eq!(ex.run_batch(&p_none, &batch), want);
             assert_eq!(ex.run_batch(&p_full, &batch), want);
         }
+    }
+
+    #[test]
+    fn run_batch_flat_matches_nested_convenience() {
+        let net = net_for(&[4, 3, 2], &[4, 5, 6], 42);
+        let prog = CompiledProgram::compile(&net);
+        let mut rng = Rng::new(6);
+        let batch = random_batch(&mut rng, 33, 4, 4);
+        let mut flat = Vec::new();
+        run_batch_flat(&prog, &batch, &mut flat);
+        let nested: Vec<i64> = run_batch(&prog, &batch).into_iter().flatten().collect();
+        assert_eq!(flat, nested);
     }
 
     #[test]

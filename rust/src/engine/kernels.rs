@@ -1,0 +1,237 @@
+//! Fixed-width chunked kernels for the engine's width-`n` passes.
+//!
+//! Every hot loop in [`super::exec`] is an elementwise pass over
+//! feature-major runs of `n` words: the table gather
+//! (`codes -> table[code & mask]`), the k-way [`super::program::FanOut`]
+//! accumulate, and the integer [`super::program::RequantPlan`] flip. This
+//! module factors those passes into explicit [`CHUNK`]-lane kernels with a
+//! scalar tail, monomorphized over the two accumulator lanes
+//! ([`super::program::Lane`]) through the [`LaneKernel`] trait:
+//!
+//! * **Default build (stable rustc):** the chunk bodies gather into a
+//!   `[T; CHUNK]` stack temporary and then add it into the destination
+//!   run as a separate pass. Splitting the fused load->add loop this way
+//!   breaks the per-element load-use dependence, hoists the table
+//!   bounds checks out of the chunk, and leaves the add/store half as a
+//!   straight-line fixed-trip loop that stable rustc reliably
+//!   autovectorizes.
+//! * **`--features simd` (nightly `portable_simd`):** the same trait
+//!   methods are implemented with `std::simd` — hardware gathers where
+//!   the target has them, explicit vector adds everywhere. Same chunk
+//!   width, same scalar tail, same results.
+//!
+//! Both implementations are bit-exact with the one-element-at-a-time
+//! reference loop by construction: chunking only regroups *which samples*
+//! are processed together, never the per-sample order of adds (integer
+//! adds are exact, and each destination element receives exactly the same
+//! operands in the same op order). The unit tests below pin every kernel
+//! against the reference on every tail shape (`n = 0, 1, CHUNK-1, CHUNK,
+//! CHUNK+1, ...`) in both lanes; `exec::tests` pins the full executor
+//! against the frozen scalar loops and against [`crate::sim`].
+
+use std::ops::AddAssign;
+
+/// Samples processed per chunk. 16 words is 512 bits in the i32 lane (one
+/// AVX-512 / two AVX2 / four NEON registers) and gives LLVM enough
+/// straight-line work to unroll profitably in the i64 lane; the tail
+/// (`n % CHUNK` samples) always runs the scalar reference loop.
+pub const CHUNK: usize = 16;
+
+/// The two accumulator widths the per-layer loops are monomorphized over,
+/// as chunked kernels (see the module docs for the two implementations).
+///
+/// Contract shared by all methods: `table.len() == mask as usize + 1`
+/// (tables are power-of-two sized, masking reproduces the RTL address
+/// truncation), and paired run arguments have equal lengths.
+pub(super) trait LaneKernel: Copy + PartialEq + AddAssign {
+    const ZERO: Self;
+
+    /// Narrowing conversion from the i64 build-side value. Lossless by the
+    /// compile-time range analysis ([`super::program::Lane`]).
+    fn from_i64(v: i64) -> Self;
+
+    /// `dst[..] = v` (bias seeding of a neuron run).
+    fn fill_run(dst: &mut [Self], v: i64);
+
+    /// `dst[i] = table[codes[i] & mask]` (pure gather; the fan-out path
+    /// gathers once per chunk and re-adds the temporary k times).
+    fn gather(table: &[Self], mask: u32, codes: &[u32], dst: &mut [Self]);
+
+    /// `dst[i] += table[codes[i] & mask]` (the 1:1 hot path).
+    fn gather_add(table: &[Self], mask: u32, codes: &[u32], dst: &mut [Self]);
+
+    /// `dst[i] += src[i]` (fan-out re-accumulation of a gathered chunk).
+    fn add_run(dst: &mut [Self], src: &[Self]);
+}
+
+macro_rules! lane_kernel {
+    ($t:ty) => {
+        impl LaneKernel for $t {
+            const ZERO: $t = 0;
+
+            #[inline(always)]
+            // the cast is the identity in the i64 instantiation
+            #[allow(clippy::unnecessary_cast)]
+            fn from_i64(v: i64) -> $t {
+                debug_assert!(<$t>::try_from(v).is_ok(), "narrow-lane value out of range");
+                v as $t
+            }
+
+            #[inline]
+            fn fill_run(dst: &mut [Self], v: i64) {
+                dst.fill(Self::from_i64(v));
+            }
+
+            #[inline]
+            fn gather(table: &[Self], mask: u32, codes: &[u32], dst: &mut [Self]) {
+                debug_assert_eq!(codes.len(), dst.len());
+                debug_assert_eq!(table.len(), mask as usize + 1);
+                #[cfg(feature = "simd")]
+                {
+                    use std::simd::prelude::*;
+                    let mut dc = dst.chunks_exact_mut(CHUNK);
+                    let mut cc = codes.chunks_exact(CHUNK);
+                    for (d, c) in (&mut dc).zip(&mut cc) {
+                        let idx =
+                            (Simd::<u32, CHUNK>::from_slice(c) & Simd::splat(mask)).cast::<usize>();
+                        Simd::<$t, CHUNK>::gather_or_default(table, idx).copy_to_slice(d);
+                    }
+                    for (d, &c) in dc.into_remainder().iter_mut().zip(cc.remainder()) {
+                        *d = table[(c & mask) as usize];
+                    }
+                }
+                #[cfg(not(feature = "simd"))]
+                for (d, &c) in dst.iter_mut().zip(codes) {
+                    *d = table[(c & mask) as usize];
+                }
+            }
+
+            #[inline]
+            fn gather_add(table: &[Self], mask: u32, codes: &[u32], dst: &mut [Self]) {
+                debug_assert_eq!(codes.len(), dst.len());
+                debug_assert_eq!(table.len(), mask as usize + 1);
+                #[cfg(feature = "simd")]
+                {
+                    use std::simd::prelude::*;
+                    let mut dc = dst.chunks_exact_mut(CHUNK);
+                    let mut cc = codes.chunks_exact(CHUNK);
+                    for (d, c) in (&mut dc).zip(&mut cc) {
+                        let idx =
+                            (Simd::<u32, CHUNK>::from_slice(c) & Simd::splat(mask)).cast::<usize>();
+                        let v = Simd::<$t, CHUNK>::gather_or_default(table, idx)
+                            + Simd::from_slice(d);
+                        v.copy_to_slice(d);
+                    }
+                    for (d, &c) in dc.into_remainder().iter_mut().zip(cc.remainder()) {
+                        *d += table[(c & mask) as usize];
+                    }
+                }
+                #[cfg(not(feature = "simd"))]
+                {
+                    let mut dc = dst.chunks_exact_mut(CHUNK);
+                    let mut cc = codes.chunks_exact(CHUNK);
+                    for (d, c) in (&mut dc).zip(&mut cc) {
+                        // gather into a stack temporary first: the add/store
+                        // half below is then a dependence-free fixed-trip
+                        // loop LLVM turns into vector adds
+                        let mut g = [Self::ZERO; CHUNK];
+                        for (g, &c) in g.iter_mut().zip(c) {
+                            *g = table[(c & mask) as usize];
+                        }
+                        for (d, &g) in d.iter_mut().zip(&g) {
+                            *d += g;
+                        }
+                    }
+                    for (d, &c) in dc.into_remainder().iter_mut().zip(cc.remainder()) {
+                        *d += table[(c & mask) as usize];
+                    }
+                }
+            }
+
+            #[inline]
+            fn add_run(dst: &mut [Self], src: &[Self]) {
+                debug_assert_eq!(dst.len(), src.len());
+                #[cfg(feature = "simd")]
+                {
+                    use std::simd::prelude::*;
+                    let mut dc = dst.chunks_exact_mut(CHUNK);
+                    let mut sc = src.chunks_exact(CHUNK);
+                    for (d, s) in (&mut dc).zip(&mut sc) {
+                        let v = Simd::<$t, CHUNK>::from_slice(d) + Simd::from_slice(s);
+                        v.copy_to_slice(d);
+                    }
+                    for (d, &s) in dc.into_remainder().iter_mut().zip(sc.remainder()) {
+                        *d += s;
+                    }
+                }
+                // an equal-length elementwise add is the one shape stable
+                // rustc already vectorizes unaided
+                #[cfg(not(feature = "simd"))]
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d += s;
+                }
+            }
+        }
+    };
+}
+
+lane_kernel!(i32);
+lane_kernel!(i64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Every kernel against the one-element reference loop, on every tail
+    /// shape: empty, single sample, one-short-of-a-chunk, exact chunks,
+    /// chunk-plus-one, and long runs with tails.
+    fn check_lane<T: LaneKernel + std::fmt::Debug>(seed: u64, spread: i64) {
+        let mut rng = Rng::new(seed);
+        let bits = 6u32;
+        let mask = (1u32 << bits) - 1;
+        let mut table = Vec::new();
+        for i in 0..=mask as i64 {
+            table.push(T::from_i64((i * 37 - 11) % spread));
+        }
+        for n in [0usize, 1, CHUNK - 1, CHUNK, CHUNK + 1, 3 * CHUNK + 5, 257] {
+            let codes: Vec<u32> = (0..n).map(|_| rng.below(1 << bits) as u32).collect();
+
+            let mut got = vec![T::ZERO; n];
+            T::gather(&table, mask, &codes, &mut got);
+            let want: Vec<T> = codes.iter().map(|&c| table[(c & mask) as usize]).collect();
+            assert_eq!(got, want, "gather n={n}");
+
+            let mut acc: Vec<T> = (0..n as i64).map(|i| T::from_i64(i - 7)).collect();
+            let mut want_acc = acc.clone();
+            T::gather_add(&table, mask, &codes, &mut acc);
+            for (w, &c) in want_acc.iter_mut().zip(&codes) {
+                *w += table[(c & mask) as usize];
+            }
+            assert_eq!(acc, want_acc, "gather_add n={n}");
+
+            let src: Vec<T> = (0..n as i64).map(|i| T::from_i64(i * 3 - 5)).collect();
+            let mut dst = acc.clone();
+            let mut want_dst = dst.clone();
+            T::add_run(&mut dst, &src);
+            for (d, &s) in want_dst.iter_mut().zip(&src) {
+                *d += s;
+            }
+            assert_eq!(dst, want_dst, "add_run n={n}");
+
+            let mut filled = vec![T::ZERO; n];
+            T::fill_run(&mut filled, 42);
+            assert!(filled.iter().all(|&v| v == T::from_i64(42)), "fill_run n={n}");
+        }
+    }
+
+    #[test]
+    fn i32_kernels_match_reference_on_all_tail_shapes() {
+        check_lane::<i32>(1, 1 << 20);
+    }
+
+    #[test]
+    fn i64_kernels_match_reference_on_all_tail_shapes() {
+        check_lane::<i64>(2, 1 << 40);
+    }
+}

@@ -52,6 +52,17 @@
 //!   accumulators ([`program::FanOut`]). Bit-exact with
 //!   [`crate::sim::eval`] (in-lane accumulation is order-exact by the
 //!   range analysis, requant plans are proven equal to the float path).
+//! * `kernels` — the width-`n` passes themselves run through
+//!   fixed-width chunked kernels ([`CHUNK`]-sample chunks + scalar tail),
+//!   monomorphized over the two lanes: plain chunked loops stable rustc
+//!   autovectorizes by default, `std::simd` bodies behind the
+//!   nightly-only `simd` cargo feature — same trait, same results. The
+//!   pre-kernel one-element loops are frozen as `exec::scalar_ref`, the
+//!   bench A/B baseline and test oracle. Because every sample's chain is
+//!   independent, planes are also *sample-sliceable*: the coordinator can
+//!   fan grain-sized sample ranges of one large batch across its executor
+//!   pool and stitch the slices back byte-for-byte
+//!   (`ServiceCfg::parallel_grain`).
 //! * [`ProgramCell`] ([`swap`]) — hot-swap support: recompile (at the
 //!   cell's [`OptLevel`]) on netlist change + atomic program publication,
 //!   preserving the netlist cell's batch-consistent snapshot semantics.
@@ -61,11 +72,13 @@
 //! is what the [`crate::coordinator`] workers run in production.
 
 pub mod exec;
+mod kernels;
 pub mod optim;
 pub mod program;
 pub mod swap;
 
-pub use exec::{run_batch, Executor};
+pub use exec::{run_batch, run_batch_flat, Executor};
+pub use kernels::CHUNK;
 pub use optim::{OptLevel, OptReport};
 pub use program::{
     intern_tables, CompiledProgram, FanOut, InternStats, Lane, LayerPlan, LutOp, RequantPlan,
@@ -202,6 +215,17 @@ mod tests {
             if compiled != interpreted {
                 return Err(format!(
                     "engine != eval_batch for dims {dims:?} bits {bits:?} seed {seed}"
+                ));
+            }
+            // chunked kernels == frozen one-element scalar loops, at the
+            // same random batch sizes (n in 1..=24 straddles the CHUNK=16
+            // tail shapes, including n=1 and n=CHUNK-1)
+            let mut scalar = Vec::new();
+            exec::scalar_ref::ScalarExecutor::new().run_batch_into(&prog, &inputs, &mut scalar);
+            let flat: Vec<i64> = compiled.iter().flatten().copied().collect();
+            if scalar != flat {
+                return Err(format!(
+                    "kernels != scalar_ref for dims {dims:?} bits {bits:?} seed {seed} n {n}"
                 ));
             }
             // the default (optimized) lowering and the 1:1 baseline are one

@@ -574,6 +574,49 @@ impl RequantPlan {
             PlanKind::Float => self.q.encode_fixed(sum, self.frac_bits),
         }
     }
+
+    /// Requantize a whole feature-major sum plane:
+    /// `out[i] = encode_sum(sums[i])` element for element, with the
+    /// plan-kind dispatch hoisted out of the loop. The linear form keeps
+    /// its scalar i128 multiply/shift (a [`LINEAR_SHIFT`]-bit fixed-point
+    /// product does not fit a SIMD lane) but runs it in
+    /// [`super::kernels::CHUNK`]-element chunks so the clamp/shift chain
+    /// unrolls and its bounds checks hoist; the threshold and float forms
+    /// are inherently per-element (binary search / oracle call).
+    pub fn encode_plane<T: Copy + Into<i64>>(&self, sums: &[T], out: &mut [u32]) {
+        assert_eq!(sums.len(), out.len(), "requant plane length mismatch");
+        match &self.kind {
+            PlanKind::Linear { mul, add, rail_lo, rail_hi, max_code } => {
+                let (mul, add) = (*mul, *add);
+                let (lo, hi, max) = (*rail_lo, *rail_hi, *max_code as i128);
+                let enc = |s: T| {
+                    let s = s.into().clamp(lo, hi) as i128;
+                    ((s * mul + add) >> LINEAR_SHIFT).clamp(0, max) as u32
+                };
+                let mut oc = out.chunks_exact_mut(super::kernels::CHUNK);
+                let mut sc = sums.chunks_exact(super::kernels::CHUNK);
+                for (o, s) in (&mut oc).zip(&mut sc) {
+                    for (o, &s) in o.iter_mut().zip(s) {
+                        *o = enc(s);
+                    }
+                }
+                for (o, &s) in oc.into_remainder().iter_mut().zip(sc.remainder()) {
+                    *o = enc(s);
+                }
+            }
+            PlanKind::Thresholds(t) => {
+                for (o, &s) in out.iter_mut().zip(sums) {
+                    let s: i64 = s.into();
+                    *o = t.partition_point(|&b| b <= s) as u32;
+                }
+            }
+            PlanKind::Float => {
+                for (o, &s) in out.iter_mut().zip(sums) {
+                    *o = self.q.encode_fixed(s.into(), self.frac_bits);
+                }
+            }
+        }
+    }
 }
 
 /// Exact code boundaries: `out[c-1]` is the smallest i64 sum that the float
@@ -972,6 +1015,38 @@ mod tests {
         // 1-bit quantizer, the degenerate two-level case
         let q1 = Quantizer::new(1, -8.0, 8.0);
         assert_plan_matches(q1, 4, &sums);
+    }
+
+    #[test]
+    fn encode_plane_matches_encode_sum_for_every_plan_kind() {
+        // the plane pass is the per-element encode hoisted over a chunked
+        // loop: pin it element-for-element against encode_sum for all three
+        // lowerings, both input lanes, and tail lengths around CHUNK
+        use super::super::kernels::CHUNK;
+        let q = Quantizer::new(5, -8.0, 8.0);
+        let forced_thresholds = RequantPlan {
+            q,
+            frac_bits: 4,
+            kind: PlanKind::Thresholds(boundaries(&q, 4).unwrap()),
+        };
+        let plans = [
+            RequantPlan::build(q, 4), // paper-scale build (linear fast path)
+            forced_thresholds,        // partition_point lowering
+            RequantPlan::build(Quantizer::new(24, -4.0, 4.0), 12), // float oracle
+        ];
+        for plan in &plans {
+            for n in [0usize, 1, CHUNK - 1, CHUNK, CHUNK + 1, 3 * CHUNK + 5] {
+                let sums64: Vec<i64> = (0..n as i64).map(|i| i * 37 - 600).collect();
+                let mut out = vec![u32::MAX; n];
+                plan.encode_plane(&sums64, &mut out);
+                let want: Vec<u32> = sums64.iter().map(|&s| plan.encode_sum(s)).collect();
+                assert_eq!(out, want, "i64 plane, plan {} n={n}", plan.kind_name());
+
+                let sums32: Vec<i32> = sums64.iter().map(|&s| s as i32).collect();
+                plan.encode_plane(&sums32, &mut out);
+                assert_eq!(out, want, "i32 plane, plan {} n={n}", plan.kind_name());
+            }
+        }
     }
 
     #[test]

@@ -1,3 +1,8 @@
+// The `simd` cargo feature swaps the engine's chunked lane kernels from
+// stable-autovectorized loops to std::simd bodies; portable_simd is a
+// nightly-only std feature, so the gate lives here (see engine::kernels).
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 //! KANELE: Kolmogorov-Arnold Networks for Efficient LUT-based Evaluation.
 //!
 //! Full-system reproduction of the FPGA '26 paper. The library is organised

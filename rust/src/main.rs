@@ -39,7 +39,7 @@ COMMANDS:
   eval <name> [--n-add N]
       run the netlist on the exported test set; print the task metric.
   serve <name> [--requests N] [--workers W] [--shards S] [--steal on|off]
-        [--batch B] [--wait-us U] [--queue-depth Q]
+        [--batch B] [--wait-us U] [--queue-depth Q] [--parallel-batch G]
         [--backend compiled|interpreted] [--opt full|none]
         [--listen ADDR] [--duration-s N] [--auth-token TOK]
         [--model NAME=CKPT ...] [--canary T=CKPT:PCT]
@@ -54,7 +54,12 @@ COMMANDS:
       shards unless --steal off). Default backend: the compiled batch-major
       engine lowered through the full optimizer pipeline (--opt none keeps
       the 1:1 lowering for A/B); `interpreted` selects the netlist
-      simulator. Without --listen this self-drives a --requests benchmark;
+      simulator. --parallel-batch G arms intra-batch data-parallelism: a
+      compiled batch with at least 2*G valid samples is split into up to W
+      grain-G sample slices fanned across the executor pool and stitched
+      back bit-exactly (default 2048; 0 disables; small batches always
+      keep the single-executor path). Without --listen this self-drives a
+      --requests benchmark;
       with --listen ADDR it runs the framed TCP front end (port 0 picks a
       free port; prints `listening on <addr>`) until a client sends the
       `shutdown` op or --duration-s elapses. Falls back to a synthetic
@@ -385,13 +390,16 @@ fn run(args: &[String]) -> Result<()> {
             if !ok {
                 bail!("cycle-accurate simulation mismatched");
             }
-            // 4. compiled engine (the serving backend) vs oracle
+            // 4. compiled engine (the serving backend) vs oracle — through
+            // the flat plane, the allocation-free path serving actually uses
             let prog = engine::compile(&net);
-            let compiled = engine::run_batch(&prog, &tv.input_codes);
-            let bad = compiled
-                .iter()
+            let mut flat = Vec::new();
+            engine::run_batch_flat(&prog, &tv.input_codes, &mut flat);
+            let d_out = prog.d_out();
+            let bad = flat
+                .chunks(d_out)
                 .zip(&tv.output_sums)
-                .filter(|(got, want)| got != want)
+                .filter(|(got, want)| *got != want.as_slice())
                 .count();
             println!(
                 "compiled engine   : {}/{} vectors bit-exact ({} ops, {} table words)",
@@ -430,6 +438,7 @@ fn run(args: &[String]) -> Result<()> {
             let batch = flags.get_usize("--batch", 64)?;
             let wait_us = flags.get_usize("--wait-us", 100)?;
             let queue_depth = flags.get_usize("--queue-depth", 1 << 14)?;
+            let parallel_grain = flags.get_usize("--parallel-batch", 2048)?;
             let backend = match flags.get("--backend") {
                 Some(s) => Backend::parse(s)
                     .with_context(|| format!("bad --backend {s:?} (compiled|interpreted)"))?,
@@ -481,6 +490,7 @@ fn run(args: &[String]) -> Result<()> {
                 backend,
                 opt,
                 faults,
+                parallel_grain,
                 ..Default::default()
             };
             let model_specs = flags.get_all("--model");
