@@ -8,9 +8,14 @@
 //! against the 1:1 `OptLevel::None` lowering on a pruned synthetic net,
 //! (section 5) the CHUNK-wide lane kernels against the frozen PR-3 scalar
 //! reference (bit-exact gate on tail shapes first, `gate_1_3x` at batch
-//! 64), and (section 6) intra-batch data-parallelism: one large batch
+//! 64), (section 6) intra-batch data-parallelism: one large batch
 //! sliced across 4 executors vs 1 (`gate_2x`), with the sub-threshold
-//! unsliced path proven on the same config.
+//! unsliced path proven on the same config, and (section 7) error-budgeted
+//! lossy compilation: `OptLevel::Lossy(16)` against `Full` on a nearified
+//! jet twin — argmax agreement >= 0.99 and measured-delta-within-bound are
+//! hard gates asserted BEFORE timing, and the nearified pruned net must
+//! give up >= 25% arena bytes vs Full (`lossy_agreement` /
+//! `lossy_byte_reduction` land as headline fields in BENCH_engine.json).
 //!
 //!     cargo bench --bench engine
 //!     KANELE_BENCH_QUICK=1 cargo bench --bench engine    # CI smoke mode
@@ -27,7 +32,7 @@ mod common;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use kanele::coordinator::{Service, ServiceCfg};
+use kanele::coordinator::{Service, ServiceCfg, GRAIN_OFF};
 use kanele::engine::exec::scalar_ref::ScalarExecutor;
 use kanele::engine::{self, OptLevel, RequantPlan};
 use kanele::fixed::Quantizer;
@@ -519,9 +524,9 @@ fn main() {
         svc.shutdown();
         (dt, got, st)
     };
-    let (dt_single, got_single, st_single) = drive(1, 0, n_big, &big_stream);
+    let (dt_single, got_single, st_single) = drive(1, GRAIN_OFF, n_big, &big_stream);
     assert_eq!(got_single, want_flat, "single-executor service diverges from engine");
-    assert_eq!(st_single.sliced_batches, 0, "workers=1/grain=0 must never slice");
+    assert_eq!(st_single.sliced_batches, 0, "workers=1/GRAIN_OFF must never slice");
     let (dt_sliced, got_sliced, st_sliced) = drive(4, 512, n_big, &big_stream);
     assert_eq!(got_sliced, want_flat, "sliced service diverges from engine");
     assert!(st_sliced.sliced_batches >= 1, "one {n_big}-row batch at grain 512 must slice");
@@ -561,6 +566,129 @@ fn main() {
         ("small_batch_unsliced", (st_small.sliced_batches == 0).into()),
     ]));
 
+    // -- 7. error-budgeted lossy compilation: bytes bought vs exactness ------
+    // (a) end-to-end fidelity on the jet-tagging twin: nearify the
+    // checkpoint so ε-clustering has near-duplicate (not identical) tables
+    // to share — jitter amplitude 8 <= budget 16, so the merges provably
+    // fire — then compare Lossy(16) against the bit-exact Full program
+    // over a fresh stream. Both gates are HARD and run before anything is
+    // timed or recorded: the measured worst delta must stay within the
+    // compiled-in composed bound, and argmax agreement must hold 99%.
+    println!("-- lossy compilation: error-budgeted sharing/folding vs Full --");
+    let lbudget = 16u32;
+    let lck = {
+        let mut c = common::checkpoint_or_synthetic("jsc_openml");
+        kanele::checkpoint::testutil::nearify(&mut c, 50, 8, 0x10E5);
+        c.name = "lossy-jet-twin".into();
+        c
+    };
+    let ltables = lut::from_checkpoint(&lck);
+    let lnet = Netlist::build(&lck, &ltables, 2);
+    let l_full = engine::compile_with(&lnet, OptLevel::Full);
+    let l_lossy = engine::compile_with(&lnet, OptLevel::Lossy(lbudget));
+    let lreport = l_lossy.opt_report().expect("lossy lowering reports").clone();
+    let lossy = lreport.lossy.as_ref().expect("lossy level carries its block");
+    println!("  {}", lreport.summary());
+    let lstream = data::random_code_stream(&lck, n_stream, 23);
+    let mut full_flat: Vec<i64> = Vec::new();
+    let mut lossy_flat: Vec<i64> = Vec::new();
+    engine::run_batch_flat(&l_full, &lstream, &mut full_flat);
+    engine::run_batch_flat(&l_lossy, &lstream, &mut lossy_flat);
+    let d_out = l_full.d_out();
+    let argmax = |s: &[i64]| {
+        let mut best = 0;
+        for (i, v) in s.iter().enumerate().skip(1) {
+            if *v > s[best] {
+                best = i;
+            }
+        }
+        best
+    };
+    let mut agree = 0usize;
+    let mut worst = 0i64;
+    for (f, l) in full_flat.chunks(d_out).zip(lossy_flat.chunks(d_out)) {
+        if argmax(f) == argmax(l) {
+            agree += 1;
+        }
+        for (a, b) in f.iter().zip(l) {
+            worst = worst.max((a - b).abs());
+        }
+    }
+    let agreement = agree as f64 / lstream.len() as f64;
+    assert!(
+        worst <= lossy.worst_case_bound,
+        "measured lossy delta {worst} lsb exceeds the composed bound {} lsb",
+        lossy.worst_case_bound
+    );
+    assert!(
+        agreement >= 0.99,
+        "lossy argmax agreement {agreement:.4} < 0.99 at budget {lbudget} (worst delta {worst} lsb)"
+    );
+
+    // (b) the bytes the budget buys: section 4's pruned synthetic,
+    // nearified so the duplicate tables pruning leaves behind become
+    // NEAR-duplicates — exact dedup/CSE can no longer merge them (Full
+    // pays for every jittered copy), ε-clustering can
+    let bck = {
+        let mut c = pruned_synthetic();
+        kanele::checkpoint::testutil::nearify(&mut c, 50, 8, 0x0DD5);
+        c.name = "lossy-pruned-synthetic".into();
+        c
+    };
+    let btables = lut::from_checkpoint(&bck);
+    let bnet = Netlist::build(&bck, &btables, 2);
+    let b_full = engine::compile_with(&bnet, OptLevel::Full);
+    let b_lossy = engine::compile_with(&bnet, OptLevel::Lossy(lbudget));
+    let byte_reduction = 1.0 - b_lossy.table_bytes() as f64 / b_full.table_bytes() as f64;
+    assert!(
+        byte_reduction >= 0.25,
+        "lossy table-byte reduction {byte_reduction:.3} vs Full < 0.25 (Full {} B, lossy {} B)",
+        b_full.table_bytes(),
+        b_lossy.table_bytes()
+    );
+
+    // timing A/B on the fidelity model (batch 64): smaller shared arenas
+    // should never cost throughput; no gate, the numbers are recorded
+    let batch = 64usize;
+    let mut ex_lfull = engine::Executor::with_capacity(&l_full, batch);
+    let mut flat_lfull: Vec<i64> = Vec::new();
+    let r_lfull = common::bench("nearified jet twin, OptLevel::Full (batch 64)", || {
+        for chunk in lstream.chunks(batch) {
+            ex_lfull.run_batch_into(&l_full, chunk, &mut flat_lfull);
+            std::hint::black_box(&flat_lfull);
+        }
+    });
+    let mut ex_llossy = engine::Executor::with_capacity(&l_lossy, batch);
+    let mut flat_llossy: Vec<i64> = Vec::new();
+    let r_llossy = common::bench("nearified jet twin, OptLevel::Lossy(16) (batch 64)", || {
+        for chunk in lstream.chunks(batch) {
+            ex_llossy.run_batch_into(&l_lossy, chunk, &mut flat_llossy);
+            std::hint::black_box(&flat_llossy);
+        }
+    });
+    println!(
+        "      budget {lbudget} lsb: agreement {:.4} (worst delta {worst} <= bound {} lsb) | arena bytes -{:.1}% vs Full on the pruned net | {:.2}x Full wall clock",
+        agreement,
+        lossy.worst_case_bound,
+        100.0 * byte_reduction,
+        r_lfull.median_ns / r_llossy.median_ns
+    );
+    rows.push(obj(vec![
+        ("section", "lossy".into()),
+        ("budget", (lbudget as i64).into()),
+        ("agreement", agreement.into()),
+        ("gate_agreement_99", (agreement >= 0.99).into()),
+        ("worst_delta", worst.into()),
+        ("bound", lossy.worst_case_bound.into()),
+        ("shared_tables", (lossy.shared_tables as i64).into()),
+        ("affine_folds", (lossy.affine_folds as i64).into()),
+        ("tightened_layers", (lossy.tightened_layers as i64).into()),
+        ("byte_reduction_vs_full", byte_reduction.into()),
+        ("full_ns", r_lfull.median_ns.into()),
+        ("lossy_ns", r_llossy.median_ns.into()),
+        ("speedup", (r_lfull.median_ns / r_llossy.median_ns).into()),
+    ]));
+
     // machine-readable trajectory: stdout grids rot in logs, this does not
     let doc = obj(vec![
         ("bench", "engine".into()),
@@ -573,6 +701,11 @@ fn main() {
         ("opt_model", pck.name.as_str().into()),
         ("opt_ops_reduction", report.op_reduction().into()),
         ("opt_byte_reduction", report.byte_reduction().into()),
+        // headline lossy numbers (section 7): agreement on the nearified
+        // jet twin at budget 16, bytes bought on the nearified pruned net
+        ("lossy_budget", (lbudget as i64).into()),
+        ("lossy_agreement", agreement.into()),
+        ("lossy_byte_reduction", byte_reduction.into()),
         ("rows", Value::Array(rows)),
     ]);
     std::fs::write("BENCH_engine.json", kanele::json::to_string(&doc))

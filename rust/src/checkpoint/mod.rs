@@ -405,6 +405,47 @@ pub mod testutil {
             }
         }
     }
+
+    /// Rewrite `pct`% of each layer's active non-constant tables into
+    /// *near*-duplicates of the layer's first surviving non-constant table:
+    /// same content plus independent per-entry jitter drawn from
+    /// `[-amp, amp]`. Bit-identical dedup cannot merge these, but lossy
+    /// ε-clustering with budget >= 2*amp must (two jittered copies differ
+    /// by at most `2*amp` elementwise, and each differs from the canon by
+    /// at most `amp`). Constant tables are left alone so constant folding
+    /// still sees them. Deterministic for a given `seed`; shared by the
+    /// optimizer's lossy tests and `benches/engine.rs`'s lossy section.
+    pub fn nearify(ck: &mut Checkpoint, pct: usize, amp: i64, seed: u64) {
+        assert!(amp >= 1, "jitter amplitude must be at least 1 LSB");
+        let mut rng = Rng::new(seed);
+        for layer in &mut ck.layers {
+            let is_const = |t: &[i64]| t.iter().all(|&v| v == t[0]);
+            let canon: Option<Vec<i64>> = layer
+                .table
+                .iter()
+                .flatten()
+                .find(|t| !is_const(t))
+                .cloned();
+            let Some(canon) = canon else { continue };
+            let mut seen_canon = false;
+            for slot in layer.table.iter_mut() {
+                let Some(t) = slot else { continue };
+                if is_const(t) {
+                    continue;
+                }
+                if !seen_canon && *t == canon {
+                    seen_canon = true; // leave the representative itself alone
+                    continue;
+                }
+                if rng.below(100) as usize >= pct {
+                    continue;
+                }
+                *slot = Some(
+                    canon.iter().map(|&v| v + rng.range_i64(-amp, amp)).collect(),
+                );
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -64,11 +64,18 @@
 //! range, helps with *other* batches' slices while it waits, and stitches
 //! the per-range output planes in sample order — byte-for-byte the
 //! single-executor plane, because samples are independent and the engine's
-//! chunked kernels never mix samples across a slice boundary. Small
-//! batches never see any of this: below the threshold the code path is
-//! exactly the pre-slicing one. A panicked slice poisons its job's latch;
-//! the originator then panics into its supervisor and the whole batch
-//! fails with the same typed replies as any other contained panic.
+//! chunked kernels never mix samples across a slice boundary. The grain
+//! itself is adaptive by default (`parallel_grain == 0`): unsliced
+//! compiled batches feed a bounded reservoir of observed per-row
+//! nanoseconds, and each large batch derives its grain from the mean —
+//! targeting ~0.5 ms of work per slice, clamped to `[256, 8192]` samples
+//! — so fast models get coarse slices that amortize the fan-out and slow
+//! models get fine ones that actually spread. Explicit grains remain
+//! fixed overrides; [`GRAIN_OFF`] is the kill switch. Small batches never
+//! see any of this: below the threshold the code path is exactly the
+//! pre-slicing one. A panicked slice poisons its job's latch; the
+//! originator then panics into its supervisor and the whole batch fails
+//! with the same typed replies as any other contained panic.
 //!
 //! Statistics are kept per shard ([`ShardStats`]), per tenant
 //! ([`TenantStats`]: admitted/completed/batches/latency quantiles/quota
@@ -342,15 +349,60 @@ pub struct ServiceCfg {
     /// chaos bench and the CI smoke; production configs never arm it.
     pub faults: FaultPlan,
     /// Intra-batch data-parallelism grain, in samples. A compiled batch
-    /// with at least `2 * parallel_grain` valid rows is split into up to
-    /// `workers` grain-sized sample ranges; the ranges fan out across the
-    /// executor pool as slice tasks and the originating executor stitches
-    /// the per-range planes back together (sample order preserved, so the
+    /// with at least `2 * grain` valid rows is split into up to `workers`
+    /// grain-sized sample ranges; the ranges fan out across the executor
+    /// pool as slice tasks and the originating executor stitches the
+    /// per-range planes back together (sample order preserved, so the
     /// output is byte-for-byte what the unsliced path produces). Batches
-    /// below the threshold — and everything when `0` or `workers <= 1` —
-    /// take the single-executor path untouched: slicing only ever engages
+    /// below the threshold — and everything when `workers <= 1` — take
+    /// the single-executor path untouched: slicing only ever engages
     /// where the fan-out overhead is amortized over thousands of samples.
+    ///
+    /// `0` (the default) means **auto**: each large batch derives its
+    /// grain from the per-row nanoseconds observed on earlier unsliced
+    /// compiled batches, targeting [`AUTO_GRAIN_TARGET_NS`] of work per
+    /// slice and clamped to `[`[`AUTO_GRAIN_MIN`]`, `[`AUTO_GRAIN_MAX`]`]`
+    /// samples ([`AUTO_GRAIN_COLD`] until the first timing sample lands).
+    /// Any other value is a fixed override; [`GRAIN_OFF`] disables
+    /// slicing entirely.
     pub parallel_grain: usize,
+}
+
+/// Sentinel for [`ServiceCfg::parallel_grain`]: disables intra-batch
+/// slicing entirely — the kill switch `0` used to be before `0` came to
+/// mean auto. (No real batch has `2 * GRAIN_OFF` rows, saturating.)
+pub const GRAIN_OFF: usize = usize::MAX;
+
+/// Auto-grain slice target: each fanned-out sample range should carry
+/// about this much execution time, so the fan-out overhead (task push,
+/// latch, stitch) stays well under a percent of the work it spreads.
+pub const AUTO_GRAIN_TARGET_NS: f64 = 500_000.0;
+
+/// Auto-grain floor, samples: finer than this and per-slice overhead
+/// dominates even for very slow models.
+pub const AUTO_GRAIN_MIN: usize = 256;
+
+/// Auto-grain ceiling, samples: coarser than this and a fast model's
+/// large batch no longer spreads across a small pool.
+pub const AUTO_GRAIN_MAX: usize = 8192;
+
+/// Auto grain used while the timing reservoir is empty — the old fixed
+/// default, so a cold service behaves exactly like the pre-auto one.
+pub const AUTO_GRAIN_COLD: usize = 2048;
+
+/// Per-row timing samples retained for auto-grain derivation.
+const GRAIN_RESERVOIR: usize = 512;
+
+/// Derive the intra-batch slice grain from observed per-row execution
+/// time (see [`ServiceCfg::parallel_grain`]): target
+/// [`AUTO_GRAIN_TARGET_NS`] per slice, clamp to
+/// `[AUTO_GRAIN_MIN, AUTO_GRAIN_MAX]`, fall back to [`AUTO_GRAIN_COLD`]
+/// with no (or degenerate) samples. Pure — unit-tested directly.
+fn auto_grain(per_row_ns: f64) -> usize {
+    if !per_row_ns.is_finite() || per_row_ns <= 0.0 {
+        return AUTO_GRAIN_COLD;
+    }
+    ((AUTO_GRAIN_TARGET_NS / per_row_ns) as usize).clamp(AUTO_GRAIN_MIN, AUTO_GRAIN_MAX)
 }
 
 impl Default for ServiceCfg {
@@ -368,7 +420,7 @@ impl Default for ServiceCfg {
             exec_delay_shard: None,
             exec_delay_every: 0,
             faults: FaultPlan::default(),
-            parallel_grain: 2048,
+            parallel_grain: 0,
         }
     }
 }
@@ -545,6 +597,10 @@ struct Shared {
     sliced_batches: AtomicU64,
     /// Slice tasks fanned out to the pool (originator ranges excluded).
     slice_tasks: AtomicU64,
+    /// Per-row execution nanoseconds observed on unsliced compiled
+    /// batches; the auto grain derives from its mean (see
+    /// [`ServiceCfg::parallel_grain`]). Only fed in auto mode.
+    row_ns: Mutex<Reservoir>,
     shards: Vec<ShardShared>,
 }
 
@@ -806,6 +862,7 @@ impl Service {
             faults_injected: AtomicU64::new(0),
             sliced_batches: AtomicU64::new(0),
             slice_tasks: AtomicU64::new(0),
+            row_ns: Mutex::new(Reservoir::new(GRAIN_RESERVOIR)),
             shards: (0..cfg.shards).map(|_| ShardShared::default()).collect(),
         });
         let drain = Arc::new(DrainGate::new());
@@ -833,7 +890,7 @@ impl Service {
             // `try_push`) land even while batches are staged — a full
             // deque only costs the originator an inline slice, never a
             // block.
-            let slice_headroom = if cfg.parallel_grain > 0 { cfg.workers } else { 0 };
+            let slice_headroom = if cfg.parallel_grain != GRAIN_OFF { cfg.workers } else { 0 };
             let deque_cap = cfg.workers.div_ceil(cfg.shards) + slice_headroom;
             let p: Arc<WorkPool<Work>> =
                 Arc::new(WorkPool::new(cfg.shards, deque_cap, cfg.steal, cfg.shards, cfg.workers));
@@ -1580,8 +1637,13 @@ fn execute_batch(
             // (byte-for-byte: samples are independent and keep their
             // batch order), so everything downstream — canary split,
             // debug sim cross-check, reply slicing — is path-agnostic.
-            let grain = cfg.parallel_grain;
-            if grain > 0 && cfg.workers > 1 && rows.len() >= 2 * grain {
+            // Grain 0 resolves adaptively from observed per-row time;
+            // GRAIN_OFF saturates the threshold so nothing ever slices.
+            let grain = match cfg.parallel_grain {
+                0 => auto_grain(shared.row_ns.lock().unwrap().mean()),
+                g => g,
+            };
+            if cfg.workers > 1 && rows.len() >= grain.saturating_mul(2) {
                 let row_idx: Vec<usize> = items
                     .iter()
                     .enumerate()
@@ -1599,7 +1661,15 @@ fn execute_batch(
                 shared.sliced_batches.fetch_add(1, Ordering::Relaxed);
                 execute_sliced(&job, exec, flat, &pool, shared);
             } else {
+                // unsliced compiled runs are the auto grain's sensor: one
+                // per-row sample per batch (sliced runs are excluded —
+                // their wall time is divided across helpers)
+                let t0 = Instant::now();
                 exec.run_batch_into(&prog, &rows, flat);
+                if cfg.parallel_grain == 0 && !rows.is_empty() {
+                    let ns = t0.elapsed().as_nanos() as f64 / rows.len() as f64;
+                    shared.row_ns.lock().unwrap().push(ns);
+                }
             }
             shared
                 .fused_ops
@@ -1633,25 +1703,41 @@ fn execute_batch(
                 }
                 canary_rows = crows.len() as u64;
                 if cfg!(debug_assertions) {
+                    // tolerance is the canary's own compiled-in lossy
+                    // bound: 0 for exact levels, so this degenerates to
+                    // the old equality check everywhere but Lossy(b > 0)
+                    let cbound = cprog
+                        .opt_report()
+                        .and_then(|r| r.lossy.as_ref())
+                        .map_or(0, |l| l.worst_case_bound);
                     let mut ev = sim::Evaluator::new(&cnet);
                     for (k, row) in crows.iter().enumerate() {
-                        debug_assert_eq!(
-                            ev.eval(row),
-                            &flat2[k * d_out..(k + 1) * d_out],
-                            "canary engine/sim divergence"
+                        let want = ev.eval(row);
+                        let got = &flat2[k * d_out..(k + 1) * d_out];
+                        debug_assert!(
+                            got.iter().zip(want).all(|(g, w)| (g - w).abs() <= cbound),
+                            "canary engine/sim divergence past lossy bound {cbound}"
                         );
                     }
                 }
             }
             shared.scratch.fetch_max(exec.scratch_bytes() as u64, Ordering::Relaxed);
-            // checked invariant: the compiled program IS the netlist
+            // checked invariant: the compiled program IS the netlist — up
+            // to its compiled-in lossy worst-case bound (0 for exact
+            // levels, so this is the old equality check everywhere but
+            // Lossy(b > 0) tenants, where it enforces the bound instead)
             if cfg!(debug_assertions) {
+                let bound = prog
+                    .opt_report()
+                    .and_then(|r| r.lossy.as_ref())
+                    .map_or(0, |l| l.worst_case_bound);
                 let mut ev = sim::Evaluator::new(&net);
                 for (i, row) in rows.iter().enumerate() {
-                    debug_assert_eq!(
-                        ev.eval(row),
-                        &flat[i * d_out..(i + 1) * d_out],
-                        "engine/sim divergence"
+                    let want = ev.eval(row);
+                    let got = &flat[i * d_out..(i + 1) * d_out];
+                    debug_assert!(
+                        got.iter().zip(want).all(|(g, w)| (g - w).abs() <= bound),
+                        "engine/sim divergence past lossy bound {bound}"
                     );
                 }
             }
@@ -1848,7 +1934,7 @@ fn execute_sliced(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::checkpoint::testutil::synthetic;
+    use crate::checkpoint::testutil::{nearify, prunify, synthetic};
     use crate::lut;
     use crate::util::Rng;
 
@@ -1958,8 +2044,9 @@ mod tests {
 
     #[test]
     fn small_batches_keep_the_single_executor_path() {
-        // default grain (2048): nothing here comes near the threshold, so
-        // the sliced counters must prove the old path ran untouched
+        // default auto grain, cold (falls back to 2048): nothing here
+        // comes near the threshold, so the sliced counters must prove the
+        // old path ran untouched
         let (net, svc) = service(ServiceCfg { workers: 4, ..Default::default() });
         let mut rng = Rng::new(78);
         let mut pending = Vec::new();
@@ -1979,16 +2066,16 @@ mod tests {
     }
 
     #[test]
-    fn parallel_grain_zero_disables_slicing() {
-        // grain 0 is the kill switch: even a batch that would slice at any
-        // nonzero grain runs single-executor
+    fn parallel_grain_off_disables_slicing() {
+        // GRAIN_OFF is the kill switch (0 now means auto): even a batch
+        // that would slice at any real grain runs single-executor
         let (net, svc) = service(ServiceCfg {
             workers: 4,
             shards: 1,
             max_batch: 512,
             max_wait: Duration::from_millis(50),
             queue_depth: 1 << 12,
-            parallel_grain: 0,
+            parallel_grain: GRAIN_OFF,
             ..Default::default()
         });
         let mut rng = Rng::new(79);
@@ -2005,6 +2092,68 @@ mod tests {
         let st = svc.stats();
         assert_eq!(st.sliced_batches, 0);
         assert_eq!(st.slice_tasks, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn auto_grain_targets_half_millisecond_slices() {
+        // pure function: 0.5 ms target over the observed per-row time,
+        // clamped to [256, 8192], cold fallback 2048
+        assert_eq!(auto_grain(0.0), AUTO_GRAIN_COLD, "empty reservoir means cold fallback");
+        assert_eq!(auto_grain(f64::NAN), AUTO_GRAIN_COLD);
+        assert_eq!(auto_grain(-1.0), AUTO_GRAIN_COLD);
+        assert_eq!(auto_grain(1000.0), 500, "1 us/row -> 500 rows per half-ms slice");
+        assert_eq!(auto_grain(125.0), 4000);
+        assert_eq!(auto_grain(10.0), AUTO_GRAIN_MAX, "fast models clamp to the ceiling");
+        assert_eq!(auto_grain(1e7), AUTO_GRAIN_MIN, "slow models clamp to the floor");
+    }
+
+    #[test]
+    fn parallel_grain_auto_adapts_from_observed_row_time() {
+        // auto mode end to end: a cold service uses the 2048 fallback (so
+        // 300-row batches run unsliced and feed the timing reservoir);
+        // seeding the reservoir with a deliberately slow per-row time then
+        // drops the derived grain to the 256 floor, and the same service
+        // starts slicing its large batches — bit-exact either way
+        let (net, svc) = service(ServiceCfg {
+            workers: 4,
+            shards: 1,
+            max_batch: 512,
+            max_wait: Duration::from_millis(100),
+            queue_depth: 1 << 12,
+            parallel_grain: 0,
+            ..Default::default()
+        });
+        let mut rng = Rng::new(80);
+        let mut wave = |n: usize| {
+            // precompute expectations so submission outruns max_wait and
+            // full max_batch batches actually form
+            let rows: Vec<Vec<u32>> =
+                (0..n).map(|_| (0..4).map(|_| rng.below(16) as u32).collect()).collect();
+            let want: Vec<Vec<i64>> = rows.iter().map(|r| sim::eval(&net, r)).collect();
+            let pending: Vec<_> = rows.into_iter().map(|r| svc.submit(r).unwrap()).collect();
+            for (rx, w) in pending.into_iter().zip(want) {
+                assert_eq!(rx.recv().unwrap().unwrap().sums, w);
+            }
+        };
+        wave(300);
+        let st = svc.stats();
+        assert_eq!(st.sliced_batches, 0, "cold auto grain falls back to 2048: no slicing");
+        assert!(
+            svc.shared.row_ns.lock().unwrap().len() >= 1,
+            "unsliced compiled batches must feed the timing reservoir"
+        );
+        // teach the reservoir this model is slow (1 ms/row): the derived
+        // grain clamps to the 256 floor, so a full 512-row batch crosses
+        // the 2 * grain threshold. Heavy seeding keeps the running mean
+        // pinned against dilution by real samples from tail batches.
+        for _ in 0..64 {
+            svc.shared.row_ns.lock().unwrap().push(1e6);
+        }
+        wave(600);
+        let st = svc.stats();
+        assert!(st.sliced_batches >= 1, "floor grain must slice full batches: {st:?}");
+        assert!(st.slice_tasks >= 1);
         svc.shutdown();
     }
 
@@ -2619,7 +2768,7 @@ mod tests {
         }
         let tables = lut::from_checkpoint(&ck);
         let net = Arc::new(Netlist::build(&ck, &tables, 2));
-        for level in [OptLevel::Full, OptLevel::None] {
+        for level in [OptLevel::Full, OptLevel::None, OptLevel::Lossy(0)] {
             let svc = Service::start(
                 Arc::clone(&net),
                 ServiceCfg { workers: 2, opt: level, ..Default::default() },
@@ -2642,15 +2791,76 @@ mod tests {
                     assert!(opt.folded_edges >= 5, "{opt:?}");
                     assert!(opt.ops_after < opt.ops_before, "{opt:?}");
                     assert!(opt.table_bytes_after < opt.table_bytes_before, "{opt:?}");
+                    assert!(opt.lossy.is_none(), "exact levels carry no lossy block");
                 }
                 OptLevel::None => {
                     assert_eq!(opt.ops_after, opt.ops_before);
                     assert_eq!(opt.ops_before, net.n_luts());
+                    assert!(opt.lossy.is_none());
+                }
+                OptLevel::Lossy(_) => {
+                    // budget 0 rides the Full pipeline (bit-exact, proven
+                    // above by the response assertions) but still surfaces
+                    // a lossy report — with zero actions and a zero bound
+                    assert!(opt.folded_edges >= 5, "{opt:?}");
+                    assert!(opt.ops_after < opt.ops_before, "{opt:?}");
+                    let l = opt.lossy.as_ref().expect("lossy level surfaces its report");
+                    assert_eq!(l.budget, 0);
+                    assert_eq!(l.shared_tables + l.affine_folds + l.tightened_layers, 0);
+                    assert_eq!(l.worst_case_bound, 0);
                 }
             }
             assert_eq!(st.fused_ops, 120 * opt.ops_after as u64, "{level:?}");
             svc.shutdown();
         }
+    }
+
+    #[test]
+    fn lossy_serving_stays_within_bound_and_reports() {
+        // a checkpoint with deliberate near-duplicate tables served at a
+        // real budget: responses may drift from the ORIGINAL netlist's
+        // sim, but never past the compiled-in worst-case bound — the same
+        // tolerance the debug cross-check in execute_batch enforces on
+        // every batch (this test would hang on a poisoned batch if that
+        // check still demanded equality) — and the lossy report reaches
+        // ServiceStats with its actions counted
+        let mut ck = synthetic(&[6, 5, 3], &[4, 4, 6], 909);
+        prunify(&mut ck, 15, 10, 3);
+        nearify(&mut ck, 100, 3, 11);
+        let tables = lut::from_checkpoint(&ck);
+        let net = Arc::new(Netlist::build(&ck, &tables, 2));
+        let svc = Service::start(
+            Arc::clone(&net),
+            ServiceCfg { workers: 2, opt: OptLevel::Lossy(8), ..Default::default() },
+        );
+        let mut rng = Rng::new(17);
+        let mut pending = Vec::new();
+        for _ in 0..120 {
+            let codes: Vec<u32> = (0..6).map(|_| rng.below(16) as u32).collect();
+            let want = sim::eval(&net, &codes);
+            pending.push((svc.submit(codes).unwrap(), want));
+        }
+        let got: Vec<(Vec<i64>, Vec<i64>)> = pending
+            .into_iter()
+            .map(|(rx, want)| (rx.recv().unwrap().unwrap().sums, want))
+            .collect();
+        let st = svc.stats();
+        let opt = st.opt.as_ref().expect("compiled backend surfaces its report");
+        assert_eq!(opt.level, OptLevel::Lossy(8));
+        let l = opt.lossy.as_ref().expect("nonzero budget surfaces a lossy report");
+        assert_eq!(l.budget, 8);
+        assert!(l.shared_tables >= 1, "nearified twins (2*amp <= budget) must merge: {l:?}");
+        for (sums, want) in &got {
+            assert_eq!(sums.len(), want.len());
+            for (g, w) in sums.iter().zip(want) {
+                assert!(
+                    (g - w).abs() <= l.worst_case_bound,
+                    "{g} vs sim {w} exceeds bound {}",
+                    l.worst_case_bound
+                );
+            }
+        }
+        svc.shutdown();
     }
 
     #[test]

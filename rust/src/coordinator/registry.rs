@@ -40,7 +40,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::engine::{intern_tables, CompiledProgram, InternStats, OptLevel, ProgramCell};
+use crate::engine::{
+    intern_tables, intern_tables_lossy, CompiledProgram, InternStats, OptLevel, ProgramCell,
+};
 use crate::netlist::hotswap::NetlistCell;
 use crate::netlist::Netlist;
 use crate::util::Reservoir;
@@ -640,8 +642,13 @@ impl ModelRegistry {
     /// and republish each program in place ([`ProgramCell::install`]).
     /// Identical tables across fine-tuned variants of one checkpoint are
     /// materialized once; the returned [`InternStats`] split shared vs
-    /// private bytes. Bit-exact: interning only relocates table content. A
-    /// swap racing the install is benign — the next `load()` on that cell
+    /// private bytes. Bit-exact for exact levels: interning only relocates
+    /// table content. A registry built at [`OptLevel::Lossy`] additionally
+    /// ε-clusters *near*-identical tables across tenants under the same
+    /// per-table budget (`Lossy(0)` degenerates to the exact pass) — each
+    /// substituted lookup moves by at most the budget, the same contract
+    /// every tenant already accepted by compiling at that level. A swap
+    /// racing the install is benign — the next `load()` on that cell
     /// recompiles privately, and a later `reintern` re-shares it.
     pub fn reintern(&self) -> InternStats {
         // snapshot the program set under the read lock, intern outside any
@@ -662,7 +669,10 @@ impl ModelRegistry {
         let pairs: Vec<(Arc<Netlist>, Arc<CompiledProgram>)> =
             cells.iter().map(|c| c.load()).collect();
         let progs: Vec<&CompiledProgram> = pairs.iter().map(|(_, p)| p.as_ref()).collect();
-        let (interned, stats) = intern_tables(&progs);
+        let (interned, stats) = match self.level {
+            OptLevel::Lossy(budget) => intern_tables_lossy(&progs, budget),
+            _ => intern_tables(&progs),
+        };
         for (cell, ((net, _), prog)) in cells.iter().zip(pairs.iter().zip(interned)) {
             cell.install(Arc::clone(net), Arc::new(prog));
         }
@@ -770,6 +780,88 @@ mod tests {
         // a later load invalidates the recorded arena stats
         reg.load("c", net(&[3, 2], &[3, 6], 5)).unwrap();
         assert!(reg.arena_stats().is_none());
+    }
+
+    #[test]
+    fn lossy_reintern_clusters_near_twins_across_tenants() {
+        // fine-tune twins whose tables differ by a few LSBs in every entry:
+        // the exact pass shares nothing, a Lossy registry's reintern
+        // clusters them under the same per-table budget its tenants
+        // compiled with, and Lossy(0) degenerates to the exact pass
+        use crate::netlist::{adder_depth, LayerNet, LutInst, NeuronNet};
+        let mk = |jit: i64| -> Arc<Netlist> {
+            let t1: Vec<i64> = (0..8).map(|i| i * 300 - 1000 + jit).collect();
+            let t2: Vec<i64> = (0..8).map(|i| -i * 200 + 500 - jit).collect();
+            let neurons = vec![NeuronNet {
+                luts: vec![
+                    LutInst { input: 0, table: t1, out_width: 12 },
+                    LutInst { input: 1, table: t2, out_width: 12 },
+                ],
+                bias: 0,
+                depth: adder_depth(2, 2),
+                sum_width: 14,
+            }];
+            Arc::new(Netlist {
+                name: format!("twin{jit}"),
+                layers: vec![LayerNet {
+                    d_in: 2,
+                    d_out: 1,
+                    in_bits: 3,
+                    out_bits: 8,
+                    neurons,
+                    requant: None,
+                    depth: 1,
+                }],
+                n_add: 2,
+                frac_bits: 12,
+                domain: (-4.0, 4.0),
+            })
+        };
+        let codes: Vec<Vec<u32>> = (0..64).map(|i| vec![i % 8, (i / 8) % 8]).collect();
+
+        let exact = ModelRegistry::new(OptLevel::Full);
+        exact.load("a", mk(0)).unwrap();
+        exact.load("b", mk(3)).unwrap();
+        let st_exact = exact.reintern();
+        assert_eq!(
+            st_exact.bytes_private, st_exact.bytes_interned,
+            "twins share no exact duplicates: {st_exact:?}"
+        );
+
+        let reg = ModelRegistry::new(OptLevel::Lossy(6));
+        reg.load("a", mk(0)).unwrap();
+        reg.load("b", mk(3)).unwrap();
+        let before: Vec<_> = reg
+            .tenants()
+            .iter()
+            .map(|t| engine::run_batch(&t.programs().load().1, &codes))
+            .collect();
+        let st = reg.reintern();
+        assert!(
+            st.bytes_interned < st_exact.bytes_interned,
+            "budget 6 must cluster the |delta| = 3 twins: {st:?} vs {st_exact:?}"
+        );
+        assert!(st.bytes_shared > 0, "{st:?}");
+        // each substituted lookup moved by <= the budget; 2 lookups feed
+        // every output neuron, so 2 * budget caps the per-output drift
+        for (t, want) in reg.tenants().iter().zip(&before) {
+            let got = engine::run_batch(&t.programs().load().1, &codes);
+            let worst = want
+                .iter()
+                .flatten()
+                .zip(got.iter().flatten())
+                .map(|(a, b)| (a - b).abs())
+                .max()
+                .unwrap();
+            assert!(worst <= 2 * 6, "tenant {}: drift {worst} > 12", t.name());
+        }
+
+        let zero = ModelRegistry::new(OptLevel::Lossy(0));
+        zero.load("a", mk(0)).unwrap();
+        zero.load("b", mk(3)).unwrap();
+        let st0 = zero.reintern();
+        assert_eq!(st0.bytes_interned, st_exact.bytes_interned, "Lossy(0) interns exactly");
+        assert_eq!(st0.bytes_private, st0.bytes_interned);
     }
 
     #[test]

@@ -49,7 +49,12 @@
 //! (one gather feeding several accumulators — see [`FanOut`]) and an
 //! optional input map (dead external features are accepted in the request
 //! row but never packed into the plane). Both are handled here; 1:1
-//! programs pay one cursor compare per op and an identity pack.
+//! programs pay one cursor compare per op and an identity pack. Programs
+//! lowered at `OptLevel::Lossy` may further carry affine-folded ops
+//! (`LutOp::scale != 1`): the gather multiplies by the compile-time scale
+//! before accumulating (`gather_mul_add` / `scale_run` kernels), with the
+//! intercept already folded into the bias and the products proven in-lane
+//! by the compiler's range analysis.
 //!
 //! **Scratch growth.** Planes are grown (never shrunk) to
 //! `batch x max_width` on demand: the first batch of a new largest size
@@ -114,12 +119,21 @@ fn run_layer<T: LaneKernel>(
             fi += 1;
         }
         if start == fi {
-            // hot path: single destination, two contiguous runs
+            // hot path: single destination, two contiguous runs. Lossy
+            // affine-folded ops (scale != 1, see `LutOp::scale`) take the
+            // multiply-accumulate kernel; the compiler proved the products
+            // fit the layer's lane, so the in-lane multiply cannot wrap.
             let dst = &mut sums[op.neuron as usize * n..][..n];
-            T::gather_add(table, mask, src, dst);
+            if op.scale == 1 {
+                T::gather_add(table, mask, src, dst);
+            } else {
+                T::gather_mul_add(table, mask, src, dst, T::from_i64(op.scale as i64));
+            }
         } else {
-            // CSE fanout: gather each chunk once, then re-add the
-            // temporary into the op's own run and every extra destination
+            // CSE fanout: gather each chunk once (scaling in place for
+            // affine-folded ops — every destination of a group shares one
+            // scale by construction), then re-add the temporary into the
+            // op's own run and every extra destination
             let extra = &fanouts[start..fi];
             let own = op.neuron as usize * n;
             let mut g = [T::ZERO; CHUNK];
@@ -128,6 +142,9 @@ fn run_layer<T: LaneKernel>(
                 let len = CHUNK.min(n - at);
                 let g = &mut g[..len];
                 T::gather(table, mask, &src[at..at + len], g);
+                if op.scale != 1 {
+                    T::scale_run(g, T::from_i64(op.scale as i64));
+                }
                 T::add_run(&mut sums[own + at..own + at + len], g);
                 for f in extra {
                     let base = f.neuron as usize * n + at;
@@ -337,7 +354,10 @@ pub fn run_batch_flat<S: AsRef<[u32]>>(prog: &CompiledProgram, batch: &[S], out:
 /// gate is defined against), and the tests in this module use it as the
 /// bit-exactness oracle alongside [`crate::sim`]. It is not part of the
 /// public API surface and carries no optimizations on purpose — do not
-/// "improve" it, its value is that it never changes.
+/// "improve" it, its value is that it never changes. It predates the lossy
+/// tier and ignores `LutOp::scale`, so it must only run programs compiled
+/// at `OptLevel::None` or `Full` (where every scale is 1) — exactly what
+/// its two consumers do.
 #[doc(hidden)]
 pub mod scalar_ref {
     use super::super::program::{CompiledProgram, FanOut, Lane, LutOp};
@@ -824,6 +844,66 @@ mod tests {
             let want = sim::eval_batch(&net, &batch);
             assert_eq!(ex.run_batch(&p_none, &batch), want);
             assert_eq!(ex.run_batch(&p_full, &batch), want);
+        }
+    }
+
+    #[test]
+    fn lossy_scaled_ops_match_sim_on_tail_batches() {
+        // affine-folded programs dispatch gather_mul_add / scale_run: t2 is
+        // exactly 3*t1 + 7, so Lossy(1) folds both t2 consumers onto t1's
+        // slot (residual 0) and the outputs must stay bit-exact with sim.
+        // The two folded consumers share (input, rep, scale), so they CSE
+        // into the fanout path — both scaled code paths run here.
+        use crate::engine::OptLevel;
+        let t1: Vec<i64> = (0..8).map(|i| i * 123 - 400).collect();
+        let t2: Vec<i64> = t1.iter().map(|v| 3 * v + 7).collect();
+        let neurons = vec![
+            NeuronNet {
+                luts: vec![LutInst { input: 0, table: t1.clone(), out_width: 12 }],
+                bias: 1,
+                depth: 0,
+                sum_width: 13,
+            },
+            NeuronNet {
+                luts: vec![LutInst { input: 1, table: t2.clone(), out_width: 13 }],
+                bias: -2,
+                depth: 0,
+                sum_width: 14,
+            },
+            NeuronNet {
+                luts: vec![LutInst { input: 1, table: t2.clone(), out_width: 13 }],
+                bias: 4,
+                depth: 0,
+                sum_width: 14,
+            },
+        ];
+        let net = Netlist {
+            name: "affine-exec".into(),
+            layers: vec![LayerNet {
+                d_in: 2,
+                d_out: 3,
+                in_bits: 3,
+                out_bits: 8,
+                neurons,
+                requant: None,
+                depth: 0,
+            }],
+            n_add: 2,
+            frac_bits: 12,
+            domain: (-4.0, 4.0),
+        };
+        let prog = CompiledProgram::compile_opt(&net, OptLevel::Lossy(1));
+        assert!(prog.ops().iter().any(|o| o.scale == 3), "{:?}", prog.ops());
+        assert!(!prog.fanouts().is_empty(), "shared folded pair must CSE");
+        let mut ex = Executor::new();
+        let mut flat = Vec::new();
+        for n in [1usize, CHUNK - 1, CHUNK, CHUNK + 1, 2 * CHUNK + 3] {
+            let batch: Vec<Vec<u32>> =
+                (0..n as u32).map(|i| vec![i % 8, (i * 3 + 1) % 8]).collect();
+            ex.run_batch_into(&prog, &batch, &mut flat);
+            let want: Vec<i64> =
+                sim::eval_batch(&net, &batch).iter().flatten().copied().collect();
+            assert_eq!(flat, want, "scaled ops != sim at n={n}");
         }
     }
 

@@ -60,6 +60,18 @@ pub(super) trait LaneKernel: Copy + PartialEq + AddAssign {
     /// `dst[i] += table[codes[i] & mask]` (the 1:1 hot path).
     fn gather_add(table: &[Self], mask: u32, codes: &[u32], dst: &mut [Self]);
 
+    /// `dst[i] += a * table[codes[i] & mask]` — the affine-folded op of the
+    /// optimizer's lossy tier ([`super::optim::OptLevel::Lossy`]): a table
+    /// expressed as `a * rep + b` gathers the representative and scales on
+    /// accumulate (`b` was folded into the destination bias at compile
+    /// time). Every reachable product is proven in-lane by the compile-time
+    /// range analysis, so the multiply cannot overflow.
+    fn gather_mul_add(table: &[Self], mask: u32, codes: &[u32], dst: &mut [Self], a: Self);
+
+    /// `dst[i] *= a` (scale a gathered chunk once before fan-out
+    /// re-accumulation feeds it to several destinations).
+    fn scale_run(dst: &mut [Self], a: Self);
+
     /// `dst[i] += src[i]` (fan-out re-accumulation of a gathered chunk).
     fn add_run(dst: &mut [Self], src: &[Self]);
 }
@@ -149,6 +161,70 @@ macro_rules! lane_kernel {
             }
 
             #[inline]
+            fn gather_mul_add(table: &[Self], mask: u32, codes: &[u32], dst: &mut [Self], a: Self) {
+                debug_assert_eq!(codes.len(), dst.len());
+                debug_assert_eq!(table.len(), mask as usize + 1);
+                #[cfg(feature = "simd")]
+                {
+                    use std::simd::prelude::*;
+                    let mut dc = dst.chunks_exact_mut(CHUNK);
+                    let mut cc = codes.chunks_exact(CHUNK);
+                    for (d, c) in (&mut dc).zip(&mut cc) {
+                        let idx =
+                            (Simd::<u32, CHUNK>::from_slice(c) & Simd::splat(mask)).cast::<usize>();
+                        let v = Simd::<$t, CHUNK>::gather_or_default(table, idx)
+                            * Simd::splat(a)
+                            + Simd::from_slice(d);
+                        v.copy_to_slice(d);
+                    }
+                    for (d, &c) in dc.into_remainder().iter_mut().zip(cc.remainder()) {
+                        *d += a * table[(c & mask) as usize];
+                    }
+                }
+                #[cfg(not(feature = "simd"))]
+                {
+                    let mut dc = dst.chunks_exact_mut(CHUNK);
+                    let mut cc = codes.chunks_exact(CHUNK);
+                    for (d, c) in (&mut dc).zip(&mut cc) {
+                        // same split as gather_add: gather first, then a
+                        // dependence-free fixed-trip multiply-add loop
+                        let mut g = [Self::ZERO; CHUNK];
+                        for (g, &c) in g.iter_mut().zip(c) {
+                            *g = table[(c & mask) as usize];
+                        }
+                        for (d, &g) in d.iter_mut().zip(&g) {
+                            *d += a * g;
+                        }
+                    }
+                    for (d, &c) in dc.into_remainder().iter_mut().zip(cc.remainder()) {
+                        *d += a * table[(c & mask) as usize];
+                    }
+                }
+            }
+
+            #[inline]
+            fn scale_run(dst: &mut [Self], a: Self) {
+                #[cfg(feature = "simd")]
+                {
+                    use std::simd::prelude::*;
+                    let mut dc = dst.chunks_exact_mut(CHUNK);
+                    for d in &mut dc {
+                        let v = Simd::<$t, CHUNK>::from_slice(d) * Simd::splat(a);
+                        v.copy_to_slice(d);
+                    }
+                    for d in dc.into_remainder() {
+                        *d *= a;
+                    }
+                }
+                // an in-place elementwise multiply is a shape stable rustc
+                // vectorizes unaided, like add_run
+                #[cfg(not(feature = "simd"))]
+                for d in dst.iter_mut() {
+                    *d *= a;
+                }
+            }
+
+            #[inline]
             fn add_run(dst: &mut [Self], src: &[Self]) {
                 debug_assert_eq!(dst.len(), src.len());
                 #[cfg(feature = "simd")]
@@ -186,7 +262,10 @@ mod tests {
     /// Every kernel against the one-element reference loop, on every tail
     /// shape: empty, single sample, one-short-of-a-chunk, exact chunks,
     /// chunk-plus-one, and long runs with tails.
-    fn check_lane<T: LaneKernel + std::fmt::Debug>(seed: u64, spread: i64) {
+    fn check_lane<T>(seed: u64, spread: i64)
+    where
+        T: LaneKernel + std::fmt::Debug + std::ops::Mul<Output = T>,
+    {
         let mut rng = Rng::new(seed);
         let bits = 6u32;
         let mask = (1u32 << bits) - 1;
@@ -209,6 +288,26 @@ mod tests {
                 *w += table[(c & mask) as usize];
             }
             assert_eq!(acc, want_acc, "gather_add n={n}");
+
+            // affine-folded op: scaled gather-accumulate, negative and
+            // positive scales (products stay in-lane for these spreads,
+            // matching the compile-time proof the executor relies on)
+            for a in [-2i64, 3] {
+                let mut acc: Vec<T> = (0..n as i64).map(|i| T::from_i64(i + 9)).collect();
+                let mut want_acc = acc.clone();
+                T::gather_mul_add(&table, mask, &codes, &mut acc, T::from_i64(a));
+                for (w, &c) in want_acc.iter_mut().zip(&codes) {
+                    *w += T::from_i64(a) * table[(c & mask) as usize];
+                }
+                assert_eq!(acc, want_acc, "gather_mul_add n={n} a={a}");
+
+                let mut scaled: Vec<T> =
+                    codes.iter().map(|&c| table[(c & mask) as usize]).collect();
+                let want_scaled: Vec<T> =
+                    scaled.iter().map(|&v| T::from_i64(a) * v).collect();
+                T::scale_run(&mut scaled, T::from_i64(a));
+                assert_eq!(scaled, want_scaled, "scale_run n={n} a={a}");
+            }
 
             let src: Vec<T> = (0..n as i64).map(|i| T::from_i64(i * 3 - 5)).collect();
             let mut dst = acc.clone();

@@ -18,10 +18,17 @@
 //!            │ 4 CSE duplicate lookups (one op + FanOut list per (input,table))│
 //!            │ 5 re-run lane analysis  on the optimized op order (folding      │
 //!            │   tightens ranges, so layers can narrow to the i32 lane)        │
+//!            │ 6 OptLevel::Lossy(b) only — error-budgeted passes on top:       │
+//!            │   ε-cluster near tables (exact max |Δ| <= b) onto one rep,      │
+//!            │   fold t2 ≈ a*t1 + c into (scale, bias), tighten next-layer     │
+//!            │   ranges to the codes the requant can actually produce.         │
+//!            │   Worst-case end-to-end bound composed per layer:               │
+//!            │   max_q Σ_lut (eps + |scale|·mod_rep(code slack)), slack =      │
+//!            │   requant boundaries crossable by the previous layer's delta    │
 //!            └──────────────────────────────────────────────────────────┬─────┘
 //!                 OptLevel::None: the 1:1 lowering, byte-identical       │
 //!                 to `CompiledProgram::compile` (the A/B baseline)       ▼
-//!                                                          CompiledProgram (+ OptReport)
+//!                                            CompiledProgram (+ OptReport [+ LossyReport])
 //! ```
 //!
 //! Invariants each pass preserves (tested in [`optim`]):
@@ -31,7 +38,12 @@
 //! no-overflow in the *new* op order); **interface** — `d_in()`/`d_out()`
 //! keep the checkpoint's request/response widths even when internal planes
 //! shrink; **reporting** — `table_bytes()` prices unique content and
-//! [`OptReport`] carries the before/after geometry.
+//! [`OptReport`] carries the before/after geometry. The lossy tier
+//! deliberately relaxes only the *functional* invariant, and only by a
+//! compile-time-proven amount: `Lossy(0)` is byte-identical to `Full`, and
+//! any budget `b` ships a [`LossyReport`] whose `worst_case_bound` is a
+//! sound (never estimated) cap on the end-to-end output delta vs the exact
+//! program.
 //!
 //! * [`CompiledProgram`] ([`program`]) — the netlist lowered to flat
 //!   arrays: packed table arenas **narrowed to i32 where a per-layer range
@@ -79,10 +91,10 @@ pub mod swap;
 
 pub use exec::{run_batch, run_batch_flat, Executor};
 pub use kernels::CHUNK;
-pub use optim::{OptLevel, OptReport};
+pub use optim::{LossyReport, OptLevel, OptReport};
 pub use program::{
-    intern_tables, CompiledProgram, FanOut, InternStats, Lane, LayerPlan, LutOp, RequantPlan,
-    PLAN_MAX_BITS,
+    intern_tables, intern_tables_lossy, CompiledProgram, FanOut, InternStats, Lane, LayerPlan,
+    LutOp, RequantPlan, PLAN_MAX_BITS,
 };
 pub use swap::ProgramCell;
 

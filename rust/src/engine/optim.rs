@@ -36,20 +36,46 @@
 //!    analysis reruns over the *optimized* op order (folding tightens
 //!    ranges, e.g. opposite-sign constants cancel into a small bias), so
 //!    layers that previously needed the i64 lane can narrow to i32.
+//! 6. **Error-budgeted lossy tier** ([`OptLevel::Lossy`], off by default) —
+//!    three passes that trade a *bounded* per-table output error for arena
+//!    bytes, gated on a budget of fixed-point LSBs:
+//!    * *ε-clustered sharing* — a table lands on an earlier canonical
+//!      representative when the exact elementwise max delta fits the
+//!      budget (never estimated; representatives never chain, so every
+//!      table is within one budget of what it executes).
+//!    * *affine folding* — `t2[c] ≈ a*t1[c] + b` within budget replaces
+//!      `t2` with the representative `t1`, `scale = a` on the op's
+//!      accumulate ([`LutOp::scale`], a fused kernel variant), and `b`
+//!      folded into the destination bias.
+//!    * *requant-aware range tightening* — the previous layer's requant
+//!      emits codes `< levels`, so the lane analysis only prices the
+//!      reachable prefix of each table; entries beyond it can't force the
+//!      wide lane.
+//!    Budget `0` disables all three and is byte-identical to `Full`. A
+//!    [`LossyReport`] composes a sound worst-case end-to-end bound: per
+//!    layer, each lookup contributes `eps + |scale| * mod_rep(k)` (`mod` =
+//!    max entry delta over `k` input-code steps, `k` = the code slack the
+//!    previous requant can add under the incoming sum delta, counted
+//!    exactly on its boundary table); the output layer's max per-neuron
+//!    sum is the bound.
 //!
-//! Every pass preserves the functional invariant `optimized(net) ==
-//! sim::eval(net)` bit for bit; [`OptLevel::None`] keeps the untouched 1:1
-//! lowering for A/B comparison. An [`OptReport`] with before/after op,
-//! table and lane statistics rides on the program and is surfaced through
+//! Every pass at [`OptLevel::Full`] or below preserves the functional
+//! invariant `optimized(net) == sim::eval(net)` bit for bit;
+//! [`OptLevel::None`] keeps the untouched 1:1 lowering for A/B comparison,
+//! and [`OptLevel::Lossy`] stays within its composed bound instead. An
+//! [`OptReport`] with before/after op, table and lane statistics rides on
+//! the program and is surfaced through
 //! [`crate::coordinator::ServiceStats`] and the `kanele compile` / `kanele
 //! serve` CLI.
 
 use std::collections::HashMap;
 
+use crate::fixed::Quantizer;
 use crate::netlist::{opt as netopt, Netlist};
 
 use super::program::{
-    analyze_lane, lane_bytes, CompiledProgram, FanOut, Lane, LayerPlan, LutOp, RequantPlan,
+    analyze_lane, boundaries, lane_bytes, CompiledProgram, FanOut, Lane, LayerPlan, LutOp,
+    RequantPlan, PLAN_MAX_BITS,
 };
 
 /// How much optimization runs between the netlist and the executable
@@ -64,14 +90,29 @@ pub enum OptLevel {
     /// CSE duplicate lookups, re-run the lane analysis.
     #[default]
     Full,
+    /// Everything `Full` does, plus the error-budgeted lossy passes
+    /// (ε-clustered table sharing, affine folding, requant-aware range
+    /// tightening). The budget is the max elementwise output delta any
+    /// single table substitution may introduce, in fixed-point LSBs of the
+    /// accumulator (`2^-frac_bits` units); the composed end-to-end
+    /// worst-case bound is reported in [`LossyReport`]. `Lossy(0)` is
+    /// byte-identical to `Full`.
+    Lossy(u32),
 }
 
 impl OptLevel {
+    /// Parse a CLI level: `none`/`off`, `full`/`on`, or `lossy:<budget>`
+    /// (budget = nonnegative LSB count). Anything else — including a
+    /// malformed or missing budget — is `None`; the CLI turns that into a
+    /// usage error instead of silently defaulting.
     pub fn parse(s: &str) -> Option<OptLevel> {
         match s {
             "none" | "off" => Some(OptLevel::None),
             "full" | "on" => Some(OptLevel::Full),
-            _ => None,
+            _ => s
+                .strip_prefix("lossy:")
+                .and_then(|b| b.parse::<u32>().ok())
+                .map(OptLevel::Lossy),
         }
     }
 
@@ -79,6 +120,7 @@ impl OptLevel {
         match self {
             OptLevel::None => "none",
             OptLevel::Full => "full",
+            OptLevel::Lossy(_) => "lossy",
         }
     }
 }
@@ -118,6 +160,50 @@ pub struct OptReport {
     /// proven safe for the order actually executed.
     pub i32_layers_after: usize,
     pub layers: usize,
+    /// What the lossy tier did; `Some` iff the level was
+    /// [`OptLevel::Lossy`] (present even at budget 0, where every counter
+    /// is zero and the program is byte-identical to `Full`).
+    pub lossy: Option<LossyReport>,
+}
+
+/// What the error-budgeted lossy passes did to one program — counters per
+/// pass, the bytes the budget bought vs a `Full` compile of the same
+/// netlist, and the composed sound worst-case bound on any output sum.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LossyReport {
+    /// The per-table budget (fixed-point LSBs) the level was pinned at.
+    pub budget: u32,
+    /// Tables retargeted to an ε-close representative (pure shares).
+    pub shared_tables: usize,
+    /// Largest elementwise delta any pure share actually spent (<= budget).
+    pub shared_eps: i64,
+    /// Tables replaced by `scale * rep + offset` (affine folds).
+    pub affine_folds: usize,
+    /// Largest residual any affine fold actually spent (<= budget).
+    pub affine_eps: i64,
+    /// Layers the requant-aware reachability analysis narrowed to the i32
+    /// lane that the plain (whole-table) analysis would have kept wide.
+    pub tightened_layers: usize,
+    /// `table_bytes()` of the same netlist compiled at [`OptLevel::Full`].
+    pub table_bytes_full: usize,
+    /// `table_bytes()` of this lossy program.
+    pub table_bytes_lossy: usize,
+    /// Sound bound on `|lossy output - exact output|` for any input, in
+    /// fixed-point LSBs: per-table residuals plus requant code slack,
+    /// composed layer by layer (see the module docs). 0 at budget 0.
+    pub worst_case_bound: i64,
+}
+
+impl LossyReport {
+    /// Arena-byte reduction the budget bought over [`OptLevel::Full`]
+    /// (0.0 until [`compile_with`] fills in the A/B bytes).
+    pub fn byte_reduction_vs_full(&self) -> f64 {
+        if self.table_bytes_full == 0 {
+            0.0
+        } else {
+            1.0 - self.table_bytes_lossy as f64 / self.table_bytes_full as f64
+        }
+    }
 }
 
 impl OptReport {
@@ -142,7 +228,7 @@ impl OptReport {
 
     /// One-line summary for `kanele compile` / `kanele serve` / benches.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "level {}: ops {} -> {} (-{:.1}%), tables {} refs -> {} unique, bytes {} -> {} (-{:.1}%), folded {}, dead inputs {}, dead neurons {}, cse {}, i32 lanes {}/{} -> {}/{}",
             self.level.name(),
             self.ops_before,
@@ -161,7 +247,23 @@ impl OptReport {
             self.layers,
             self.i32_layers_after,
             self.layers,
-        )
+        );
+        if let Some(l) = &self.lossy {
+            s.push_str(&format!(
+                ", lossy[budget {} lsb: shared {} (eps <= {}), affine {} (eps <= {}), tightened {}, bytes {} -> {} (-{:.1}%), worst-case bound {} lsb]",
+                l.budget,
+                l.shared_tables,
+                l.shared_eps,
+                l.affine_folds,
+                l.affine_eps,
+                l.tightened_layers,
+                l.table_bytes_full,
+                l.table_bytes_lossy,
+                100.0 * l.byte_reduction_vs_full(),
+                l.worst_case_bound,
+            ));
+        }
+        s
     }
 }
 
@@ -176,7 +278,20 @@ pub(super) fn compile_with(net: &Netlist, level: OptLevel) -> CompiledProgram {
             prog.opt = Some(identity_report(&prog));
             prog
         }
-        OptLevel::Full => compile_full(net),
+        OptLevel::Full => compile_pipeline(net, None),
+        OptLevel::Lossy(budget) => {
+            // the A/B baseline in the report is exact, not estimated: price
+            // the same netlist at Full (cheap — compilation is O(table
+            // entries)) and record both arenas side by side
+            let full_bytes = compile_pipeline(net, None).table_bytes();
+            let mut prog = compile_pipeline(net, Some(budget));
+            let lossy_bytes = prog.table_bytes();
+            if let Some(l) = prog.opt.as_mut().and_then(|r| r.lossy.as_mut()) {
+                l.table_bytes_full = full_bytes;
+                l.table_bytes_lossy = lossy_bytes;
+            }
+            prog
+        }
     }
 }
 
@@ -199,18 +314,212 @@ fn identity_report(prog: &CompiledProgram) -> OptReport {
 }
 
 /// One CSE group: every surviving lookup of a layer that reads the same
-/// input through the same table content. The first destination gets the
-/// [`LutOp`]; the rest become [`FanOut`] entries.
+/// input through the same table content at the same accumulate scale. The
+/// first destination gets the [`LutOp`]; the rest become [`FanOut`]
+/// entries.
 struct Group {
     input: u32,
-    /// Intern id into the table pool (content identity).
+    /// Intern id into the table pool (content identity — under the lossy
+    /// tier, the *representative's* id).
     table: u32,
+    /// Accumulate multiplier ([`LutOp::scale`]); 1 except for the lossy
+    /// tier's affine folds.
+    scale: i32,
     /// Accumulator targets in occurrence order; a neuron appearing twice
     /// receives the gathered value twice (within-neuron duplicate).
     dsts: Vec<u32>,
 }
 
-fn compile_full(net: &Netlist) -> CompiledProgram {
+/// The lossy tier's verdict on one interned table content: execute
+/// `scale * pool[rep][c]` and fold `offset` into the destination bias,
+/// introducing at most `eps` LSBs of output delta per lookup. The identity
+/// substitution (`rep` = own id, scale 1, offset 0, eps 0) is what `Full`
+/// and every out-of-budget table get.
+#[derive(Clone, Copy)]
+struct Subst {
+    rep: u32,
+    scale: i64,
+    offset: i64,
+    eps: i64,
+}
+
+/// Affine-fold slope cap: keeps `scale` comfortably inside [`LutOp::scale`]
+/// (i32) and the overflow guards' headroom. Real near-affine spline pairs
+/// have small slopes; anything larger is noise fitting.
+const MAX_AFFINE_SCALE: i64 = 1 << 20;
+
+/// Runtime headroom guard for scaled gathers in the wide lane: every
+/// `|scale * rep[c]|` and `|scale * rep[c] + offset|` accepted by the fold
+/// stays below this, so the executor's i64 multiply-accumulate cannot wrap
+/// even before the lane analysis prices the sums.
+const AFFINE_ABS_CAP: i64 = i64::MAX / 4;
+
+/// Exact elementwise max |a - b| when it fits the budget, else None.
+fn max_abs_delta(a: &[i64], b: &[i64], budget: i64) -> Option<i64> {
+    debug_assert_eq!(a.len(), b.len());
+    let mut worst = 0i64;
+    for (&x, &y) in a.iter().zip(b) {
+        let d = (x as i128 - y as i128).unsigned_abs();
+        if d > budget as u128 {
+            return None;
+        }
+        worst = worst.max(d as i64);
+    }
+    Some(worst)
+}
+
+/// Greedy canonical-representative clustering for one freshly interned
+/// table: try a pure ε-share against every same-length representative
+/// first (cheapest at runtime — plain gather), then an affine fold. Reps
+/// never chain (ε-matched tables don't become reps), so every accepted
+/// substitution is within one `budget` of the content it executes.
+fn lossy_subst(t: &[i64], id: u32, pool: &[Vec<i64>], reps: &[u32], budget: i64) -> Subst {
+    if budget > 0 {
+        for &r in reps {
+            let rt = &pool[r as usize];
+            if rt.len() != t.len() {
+                continue;
+            }
+            if let Some(eps) = max_abs_delta(t, rt, budget) {
+                return Subst { rep: r, scale: 1, offset: 0, eps };
+            }
+        }
+        for &r in reps {
+            let rt = &pool[r as usize];
+            if rt.len() == t.len() {
+                if let Some(sub) = affine_fit(t, rt, r, budget) {
+                    return sub;
+                }
+            }
+        }
+    }
+    Subst { rep: id, scale: 1, offset: 0, eps: 0 }
+}
+
+/// Fit `t[c] ≈ a * r[c] + b` within `budget`: least-squares slope rounded
+/// to the nearest integers (±1), optimal intercept `b = (dmax + dmin) / 2`
+/// over the residuals `d[c] = t[c] - a*r[c]`, exact worst-case residual
+/// `eps = ceil((dmax - dmin) / 2)`. All candidate arithmetic runs in i128;
+/// acceptance additionally proves every runtime product/sum stays under
+/// [`AFFINE_ABS_CAP`], so the executor cannot overflow on *any* address —
+/// reachable or not.
+fn affine_fit(t: &[i64], r: &[i64], rep: u32, budget: i64) -> Option<Subst> {
+    let n = t.len() as i128;
+    if n == 0 {
+        return None;
+    }
+    let (mut sr, mut st, mut srr, mut srt) = (0i128, 0i128, 0i128, 0i128);
+    for (&x, &y) in r.iter().zip(t) {
+        sr += x as i128;
+        st += y as i128;
+        srr += (x as i128) * (x as i128);
+        srt += (x as i128) * (y as i128);
+    }
+    let den = n * srr - sr * sr;
+    if den == 0 {
+        return None; // constant representative: nothing to scale against
+    }
+    let num = n * srt - sr * st;
+    // round-to-nearest integer slope, plus its neighbors: the integer
+    // optimum is within 1 of the real-valued LS slope for the minmax
+    // objective too often enough to be worth the two extra exact checks
+    let a0 = {
+        let (q, rem) = (num / den, num % den);
+        if rem.abs() * 2 >= den.abs() {
+            q + if (num < 0) != (den < 0) { -1 } else { 1 }
+        } else {
+            q
+        }
+    };
+    for a in [a0, a0 - 1, a0 + 1] {
+        // a == 1 with offset is a valid shift fold; a == 0 would mean a
+        // constant table, which constant folding already owns
+        if a == 0 || a.unsigned_abs() > MAX_AFFINE_SCALE as u128 {
+            continue;
+        }
+        let (mut dmin, mut dmax) = (i128::MAX, i128::MIN);
+        let mut prod_ok = true;
+        for (&x, &y) in r.iter().zip(t) {
+            let p = a * x as i128;
+            if p.unsigned_abs() > AFFINE_ABS_CAP as u128 {
+                prod_ok = false;
+                break;
+            }
+            let d = y as i128 - p;
+            dmin = dmin.min(d);
+            dmax = dmax.max(d);
+        }
+        if !prod_ok {
+            continue;
+        }
+        let b = (dmax + dmin) >> 1; // floor((dmax+dmin)/2): eps below is exact
+        let eps = (dmax - b).max(b - dmin);
+        if eps > budget as i128 || b.unsigned_abs() > AFFINE_ABS_CAP as u128 {
+            continue;
+        }
+        return Some(Subst {
+            rep,
+            scale: a as i64,
+            offset: b as i64,
+            eps: eps as i64,
+        });
+    }
+    None
+}
+
+/// Max |t[i] - t[j]| over |i - j| <= k: how much a table can amplify `k`
+/// codes of upstream slack. Exact O(len * k) for small k; the global
+/// spread (still sound, possibly loose) caps the cost for large k.
+fn table_mod(t: &[i64], k: usize) -> i64 {
+    if k == 0 || t.len() < 2 {
+        return 0;
+    }
+    let k = k.min(t.len() - 1);
+    if k > 64 {
+        let (lo, hi) =
+            t.iter().fold((i64::MAX, i64::MIN), |(a, b), &v| (a.min(v), b.max(v)));
+        return hi.saturating_sub(lo);
+    }
+    let mut m = 0u128;
+    for i in 0..t.len() {
+        for j in i + 1..=(i + k).min(t.len() - 1) {
+            m = m.max((t[i] as i128 - t[j] as i128).unsigned_abs());
+        }
+    }
+    m.min(i64::MAX as u128) as i64
+}
+
+/// How many codes a requantized sum can move when the sum itself is off by
+/// at most `delta` LSBs: the max number of code boundaries inside any
+/// window of width `2 * delta` (a perturbed sum stays within `±delta` of
+/// the true one, and the code difference is the boundary count between
+/// them). Exact via the plan's boundary table; quantizers too wide for an
+/// integer plan get the trivial `levels - 1` bound.
+fn requant_slack(q: &Quantizer, frac_bits: u32, delta: i64) -> usize {
+    if delta == 0 {
+        return 0;
+    }
+    let trivial = (q.levels() as usize).saturating_sub(1);
+    if q.bits > PLAN_MAX_BITS {
+        return trivial;
+    }
+    match boundaries(q, frac_bits) {
+        Some(b) => {
+            let window = 2 * delta as i128;
+            let (mut best, mut i) = (0usize, 0usize);
+            for j in 0..b.len() {
+                while (b[j] as i128 - b[i] as i128) > window {
+                    i += 1;
+                }
+                best = best.max(j - i + 1);
+            }
+            best.min(trivial)
+        }
+        None => trivial,
+    }
+}
+
+fn compile_pipeline(net: &Netlist, lossy: Option<u32>) -> CompiledProgram {
     // "before" geometry: what the 1:1 lowering would have cost, priced with
     // the same per-layer lane analysis it would have run
     let ops_before = net.n_luts();
@@ -231,12 +540,21 @@ fn compile_full(net: &Netlist) -> CompiledProgram {
     let folded_edges = netopt::optimize(&mut work).constant_tables_folded;
     let (dead_inputs, dead_neurons, input_map) = eliminate_dead(&mut work);
 
-    // passes 3 + 4 + 5 happen at lowering: intern table contents, group
-    // same-(input, table) lookups, re-analyze lanes in the op order the
-    // executor will actually run, and materialize each content at most once
-    // per arena
+    // passes 3 + 4 + 5 (+ 6 under a lossy budget) happen at lowering:
+    // intern table contents, cluster each new content onto an ε- or
+    // affine-close representative when the budget allows, group
+    // same-(input, table, scale) lookups, re-analyze lanes in the op order
+    // the executor will actually run (pricing only requant-reachable
+    // entries under the lossy tier), and materialize each representative
+    // at most once per arena
+    let budget = lossy.unwrap_or(0) as i64;
     let mut pool: Vec<Vec<i64>> = Vec::new();
     let mut intern: HashMap<Vec<i64>, u32> = HashMap::new();
+    // per intern id: what to execute instead (identity outside the budget)
+    let mut subst: Vec<Subst> = Vec::new();
+    // canonical representatives, in pool order (never ε-matched contents)
+    let mut reps: Vec<u32> = Vec::new();
+    let mut lossy_report = lossy.map(|b| LossyReport { budget: b, ..Default::default() });
     let mut tables32: Vec<i32> = Vec::new();
     let mut tables64: Vec<i64> = Vec::new();
     let mut slot32: HashMap<u32, u32> = HashMap::new();
@@ -247,13 +565,23 @@ fn compile_full(net: &Netlist) -> CompiledProgram {
     let mut layers: Vec<LayerPlan> = Vec::with_capacity(work.layers.len());
     let mut max_width = 1usize;
     let (mut tables_total, mut cse_fanouts) = (0usize, 0usize);
+    // worst-case bound composition (budget > 0 only): codes entering the
+    // current layer may be off by `slack_in` steps, sums leaving the last
+    // processed layer by `layer_delta` LSBs
+    let mut slack_in = 0usize;
+    let mut prev_levels: Option<usize> = None;
+    let mut layer_delta = 0i64;
 
     for layer in &work.layers {
         let ops_start = ops.len();
         let fan_start = fanouts.len();
         let bias_off = biases.len();
         let mut groups: Vec<Group> = Vec::new();
-        let mut by_key: HashMap<(u32, u32), usize> = HashMap::new();
+        let mut by_key: HashMap<(u32, u32, i32), usize> = HashMap::new();
+        let mut eps_sum: Vec<i64> = vec![0; layer.d_out];
+        // per-rep amplification of the incoming code slack, cached (the
+        // slack is fixed for the whole layer)
+        let mut mod_cache: HashMap<u32, i64> = HashMap::new();
         for (q, neuron) in layer.neurons.iter().enumerate() {
             biases.push(neuron.bias);
             for lut in &neuron.luts {
@@ -266,17 +594,51 @@ fn compile_full(net: &Netlist) -> CompiledProgram {
                         let id = pool.len() as u32;
                         pool.push(lut.table.clone());
                         intern.insert(lut.table.clone(), id);
+                        let sub = lossy_subst(&lut.table, id, &pool, &reps, budget);
+                        if sub.rep == id {
+                            reps.push(id);
+                        } else if let Some(l) = lossy_report.as_mut() {
+                            if sub.scale == 1 && sub.offset == 0 {
+                                l.shared_tables += 1;
+                                l.shared_eps = l.shared_eps.max(sub.eps);
+                            } else {
+                                l.affine_folds += 1;
+                                l.affine_eps = l.affine_eps.max(sub.eps);
+                            }
+                        }
+                        subst.push(sub);
                         id
                     }
                 };
-                let key = (lut.input as u32, id);
+                let sub = subst[id as usize];
+                if sub.offset != 0 {
+                    // the affine fold's intercept is one more constant
+                    // operand of the destination neuron
+                    biases[bias_off + q] += sub.offset;
+                }
+                if budget > 0 {
+                    // this lookup's worst-case contribution to neuron q:
+                    // its own residual plus the (scaled) amplification of
+                    // the incoming code slack through the executed table
+                    let amp = *mod_cache.entry(sub.rep).or_insert_with(|| {
+                        let t = &pool[sub.rep as usize];
+                        let reach = prev_levels.unwrap_or(t.len()).min(t.len());
+                        table_mod(&t[..reach], slack_in)
+                    });
+                    let a = sub.scale.unsigned_abs().min(i64::MAX as u64) as i64;
+                    eps_sum[q] = eps_sum[q]
+                        .saturating_add(sub.eps)
+                        .saturating_add(amp.saturating_mul(a));
+                }
+                let key = (lut.input as u32, sub.rep, sub.scale as i32);
                 match by_key.get(&key) {
                     Some(&g) => groups[g].dsts.push(q as u32),
                     None => {
                         by_key.insert(key, groups.len());
                         groups.push(Group {
                             input: lut.input as u32,
-                            table: id,
+                            table: sub.rep,
+                            scale: sub.scale as i32,
                             dsts: vec![q as u32],
                         });
                     }
@@ -284,13 +646,31 @@ fn compile_full(net: &Netlist) -> CompiledProgram {
             }
         }
         cse_fanouts += groups.iter().map(|g| g.dsts.len() - 1).sum::<usize>();
-        let lane = analyze_lane_groups(&biases[bias_off..], &groups, &pool);
+        // requant-aware range tightening: codes produced by the previous
+        // layer's requant are < its level count, so entries past that
+        // prefix are unreachable and must not force the wide lane. Sound
+        // only for interior layers (external codes are arbitrary); gated
+        // on budget > 0 so Lossy(0) stays byte-identical to Full.
+        let reach = if budget > 0 { prev_levels } else { None };
+        let lane = analyze_lane_groups(&biases[bias_off..], &groups, &pool, reach);
+        if reach.is_some()
+            && lane == Lane::I32
+            && analyze_lane_groups(&biases[bias_off..], &groups, &pool, None) == Lane::I64
+        {
+            if let Some(l) = lossy_report.as_mut() {
+                l.tightened_layers += 1;
+            }
+        }
         for g in &groups {
             let t = &pool[g.table as usize];
             let off = match lane {
                 Lane::I32 => *slot32.entry(g.table).or_insert_with(|| {
                     let off = tables32.len() as u32;
-                    // lossless: the group analysis proved every entry fits
+                    // lossless for every reachable entry: the group
+                    // analysis proved it fits. Under range tightening an
+                    // *unreachable* entry may wrap here — it is never
+                    // gathered, and any layer that could reach it fails
+                    // its own analysis and reads the exact i64 slot
                     tables32.extend(t.iter().map(|&v| v as i32));
                     off
                 }),
@@ -306,6 +686,7 @@ fn compile_full(net: &Netlist) -> CompiledProgram {
                 addr_mask: (t.len() - 1) as u32,
                 input: g.input,
                 neuron: g.dsts[0],
+                scale: g.scale,
             });
             for &q in &g.dsts[1..] {
                 fanouts.push(FanOut { op: op_local, neuron: q });
@@ -321,14 +702,43 @@ fn compile_full(net: &Netlist) -> CompiledProgram {
             fanout: fan_start..fanouts.len(),
             requant: layer.requant.map(|q| RequantPlan::build(q, work.frac_bits)),
         });
+        // propagate the bound: this layer's worst per-neuron sum delta,
+        // then (through its requant, if any) the code slack the next
+        // layer's tables will see
+        layer_delta = eps_sum.iter().copied().max().unwrap_or(0);
+        match &layer.requant {
+            Some(q) => {
+                slack_in = if budget > 0 {
+                    requant_slack(q, work.frac_bits, layer_delta)
+                } else {
+                    0
+                };
+                prev_levels = Some(q.levels() as usize);
+            }
+            None => {
+                slack_in = 0;
+                prev_levels = None;
+            }
+        }
     }
     assert!(
         tables64.len() <= u32::MAX as usize && tables32.len() <= u32::MAX as usize,
         "table arena exceeds u32 addressing"
     );
 
+    let table_bytes_after = tables32.len() * std::mem::size_of::<i32>()
+        + tables64.len() * std::mem::size_of::<i64>();
+    if let Some(l) = lossy_report.as_mut() {
+        // the output layer has no requant, so its sum delta IS the
+        // end-to-end bound; compile_with fills in the Full-compile bytes
+        l.worst_case_bound = layer_delta;
+        l.table_bytes_lossy = table_bytes_after;
+    }
     let report = OptReport {
-        level: OptLevel::Full,
+        level: match lossy {
+            Some(b) => OptLevel::Lossy(b),
+            None => OptLevel::Full,
+        },
         ops_before,
         ops_after: ops.len(),
         folded_edges,
@@ -338,11 +748,11 @@ fn compile_full(net: &Netlist) -> CompiledProgram {
         tables_total,
         tables_unique: slot32.len() + slot64.len(),
         table_bytes_before,
-        table_bytes_after: tables32.len() * std::mem::size_of::<i32>()
-            + tables64.len() * std::mem::size_of::<i64>(),
+        table_bytes_after,
         i32_layers_before,
         i32_layers_after: layers.iter().filter(|l| l.lane == Lane::I32).count(),
         layers: layers.len(),
+        lossy: lossy_report,
     };
     CompiledProgram {
         name: work.name.clone(),
@@ -448,7 +858,19 @@ fn renumber_inputs(layer: &mut crate::netlist::LayerNet, new_d_in: usize, remap:
 /// produces. Sound for the same reason as the 1:1 analysis — the reachable
 /// accumulator after k contributions lies in `[bias + Σ min, bias + Σ max]`
 /// over the first k contributions in this exact order.
-fn analyze_lane_groups(biases: &[i64], groups: &[Group], pool: &[Vec<i64>]) -> Lane {
+///
+/// `reach` (the lossy tier's requant-aware tightening) restricts the
+/// priced entries to each table's first `reach` — the only addresses the
+/// previous layer's requant can emit. Group scales multiply the interval
+/// endpoints (every per-entry product then provably fits the chosen lane,
+/// so the executor's in-lane multiply cannot wrap); saturating i64
+/// arithmetic can only widen intervals, conservatively selecting i64.
+fn analyze_lane_groups(
+    biases: &[i64],
+    groups: &[Group],
+    pool: &[Vec<i64>],
+    reach: Option<usize>,
+) -> Lane {
     const LO: i64 = i32::MIN as i64;
     const HI: i64 = i32::MAX as i64;
     if biases.iter().any(|&b| b < LO || b > HI) {
@@ -458,18 +880,28 @@ fn analyze_lane_groups(biases: &[i64], groups: &[Group], pool: &[Vec<i64>]) -> L
     let mut hi = biases.to_vec();
     for g in groups {
         let t = &pool[g.table as usize];
+        let t = match reach {
+            Some(r) => &t[..r.min(t.len())],
+            None => &t[..],
+        };
         let (tlo, thi) =
             t.iter().fold((i64::MAX, i64::MIN), |(a, b), &v| (a.min(v), b.max(v)));
         if tlo > thi {
             continue; // empty table: contributes nothing
         }
-        if tlo < LO || thi > HI {
+        let a = g.scale as i64;
+        let (slo, shi) = if a >= 0 {
+            (tlo.saturating_mul(a), thi.saturating_mul(a))
+        } else {
+            (thi.saturating_mul(a), tlo.saturating_mul(a))
+        };
+        if slo < LO || shi > HI {
             return Lane::I64;
         }
         for &q in &g.dsts {
             let q = q as usize;
-            lo[q] = lo[q].saturating_add(tlo);
-            hi[q] = hi[q].saturating_add(thi);
+            lo[q] = lo[q].saturating_add(slo);
+            hi[q] = hi[q].saturating_add(shi);
             if lo[q] < LO || hi[q] > HI {
                 return Lane::I64;
             }
@@ -481,7 +913,7 @@ fn analyze_lane_groups(biases: &[i64], groups: &[Group], pool: &[Vec<i64>]) -> L
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::checkpoint::testutil::{prunify, synthetic};
+    use crate::checkpoint::testutil::{nearify, prunify, synthetic};
     use crate::checkpoint::Checkpoint;
     use crate::engine::{self, Executor};
     use crate::fixed::Quantizer;
@@ -1082,6 +1514,298 @@ mod tests {
         assert!(p_full.input_map().is_none());
         let r = p_full.opt_report().unwrap();
         assert_eq!(r.folded_edges + r.dead_inputs + r.dead_neurons + r.cse_fanouts, 0);
+    }
+
+    // -- lossy tier -------------------------------------------------------
+
+    #[test]
+    fn opt_level_parse_accepts_lossy_budgets_and_rejects_malformed() {
+        assert_eq!(OptLevel::parse("full"), Some(OptLevel::Full));
+        assert_eq!(OptLevel::parse("none"), Some(OptLevel::None));
+        assert_eq!(OptLevel::parse("lossy:0"), Some(OptLevel::Lossy(0)));
+        assert_eq!(OptLevel::parse("lossy:16"), Some(OptLevel::Lossy(16)));
+        for bad in ["lossy", "lossy:", "lossy:x", "lossy:-1", "lossy:1.5", "medium", ""] {
+            assert_eq!(OptLevel::parse(bad), None, "{bad:?} must be rejected");
+        }
+        assert_eq!(OptLevel::Lossy(7).name(), "lossy");
+    }
+
+    #[test]
+    fn lossy_zero_is_byte_identical_to_full() {
+        // the acceptance contract: budget 0 disables every lossy pass, so
+        // the program must match a Full compile in every byte of geometry —
+        // arenas, ops (scales included), biases, fanouts, lanes, maps
+        for seed in [0xACCE55u64, 42, 7] {
+            let mut ck = synthetic(&[12, 8, 6, 4], &[5, 4, 4, 6], seed);
+            prunify(&mut ck, 35, 25, seed ^ 0xF00);
+            nearify(&mut ck, 30, 8, seed ^ 0xBEE);
+            let net = net_of(&ck);
+            let full = compile_with(&net, OptLevel::Full);
+            let zero = compile_with(&net, OptLevel::Lossy(0));
+            assert_eq!(full.tables32(), zero.tables32());
+            assert_eq!(full.tables64(), zero.tables64());
+            assert_eq!(full.ops(), zero.ops());
+            assert_eq!(full.biases(), zero.biases());
+            assert_eq!(full.fanouts(), zero.fanouts());
+            assert_eq!(full.input_map(), zero.input_map());
+            assert_eq!(full.d_in(), zero.d_in());
+            assert_eq!(full.d_out(), zero.d_out());
+            assert_eq!(full.max_width(), zero.max_width());
+            assert_eq!(full.layers().len(), zero.layers().len());
+            for (a, b) in full.layers().iter().zip(zero.layers()) {
+                assert_eq!(a.d_in, b.d_in);
+                assert_eq!(a.d_out, b.d_out);
+                assert_eq!(a.ops, b.ops);
+                assert_eq!(a.bias_off, b.bias_off);
+                assert_eq!(a.lane, b.lane);
+                assert_eq!(a.fanout, b.fanout);
+                assert_eq!(a.requant.is_some(), b.requant.is_some());
+            }
+            let l = zero.opt_report().unwrap().lossy.as_ref().unwrap();
+            assert_eq!(l.budget, 0);
+            assert_eq!(l.shared_tables + l.affine_folds + l.tightened_layers, 0);
+            assert_eq!(l.worst_case_bound, 0);
+            assert_eq!(l.table_bytes_full, l.table_bytes_lossy);
+            assert_eq!(l.byte_reduction_vs_full(), 0.0);
+        }
+    }
+
+    #[test]
+    fn epsilon_clustering_shares_near_tables_within_budget() {
+        // two tables differing elementwise by <= 6: budget 6 shares one
+        // representative (one arena slot), budget 5 must not; the measured
+        // output delta never exceeds the reported bound
+        let base: Vec<i64> = (0..8).map(|i| i * 400 - 1500).collect();
+        let jit = [3i64, -6, 5, 0, 2, -1, 6, -4];
+        let near: Vec<i64> = base.iter().zip(jit).map(|(v, j)| v + j).collect();
+        let neurons = vec![NeuronNet {
+            luts: vec![
+                LutInst { input: 0, table: base.clone(), out_width: 12 },
+                LutInst { input: 1, table: near.clone(), out_width: 12 },
+            ],
+            bias: 0,
+            depth: adder_depth(2, 2),
+            sum_width: 14,
+        }];
+        let net = Netlist {
+            name: "eps-cluster".into(),
+            layers: vec![LayerNet {
+                d_in: 2,
+                d_out: 1,
+                in_bits: 3,
+                out_bits: 8,
+                neurons,
+                requant: None,
+                depth: 1,
+            }],
+            n_add: 2,
+            frac_bits: 12,
+            domain: (-4.0, 4.0),
+        };
+        let full = compile_with(&net, OptLevel::Full);
+        let shared = compile_with(&net, OptLevel::Lossy(6));
+        assert!(shared.table_bytes() < full.table_bytes());
+        let l = shared.opt_report().unwrap().lossy.clone().unwrap();
+        assert_eq!(l.shared_tables, 1, "{l:?}");
+        assert_eq!(l.shared_eps, 6, "exact max elementwise delta");
+        assert_eq!(l.affine_folds, 0);
+        assert_eq!(l.worst_case_bound, 6, "one substituted lookup, slack 0");
+        assert_eq!(l.table_bytes_full, full.table_bytes());
+        assert_eq!(l.table_bytes_lossy, shared.table_bytes());
+        // one LSB under the required budget: nothing may merge
+        let apart = compile_with(&net, OptLevel::Lossy(5));
+        assert_eq!(apart.table_bytes(), full.table_bytes());
+        assert_eq!(apart.opt_report().unwrap().lossy.as_ref().unwrap().shared_tables, 0);
+        // measured end-to-end delta within the bound
+        let batch: Vec<Vec<u32>> =
+            (0..64).map(|i| vec![(i % 8) as u32, (i / 8) as u32]).collect();
+        let want = engine::run_batch(&full, &batch);
+        let got = engine::run_batch(&shared, &batch);
+        let worst = want
+            .iter()
+            .flatten()
+            .zip(got.iter().flatten())
+            .map(|(a, b)| (a - b).abs())
+            .max()
+            .unwrap();
+        assert!(worst <= l.worst_case_bound, "measured {worst} > bound {}", l.worst_case_bound);
+    }
+
+    #[test]
+    fn affine_folding_replaces_scaled_tables_exactly() {
+        // t2 = 3*t1 + 7 exactly: even budget 1 folds it (residual 0) —
+        // scale 3 on the op, +7 into the bias, outputs bit-exact with sim
+        let t1: Vec<i64> = (0..8).map(|i| i * 123 - 400).collect();
+        let t2: Vec<i64> = t1.iter().map(|v| 3 * v + 7).collect();
+        let neurons = vec![
+            NeuronNet {
+                luts: vec![LutInst { input: 0, table: t1.clone(), out_width: 12 }],
+                bias: 1,
+                depth: 0,
+                sum_width: 13,
+            },
+            NeuronNet {
+                luts: vec![LutInst { input: 1, table: t2.clone(), out_width: 13 }],
+                bias: -2,
+                depth: 0,
+                sum_width: 14,
+            },
+        ];
+        let net = Netlist {
+            name: "affine-fold".into(),
+            layers: vec![LayerNet {
+                d_in: 2,
+                d_out: 2,
+                in_bits: 3,
+                out_bits: 8,
+                neurons,
+                requant: None,
+                depth: 1,
+            }],
+            n_add: 2,
+            frac_bits: 12,
+            domain: (-4.0, 4.0),
+        };
+        let full = compile_with(&net, OptLevel::Full);
+        let lossy = compile_with(&net, OptLevel::Lossy(1));
+        let l = lossy.opt_report().unwrap().lossy.clone().unwrap();
+        assert_eq!(l.affine_folds, 1, "{l:?}");
+        assert_eq!(l.affine_eps, 0, "the pair is exactly affine");
+        assert_eq!(l.worst_case_bound, 0);
+        assert!(lossy.table_bytes() < full.table_bytes());
+        assert!(lossy.ops().iter().any(|o| o.scale == 3), "{:?}", lossy.ops());
+        assert_eq!(lossy.biases()[1], -2 + 7, "intercept folds into the bias");
+        let batch: Vec<Vec<u32>> =
+            (0..64).map(|i| vec![(i % 8) as u32, (i / 8) as u32]).collect();
+        assert_eq!(engine::run_batch(&lossy, &batch), sim::eval_batch(&net, &batch));
+        assert_eq!(engine::run_batch(&full, &batch), sim::eval_batch(&net, &batch));
+    }
+
+    #[test]
+    fn requant_tightening_narrows_unreachable_wide_entries() {
+        // layer 0 requants to 2-bit codes (4 levels); layer 1's 8-entry
+        // table hides a 2^40 entry at address 5 — unreachable. Full prices
+        // the whole table and keeps i64; Lossy(1) prices codes < 4 only
+        // and narrows, staying bit-exact (no substitution fires)
+        let l0 = vec![NeuronNet {
+            luts: vec![LutInst {
+                input: 0,
+                table: (0..8).map(|i| i * 9 - 31).collect(),
+                out_width: 8,
+            }],
+            bias: 0,
+            depth: 0,
+            sum_width: 9,
+        }];
+        let mut wild: Vec<i64> = (0..8).map(|i| i * 100 - 350).collect();
+        wild[5] = 1 << 40;
+        let l1 = vec![NeuronNet {
+            luts: vec![LutInst { input: 0, table: wild, out_width: 42 }],
+            bias: 0,
+            depth: 0,
+            sum_width: 43,
+        }];
+        let net = Netlist {
+            name: "tighten".into(),
+            layers: vec![
+                LayerNet {
+                    d_in: 1,
+                    d_out: 1,
+                    in_bits: 3,
+                    out_bits: 2,
+                    neurons: l0,
+                    requant: Some(Quantizer::new(2, -4.0, 4.0)),
+                    depth: 0,
+                },
+                LayerNet {
+                    d_in: 1,
+                    d_out: 1,
+                    in_bits: 3,
+                    out_bits: 8,
+                    neurons: l1,
+                    requant: None,
+                    depth: 0,
+                },
+            ],
+            n_add: 2,
+            frac_bits: 12,
+            domain: (-4.0, 4.0),
+        };
+        let full = compile_with(&net, OptLevel::Full);
+        let lossy = compile_with(&net, OptLevel::Lossy(1));
+        assert_eq!(full.layers()[1].lane, Lane::I64);
+        assert_eq!(lossy.layers()[1].lane, Lane::I32, "unreachable entry must not widen");
+        let l = lossy.opt_report().unwrap().lossy.clone().unwrap();
+        assert_eq!(l.tightened_layers, 1, "{l:?}");
+        assert_eq!(l.worst_case_bound, 0, "tightening is exact");
+        assert!(lossy.table_bytes() < full.table_bytes());
+        let batch: Vec<Vec<u32>> = (0..8).map(|i| vec![i as u32]).collect();
+        let want = sim::eval_batch(&net, &batch);
+        assert_eq!(engine::run_batch(&full, &batch), want);
+        assert_eq!(engine::run_batch(&lossy, &batch), want);
+    }
+
+    #[test]
+    fn prop_lossy_budgets_monotone_and_within_bound() {
+        // random prunified + nearified checkpoints, budgets 0 < b1 < b2:
+        // bytes never grow with the budget, Lossy(0) == Full on outputs,
+        // and the measured end-to-end delta respects the composed bound
+        prop::check("lossy-budget-sound", 20, |g| {
+            let n_layers = g.usize_in(1, 3);
+            let mut dims = vec![g.usize_in(2, 6)];
+            let mut bits = vec![g.usize_in(2, 5) as u32];
+            for _ in 0..n_layers {
+                dims.push(g.usize_in(1, 6));
+                bits.push(g.usize_in(2, 6) as u32);
+            }
+            let seed = g.rng().next_u64();
+            let mut ck = synthetic(&dims, &bits, seed);
+            prunify(&mut ck, g.usize_in(0, 40), g.usize_in(0, 30), seed ^ 0xD1CE);
+            nearify(&mut ck, g.usize_in(0, 70), g.usize_in(1, 12) as i64, seed ^ 0xA11);
+            let net = net_of(&ck);
+            let full = compile_with(&net, OptLevel::Full);
+            let n = g.usize_in(1, 24);
+            let batch: Vec<Vec<u32>> = (0..n)
+                .map(|_| {
+                    (0..dims[0]).map(|_| g.rng().below(1u64 << bits[0]) as u32).collect()
+                })
+                .collect();
+            let want = engine::run_batch(&full, &batch);
+            let budgets =
+                [0u32, g.usize_in(1, 8) as u32, g.usize_in(16, 48) as u32];
+            let mut prev_bytes = usize::MAX;
+            for &b in &budgets {
+                let p = compile_with(&net, OptLevel::Lossy(b));
+                if p.table_bytes() > full.table_bytes() {
+                    return Err(format!("budget {b} grew the arena (dims {dims:?} seed {seed})"));
+                }
+                if p.table_bytes() > prev_bytes {
+                    return Err(format!(
+                        "bytes not monotone at budget {b} (dims {dims:?} seed {seed})"
+                    ));
+                }
+                prev_bytes = p.table_bytes();
+                let l = p.opt_report().unwrap().lossy.clone().unwrap();
+                let got = engine::run_batch(&p, &batch);
+                if b == 0 && got != want {
+                    return Err(format!("Lossy(0) != Full (dims {dims:?} seed {seed})"));
+                }
+                let worst = want
+                    .iter()
+                    .flatten()
+                    .zip(got.iter().flatten())
+                    .map(|(x, y)| (x - y).abs())
+                    .max()
+                    .unwrap_or(0);
+                if worst > l.worst_case_bound {
+                    return Err(format!(
+                        "measured delta {worst} > bound {} at budget {b} (dims {dims:?} seed {seed})",
+                        l.worst_case_bound
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -53,6 +53,17 @@ pub struct LutOp {
     pub input: u32,
     /// Output neuron index this op accumulates into.
     pub neuron: u32,
+    /// Accumulate multiplier: the gathered entry is scaled by this before
+    /// the add (`sum += scale * table[code]`). `1` for every op the 1:1
+    /// lowering and [`OptLevel::Full`] emit; values != 1 are produced only
+    /// by the lossy tier's affine table folding
+    /// ([`super::optim::OptLevel::Lossy`]), where a table `t2 ~= a*t1 + b`
+    /// is replaced by the representative `t1`, `scale = a`, and `b` folded
+    /// into the neuron bias. Every reachable product is proven in-lane by
+    /// the compile-time range analysis. (The frozen
+    /// [`super::exec::scalar_ref`] predates this field and only ever runs
+    /// None/Full programs, where it is always 1.)
+    pub scale: i32,
 }
 
 /// Accumulator/table lane a layer executes in, chosen at compile time by
@@ -188,6 +199,7 @@ impl CompiledProgram {
                         addr_mask: (lut.table.len() - 1) as u32,
                         input: lut.input as u32,
                         neuron: q as u32,
+                        scale: 1,
                     });
                 }
             }
@@ -348,10 +360,39 @@ pub struct InternStats {
 /// the executor addresses tables absolutely, exactly as it already does
 /// for hash-consed single-program arenas.
 pub fn intern_tables(progs: &[&CompiledProgram]) -> (Vec<CompiledProgram>, InternStats) {
+    intern_tables_with(progs, 0)
+}
+
+/// [`intern_tables`] under an error budget: on an exact-content miss, a
+/// table may also land on an already-interned slot of the same lane and
+/// length whose elementwise max delta fits `budget` (fixed-point LSBs) —
+/// the cross-tenant form of the lossy tier's ε-clustering
+/// ([`super::optim::OptLevel::Lossy`]). Only `scale == 1` ops ε-match
+/// (a scaled op's delta would be amplified by `|scale|`, busting the
+/// per-table budget); scaled ops intern exactly. `budget == 0` is
+/// byte-identical to [`intern_tables`]. Each program's compile-time
+/// `worst_case_bound` is *not* recomputed here — ε-sharing respects the
+/// same per-table budget, so per-table deltas stay within the level the
+/// registry pinned, but the composed end-to-end figure in a program's
+/// [`super::optim::LossyReport`] describes its pre-intern arena.
+pub fn intern_tables_lossy(
+    progs: &[&CompiledProgram],
+    budget: u32,
+) -> (Vec<CompiledProgram>, InternStats) {
+    intern_tables_with(progs, budget)
+}
+
+fn intern_tables_with(progs: &[&CompiledProgram], budget: u32) -> (Vec<CompiledProgram>, InternStats) {
     let mut arena64: Vec<i64> = Vec::new();
     let mut arena32: Vec<i32> = Vec::new();
     let mut slot64: HashMap<Vec<i64>, u32> = HashMap::new();
     let mut slot32: HashMap<Vec<i32>, u32> = HashMap::new();
+    // ε-scan index: interned slots by table length, per lane (only the
+    // canonical, first-interned slots are listed — ε-matches memoize into
+    // the slot maps but never become match targets themselves, so every
+    // table lands within `budget` of a *representative*, not of a chain)
+    let mut by_len64: HashMap<usize, Vec<u32>> = HashMap::new();
+    let mut by_len32: HashMap<usize, Vec<u32>> = HashMap::new();
     // per unique merged slot: (bytes, first referencing program, multi-program?)
     let mut owners: HashMap<(Lane, u32), (usize, usize, bool)> = HashMap::new();
     let mut stats = InternStats { programs: progs.len(), ..Default::default() };
@@ -363,21 +404,68 @@ pub fn intern_tables(progs: &[&CompiledProgram]) -> (Vec<CompiledProgram>, Inter
             for op in &mut ops[layer.ops.clone()] {
                 let start = op.table_off as usize;
                 let len = op.addr_mask as usize + 1;
+                let eps_ok = budget > 0 && op.scale == 1;
                 let new_off = match layer.lane {
-                    Lane::I64 => *slot64
-                        .entry(prog.tables64[start..start + len].to_vec())
-                        .or_insert_with_key(|content| {
-                            let off = arena64.len() as u32;
-                            arena64.extend_from_slice(content);
-                            off
-                        }),
-                    Lane::I32 => *slot32
-                        .entry(prog.tables32[start..start + len].to_vec())
-                        .or_insert_with_key(|content| {
-                            let off = arena32.len() as u32;
-                            arena32.extend_from_slice(content);
-                            off
-                        }),
+                    Lane::I64 => {
+                        let content = prog.tables64[start..start + len].to_vec();
+                        match slot64.get(&content) {
+                            Some(&off) => off,
+                            None => {
+                                let near = eps_ok
+                                    .then(|| by_len64.get(&len))
+                                    .flatten()
+                                    .and_then(|offs| {
+                                        offs.iter().copied().find(|&off| {
+                                            let s = off as usize;
+                                            arena64[s..s + len].iter().zip(&content).all(
+                                                |(&a, &b)| {
+                                                    (a as i128 - b as i128).unsigned_abs()
+                                                        <= budget as u128
+                                                },
+                                            )
+                                        })
+                                    });
+                                let off = near.unwrap_or_else(|| {
+                                    let off = arena64.len() as u32;
+                                    arena64.extend_from_slice(&content);
+                                    by_len64.entry(len).or_default().push(off);
+                                    off
+                                });
+                                slot64.insert(content, off);
+                                off
+                            }
+                        }
+                    }
+                    Lane::I32 => {
+                        let content = prog.tables32[start..start + len].to_vec();
+                        match slot32.get(&content) {
+                            Some(&off) => off,
+                            None => {
+                                let near = eps_ok
+                                    .then(|| by_len32.get(&len))
+                                    .flatten()
+                                    .and_then(|offs| {
+                                        offs.iter().copied().find(|&off| {
+                                            let s = off as usize;
+                                            arena32[s..s + len].iter().zip(&content).all(
+                                                |(&a, &b)| {
+                                                    (a as i64 - b as i64).unsigned_abs()
+                                                        <= budget as u64
+                                                },
+                                            )
+                                        })
+                                    });
+                                let off = near.unwrap_or_else(|| {
+                                    let off = arena32.len() as u32;
+                                    arena32.extend(&content);
+                                    by_len32.entry(len).or_default().push(off);
+                                    off
+                                });
+                                slot32.insert(content, off);
+                                off
+                            }
+                        }
+                    }
                 };
                 let owner = owners
                     .entry((layer.lane, new_off))
@@ -623,7 +711,7 @@ impl RequantPlan {
 /// oracle maps to a code >= c. Sorted nondecreasing by construction
 /// (oracle monotonicity). None when some code is unreachable (degenerate
 /// quantizer whose scale over/underflowed f64): no integer plan exists.
-fn boundaries(q: &Quantizer, frac_bits: u32) -> Option<Vec<i64>> {
+pub(super) fn boundaries(q: &Quantizer, frac_bits: u32) -> Option<Vec<i64>> {
     let max_code = (q.levels() - 1) as u32;
     let fixed_one = (1i64 << frac_bits) as f64;
     let mut out = Vec::with_capacity(max_code as usize);
@@ -1234,5 +1322,41 @@ mod tests {
                 crate::engine::run_batch(interned, &rows)
             );
         }
+    }
+
+    #[test]
+    fn lossy_intern_merges_near_tables_within_budget_only() {
+        // two nets whose tables differ elementwise by exactly 5: budget 4
+        // must keep them apart (bit-identical to exact interning), budget 5
+        // must merge them, and outputs under the merge stay within d_in *
+        // budget of the originals (two 8-entry tables per neuron)
+        let base: Vec<i64> = (0..8).map(|i| 100 + 13 * i).collect();
+        let near: Vec<i64> = base.iter().map(|v| v + 5).collect();
+        let net1 = manual_net(vec![vec![base.clone(), base.clone()]], 2);
+        let net2 = manual_net(vec![vec![near.clone(), near]], 2);
+        let p1 = CompiledProgram::compile(&net1);
+        let p2 = CompiledProgram::compile(&net2);
+
+        let (exact_out, exact) = intern_tables(&[&p1, &p2]);
+        let (tight_out, tight) = intern_tables_lossy(&[&p1, &p2], 4);
+        assert_eq!(tight, exact, "sub-threshold budget must change nothing");
+        assert_eq!(tight_out[0].ops(), exact_out[0].ops());
+        assert_eq!(tight_out[1].ops(), exact_out[1].ops());
+
+        let (merged_out, merged) = intern_tables_lossy(&[&p1, &p2], 5);
+        assert_eq!(merged.unique_tables, 1, "{merged:?}");
+        assert!(merged.bytes_interned < exact.bytes_interned, "{merged:?}");
+        assert_eq!(merged.bytes_shared, merged.bytes_interned);
+        let rows: Vec<Vec<u32>> = (0..8).map(|i| vec![i as u32, (7 - i) as u32]).collect();
+        for (orig, interned) in [&p1, &p2].into_iter().zip(&merged_out) {
+            let want = crate::engine::run_batch(orig, &rows);
+            let got = crate::engine::run_batch(interned, &rows);
+            for (w, g) in want.iter().flatten().zip(got.iter().flatten()) {
+                assert!((w - g).abs() <= 2 * 5, "merged delta {w} vs {g}");
+            }
+        }
+        // budget 0 through the lossy entry point is the exact path
+        let (_, zero) = intern_tables_lossy(&[&p1, &p2], 0);
+        assert_eq!(zero, exact);
     }
 }

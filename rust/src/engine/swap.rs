@@ -198,6 +198,65 @@ mod tests {
     }
 
     #[test]
+    fn lossy_cells_survive_a_swap_storm_at_their_pinned_level() {
+        // a storm of edge swaps against cells pinned at Lossy budgets:
+        // every recompile stays at the pinned level, carries a LossyReport,
+        // honors its own worst-case bound vs an exact lowering of the SAME
+        // snapshot, and the zero-budget cell stays byte-identical to Full
+        use crate::checkpoint::testutil::{nearify, prunify};
+        use crate::engine::OptLevel;
+        let mut ck = synthetic(&[4, 3, 2], &[3, 4, 6], 10);
+        prunify(&mut ck, 30, 20, 0xBAD);
+        nearify(&mut ck, 50, 4, 0x5EED);
+        let bits = ck.bits[0];
+        let tables = lut::from_checkpoint(&ck);
+        let net = Netlist::build(&ck, &tables, 2);
+        let nc = Arc::new(NetlistCell::new(Arc::new(net)));
+        let lossy = ProgramCell::with_level(Arc::clone(&nc), OptLevel::Lossy(8));
+        let zero = ProgramCell::with_level(Arc::clone(&nc), OptLevel::Lossy(0));
+        assert_eq!(lossy.level(), OptLevel::Lossy(8));
+        let codes: Vec<Vec<u32>> = (0..16u32)
+            .map(|i| vec![i % 8, (i * 3) % 8, (i * 5 + 1) % 8, (i * 7 + 2) % 8])
+            .collect();
+        for round in 0..6i64 {
+            let (q, p) = nc.load().layers[0]
+                .neurons
+                .iter()
+                .enumerate()
+                .find_map(|(q, n)| n.luts.first().map(|l| (q, l.input)))
+                .expect("at least one active edge");
+            let fresh: Vec<i64> =
+                (0..1i64 << bits).map(|c| c * 31 + round * 17 - 99).collect();
+            nc.swap_edge(0, q, p, fresh).unwrap();
+            let (net_now, pl) = lossy.load();
+            let rep = pl.opt_report().unwrap();
+            assert_eq!(rep.level, OptLevel::Lossy(8), "pinned level must survive the swap");
+            let l = rep.lossy.as_ref().expect("lossy report rides the recompile");
+            let exact = engine::compile_with(&net_now, OptLevel::Full);
+            let want = engine::run_batch(&exact, &codes);
+            let got = engine::run_batch(&pl, &codes);
+            let worst = want
+                .iter()
+                .flatten()
+                .zip(got.iter().flatten())
+                .map(|(a, b)| (a - b).abs())
+                .max()
+                .unwrap();
+            assert!(
+                worst <= l.worst_case_bound,
+                "round {round}: measured {worst} > bound {}",
+                l.worst_case_bound
+            );
+            let (_, pz) = zero.load();
+            assert_eq!(pz.opt_report().unwrap().level, OptLevel::Lossy(0));
+            assert_eq!(pz.tables32(), exact.tables32());
+            assert_eq!(pz.tables64(), exact.tables64());
+            assert_eq!(pz.ops(), exact.ops());
+            assert_eq!(engine::run_batch(&pz, &codes), want);
+        }
+    }
+
+    #[test]
     fn whole_model_replace_recompiles() {
         let (_, nc) = cell(7);
         let pc = ProgramCell::new(Arc::clone(&nc));

@@ -30,17 +30,23 @@ USAGE: kanele <command> [args]
 
 COMMANDS:
   compile <name|path> [--n-add N] [--device D] [--vhdl DIR]
+          [--opt full|none|lossy:<budget>]
       checkpoint -> L-LUTs -> netlist; print synthesis report plus the
       serving engine's optimizer report (constant folding, dead-input
-      elimination, table dedup/CSE); optionally emit the VHDL bundle.
+      elimination, table dedup/CSE; --opt lossy:<budget> adds the
+      error-budgeted passes — epsilon-clustered table sharing, affine
+      folding, requant-aware range tightening — and reports the bytes
+      saved plus the worst-case output bound); optionally emit the VHDL
+      bundle.
   verify <name|path> [--n-add N]
       bit-exact equivalence: netlist sim vs the checkpoint's Python oracle
       vectors, plus L-LUT regeneration vs exported tables.
   eval <name> [--n-add N]
       run the netlist on the exported test set; print the task metric.
   serve <name> [--requests N] [--workers W] [--shards S] [--steal on|off]
-        [--batch B] [--wait-us U] [--queue-depth Q] [--parallel-batch G]
-        [--backend compiled|interpreted] [--opt full|none]
+        [--batch B] [--wait-us U] [--queue-depth Q]
+        [--parallel-batch auto|off|G]
+        [--backend compiled|interpreted] [--opt full|none|lossy:<budget>]
         [--listen ADDR] [--duration-s N] [--auth-token TOK]
         [--model NAME=CKPT ...] [--canary T=CKPT:PCT]
         [--read-idle-ms N] [--fault-panic-every N] [--fault-panic-budget N]
@@ -53,13 +59,17 @@ COMMANDS:
       W executors (idle executors steal the oldest queued batch from other
       shards unless --steal off). Default backend: the compiled batch-major
       engine lowered through the full optimizer pipeline (--opt none keeps
-      the 1:1 lowering for A/B); `interpreted` selects the netlist
-      simulator. --parallel-batch G arms intra-batch data-parallelism: a
-      compiled batch with at least 2*G valid samples is split into up to W
-      grain-G sample slices fanned across the executor pool and stitched
-      back bit-exactly (default 2048; 0 disables; small batches always
-      keep the single-executor path). Without --listen this self-drives a
-      --requests benchmark;
+      the 1:1 lowering for A/B; --opt lossy:<budget> adds error-budgeted
+      table sharing/folding/tightening — responses may deviate from the
+      exact model by at most the budget-derived bound the stats report
+      carries); `interpreted` selects the netlist simulator.
+      --parallel-batch arms intra-batch data-parallelism: a compiled batch
+      with at least 2*G valid samples is split into up to W grain-G sample
+      slices fanned across the executor pool and stitched back bit-exactly
+      (auto, the default, derives G from observed per-row execution time —
+      ~0.5 ms per slice, clamped to [256, 8192]; off disables; an explicit
+      G is fixed; small batches always keep the single-executor path).
+      Without --listen this self-drives a --requests benchmark;
       with --listen ADDR it runs the framed TCP front end (port 0 picks a
       free port; prints `listening on <addr>`) until a client sends the
       `shutdown` op or --duration-s elapses. Falls back to a synthetic
@@ -162,6 +172,35 @@ impl<'a> Flags<'a> {
     /// Presence flag with no value (`--shutdown`).
     fn has(&self, key: &str) -> bool {
         self.args.iter().any(|a| a == key)
+    }
+}
+
+/// Parse `--opt` (shared by `compile` and `serve`): exact levels by name
+/// plus the error-budgeted `lossy:<budget>` form. Unknown levels get the
+/// usage list; a recognized-but-malformed lossy budget gets its own
+/// message, since "lossy:8.5" failing as "unknown level" is a dead end.
+fn opt_level_flag(flags: &Flags) -> Result<OptLevel> {
+    match flags.get("--opt") {
+        None => Ok(OptLevel::default()),
+        Some(s) => match OptLevel::parse(s) {
+            Some(l) => Ok(l),
+            None if s == "lossy" || s.starts_with("lossy:") => bail!(
+                "bad --opt {s:?}: lossy needs an unsigned integer error budget in output LSBs (e.g. --opt lossy:8)"
+            ),
+            None => bail!("bad --opt {s:?} (full|none|lossy:<budget>)"),
+        },
+    }
+}
+
+/// Parse `--parallel-batch` (see `ServiceCfg::parallel_grain`): `auto`
+/// (the default) derives the slice grain from observed per-row time,
+/// `off` (or the legacy `0`) disables intra-batch slicing, an explicit
+/// sample count is a fixed grain.
+fn parallel_grain_flag(flags: &Flags) -> Result<usize> {
+    match flags.get("--parallel-batch") {
+        None | Some("auto") => Ok(0),
+        Some("off" | "0") => Ok(kanele::coordinator::GRAIN_OFF),
+        Some(v) => v.parse().with_context(|| format!("bad --parallel-batch {v:?} (auto|off|G)")),
     }
 }
 
@@ -322,8 +361,11 @@ fn run(args: &[String]) -> Result<()> {
             );
             println!("fits device    : {}", r.fits);
             // the serving engine's view of the same netlist: what the
-            // compile-time pass pipeline folds, dedups and CSEs away
-            let prog = engine::compile(&net);
+            // compile-time pass pipeline folds, dedups and CSEs away —
+            // and, at --opt lossy:<budget>, what the error-budgeted
+            // passes additionally share/fold within their bound
+            let opt_level = opt_level_flag(&flags)?;
+            let prog = engine::compile_with(&net, opt_level);
             if let Some(opt) = prog.opt_report() {
                 println!("engine opt     : {}", opt.summary());
             }
@@ -438,17 +480,13 @@ fn run(args: &[String]) -> Result<()> {
             let batch = flags.get_usize("--batch", 64)?;
             let wait_us = flags.get_usize("--wait-us", 100)?;
             let queue_depth = flags.get_usize("--queue-depth", 1 << 14)?;
-            let parallel_grain = flags.get_usize("--parallel-batch", 2048)?;
+            let parallel_grain = parallel_grain_flag(&flags)?;
             let backend = match flags.get("--backend") {
                 Some(s) => Backend::parse(s)
                     .with_context(|| format!("bad --backend {s:?} (compiled|interpreted)"))?,
                 None => Backend::Compiled,
             };
-            let opt = match flags.get("--opt") {
-                Some(s) => OptLevel::parse(s)
-                    .with_context(|| format!("bad --opt {s:?} (full|none)"))?,
-                None => OptLevel::default(),
-            };
+            let opt = opt_level_flag(&flags)?;
             let listen = flags.get("--listen").map(String::from);
             let auth_token = flags.get("--auth-token").map(String::from);
             let read_idle_ms = flags.get_u64("--read-idle-ms", 60_000)?;
